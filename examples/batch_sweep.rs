@@ -1,0 +1,122 @@
+//! E3 + E7: batch-size sweep (analytical vs MEASURED from executed engine
+//! steps) and the n_layers savings-cap sweep.
+//!
+//! The measured column runs real decode steps at each batch size on both
+//! paths and reports the ratio of the traffic recorder's counters; it must
+//! match the analytical model exactly (same formulas, but one side is
+//! derived from actual executed steps — E3's point).
+//!
+//! ```bash
+//! cargo run --release --example batch_sweep              # tiny-serial live
+//! cargo run --release --example batch_sweep -- --layers-sweep
+//! ```
+
+use firstlayer::config::{zoo_get, ServingConfig};
+use firstlayer::costmodel;
+use firstlayer::coordinator::Coordinator;
+use firstlayer::runtime::{CacheBatch, StepPath};
+use firstlayer::util::fmt;
+
+fn layers_sweep() {
+    println!("== E7: one-layer savings cap vs model depth ==");
+    println!("(paper: 4-layer models cap at 25%, 32-layer at ~3%)\n");
+    println!(
+        "{:>10} {:>16} {:>22}",
+        "n_layers", "cap = 1/n", "realized FLOP frac"
+    );
+    for n in [2usize, 4, 8, 16, 32, 64] {
+        // Scale a Mistral-like config to n layers for the realized fraction.
+        let mut cfg = zoo_get("mistral-7b").unwrap();
+        cfg.n_layers = n;
+        println!(
+            "{:>10} {:>15.1}% {:>21.2}%",
+            n,
+            100.0 * costmodel::max_savings_fraction(n),
+            100.0 * costmodel::flops_saved_fraction(&cfg),
+        );
+    }
+    // Whisper-tiny 4-layer example from the abstract (E8).
+    let wt = zoo_get("whisper-tiny4").unwrap();
+    println!(
+        "\nwhisper-tiny4 (the paper's 4-layer example): cap {:.0}%, realized {:.1}% (serial: QKV only)",
+        100.0 * costmodel::max_savings_fraction(wt.n_layers),
+        100.0 * costmodel::flops_saved_fraction(&wt),
+    );
+}
+
+fn live_sweep(model: &str) -> firstlayer::Result<()> {
+    println!("== E3: first-layer reads per batch — analytical vs measured ==\n");
+    println!("paper-scale models (analytical only):");
+    for name in ["pythia-6.9b", "mistral-7b", "mixtral-8x7b-parallel"] {
+        let cfg = zoo_get(name).unwrap();
+        let factors: Vec<String> = costmodel::PAPER_BATCHES
+            .iter()
+            .map(|b| fmt::factor(costmodel::reduction_factor(&cfg, *b)))
+            .collect();
+        println!("  {name:<24} B=1/16/256/1024: {}", factors.join(" / "));
+    }
+
+    println!("\nlive model {model} (measured from executed PJRT decode steps):");
+    let scfg = ServingConfig {
+        model: model.to_string(),
+        ..Default::default()
+    };
+    let c = Coordinator::from_config(&scfg)?;
+    let engine = c.engine();
+    let mc = engine.config().clone();
+    println!(
+        "{:>6} {:>16} {:>16} {:>12} {:>12}",
+        "batch", "measured w/o", "measured with", "measured", "analytical"
+    );
+    for &b in &[1usize, 2, 4, 8] {
+        if engine.decode_bucket(b, StepPath::Baseline).is_err() {
+            continue;
+        }
+        engine.traffic.reset();
+        let bucket = engine.decode_bucket(b, StepPath::Baseline)?;
+        let caches = CacheBatch::zeros(
+            mc.n_layers,
+            bucket,
+            mc.max_seq,
+            mc.n_kv_heads,
+            mc.head_dim(),
+        );
+        let tokens: Vec<u32> = (0..b as u32).collect();
+        let pos = vec![0u32; b];
+        let n_steps = 5;
+        for _ in 0..n_steps {
+            engine.decode(StepPath::Baseline, &tokens, &pos, &caches)?;
+            engine.decode(StepPath::Precompute, &tokens, &pos, &caches)?;
+        }
+        let t = engine.traffic.snapshot();
+        let measured = t.l1_reads_baseline as f64 / t.l1_reads_precomp as f64;
+        let analytical = costmodel::reduction_factor(&mc, b as u64);
+        assert!(
+            (measured - analytical).abs() / analytical < 1e-9,
+            "measured and analytical must agree exactly"
+        );
+        println!(
+            "{:>6} {:>16} {:>16} {:>11.1}x {:>11.1}x",
+            b,
+            fmt::commas(t.l1_reads_baseline / n_steps),
+            fmt::commas(t.l1_reads_precomp / n_steps),
+            measured,
+            analytical,
+        );
+    }
+    println!("\nmeasured == analytical on every row (the recorder counts the paper's quantities on live steps).");
+    Ok(())
+}
+
+fn main() -> firstlayer::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--layers-sweep") {
+        layers_sweep();
+        return Ok(());
+    }
+    let model = args.first().map(|s| s.as_str()).unwrap_or("tiny-serial");
+    live_sweep(model)?;
+    println!();
+    layers_sweep();
+    Ok(())
+}

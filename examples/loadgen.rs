@@ -1,0 +1,109 @@
+//! Open-loop load generator: Poisson arrivals against the coordinator, the
+//! workload shape a serving paper's latency-under-load evaluation uses.
+//!
+//! Simulated-time open loop: requests carry Poisson arrival timestamps; the
+//! engine loop admits a request once its arrival time has passed (wall
+//! clock), so queueing delay shows up in TTFT/e2e exactly as it would
+//! against the TCP front.
+//!
+//! ```bash
+//! cargo run --release --example loadgen -- [model] [rate_rps] [n_requests]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use firstlayer::config::ServingConfig;
+use firstlayer::coordinator::sampling::SamplingParams;
+use firstlayer::coordinator::Coordinator;
+use firstlayer::runtime::StepPath;
+use firstlayer::util::rng::Rng;
+
+const PROMPTS: [&str; 6] = [
+    "the quick brown fox",
+    "attention is all you need",
+    "memory bandwidth limits decoding",
+    "a key value cache stores",
+    "the scheduler admits requests",
+    "experts route tokens",
+];
+
+fn run(model: &str, precompute: bool, rate: f64, n: usize) -> firstlayer::Result<()> {
+    let cfg = ServingConfig {
+        model: model.to_string(),
+        use_precompute: precompute,
+        ..Default::default()
+    };
+    let mut c = Coordinator::from_config(&cfg)?;
+    c.engine().warmup(if precompute {
+        StepPath::Precompute
+    } else {
+        StepPath::Baseline
+    })?;
+
+    // Pre-draw the arrival schedule.
+    let mut rng = Rng::new(42);
+    let mut t = 0.0;
+    let mut schedule: Vec<(f64, &str, usize)> = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += rng.exp(rate);
+        let p = PROMPTS[rng.range(0, PROMPTS.len())];
+        let gen = rng.range(8, 24);
+        schedule.push((t, p, gen));
+    }
+
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    while next < schedule.len() || c.busy() {
+        let now = t0.elapsed().as_secs_f64();
+        while next < schedule.len() && schedule[next].0 <= now {
+            let (_, p, gen) = schedule[next];
+            c.submit_text(p, gen, SamplingParams::default())?;
+            next += 1;
+        }
+        if c.busy() {
+            c.step()?;
+        } else if next < schedule.len() {
+            let wait = schedule[next].0 - t0.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(wait.min(0.05)));
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = &c.metrics;
+    let done = m.requests_done.load(std::sync::atomic::Ordering::Relaxed);
+    let toks = m.tokens_out.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "{:<11} rate={rate:>5.1}/s  done={done:>4}  tok/s={:>7.1}  \
+         ttft p50={:>6.1?} p95={:>8.1?}  e2e p50={:>6.1?} p95={:>8.1?}  preempt={}",
+        if precompute { "precompute" } else { "baseline" },
+        toks as f64 / wall,
+        m.ttft.quantile(0.5),
+        m.ttft.quantile(0.95),
+        m.e2e.quantile(0.5),
+        m.e2e.quantile(0.95),
+        m.preemptions.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    Ok(())
+}
+
+fn main() -> firstlayer::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(|s| s.as_str()).unwrap_or("tiny-serial");
+    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.0);
+    let n: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(40);
+
+    println!("== load test: {model}, {n} requests, Poisson arrivals ==\n");
+    let rates = if rate > 0.0 {
+        vec![rate]
+    } else {
+        vec![20.0, 60.0, 120.0]
+    };
+    for r in rates {
+        for pre in [false, true] {
+            run(model, pre, r, n)?;
+        }
+        println!();
+    }
+    Ok(())
+}

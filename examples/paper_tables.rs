@@ -1,0 +1,95 @@
+//! E1/E2: regenerate the paper's §3 tables from the analytical cost model
+//! and verify every printed number against the values in the paper.
+//!
+//! ```bash
+//! cargo run --release --example paper_tables
+//! ```
+
+use firstlayer::config::{zoo_get, ModelConfig};
+use firstlayer::costmodel::{
+    eliminated_weights, memory_delta, reads_with, reads_without, reduction_factor,
+    weight_counts, PAPER_BATCHES,
+};
+
+fn check(label: &str, got: u64, want: u64) {
+    let mark = if got == want { "ok" } else { "MISMATCH" };
+    println!("  [{mark}] {label}: got {got}, paper {want}");
+    assert_eq!(got, want, "{label}");
+}
+
+fn check_i(label: &str, got: i64, want: i64) {
+    let mark = if got == want { "ok" } else { "MISMATCH" };
+    println!("  [{mark}] {label}: got {got}, paper {want}");
+    assert_eq!(got, want, "{label}");
+}
+
+fn main() {
+    // The paper's tables, verbatim.
+    firstlayer::costmodel::print_paper_tables();
+
+    println!("\n== Verification against the paper's printed values ==");
+    let pythia = zoo_get("pythia-6.9b").unwrap();
+    let mistral = zoo_get("mistral-7b").unwrap();
+    let mixtral = zoo_get("mixtral-8x7b").unwrap();
+    let mixtral_par = zoo_get("mixtral-8x7b-parallel").unwrap();
+
+    println!("Table 1 (weights):");
+    check("Pythia Q+P/layer", weight_counts(&pythia).qp_per_layer, 33_554_432);
+    check("Pythia K+V/layer", weight_counts(&pythia).kv_per_layer, 33_554_432);
+    check("Pythia FFN/layer", weight_counts(&pythia).ffn_per_layer, 134_217_728);
+    check("Pythia embeddings", weight_counts(&pythia).embeddings, 412_876_800);
+    check("Mistral K+V/layer", weight_counts(&mistral).kv_per_layer, 8_388_608);
+    check("Mistral FFN/layer", weight_counts(&mistral).ffn_per_layer, 176_160_768);
+    check("Mixtral FFN/layer", weight_counts(&mixtral).ffn_per_layer, 1_409_286_144);
+
+    println!("Table 2 (reads + memory):");
+    let cases: [(&str, &ModelConfig, u64, u64, u64, [u64; 4], i64, i64); 3] = [
+        (
+            "Pythia-6.9B",
+            &pythia,
+            184_549_376,
+            184_553_472,
+            16_384,
+            [11_264, 704, 44, 11],
+            434_765_824,
+            6,
+        ),
+        (
+            "Mistral-7B",
+            &mistral,
+            25_165_824,
+            25_169_920,
+            10_240,
+            [2_458, 154, 10, 3],
+            171_442_176,
+            2,
+        ),
+        (
+            "Mixtral-8x7B (parallel)",
+            &mixtral_par,
+            1_434_451_968,
+            1_434_456_064,
+            10_240,
+            [140_084, 8_756, 548, 137],
+            -1_237_843_968,
+            -3,
+        ),
+    ];
+    for (name, cfg, elim, r_wo, r_w, factors, net, pct) in cases {
+        println!(" {name}:");
+        check("eliminated weights", eliminated_weights(cfg), elim);
+        check("reads w/o precompute B=1", reads_without(cfg, 1), r_wo);
+        check("reads with precompute B=1", reads_with(cfg, 1), r_w);
+        for (b, want) in PAPER_BATCHES.iter().zip(factors) {
+            check(
+                &format!("reduction factor B={b}"),
+                reduction_factor(cfg, *b).round() as u64,
+                want,
+            );
+        }
+        let md = memory_delta(cfg);
+        check_i("net memory delta", md.net, net);
+        check_i("relative memory delta %", md.relative_pct, pct);
+    }
+    println!("\nAll paper numbers reproduced exactly.");
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX model + AOT emitter.
+
+Never imported at serving time — the rust binary only consumes the
+artifacts this package writes (HLO text, weights, precompute tables,
+manifest).
+"""

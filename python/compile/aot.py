@@ -1,0 +1,282 @@
+"""AOT artifact emitter: jax → StableHLO → HLO *text* → ``artifacts/``.
+
+Run once at build time (``make artifacts``); the rust serving binary is
+self-contained afterwards.  HLO text (NOT ``HloModuleProto.serialize``) is
+the interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+Per runnable model this writes:
+  weights_<m>.fw             deterministic weights (params.py)
+  table_<m>.fpt              precomputed first-layer table (precompute.py)
+  <m>/decode_baseline_b{B}.hlo.txt      full first layer
+  <m>/decode_precomp_b{B}.hlo.txt       paper's trick (rows from rust gather)
+  <m>/decode_precomp_gather_b{B}.hlo.txt  ablation: in-graph Pallas gather
+  <m>/prefill_baseline_b{B}t{T}.hlo.txt
+  <m>/prefill_precomp_b{B}t{T}.hlo.txt
+  <m>/precompute_build.hlo.txt          lets rust (re)build the table itself
+  manifest.json              everything the rust side needs to load them
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, params, precompute
+from .configs import ModelConfig
+
+DECODE_BATCHES = {
+    "tiny-serial": [1, 2, 4, 8],
+    "tiny-parallel": [1, 2, 4, 8],
+    "tiny-moe": [1, 4],
+    "tiny-moe-parallel": [1, 4],
+}
+PREFILL_BUCKETS = {
+    "tiny-serial": [(1, 32), (4, 32)],
+    "tiny-parallel": [(1, 32), (4, 32)],
+    "tiny-moe": [(1, 32)],
+    "tiny-moe-parallel": [(1, 32)],
+}
+GATHER_ABLATION_BATCH = 4
+BUILD_CHUNK = 256  # vocab rows per precompute_build invocation
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(
+        tuple(shape), {"f32": jnp.float32, "i32": jnp.int32}[dtype]
+    )
+
+
+def _io(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+class Emitter:
+    def __init__(self, cfg: ModelConfig, out_dir: str):
+        self.cfg = cfg
+        self.out = out_dir
+        self.w = params.init_weights(cfg)
+        self.artifacts = []
+        os.makedirs(os.path.join(out_dir, cfg.name), exist_ok=True)
+
+    def wspecs(self, order):
+        return [_spec(params.tensor_shape(self.cfg, n)) for n in order]
+
+    def emit(self, name, kind, fn, inputs, outputs, weight_params, extra=None):
+        """Lower fn(data..., *weights) and record the artifact."""
+        rel = f"{self.cfg.name}/{name}.hlo.txt"
+        path = os.path.join(self.out, rel)
+        in_specs = [_spec(i["shape"], i["dtype"]) for i in inputs]
+        w_specs = self.wspecs([p for p in weight_params if not p.startswith("@")])
+        if "@table" in weight_params:
+            w_specs.insert(
+                weight_params.index("@table"),
+                _spec((self.cfg.vocab_size, self.cfg.precomp_row_width)),
+            )
+        lowered = jax.jit(fn).lower(*in_specs, *w_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        art = {
+            "name": name,
+            "kind": kind,
+            "file": rel,
+            "inputs": inputs,
+            "outputs": outputs,
+            "weight_params": weight_params,
+        }
+        art.update(extra or {})
+        self.artifacts.append(art)
+        print(f"  {rel}  ({len(text) / 1e6:.2f} MB)", flush=True)
+
+    # -- artifact families ---------------------------------------------------
+
+    def decode(self, B: int, path: str):
+        cfg = self.cfg
+        L, S = cfg.n_layers, cfg.max_seq
+        KH, hd = cfg.n_kv_heads, cfg.head_dim
+        cache = [L, B, S, KH, hd]
+        outputs = [
+            _io("logits", [B, cfg.vocab_size]),
+            _io("kcaches", cache),
+            _io("vcaches", cache),
+        ]
+        common = dict(extra={"batch": B, "max_seq": S})
+        if path == "baseline":
+            order = model.weight_order_baseline(cfg)
+
+            def fn(tokens, pos, kc, vc, *ws):
+                w = dict(zip(order, ws))
+                return model.decode_baseline(cfg, w, tokens, pos, kc, vc)
+
+            self.emit(
+                f"decode_baseline_b{B}", "decode", fn,
+                [_io("tokens", [B], "i32"), _io("pos", [B], "i32"),
+                 _io("kcaches", cache), _io("vcaches", cache)],
+                outputs, order, **common,
+            )
+        elif path == "precomp":
+            order = model.weight_order_precomp(cfg)
+            W = cfg.precomp_row_width
+
+            def fn(rows, pos, kc, vc, *ws):
+                w = dict(zip(order, ws))
+                return model.decode_precomp(cfg, w, rows, pos, kc, vc)
+
+            self.emit(
+                f"decode_precomp_b{B}", "decode", fn,
+                [_io("rows", [B, W]), _io("pos", [B], "i32"),
+                 _io("kcaches", cache), _io("vcaches", cache)],
+                outputs, order, **common,
+            )
+        else:  # precomp_gather ablation: table is a resident device buffer
+            order = ["@table"] + model.weight_order_precomp(cfg)
+
+            def fn(tokens, pos, kc, vc, table, *ws):
+                w = dict(zip(order[1:], ws))
+                return model.decode_precomp_gather(cfg, w, table, tokens, pos, kc, vc)
+
+            self.emit(
+                f"decode_precomp_gather_b{B}", "decode", fn,
+                [_io("tokens", [B], "i32"), _io("pos", [B], "i32"),
+                 _io("kcaches", cache), _io("vcaches", cache)],
+                outputs, order, **common,
+            )
+
+    def prefill(self, B: int, T: int, path: str):
+        cfg = self.cfg
+        L, S = cfg.n_layers, cfg.max_seq
+        KH, hd = cfg.n_kv_heads, cfg.head_dim
+        cache = [L, B, S, KH, hd]
+        outputs = [
+            _io("logits", [B, cfg.vocab_size]),
+            _io("kcaches", cache),
+            _io("vcaches", cache),
+        ]
+        extra = {"batch": B, "prompt_len": T, "max_seq": S}
+        if path == "baseline":
+            order = model.weight_order_baseline(cfg)
+
+            def fn(tokens, lens, *ws):
+                w = dict(zip(order, ws))
+                return model.prefill(cfg, w, tokens, lens, max_seq=S)
+
+            self.emit(
+                f"prefill_baseline_b{B}t{T}", "prefill", fn,
+                [_io("tokens", [B, T], "i32"), _io("lens", [B], "i32")],
+                outputs, order, extra=extra,
+            )
+        else:
+            order = model.weight_order_precomp(cfg)
+            W = cfg.precomp_row_width
+
+            def fn(rows, lens, *ws):
+                w = dict(zip(order, ws))
+                return model.prefill(cfg, w, jnp.zeros((B, T), jnp.int32),
+                                     lens, rows=rows, max_seq=S)
+
+            self.emit(
+                f"prefill_precomp_b{B}t{T}", "prefill", fn,
+                [_io("rows", [B, T, W]), _io("lens", [B], "i32")],
+                outputs, order, extra=extra,
+            )
+
+    def precompute_build(self):
+        """Vocab-chunk table builder, runnable from rust (`firstlayer precompute`)."""
+        cfg = self.cfg
+        order = precompute.source_tensor_names(cfg)
+        n = min(BUILD_CHUNK, cfg.vocab_size)
+
+        def fn(tokens, *ws):
+            w = dict(zip(order, ws))
+            return (precompute.build_rows(cfg, w, tokens),)
+
+        self.emit(
+            "precompute_build", "precompute_build", fn,
+            [_io("tokens", [n], "i32")],
+            [_io("rows", [n, cfg.precomp_row_width])],
+            order, extra={"chunk": n},
+        )
+
+
+def emit_model(cfg: ModelConfig, out_dir: str) -> dict:
+    print(f"[aot] {cfg.name}", flush=True)
+    em = Emitter(cfg, out_dir)
+
+    # Weights + table first (the table CRC goes into the manifest).
+    worder = params.tensor_names(cfg)
+    wfile = f"weights_{cfg.name}.fw"
+    params.save_fw(os.path.join(out_dir, wfile), em.w, worder)
+    tfile = f"table_{cfg.name}.fpt"
+    crc = precompute.build_table(cfg, em.w, os.path.join(out_dir, tfile))
+    print(f"  {wfile}, {tfile} (crc {crc:#010x})", flush=True)
+
+    for B in DECODE_BATCHES[cfg.name]:
+        em.decode(B, "baseline")
+        em.decode(B, "precomp")
+    em.decode(GATHER_ABLATION_BATCH, "precomp_gather")
+    for B, T in PREFILL_BUCKETS[cfg.name]:
+        em.prefill(B, T, "baseline")
+        em.prefill(B, T, "precomp")
+    em.precompute_build()
+
+    cfg_d = dataclasses.asdict(cfg)
+    cfg_d.update(
+        e=cfg.e, head_dim=cfg.head_dim, precomp_row_width=cfg.precomp_row_width
+    )
+    return {
+        "config": cfg_d,
+        "weights_file": wfile,
+        "weights_order": worder,
+        "table_file": tfile,
+        "weights_crc": crc,
+        "artifacts": em.artifacts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="tiny-serial,tiny-parallel,tiny-moe,tiny-moe-parallel",
+        help="comma-separated runnable model names",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    # Merge into an existing manifest so partial --models runs do not drop
+    # previously emitted models.
+    mpath = os.path.join(args.out, "manifest.json")
+    manifest = {"version": 1, "models": {}}
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        if old.get("version") == 1:
+            manifest["models"].update(old.get("models", {}))
+    for name in args.models.split(","):
+        cfg = configs.get(name.strip())
+        manifest["models"][cfg.name] = emit_model(cfg, args.out)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {mpath}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""Model configuration zoo.
+
+Mirrors ``rust/src/config/zoo.rs``: the paper-scale configs (Pythia-6.9B,
+Mistral-7B, Mixtral-8x7B and the paper's hypothetical parallel Mixtral) are
+used for the analytical tables of §3; the ``tiny_*`` configs are runnable
+end-to-end on the CPU PJRT client and exercise the same code paths.
+
+Terminology follows the paper:
+  d       : embedding dimension (``dim``)
+  e       : output dim of K and V; e = d * n_kv_heads / n_heads
+  arch    : "parallel" (GPT-J/Pythia/PaLM style parallel attention+FFN)
+            or "serial" (Llama/Mistral/Mixtral style)
+  ffn_type: "mlp" (2-layer MLP, 2*d*h weights) | "swiglu" (GLU variant,
+            3*d*h) | "swiglu_moe" (per-expert SwiGLU, 3*d*h*n_experts)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch: str  # "parallel" | "serial"
+    d: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    ffn_hidden: int
+    ffn_type: str  # "mlp" | "swiglu" | "swiglu_moe"
+    n_experts: int
+    moe_top_k: int
+    vocab_size: int
+    max_seq: int
+    norm_type: str  # "rmsnorm" | "layernorm"
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # When False the model uses learned absolute positional embeddings added
+    # to the token embedding (the vanilla transformer of paper Figure 2(a)).
+    # Precompute is then UNSOUND: the first-layer Q/K/V inputs depend on the
+    # position, not only the token.  Kept for the negative test (E5).
+    rope: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d % self.n_heads == 0
+        return self.d // self.n_heads
+
+    @property
+    def e(self) -> int:
+        """Output dimension of K and V (paper's ``e``)."""
+        return self.d * self.n_kv_heads // self.n_heads
+
+    @property
+    def precomp_row_width(self) -> int:
+        """Values stored per token with precompute: q(d) + k(e) + v(e) + r(d).
+
+        ``r`` is the residual carried past attention: ``emb + ffn_out`` for
+        parallel models, plain ``emb`` for serial ones.  Width is 2(d+e) in
+        both cases — the paper's formula.
+        """
+        return 2 * (self.d + self.e)
+
+    @property
+    def ffn_weight_factor(self) -> int:
+        """2 for plain MLP, 3 for GLU variants (w1, w3 gate, w2)."""
+        return 2 if self.ffn_type == "mlp" else 3
+
+    def validate(self) -> None:
+        assert self.arch in ("parallel", "serial"), self.arch
+        assert self.ffn_type in ("mlp", "swiglu", "swiglu_moe"), self.ffn_type
+        assert self.norm_type in ("rmsnorm", "layernorm"), self.norm_type
+        assert self.n_heads % self.n_kv_heads == 0
+        assert self.d % self.n_heads == 0
+        if self.ffn_type != "swiglu_moe":
+            assert self.n_experts == 1
+        assert 1 <= self.moe_top_k <= self.n_experts
+
+
+# ---------------------------------------------------------------------------
+# Paper-scale configs (§3 of the paper) — analytics only, not runnable here.
+# ---------------------------------------------------------------------------
+
+PYTHIA_6_9B = ModelConfig(
+    name="pythia-6.9b",
+    arch="parallel",
+    d=4096,
+    n_layers=32,
+    n_heads=32,
+    n_kv_heads=32,  # MHA
+    ffn_hidden=16384,
+    ffn_type="mlp",
+    n_experts=1,
+    moe_top_k=1,
+    vocab_size=50400,
+    max_seq=2048,
+    norm_type="layernorm",
+)
+
+MISTRAL_7B = ModelConfig(
+    name="mistral-7b",
+    arch="serial",
+    d=4096,
+    n_layers=32,
+    n_heads=32,
+    n_kv_heads=8,  # GQA
+    ffn_hidden=14336,
+    ffn_type="swiglu",
+    n_experts=1,
+    moe_top_k=1,
+    vocab_size=32000,
+    max_seq=4096,
+    norm_type="rmsnorm",
+)
+
+MIXTRAL_8X7B = ModelConfig(
+    name="mixtral-8x7b",
+    arch="serial",
+    d=4096,
+    n_layers=32,
+    n_heads=32,
+    n_kv_heads=8,
+    ffn_hidden=14336,
+    ffn_type="swiglu_moe",
+    n_experts=8,
+    moe_top_k=2,
+    vocab_size=32000,
+    max_seq=4096,
+    norm_type="rmsnorm",
+)
+
+# The paper's §3 third column: a hypothetical Mixtral-8x7B with parallel
+# attention/FFN layers, where the whole first layer (incl. the 8-expert MoE
+# FFN) becomes precomputable.
+MIXTRAL_8X7B_PARALLEL = dataclasses.replace(
+    MIXTRAL_8X7B, name="mixtral-8x7b-parallel", arch="parallel"
+)
+
+# Whisper-tiny-like 4-layer config for the "max savings 25%" remark (E8).
+# (Whisper is an encoder-decoder; we model the 4-layer decoder dims only.)
+TINY4_PAPER = ModelConfig(
+    name="whisper-tiny4",
+    arch="serial",
+    d=384,
+    n_layers=4,
+    n_heads=6,
+    n_kv_heads=6,
+    ffn_hidden=1536,
+    ffn_type="mlp",
+    n_experts=1,
+    moe_top_k=1,
+    vocab_size=51865,
+    max_seq=448,
+    norm_type="layernorm",
+)
+
+# ---------------------------------------------------------------------------
+# Runnable tiny configs — same code paths, CPU-PJRT friendly sizes.
+# ---------------------------------------------------------------------------
+
+TINY_PARALLEL = ModelConfig(
+    name="tiny-parallel",
+    arch="parallel",
+    d=128,
+    n_layers=4,
+    n_heads=4,
+    n_kv_heads=4,  # MHA like Pythia
+    ffn_hidden=512,
+    ffn_type="mlp",
+    n_experts=1,
+    moe_top_k=1,
+    vocab_size=512,
+    max_seq=128,
+    norm_type="layernorm",
+)
+
+TINY_SERIAL = ModelConfig(
+    name="tiny-serial",
+    arch="serial",
+    d=128,
+    n_layers=4,
+    n_heads=4,
+    n_kv_heads=2,  # GQA like Mistral
+    ffn_hidden=384,
+    ffn_type="swiglu",
+    n_experts=1,
+    moe_top_k=1,
+    vocab_size=512,
+    max_seq=128,
+    norm_type="rmsnorm",
+)
+
+TINY_MOE = ModelConfig(
+    name="tiny-moe",
+    arch="serial",
+    d=64,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    ffn_hidden=128,
+    ffn_type="swiglu_moe",
+    n_experts=4,
+    moe_top_k=2,
+    vocab_size=256,
+    max_seq=64,
+    norm_type="rmsnorm",
+)
+
+# Parallel MoE — the runnable analogue of the paper's hypothetical
+# parallel Mixtral (E2 third column / examples/moe_hypothetical.rs).
+TINY_MOE_PARALLEL = dataclasses.replace(
+    TINY_MOE, name="tiny-moe-parallel", arch="parallel"
+)
+
+# Vanilla absolute-PE config for the negative test (Figure 2(a)):
+# precompute must NOT validate on this one.
+TINY_ABSPE = dataclasses.replace(
+    TINY_SERIAL, name="tiny-abspe", rope=False
+)
+
+ZOO = {
+    c.name: c
+    for c in [
+        PYTHIA_6_9B,
+        MISTRAL_7B,
+        MIXTRAL_8X7B,
+        MIXTRAL_8X7B_PARALLEL,
+        TINY4_PAPER,
+        TINY_PARALLEL,
+        TINY_SERIAL,
+        TINY_MOE,
+        TINY_MOE_PARALLEL,
+        TINY_ABSPE,
+    ]
+}
+
+RUNNABLE = [TINY_PARALLEL, TINY_SERIAL, TINY_MOE, TINY_MOE_PARALLEL]
+
+
+def get(name: str) -> ModelConfig:
+    cfg = ZOO[name]
+    cfg.validate()
+    return cfg

@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels + pure-jnp oracles.
+
+All kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); the BlockSpecs are nevertheless written as they would be
+tiled for TPU VMEM — see DESIGN.md §Hardware-Adaptation and §Perf for the
+footprint estimates at paper-scale dimensions.
+"""
+
+from . import ref  # noqa: F401
+from .rmsnorm_qkv import fused_norm_matmul  # noqa: F401
+from .rope import rope as rope_kernel  # noqa: F401
+from .attention import decode_attention  # noqa: F401
+from .ffn import swiglu as swiglu_kernel, gelu_mlp as gelu_mlp_kernel  # noqa: F401
+from .gather_rows import gather_rows as gather_rows_kernel  # noqa: F401
+
+INTERPRET = True  # CPU-PJRT target; see module docstring.

@@ -1,0 +1,105 @@
+"""FFN Pallas kernels: SwiGLU (Llama/Mistral) and GELU-MLP (Pythia).
+
+These are the kernels that the paper's trick DELETES from the first layer
+of parallel models — they remain the hot path for layers 2..n, and for the
+offline table builder (S3) which runs them over the whole vocabulary.
+
+Tiling: grid ``(B / bb, h / bh)`` over the hidden dimension with output
+accumulation — the classic two-GEMM chain where the intermediate
+activation never round-trips to HBM:
+
+  step j:  a_j = act(x @ w1[:, j]) (* x @ w3[:, j])   [bb, bh]
+           o  += a_j @ w2[j, :]                        [bb, d]
+
+The output block index map pins all ``j`` steps to the same block; the
+first step initializes it (``pl.when``).  VMEM at paper scale
+(d=4096, bb=8, bh=512): x 8·4096 + w1,w3 2·4096·512 + w2 512·4096 +
+o 8·4096 floats ≈ 25 MiB -> use bh=256 for 13 MiB.  (interpret mode:
+functional only.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _swiglu_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # [bb, d]
+    a = jax.nn.silu(x @ w1_ref[...]) * (x @ w3_ref[...])  # [bb, bh]
+    o_ref[...] += a @ w2_ref[...]  # [bb, d]
+
+
+def _gelu_mlp_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    a = jax.nn.gelu(x @ w1_ref[...], approximate=True)
+    o_ref[...] += a @ w2_ref[...]
+
+
+def _run_ffn(kernel, x, ws_in, w2, *, block_b, block_h, interpret):
+    B, d = x.shape
+    h = w2.shape[0]
+    bb = min(block_b, B)
+    bh = min(block_h, h)
+    Bp = (B + bb - 1) // bb * bb
+    hp = (h + bh - 1) // bh * bh
+    xp = jnp.pad(x, ((0, Bp - B), (0, 0)))
+    ws_in = [jnp.pad(w, ((0, 0), (0, hp - h))) for w in ws_in]
+    w2p = jnp.pad(w2, ((0, hp - h), (0, 0)))
+    grid = (Bp // bb, hp // bh)
+    in_specs = [pl.BlockSpec((bb, d), lambda i, j: (i, 0))]
+    in_specs += [pl.BlockSpec((d, bh), lambda i, j: (0, j)) for _ in ws_in]
+    in_specs += [pl.BlockSpec((bh, d), lambda i, j: (j, 0))]
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, d), x.dtype),
+        interpret=interpret,
+    )(xp, *ws_in, w2p)
+    return out[:B]
+
+
+def swiglu(
+    x: jax.Array,  # [B, d]
+    w1: jax.Array,  # [d, h]
+    w3: jax.Array,  # [d, h]
+    w2: jax.Array,  # [h, d]
+    *,
+    block_b: int = 8,
+    block_h: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """SwiGLU FFN, hidden-tiled with output accumulation. Returns [B, d]."""
+    return _run_ffn(
+        _swiglu_kernel, x, [w1, w3], w2,
+        block_b=block_b, block_h=block_h, interpret=interpret,
+    )
+
+
+def gelu_mlp(
+    x: jax.Array,  # [B, d]
+    w1: jax.Array,  # [d, h]
+    w2: jax.Array,  # [h, d]
+    *,
+    block_b: int = 8,
+    block_h: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """2-layer GELU MLP, hidden-tiled with output accumulation. Returns [B, d]."""
+    return _run_ffn(
+        _gelu_mlp_kernel, x, [w1], w2,
+        block_b=block_b, block_h=block_h, interpret=interpret,
+    )

@@ -1,0 +1,47 @@
+"""Precomputed-row gather Pallas kernel.
+
+The paper's runtime primitive: "the token-ID provides the read-address to
+read ``2(d+e)`` values from memory".  In the serving stack the gather
+normally happens in rust against the mmap'd table (rust/src/precompute);
+this kernel is the in-graph variant used by the fused-lookup ablation
+artifact (``decode_precomp_gather``) where the table lives as a device
+buffer and the gather lowers into the same HLO as the rest of the step.
+
+Grid ``(B,)``: one dynamic row read per token.  On TPU the table would be
+pinned in HBM (memory_space=ANY) and each program issues a single async
+row copy — exactly one ``2(d+e)``-value read per token, which is the
+quantity table E2/E3 counts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(tok_ref, table_ref, o_ref):
+    t = tok_ref[0]
+    o_ref[...] = pl.load(table_ref, (pl.ds(t, 1), slice(None)))
+
+
+def gather_rows(
+    table: jax.Array,  # [V, W]
+    tokens: jax.Array,  # [B] int32
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """rows = table[tokens]; one row read per token. Returns [B, W]."""
+    B = tokens.shape[0]
+    V, W = table.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((V, W), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, W), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, W), table.dtype),
+        interpret=interpret,
+    )(tokens, table)

@@ -1,0 +1,221 @@
+"""Pure-jnp reference implementations (correctness oracles).
+
+Every Pallas kernel in this package has its oracle here; pytest +
+hypothesis sweep shapes/dtypes and ``assert_allclose`` kernel-vs-ref.
+These are also used directly by the model when ``use_pallas=False``
+(cheap paths and tests).
+
+Conventions:
+  * RoPE uses the NeoX/Llama "rotate-half" convention: the head dim is
+    split in two halves; frequency ``i`` has angle ``pos * theta^(-2i/hd)``.
+  * Attention is causal; decode attends over ``lens[b]`` cache slots
+    (the new token's K/V is written into the cache *before* attention,
+    so slot ``lens[b]-1`` is the current token).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis: x / rms(x) * scale."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * scale
+
+
+def layernorm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape [head_dim // 2]."""
+    i = jnp.arange(head_dim // 2, dtype=jnp.float32)
+    return theta ** (-2.0 * i / head_dim)
+
+
+def rope_apply(x: jax.Array, pos: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Apply rotary position embedding.
+
+    x:   [..., n_heads, head_dim]  (head_dim even)
+    pos: integer positions, shape == x.shape[:-2]
+    """
+    hd = x.shape[-1]
+    assert hd % 2 == 0
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    ang = pos.astype(jnp.float32)[..., None, None] * freqs  # [..., 1, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Fused norm + QKV projection (oracle for kernels/rmsnorm_qkv.py)
+# ---------------------------------------------------------------------------
+
+
+def norm_qkv(
+    x: jax.Array,
+    scale: jax.Array,
+    bias,
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    norm_type: str = "rmsnorm",
+    eps: float = 1e-5,
+):
+    """x: [B, d] -> (q [B, d], k [B, e], v [B, e])."""
+    if norm_type == "rmsnorm":
+        xn = rmsnorm(x, scale, eps)
+    else:
+        xn = layernorm(x, scale, bias, eps)
+    return xn @ wq, xn @ wk, xn @ wv
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention_decode(
+    q: jax.Array,  # [B, H, hd]
+    kcache: jax.Array,  # [B, S, KH, hd]
+    vcache: jax.Array,  # [B, S, KH, hd]
+    lens: jax.Array,  # [B] int32, number of VALID slots (incl. current token)
+) -> jax.Array:
+    """Single-token decode attention with GQA. Returns [B, H, hd]."""
+    B, H, hd = q.shape
+    S, KH = kcache.shape[1], kcache.shape[2]
+    g = H // KH  # query heads per KV head
+    qg = q.reshape(B, KH, g, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, kcache) / jnp.sqrt(
+        jnp.asarray(hd, jnp.float32)
+    )
+    mask = jnp.arange(S)[None, None, None, :] < lens[:, None, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgs,bskh->bkgh", p, vcache)
+    return ctx.reshape(B, H, hd)
+
+
+def attention_prefill(
+    q: jax.Array,  # [B, T, H, hd]
+    k: jax.Array,  # [B, T, KH, hd]
+    v: jax.Array,  # [B, T, KH, hd]
+    lens: jax.Array,  # [B] valid prompt lengths (<= T)
+) -> jax.Array:
+    """Causal self-attention over a padded prompt batch. Returns [B, T, H, hd].
+
+    Rows with t >= lens[b] are padding; their output is zeroed.
+    """
+    B, T, H, hd = q.shape
+    KH = k.shape[2]
+    g = H // KH
+    qg = q.reshape(B, T, KH, g, hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg, k) / jnp.sqrt(
+        jnp.asarray(hd, jnp.float32)
+    )
+    causal = jnp.arange(T)[:, None] >= jnp.arange(T)[None, :]  # [T, S]
+    valid = jnp.arange(T)[None, :] < lens[:, None]  # [B, S]
+    mask = causal[None, None, None] & valid[:, None, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    # Shift by the row max for stability; fully-masked (padding) rows would
+    # produce NaN, so zero them afterwards.
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.nan_to_num(p)
+    ctx = jnp.einsum("bkgts,bskh->btkgh", p, v)
+    return ctx.reshape(B, T, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# FFN variants (oracles for kernels/ffn.py)
+# ---------------------------------------------------------------------------
+
+
+def mlp(x: jax.Array, w1: jax.Array, w2: jax.Array) -> jax.Array:
+    """2-layer MLP with GELU (Pythia/GPT-NeoX style). x: [..., d]."""
+    return jax.nn.gelu(x @ w1, approximate=True) @ w2
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """SwiGLU (Llama/Mistral style): (silu(x w1) * (x w3)) w2."""
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+def topk_iterative(logits: jax.Array, k: int):
+    """Iterative-argmax top-k over the last axis.
+
+    ``jax.lax.top_k`` lowers to the `topk(..., largest=true)` HLO op which
+    the pinned xla_extension 0.5.1 text parser rejects; k is tiny (<= 4) so
+    k argmax+mask rounds lower to plain reduce/select ops instead.
+    """
+    vals, idxs = [], []
+    x = logits
+    b = jnp.arange(logits.shape[0])
+    for _ in range(k):
+        i = jnp.argmax(x, axis=-1)  # [B]
+        v = jnp.take_along_axis(x, i[:, None], axis=-1)[:, 0]
+        vals.append(v)
+        idxs.append(i)
+        x = x.at[b, i].set(-jnp.inf)
+    return jnp.stack(vals, -1), jnp.stack(idxs, -1)
+
+
+def moe_swiglu(
+    x: jax.Array,  # [B, d]
+    router: jax.Array,  # [d, E]
+    w1: jax.Array,  # [E, d, h]
+    w3: jax.Array,  # [E, d, h]
+    w2: jax.Array,  # [E, h, d]
+    top_k: int,
+) -> jax.Array:
+    """Dense-computed switch FFN with top-k routing (Mixtral style).
+
+    All experts are evaluated and masked — numerically identical to sparse
+    dispatch, simple and correct on CPU.
+    """
+    logits = x @ router  # [B, E]
+    topv, topi = topk_iterative(logits, top_k)  # [B, k]
+    w = jax.nn.softmax(topv, axis=-1)  # renormalized over the top-k
+    gate = jnp.zeros_like(logits).at[jnp.arange(x.shape[0])[:, None], topi].set(w)
+    h = jax.nn.silu(jnp.einsum("bd,edh->beh", x, w1)) * jnp.einsum(
+        "bd,edh->beh", x, w3
+    )
+    y = jnp.einsum("beh,ehd->bed", h, w2)
+    return jnp.einsum("bed,be->bd", y, gate)
+
+
+def ffn_apply(x, lw, ffn_type: str, top_k: int = 1):
+    """Dispatch over the FFN variants given a layer-weight dict ``lw``."""
+    if ffn_type == "mlp":
+        return mlp(x, lw["w1"], lw["w2"])
+    if ffn_type == "swiglu":
+        return swiglu(x, lw["w1"], lw["w3"], lw["w2"])
+    if ffn_type == "swiglu_moe":
+        return moe_swiglu(x, lw["router"], lw["w1"], lw["w3"], lw["w2"], top_k)
+    raise ValueError(ffn_type)
+
+
+# ---------------------------------------------------------------------------
+# Row gather (oracle for kernels/gather_rows.py)
+# ---------------------------------------------------------------------------
+
+
+def gather_rows(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    """table: [V, W], tokens: [B] int32 -> [B, W]. The paper's 'memory read'."""
+    return table[tokens]

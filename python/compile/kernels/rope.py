@@ -1,0 +1,60 @@
+"""Rotary position embedding (RoPE) Pallas kernel.
+
+RoPE is the one part of the first layer that can NOT be precomputed — it
+depends on the token's position — so at serving time it runs on the
+gathered, precomputed q/k rows.  That makes it the only per-token compute
+left of the first layer's projection path and worth a fused kernel.
+
+Grid: ``(B / bb,)``; block ``[bb, H, hd]`` plus the positions ``[bb]``.
+Frequencies are regenerated in-register with ``iota`` (no HBM table).
+VMEM at paper scale (bb=8, H=32, hd=128): 8·32·128·2 ≈ 256 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, pos_ref, o_ref, *, theta):
+    x = x_ref[...]  # [bb, H, hd]
+    pos = pos_ref[...]  # [bb]
+    hd = x.shape[-1]
+    i = jax.lax.iota(jnp.float32, hd // 2)
+    freqs = theta ** (-2.0 * i / hd)  # [hd/2]
+    ang = pos.astype(jnp.float32)[:, None, None] * freqs  # [bb, 1, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    o_ref[...] = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def rope(
+    x: jax.Array,  # [B, H, hd]
+    pos: jax.Array,  # [B] int32
+    *,
+    theta: float = 10000.0,
+    block_b: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Apply RoPE per batch row. Returns [B, H, hd]."""
+    B, H, hd = x.shape
+    assert hd % 2 == 0
+    bb = min(block_b, B)
+    Bp = (B + bb - 1) // bb * bb
+    xp = jnp.pad(x, ((0, Bp - B), (0, 0), (0, 0)))
+    pp = jnp.pad(pos, (0, Bp - B))
+    out = pl.pallas_call(
+        functools.partial(_kernel, theta=theta),
+        grid=(Bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, H, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb, H, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, H, hd), x.dtype),
+        interpret=interpret,
+    )(xp, pp)
+    return out[:B]

@@ -1,0 +1,462 @@
+"""Layer-2 JAX model: parallel and serial transformer variants.
+
+Executable form of the paper's Figures 1 and 2:
+
+  * ``decode_baseline`` / ``prefill_baseline`` — Figure 1(a) / 2(b):
+    the full first layer computed from the embedding.
+  * ``decode_precomp`` / ``prefill_precomp`` — Figure 1(b) / 2(c): the
+    first layer's norm + Q/K/V (+ FFN and skip for parallel models)
+    replaced by precomputed rows gathered from the table by the rust
+    coordinator.
+
+Row layout (shared with ``precompute.py`` and ``rust/src/precompute``):
+  ``row = [ q (d) | k (e) | v (e) | r (d) ]``  — width ``2(d+e)``
+where ``r`` is the residual carried past attention: ``emb + ffn_out``
+for parallel models (the paper's "FFN and skip-connection"), plain
+``emb`` for serial ones.
+
+KV caches are passed in and returned updated (dynamic_update_slice at
+slot ``lens[b]``), so the rust engine can keep them resident as PJRT
+buffers across steps and only sync to its paged host store on preemption.
+
+Everything here is traced once by ``aot.py`` and lowered to HLO text;
+Python never runs at serving time.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .configs import ModelConfig
+from .kernels import ref
+
+Weights = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def _norm(cfg: ModelConfig, w: Weights, prefix: str, x: jax.Array) -> jax.Array:
+    if cfg.norm_type == "rmsnorm":
+        return ref.rmsnorm(x, w[f"{prefix}.scale"], cfg.norm_eps)
+    return ref.layernorm(x, w[f"{prefix}.scale"], w[f"{prefix}.bias"], cfg.norm_eps)
+
+
+def _norm_params(cfg: ModelConfig, w: Weights, prefix: str):
+    scale = w[f"{prefix}.scale"]
+    bias = w.get(f"{prefix}.bias", jnp.zeros_like(scale))
+    return scale, bias
+
+
+def _qkv(
+    cfg: ModelConfig, w: Weights, i: int, x: jax.Array, use_pallas: bool
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused norm + packed QKV projection. x: [B, d]."""
+    d, e = cfg.d, cfg.e
+    scale, bias = _norm_params(cfg, w, f"l{i}.ln1")
+    packed = jnp.concatenate([w[f"l{i}.wq"], w[f"l{i}.wk"], w[f"l{i}.wv"]], axis=1)
+    if use_pallas:
+        # §Perf CPU tuning: one grid program covers the whole (tiny) problem
+        # — under interpret mode every grid step is a lowered loop iteration.
+        y = kernels.fused_norm_matmul(
+            x, scale, bias, packed, norm_type=cfg.norm_type, eps=cfg.norm_eps,
+            block_b=max(8, x.shape[0]), block_n=min(packed.shape[1], 512),
+        )
+    else:
+        xn = _norm(cfg, w, f"l{i}.ln1", x)
+        y = xn @ packed
+    return y[:, :d], y[:, d : d + e], y[:, d + e :]
+
+
+def _ffn(
+    cfg: ModelConfig, w: Weights, i: int, x: jax.Array, use_pallas: bool
+) -> jax.Array:
+    """FFN branch on pre-normalized input. x: [B, d]."""
+    if cfg.ffn_type == "mlp":
+        if use_pallas:
+            return kernels.gelu_mlp_kernel(
+                x, w[f"l{i}.w1"], w[f"l{i}.w2"],
+                block_b=max(8, x.shape[0]),
+                block_h=min(w[f"l{i}.w1"].shape[1], 512),
+            )
+        return ref.mlp(x, w[f"l{i}.w1"], w[f"l{i}.w2"])
+    if cfg.ffn_type == "swiglu":
+        if use_pallas:
+            return kernels.swiglu_kernel(
+                x, w[f"l{i}.w1"], w[f"l{i}.w3"], w[f"l{i}.w2"],
+                block_b=max(8, x.shape[0]),
+                block_h=min(w[f"l{i}.w1"].shape[1], 512),
+            )
+        return ref.swiglu(x, w[f"l{i}.w1"], w[f"l{i}.w3"], w[f"l{i}.w2"])
+    # MoE: expert dispatch is an L2 (graph) concern; the per-expert GEMMs are
+    # dense-masked (numerically identical to sparse dispatch, CPU-friendly).
+    return ref.moe_swiglu(
+        x,
+        w[f"l{i}.router"],
+        w[f"l{i}.w1"],
+        w[f"l{i}.w3"],
+        w[f"l{i}.w2"],
+        cfg.moe_top_k,
+    )
+
+
+def _rope_pair(cfg, q, k, pos, use_pallas):
+    """q: [B, H, hd], k: [B, KH, hd], pos: [B]."""
+    if not cfg.rope:
+        return q, k
+    if use_pallas:
+        return (
+            kernels.rope_kernel(q, pos, theta=cfg.rope_theta),
+            kernels.rope_kernel(k, pos, theta=cfg.rope_theta),
+        )
+    return (
+        ref.rope_apply(q, pos, cfg.rope_theta),
+        ref.rope_apply(k, pos, cfg.rope_theta),
+    )
+
+
+def _cache_insert(cache: jax.Array, rows: jax.Array, lens: jax.Array) -> jax.Array:
+    """cache: [B, S, KH, hd]; rows: [B, KH, hd]; write at slot lens[b]."""
+    B = cache.shape[0]
+
+    def upd(c, r, l):
+        return jax.lax.dynamic_update_slice(c, r[None], (l, 0, 0))
+
+    return jax.vmap(upd)(cache, rows, lens)
+
+
+def _attn_core(
+    cfg: ModelConfig,
+    w: Weights,
+    i: int,
+    q: jax.Array,  # [B, d] (pre-reshape)
+    k: jax.Array,  # [B, e]
+    v: jax.Array,  # [B, e]
+    pos: jax.Array,  # [B] position of the new token (= old length)
+    kcache: jax.Array,  # [B, S, KH, hd]
+    vcache: jax.Array,
+    use_pallas: bool,
+):
+    """Shared decode attention tail: rope, cache insert, attention, P-proj.
+
+    Returns (attn_out [B, d], kcache', vcache').
+    """
+    B = q.shape[0]
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    qh = q.reshape(B, H, hd)
+    kh = k.reshape(B, KH, hd)
+    vh = v.reshape(B, KH, hd)
+    qh, kh = _rope_pair(cfg, qh, kh, pos, use_pallas)
+    kcache = _cache_insert(kcache, kh, pos)
+    vcache = _cache_insert(vcache, vh, pos)
+    lens = pos + 1  # the new token's slot is now valid
+    if use_pallas:
+        # §Perf CPU tuning: single KV chunk (inline, no while loop) and the
+        # whole batch in one grid program.
+        ctx = kernels.decode_attention(
+            qh, kcache, vcache, lens,
+            block_s=min(kcache.shape[1], 128), block_b=max(8, B),
+        )
+    else:
+        ctx = ref.attention_decode(qh, kcache, vcache, lens)
+    attn_out = ctx.reshape(B, cfg.d) @ w[f"l{i}.wp"]
+    return attn_out, kcache, vcache
+
+
+# ---------------------------------------------------------------------------
+# Decode-step blocks
+# ---------------------------------------------------------------------------
+
+
+def block_decode(
+    cfg: ModelConfig,
+    w: Weights,
+    i: int,
+    x: jax.Array,  # [B, d]
+    pos: jax.Array,  # [B]
+    kcache: jax.Array,
+    vcache: jax.Array,
+    use_pallas: bool,
+):
+    """Full transformer block (baseline path), parallel or serial."""
+    q, k, v = _qkv(cfg, w, i, x, use_pallas)
+    attn_out, kcache, vcache = _attn_core(
+        cfg, w, i, q, k, v, pos, kcache, vcache, use_pallas
+    )
+    if cfg.arch == "parallel":
+        # GPT-NeoX parallel residual: x + attn(ln1 x) + ffn(ln2 x)
+        ffn_out = _ffn(cfg, w, i, _norm(cfg, w, f"l{i}.ln2", x), use_pallas)
+        x = x + attn_out + ffn_out
+    else:
+        h = x + attn_out
+        x = h + _ffn(cfg, w, i, _norm(cfg, w, f"l{i}.ln2", h), use_pallas)
+    return x, kcache, vcache
+
+
+def block_decode_precomp(
+    cfg: ModelConfig,
+    w: Weights,
+    rows: jax.Array,  # [B, 2(d+e)] gathered precomputed rows
+    pos: jax.Array,
+    kcache: jax.Array,
+    vcache: jax.Array,
+    use_pallas: bool,
+):
+    """First block with precompute (layer index 0): Figure 1(b) / 2(c).
+
+    The projections (and for parallel models the FFN + skip) are already in
+    ``rows``; only RoPE, attention and the P projection remain.
+    """
+    d, e = cfg.d, cfg.e
+    q = rows[:, :d]
+    k = rows[:, d : d + e]
+    v = rows[:, d + e : d + 2 * e]
+    r = rows[:, d + 2 * e :]
+    attn_out, kcache, vcache = _attn_core(
+        cfg, w, 0, q, k, v, pos, kcache, vcache, use_pallas
+    )
+    if cfg.arch == "parallel":
+        x = r + attn_out  # r = emb + ffn_out (paper's precomputed skip)
+    else:
+        h = r + attn_out  # r = emb
+        x = h + _ffn(cfg, w, 0, _norm(cfg, w, "l0.ln2", h), use_pallas)
+    return x, kcache, vcache
+
+
+# ---------------------------------------------------------------------------
+# Decode entry points
+# ---------------------------------------------------------------------------
+
+
+def _logits(cfg: ModelConfig, w: Weights, x: jax.Array) -> jax.Array:
+    return _norm(cfg, w, "lnf", x) @ w["unemb"]
+
+
+def decode_baseline(
+    cfg: ModelConfig,
+    w: Weights,
+    tokens: jax.Array,  # [B] int32
+    pos: jax.Array,  # [B] int32 current length (slot for the new token)
+    kcaches: jax.Array,  # [L, B, S, KH, hd]
+    vcaches: jax.Array,
+    use_pallas: bool = True,
+):
+    """One decode step, full first layer. Returns (logits, kcaches', vcaches')."""
+    x = w["emb"][tokens]
+    if not cfg.rope:
+        x = x + w["abspe"][pos]
+    kout, vout = [], []
+    for i in range(cfg.n_layers):
+        x, kc, vc = block_decode(
+            cfg, w, i, x, pos, kcaches[i], vcaches[i], use_pallas
+        )
+        kout.append(kc)
+        vout.append(vc)
+    return _logits(cfg, w, x), jnp.stack(kout), jnp.stack(vout)
+
+
+def decode_precomp(
+    cfg: ModelConfig,
+    w: Weights,
+    rows: jax.Array,  # [B, 2(d+e)] rust-gathered precomputed rows
+    pos: jax.Array,
+    kcaches: jax.Array,
+    vcaches: jax.Array,
+    use_pallas: bool = True,
+):
+    """One decode step, precomputed first layer (the paper's trick)."""
+    assert cfg.rope, "precompute requires RoPE (paper §2)"
+    kout, vout = [], []
+    x, kc, vc = block_decode_precomp(
+        cfg, w, rows, pos, kcaches[0], vcaches[0], use_pallas
+    )
+    kout.append(kc)
+    vout.append(vc)
+    for i in range(1, cfg.n_layers):
+        x, kc, vc = block_decode(
+            cfg, w, i, x, pos, kcaches[i], vcaches[i], use_pallas
+        )
+        kout.append(kc)
+        vout.append(vc)
+    return _logits(cfg, w, x), jnp.stack(kout), jnp.stack(vout)
+
+
+def decode_precomp_gather(
+    cfg: ModelConfig,
+    w: Weights,
+    table: jax.Array,  # [V, 2(d+e)] precompute table as a device buffer
+    tokens: jax.Array,  # [B]
+    pos: jax.Array,
+    kcaches: jax.Array,
+    vcaches: jax.Array,
+    use_pallas: bool = True,
+):
+    """Ablation: in-graph gather (Pallas kernel) instead of rust-side mmap."""
+    if use_pallas:
+        rows = kernels.gather_rows_kernel(table, tokens)
+    else:
+        rows = ref.gather_rows(table, tokens)
+    return decode_precomp(cfg, w, rows, pos, kcaches, vcaches, use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Prefill (batched prompt processing, causal)
+# ---------------------------------------------------------------------------
+
+
+def _prefill_qkv(cfg, w, i, x, use_pallas):
+    """x: [B, T, d] -> q [B,T,H,hd], k,v [B,T,KH,hd] (norm+proj, no rope)."""
+    B, T, d = x.shape
+    q, k, v = _qkv(cfg, w, i, x.reshape(B * T, d), use_pallas)
+    return (
+        q.reshape(B, T, cfg.n_heads, cfg.head_dim),
+        k.reshape(B, T, cfg.n_kv_heads, cfg.head_dim),
+        v.reshape(B, T, cfg.n_kv_heads, cfg.head_dim),
+    )
+
+
+def _prefill_rope(cfg, q, k, T):
+    if not cfg.rope:
+        return q, k
+    pos = jnp.arange(T, dtype=jnp.int32)
+    # vmap the decode rope over the time axis: [B,T,H,hd] with pos [T]
+    rq = jax.vmap(lambda xt, p: ref.rope_apply(xt, p, cfg.rope_theta), (1, 0), 1)
+    return rq(q, pos), rq(k, pos)
+
+
+def _prefill_attn(q, k, v, lens, use_pallas):
+    """Causal attention: Pallas flash kernel or the jnp oracle."""
+    if use_pallas:
+        from .kernels.prefill_attention import prefill_attention
+
+        T = q.shape[1]
+        return prefill_attention(
+            q, k, v, lens, block_q=min(T, 32), block_k=min(T, 32)
+        )
+    return ref.attention_prefill(q, k, v, lens)
+
+
+def _block_prefill_tail(cfg, w, i, x, q, k, v, lens, use_pallas):
+    """Attention + residual/FFN for a prefill block. x: [B, T, d]."""
+    B, T, _ = x.shape
+    ctx = _prefill_attn(q, k, v, lens, use_pallas)  # [B, T, H, hd]
+    attn_out = ctx.reshape(B, T, cfg.d) @ w[f"l{i}.wp"]
+    if cfg.arch == "parallel":
+        ffn_out = _ffn(
+            cfg, w, i, _norm(cfg, w, f"l{i}.ln2", x).reshape(B * T, cfg.d), use_pallas
+        ).reshape(B, T, cfg.d)
+        return x + attn_out + ffn_out
+    h = x + attn_out
+    ffn_out = _ffn(
+        cfg, w, i, _norm(cfg, w, f"l{i}.ln2", h).reshape(B * T, cfg.d), use_pallas
+    ).reshape(B, T, cfg.d)
+    return h + ffn_out
+
+
+def prefill(
+    cfg: ModelConfig,
+    w: Weights,
+    tokens: jax.Array,  # [B, T] int32, padded
+    lens: jax.Array,  # [B] valid lengths
+    rows: jax.Array | None = None,  # [B, T, 2(d+e)] for the precomp path
+    use_pallas: bool = True,
+    max_seq: int | None = None,
+):
+    """Process a padded prompt batch.
+
+    Returns (last_logits [B, V], kcaches [L, B, S, KH, hd], vcaches).
+    Cache slots beyond lens[b] contain padding garbage; the scheduler
+    tracks validity via lens.
+    """
+    B, T = tokens.shape
+    S = max_seq or cfg.max_seq
+    precomp = rows is not None
+    if precomp:
+        assert cfg.rope, "precompute requires RoPE (paper §2)"
+        d, e = cfg.d, cfg.e
+        x = None  # layer 0 consumes rows; no embedding lookup at all
+    else:
+        x = w["emb"][tokens]  # [B, T, d]
+        if not cfg.rope:
+            x = x + w["abspe"][jnp.arange(T)][None]
+    kcaches, vcaches = [], []
+    for i in range(cfg.n_layers):
+        if i == 0 and precomp:
+            q = rows[..., :d].reshape(B, T, cfg.n_heads, cfg.head_dim)
+            k = rows[..., d : d + e].reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+            v = rows[..., d + e : d + 2 * e].reshape(
+                B, T, cfg.n_kv_heads, cfg.head_dim
+            )
+            r = rows[..., d + 2 * e :]  # [B, T, d]
+            q, k = _prefill_rope(cfg, q, k, T)
+            ctx = _prefill_attn(q, k, v, lens, use_pallas)
+            attn_out = ctx.reshape(B, T, cfg.d) @ w["l0.wp"]
+            if cfg.arch == "parallel":
+                x = r + attn_out
+            else:
+                h = r + attn_out
+                ffn_out = _ffn(
+                    cfg, w, 0, _norm(cfg, w, "l0.ln2", h).reshape(B * T, cfg.d),
+                    use_pallas,
+                ).reshape(B, T, cfg.d)
+                x = h + ffn_out
+        else:
+            q, k, v = _prefill_qkv(cfg, w, i, x, use_pallas)
+            q, k = _prefill_rope(cfg, q, k, T)
+            x = _block_prefill_tail(cfg, w, i, x, q, k, v, lens, use_pallas)
+        # Store this layer's K/V (padded out to S slots).
+        pad = ((0, 0), (0, S - T), (0, 0), (0, 0))
+        kcaches.append(jnp.pad(k, pad))
+        vcaches.append(jnp.pad(v, pad))
+    # Logits at the last valid position of each sequence.
+    xl = jnp.take_along_axis(x, (lens - 1)[:, None, None], axis=1)[:, 0]
+    return _logits(cfg, w, xl), jnp.stack(kcaches), jnp.stack(vcaches)
+
+
+# ---------------------------------------------------------------------------
+# Weight plumbing for AOT: flat parameter lists
+# ---------------------------------------------------------------------------
+
+
+def weight_order_baseline(cfg: ModelConfig) -> List[str]:
+    """Parameter order for baseline artifacts = canonical .fw order."""
+    from .params import tensor_names
+
+    return tensor_names(cfg)
+
+
+def weight_order_precomp(cfg: ModelConfig) -> List[str]:
+    """Precomp artifacts drop the weights the paper eliminates.
+
+    Serial: l0.{ln1, wq, wk, wv}.  Parallel: additionally the entire l0
+    FFN branch (ln2, w1/w3/w2/router).  ``emb`` is retained only when the
+    serial FFN needs... no — emb is never needed: baseline embeds in-graph,
+    precomp gets ``r`` in the row.  BUT the *unembedding* is always kept,
+    and serial models still need l0.ln2 + FFN.
+    """
+    drop = {"l0.ln1.scale", "l0.ln1.bias", "l0.wq", "l0.wk", "l0.wv", "emb"}
+    if cfg.arch == "parallel":
+        drop |= {
+            "l0.ln2.scale",
+            "l0.ln2.bias",
+            "l0.w1",
+            "l0.w2",
+            "l0.w3",
+            "l0.router",
+        }
+    return [n for n in weight_order_baseline(cfg) if n not in drop]
+
+
+def eliminated_weights(cfg: ModelConfig) -> List[str]:
+    """Names of tensors removed from serving memory by the trick
+    (paper: 'Number of weights that can be eliminated'). ``emb`` is
+    *replaced* by the table, not eliminated, so it is not listed here."""
+    base = set(weight_order_baseline(cfg)) - {"emb"}
+    kept = set(weight_order_precomp(cfg))
+    return sorted(base - kept)

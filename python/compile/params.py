@@ -1,0 +1,175 @@
+"""Deterministic weight initialization + the ``.fw`` tensor-bag format.
+
+Weights are generated once at build time from a fixed seed (substitution
+for public checkpoints — see DESIGN.md §7) and written to
+``artifacts/weights_<model>.fw`` so the rust runtime can upload them as
+PJRT buffers without any Python in the loop.
+
+``.fw`` layout (little-endian):
+  magic   b"FLW1"
+  u32     n_tensors
+  per tensor:
+    u32   name_len, utf-8 name
+    u32   ndim, u64 dims[ndim]
+    u32   dtype (0 = f32, 1 = i32)
+    u64   nbytes, raw data
+
+Canonical tensor names (order matters — it is the artifact parameter
+order, mirrored by ``rust/src/model/weights.rs``):
+  emb, [abspe,] l{i}.ln1.scale[, l{i}.ln1.bias], l{i}.wq, l{i}.wk,
+  l{i}.wv, l{i}.wp, l{i}.ln2.scale[, .bias], l{i}.{w1,w3,w2,router},
+  lnf.scale[, lnf.bias], unemb
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+
+DT_F32, DT_I32 = 0, 1
+MAGIC = b"FLW1"
+
+
+def layer_tensor_names(cfg: ModelConfig, i: int) -> List[str]:
+    """Canonical per-layer tensor name order."""
+    names = [f"l{i}.ln1.scale"]
+    if cfg.norm_type == "layernorm":
+        names.append(f"l{i}.ln1.bias")
+    names += [f"l{i}.wq", f"l{i}.wk", f"l{i}.wv", f"l{i}.wp", f"l{i}.ln2.scale"]
+    if cfg.norm_type == "layernorm":
+        names.append(f"l{i}.ln2.bias")
+    if cfg.ffn_type == "mlp":
+        names += [f"l{i}.w1", f"l{i}.w2"]
+    elif cfg.ffn_type == "swiglu":
+        names += [f"l{i}.w1", f"l{i}.w3", f"l{i}.w2"]
+    else:  # swiglu_moe
+        names += [f"l{i}.router", f"l{i}.w1", f"l{i}.w3", f"l{i}.w2"]
+    return names
+
+
+def tensor_names(cfg: ModelConfig) -> List[str]:
+    """Canonical full tensor name order for a model."""
+    names = ["emb"]
+    if not cfg.rope:
+        names.append("abspe")
+    for i in range(cfg.n_layers):
+        names += layer_tensor_names(cfg, i)
+    names += ["lnf.scale"]
+    if cfg.norm_type == "layernorm":
+        names.append("lnf.bias")
+    names.append("unemb")
+    return names
+
+
+def tensor_shape(cfg: ModelConfig, name: str):
+    d, e, h, V = cfg.d, cfg.e, cfg.ffn_hidden, cfg.vocab_size
+    E = cfg.n_experts
+    if name == "emb":
+        return (V, d)
+    if name == "abspe":
+        return (cfg.max_seq, d)
+    if name == "unemb":
+        return (d, V)
+    if name.startswith("lnf"):
+        return (d,)
+    # layer tensors: l{i}.<rest>
+    rest = name.split(".", 1)[1]
+    if rest.startswith("ln"):
+        return (d,)
+    if rest == "wq":
+        return (d, d)
+    if rest in ("wk", "wv"):
+        return (d, e)
+    if rest == "wp":
+        return (d, d)
+    if rest == "router":
+        return (d, E)
+    if cfg.ffn_type == "swiglu_moe":
+        return {"w1": (E, d, h), "w3": (E, d, h), "w2": (E, h, d)}[rest]
+    return {"w1": (d, h), "w3": (d, h), "w2": (h, d)}[rest]
+
+
+def init_weights(cfg: ModelConfig, seed: int = 1234) -> Dict[str, jax.Array]:
+    """GPT-2-style init: N(0, 0.02), output projections scaled by 1/sqrt(2L)."""
+    key = jax.random.PRNGKey(seed)
+    out: Dict[str, jax.Array] = {}
+    resid_scale = 1.0 / np.sqrt(2.0 * cfg.n_layers)
+    for name in tensor_names(cfg):
+        shape = tensor_shape(cfg, name)
+        key, sub = jax.random.split(key)
+        if name.endswith(".scale"):
+            t = jnp.ones(shape, jnp.float32)
+        elif name.endswith(".bias"):
+            t = jnp.zeros(shape, jnp.float32)
+        else:
+            t = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+            rest = name.split(".", 1)[-1]
+            if rest in ("wp", "w2"):
+                t = t * resid_scale
+        out[name] = t
+    return out
+
+
+# ---------------------------------------------------------------------------
+# .fw serialization
+# ---------------------------------------------------------------------------
+
+
+def save_fw(path: str, weights: Dict[str, jax.Array], order: List[str]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(order)))
+        for name in order:
+            arr = np.asarray(weights[name])
+            if arr.dtype == np.float32:
+                dt = DT_F32
+            elif arr.dtype == np.int32:
+                dt = DT_I32
+            else:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<Q", dim))
+            raw = arr.tobytes()
+            f.write(struct.pack("<I", dt))
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def load_fw(path: str) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (nl,) = struct.unpack("<I", f.read(4))
+            name = f.read(nl).decode()
+            (nd,) = struct.unpack("<I", f.read(4))
+            dims = [struct.unpack("<Q", f.read(8))[0] for _ in range(nd)]
+            (dt,) = struct.unpack("<I", f.read(4))
+            (nb,) = struct.unpack("<Q", f.read(8))
+            raw = f.read(nb)
+            dtype = np.float32 if dt == DT_F32 else np.int32
+            out[name] = np.frombuffer(raw, dtype=dtype).reshape(dims).copy()
+    return out
+
+
+def fingerprint(weights: Dict[str, jax.Array], names: List[str]) -> int:
+    """CRC32 chained over the raw bytes of the named tensors (integrity tag
+    that ties a precompute table to the weights it was built from).
+    Mirrored by ``rust/src/precompute/table.rs`` via the crc32fast crate."""
+    import zlib
+
+    crc = 0
+    for name in names:
+        crc = zlib.crc32(np.asarray(weights[name]).tobytes(), crc)
+    return crc & 0xFFFFFFFF

@@ -1,0 +1,149 @@
+"""Offline first-layer precompute: the paper's contribution (S3).
+
+For every token in the vocabulary, run the parts of the first layer that
+depend only on the embedding and store the results as one table row:
+
+  serial   (Fig. 2c):  row = [ Q(n(emb)) | K(n(emb)) | V(n(emb)) | emb ]
+  parallel (Fig. 1b):  row = [ Q(n1(emb)) | K(n1(emb)) | V(n1(emb)) |
+                               emb + FFN(n2(emb)) ]
+
+RoPE is NOT applied — it depends on the position and is done at serving
+time on the gathered row.  Row width is ``2(d+e)`` in both cases.
+
+The ``.fpt`` on-disk format (little-endian), mmap'd by
+``rust/src/precompute/table.rs``:
+
+  magic    b"FPT1"
+  u32      version (1)
+  u32      arch (0 = parallel, 1 = serial)
+  u32      d, u32 e, u32 vocab_size
+  u32      dtype (0 = f32)
+  u64      row_width (= 2(d+e))
+  u32      weights_crc (CRC32 over the layer-0 tensors used, canonical order)
+  u32      reserved (0)
+  data     vocab_size * row_width * 4 bytes, row-major
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+from .configs import ModelConfig
+from .kernels import ref
+from .model import _ffn, _norm  # shared definitions: single source of truth
+from .params import fingerprint
+
+MAGIC = b"FPT1"
+VERSION = 1
+HEADER_FMT = "<4sIIIIIIQII"  # magic, ver, arch, d, e, vocab, dtype, width, crc, rsvd
+HEADER_SIZE = struct.calcsize(HEADER_FMT)
+
+
+def source_tensor_names(cfg: ModelConfig) -> List[str]:
+    """Tensors the table derives from (the CRC fingerprint input)."""
+    names = ["emb", "l0.ln1.scale"]
+    if cfg.norm_type == "layernorm":
+        names.append("l0.ln1.bias")
+    names += ["l0.wq", "l0.wk", "l0.wv"]
+    if cfg.arch == "parallel":
+        names.append("l0.ln2.scale")
+        if cfg.norm_type == "layernorm":
+            names.append("l0.ln2.bias")
+        if cfg.ffn_type == "swiglu_moe":
+            names.append("l0.router")
+        names.append("l0.w1")
+        if cfg.ffn_type != "mlp":
+            names.append("l0.w3")
+        names.append("l0.w2")
+    return names
+
+
+def build_rows(
+    cfg: ModelConfig,
+    w: Dict[str, jax.Array],
+    tokens: jax.Array | None = None,
+    use_pallas: bool = True,
+    batch: int = 256,
+) -> jax.Array:
+    """Compute precomputed rows for ``tokens`` (default: whole vocabulary).
+
+    Returns [n, 2(d+e)] f32.  Batched over the vocab so the FFN of large
+    parallel models never materializes [V, hidden] at once.
+    """
+    assert cfg.rope, "precompute requires RoPE (paper §2)"
+    if tokens is None:
+        tokens = jnp.arange(cfg.vocab_size, dtype=jnp.int32)
+    emb = w["emb"][tokens]  # [n, d]
+    outs = []
+    for s in range(0, emb.shape[0], batch):
+        x = emb[s : s + batch]
+        scale = w["l0.ln1.scale"]
+        bias = w.get("l0.ln1.bias", jnp.zeros_like(scale))
+        packed = jnp.concatenate([w["l0.wq"], w["l0.wk"], w["l0.wv"]], axis=1)
+        if use_pallas:
+            qkv = kernels.fused_norm_matmul(
+                x, scale, bias, packed, norm_type=cfg.norm_type, eps=cfg.norm_eps
+            )
+        else:
+            xn = (
+                ref.rmsnorm(x, scale, cfg.norm_eps)
+                if cfg.norm_type == "rmsnorm"
+                else ref.layernorm(x, scale, bias, cfg.norm_eps)
+            )
+            qkv = xn @ packed
+        if cfg.arch == "parallel":
+            r = x + _ffn(cfg, w, 0, _norm(cfg, w, "l0.ln2", x), use_pallas)
+        else:
+            r = x
+        outs.append(jnp.concatenate([qkv, r], axis=1))
+    return jnp.concatenate(outs, axis=0)
+
+
+def save_fpt(path: str, cfg: ModelConfig, rows: jax.Array, crc: int) -> None:
+    arr = np.asarray(rows, dtype=np.float32)
+    V, W = arr.shape
+    assert V == cfg.vocab_size and W == cfg.precomp_row_width
+    with open(path, "wb") as f:
+        f.write(
+            struct.pack(
+                HEADER_FMT,
+                MAGIC,
+                VERSION,
+                0 if cfg.arch == "parallel" else 1,
+                cfg.d,
+                cfg.e,
+                cfg.vocab_size,
+                0,
+                W,
+                crc & 0xFFFFFFFF,
+                0,
+            )
+        )
+        f.write(arr.tobytes())
+
+
+def load_fpt(path: str):
+    """Returns (header dict, rows ndarray [V, W])."""
+    with open(path, "rb") as f:
+        hdr = struct.unpack(HEADER_FMT, f.read(HEADER_SIZE))
+        magic, ver, arch, d, e, vocab, dtype, width, crc, _ = hdr
+        assert magic == MAGIC and ver == VERSION and dtype == 0
+        data = np.frombuffer(f.read(vocab * width * 4), dtype=np.float32)
+    return (
+        dict(arch=arch, d=d, e=e, vocab=vocab, width=width, crc=crc),
+        data.reshape(vocab, width).copy(),
+    )
+
+
+def build_table(cfg: ModelConfig, w: Dict[str, jax.Array], path: str) -> int:
+    """Build + persist the table; returns the weights CRC."""
+    rows = build_rows(cfg, w)
+    crc = fingerprint(w, source_tensor_names(cfg))
+    save_fpt(path, cfg, rows, crc)
+    return crc

@@ -1,0 +1,133 @@
+"""AOT pipeline tests: HLO-text lowering + manifest integrity.
+
+The heavyweight end-to-end check (rust loads the artifact and numerics
+match) lives in rust/tests; here we verify the python side: lowering
+round-trips through the HLO text printer, and the manifest is internally
+consistent with the emitted files.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, configs, model, params
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_smoke():
+    def fn(x, y):
+        return (x @ y + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_decode_artifact_lowering_has_no_l0_qkv_matmul():
+    """E6/§Perf structural check: the precomp decode graph must contain
+    fewer dot ops than baseline — the first layer's Q/K/V (and FFN for
+    parallel models) matmuls are gone."""
+    for name in ["tiny-serial", "tiny-parallel"]:
+        cfg = configs.get(name)
+        worder_b = model.weight_order_baseline(cfg)
+        worder_p = model.weight_order_precomp(cfg)
+        B, S = 1, cfg.max_seq
+        L, KH, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        cache = jax.ShapeDtypeStruct((L, B, S, KH, hd), jnp.float32)
+        ws_b = [
+            jax.ShapeDtypeStruct(params.tensor_shape(cfg, n), jnp.float32)
+            for n in worder_b
+        ]
+        ws_p = [
+            jax.ShapeDtypeStruct(params.tensor_shape(cfg, n), jnp.float32)
+            for n in worder_p
+        ]
+        ti = jax.ShapeDtypeStruct((B,), jnp.int32)
+        rows = jax.ShapeDtypeStruct((B, cfg.precomp_row_width), jnp.float32)
+
+        def fb(t, p, kc, vc, *ws):
+            return model.decode_baseline(cfg, dict(zip(worder_b, ws)), t, p, kc, vc, False)
+
+        def fp(r, p, kc, vc, *ws):
+            return model.decode_precomp(cfg, dict(zip(worder_p, ws)), r, p, kc, vc, False)
+
+        hb = aot.to_hlo_text(jax.jit(fb).lower(ti, ti, cache, cache, *ws_b))
+        hp = aot.to_hlo_text(jax.jit(fp).lower(rows, ti, cache, cache, *ws_p))
+        assert hb.count(" dot(") > hp.count(" dot("), name
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+def test_manifest_files_exist_and_parse():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    for mname, m in man["models"].items():
+        assert os.path.exists(os.path.join(ART, m["weights_file"]))
+        assert os.path.exists(os.path.join(ART, m["table_file"]))
+        for art in m["artifacts"]:
+            p = os.path.join(ART, art["file"])
+            assert os.path.exists(p), p
+            with open(p) as f:
+                head = f.read(200)
+            assert "HloModule" in head
+
+
+@needs_artifacts
+def test_manifest_weight_params_match_config():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for mname, m in man["models"].items():
+        cfg = configs.get(mname)
+        base = model.weight_order_baseline(cfg)
+        pre = model.weight_order_precomp(cfg)
+        for art in m["artifacts"]:
+            wp = art["weight_params"]
+            if "baseline" in art["name"]:
+                assert wp == base
+            elif "precomp_gather" in art["name"]:
+                assert wp == ["@table"] + pre
+            elif art["kind"] == "precompute_build":
+                pass  # its own (source-tensor) order
+            else:
+                assert wp == pre
+
+
+@needs_artifacts
+def test_manifest_row_width_consistent():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for mname, m in man["models"].items():
+        c = m["config"]
+        assert c["precomp_row_width"] == 2 * (c["d"] + c["e"])
+        for art in m["artifacts"]:
+            for io in art["inputs"]:
+                if io["name"] == "rows":
+                    assert io["shape"][-1] == c["precomp_row_width"]
+
+
+@needs_artifacts
+def test_weights_crc_matches_table(tmp_path):
+    """The manifest CRC, the .fpt header CRC and a recomputed CRC agree."""
+    from compile import precompute
+
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    m = man["models"]["tiny-serial"]
+    hdr, _ = precompute.load_fpt(os.path.join(ART, m["table_file"]))
+    assert hdr["crc"] == m["weights_crc"]
+    cfg = configs.get("tiny-serial")
+    w = params.init_weights(cfg)
+    crc = params.fingerprint(w, precompute.source_tensor_names(cfg))
+    assert crc == hdr["crc"]

@@ -1,0 +1,359 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (batch, dims, heads, cache sizes, block sizes)
+and checks assert_allclose against ref.py.  Kernels run in interpret
+mode, so tolerances are plain f32 accumulation noise.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import kernels
+from compile.kernels import ref
+
+SETTINGS = dict(deadline=None, max_examples=15)
+
+
+def _arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# fused_norm_matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 9),
+    d=st.sampled_from([16, 64, 128]),
+    dout=st.sampled_from([8, 48, 160]),
+    bb=st.sampled_from([1, 2, 8]),
+    bn=st.sampled_from([16, 64]),
+    norm=st.sampled_from(["rmsnorm", "layernorm"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_norm_matmul(b, d, dout, bb, bn, norm, seed):
+    rng = np.random.default_rng(seed)
+    x, scale, bias = _arr(rng, (b, d)), _arr(rng, (d,)), _arr(rng, (d,))
+    w = _arr(rng, (d, dout), 0.2)
+    got = kernels.fused_norm_matmul(
+        x, scale, bias, w, norm_type=norm, block_b=bb, block_n=bn
+    )
+    xn = ref.rmsnorm(x, scale) if norm == "rmsnorm" else ref.layernorm(x, scale, bias)
+    assert_allclose(got, xn @ w, rtol=2e-5, atol=2e-5)
+
+
+def test_fused_norm_matmul_block_padding_edges():
+    """Block sizes that do not divide the dims exercise the padding path."""
+    rng = np.random.default_rng(0)
+    x, scale, bias = _arr(rng, (5, 48)), _arr(rng, (48,)), _arr(rng, (48,))
+    w = _arr(rng, (48, 50), 0.2)
+    got = kernels.fused_norm_matmul(
+        x, scale, bias, w, norm_type="rmsnorm", block_b=3, block_n=7
+    )
+    assert_allclose(got, ref.rmsnorm(x, scale) @ w, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rope
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 6),
+    h=st.sampled_from([1, 2, 8]),
+    hd=st.sampled_from([4, 16, 64]),
+    theta=st.sampled_from([1e4, 1e6]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rope_kernel(b, h, hd, theta, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (b, h, hd))
+    pos = jnp.asarray(rng.integers(0, 4096, (b,)), jnp.int32)
+    got = kernels.rope_kernel(x, pos, theta=theta, block_b=2)
+    assert_allclose(got, ref.rope_apply(x, pos, theta), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_rope_is_norm_preserving(seed):
+    """Rotation preserves the norm of each (x1_i, x2_i) pair — the defining
+    property of RoPE (it is a block-diagonal rotation matrix)."""
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (3, 2, 32))
+    pos = jnp.asarray(rng.integers(0, 1000, (3,)), jnp.int32)
+    y = np.asarray(kernels.rope_kernel(x, pos))
+    xa = np.asarray(x)
+    px = np.stack([xa[..., :16], xa[..., 16:]], -1)
+    py = np.stack([y[..., :16], y[..., 16:]], -1)
+    assert_allclose(
+        np.linalg.norm(px, axis=-1), np.linalg.norm(py, axis=-1), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_rope_pos_zero_is_identity():
+    rng = np.random.default_rng(1)
+    x = _arr(rng, (2, 3, 16))
+    pos = jnp.zeros((2,), jnp.int32)
+    assert_allclose(kernels.rope_kernel(x, pos), x, rtol=1e-6, atol=1e-6)
+
+
+def test_rope_relative_property():
+    """<rope(q,m), rope(k,n)> depends only on m-n (RoPE's raison d'être)."""
+    rng = np.random.default_rng(2)
+    q = _arr(rng, (1, 1, 32))
+    k = _arr(rng, (1, 1, 32))
+    def dot(m, n):
+        qr = kernels.rope_kernel(q, jnp.asarray([m], jnp.int32))
+        kr = kernels.rope_kernel(k, jnp.asarray([n], jnp.int32))
+        return float(jnp.sum(qr * kr))
+    assert dot(5, 3) == pytest.approx(dot(12, 10), rel=1e-4)
+    assert dot(7, 0) == pytest.approx(dot(107, 100), rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 5),
+    kh=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 4]),
+    hd=st.sampled_from([8, 32]),
+    s=st.sampled_from([16, 40, 64]),
+    bs=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention(b, kh, g, hd, s, bs, seed):
+    rng = np.random.default_rng(seed)
+    h = kh * g
+    q = _arr(rng, (b, h, hd))
+    kc = _arr(rng, (b, s, kh, hd))
+    vc = _arr(rng, (b, s, kh, hd))
+    lens = jnp.asarray(rng.integers(1, s + 1, (b,)), jnp.int32)
+    got = kernels.decode_attention(q, kc, vc, lens, block_s=bs)
+    assert_allclose(
+        got, ref.attention_decode(q, kc, vc, lens), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_decode_attention_len_one():
+    """With a single valid slot attention must return exactly v[0]."""
+    rng = np.random.default_rng(3)
+    q = _arr(rng, (2, 4, 8))
+    kc = _arr(rng, (2, 32, 2, 8))
+    vc = _arr(rng, (2, 32, 2, 8))
+    lens = jnp.ones((2,), jnp.int32)
+    got = np.asarray(kernels.decode_attention(q, kc, vc, lens, block_s=8))
+    want = np.asarray(vc)[:, 0]  # [B, KH, hd]
+    want = np.repeat(want, 2, axis=1)  # GQA broadcast KH->H
+    assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_ignores_garbage_beyond_len():
+    """Slots >= lens must not affect the result (paper: only lens slots read)."""
+    rng = np.random.default_rng(4)
+    q = _arr(rng, (1, 2, 8))
+    kc = _arr(rng, (1, 16, 2, 8))
+    vc = _arr(rng, (1, 16, 2, 8))
+    lens = jnp.asarray([5], jnp.int32)
+    base = kernels.decode_attention(q, kc, vc, lens, block_s=8)
+    kc2 = kc.at[:, 5:].set(1e9)
+    vc2 = vc.at[:, 5:].set(-1e9)
+    poisoned = kernels.decode_attention(q, kc2, vc2, lens, block_s=8)
+    assert_allclose(base, poisoned, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# FFN kernels
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 6),
+    d=st.sampled_from([16, 64]),
+    h=st.sampled_from([24, 96, 200]),
+    bh=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_swiglu_kernel(b, d, h, bh, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (b, d))
+    w1, w3 = _arr(rng, (d, h), 0.1), _arr(rng, (d, h), 0.1)
+    w2 = _arr(rng, (h, d), 0.1)
+    got = kernels.swiglu_kernel(x, w1, w3, w2, block_h=bh)
+    assert_allclose(got, ref.swiglu(x, w1, w3, w2), rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 6),
+    d=st.sampled_from([16, 64]),
+    h=st.sampled_from([24, 96]),
+    bh=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gelu_mlp_kernel(b, d, h, bh, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (b, d))
+    w1, w2 = _arr(rng, (d, h), 0.1), _arr(rng, (h, d), 0.1)
+    got = kernels.gelu_mlp_kernel(x, w1, w2, block_h=bh)
+    assert_allclose(got, ref.mlp(x, w1, w2), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# gather
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    v=st.sampled_from([4, 64, 300]),
+    w=st.sampled_from([8, 96]),
+    b=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gather_rows(v, w, b, seed):
+    rng = np.random.default_rng(seed)
+    table = _arr(rng, (v, w))
+    toks = jnp.asarray(rng.integers(0, v, (b,)), jnp.int32)
+    got = kernels.gather_rows_kernel(table, toks)
+    assert_allclose(got, ref.gather_rows(table, toks), rtol=0, atol=0)
+
+
+def test_gather_rows_repeated_tokens():
+    rng = np.random.default_rng(5)
+    table = _arr(rng, (10, 6))
+    toks = jnp.asarray([3, 3, 3, 0, 9], jnp.int32)
+    got = np.asarray(kernels.gather_rows_kernel(table, toks))
+    assert_allclose(got[0], got[1])
+    assert_allclose(got[0], np.asarray(table)[3])
+
+
+# ---------------------------------------------------------------------------
+# MoE oracle sanity (dispatch math, used directly by L2)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), topk=st.integers(1, 4))
+def test_moe_gates_sum_to_one(seed, topk):
+    rng = np.random.default_rng(seed)
+    B, d, E, h = 5, 16, 4, 24
+    x = _arr(rng, (B, d))
+    router = _arr(rng, (d, E))
+    w1, w3 = _arr(rng, (E, d, h), 0.1), _arr(rng, (E, d, h), 0.1)
+    w2 = _arr(rng, (E, h, d), 0.1)
+    # top_k = E makes MoE a softmax-weighted mixture of all experts; the
+    # output must then be a convex combination, bounded by the extremes.
+    y = ref.moe_swiglu(x, router, w1, w3, w2, top_k=topk)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_moe_topk_equals_single_expert_when_dominant():
+    """If one expert's router logit dominates, top-1 output equals that
+    expert's swiglu."""
+    rng = np.random.default_rng(6)
+    B, d, E, h = 3, 8, 4, 12
+    x = _arr(rng, (B, d))
+    router = jnp.zeros((d, E)).at[:, 2].set(100.0)  # expert 2 dominates
+    w1, w3 = _arr(rng, (E, d, h), 0.1), _arr(rng, (E, d, h), 0.1)
+    w2 = _arr(rng, (E, h, d), 0.1)
+    y = ref.moe_swiglu(x, router, w1, w3, w2, top_k=1)
+    want = ref.swiglu(x, w1[2], w3[2], w2[2])
+    assert_allclose(y, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# prefill (causal) attention kernel
+# ---------------------------------------------------------------------------
+
+from compile.kernels.prefill_attention import prefill_attention  # noqa: E402
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    kh=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2]),
+    hd=st.sampled_from([8, 32]),
+    t=st.sampled_from([8, 24, 33]),
+    bq=st.sampled_from([8, 16]),
+    bk=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prefill_attention(b, kh, g, hd, t, bq, bk, seed):
+    rng = np.random.default_rng(seed)
+    h = kh * g
+    q = _arr(rng, (b, t, h, hd))
+    k = _arr(rng, (b, t, kh, hd))
+    v = _arr(rng, (b, t, kh, hd))
+    lens = jnp.asarray(rng.integers(1, t + 1, (b,)), jnp.int32)
+    got = prefill_attention(q, k, v, lens, block_q=bq, block_k=bk)
+    want = ref.attention_prefill(q, k, v, lens)
+    assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_prefill_attention_is_causal():
+    """Future tokens must not influence earlier positions."""
+    rng = np.random.default_rng(8)
+    b, t, kh, g, hd = 1, 16, 2, 2, 8
+    h = kh * g
+    q = _arr(rng, (b, t, h, hd))
+    k = _arr(rng, (b, t, kh, hd))
+    v = _arr(rng, (b, t, kh, hd))
+    lens = jnp.asarray([t], jnp.int32)
+    base = prefill_attention(q, k, v, lens, block_q=8, block_k=8)
+    # Poison the tail: outputs at positions < 8 must be unchanged.
+    k2 = k.at[:, 12:].set(1e3)
+    v2 = v.at[:, 12:].set(-1e3)
+    poisoned = prefill_attention(q, k2, v2, lens, block_q=8, block_k=8)
+    assert_allclose(base[:, :8], poisoned[:, :8], rtol=1e-6, atol=1e-6)
+
+
+def test_prefill_attention_matches_decode_chain():
+    """Prefilling T tokens equals T single-token decode-attention steps."""
+    rng = np.random.default_rng(9)
+    t, kh, g, hd = 6, 1, 2, 8
+    h = kh * g
+    q = _arr(rng, (1, t, h, hd))
+    k = _arr(rng, (1, t, kh, hd))
+    v = _arr(rng, (1, t, kh, hd))
+    lens = jnp.asarray([t], jnp.int32)
+    pre = prefill_attention(q, k, v, lens, block_q=8, block_k=8)
+    for i in range(t):
+        step = kernels.decode_attention(
+            q[:, i],
+            k,  # cache holds all T rows; mask limits to <= i
+            v,
+            jnp.asarray([i + 1], jnp.int32),
+            block_s=8,
+        )
+        assert_allclose(pre[:, i], step, rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 6),
+    bb=st.sampled_from([1, 2, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_block_b_invariance(b, bb, seed):
+    """The §Perf batch-blocking of the grid must not change results."""
+    rng = np.random.default_rng(seed)
+    q = _arr(rng, (b, 4, 8))
+    kc = _arr(rng, (b, 16, 2, 8))
+    vc = _arr(rng, (b, 16, 2, 8))
+    lens = jnp.asarray(rng.integers(1, 17, (b,)), jnp.int32)
+    a = kernels.decode_attention(q, kc, vc, lens, block_s=16, block_b=bb)
+    want = ref.attention_decode(q, kc, vc, lens)
+    assert_allclose(a, want, rtol=2e-5, atol=2e-5)

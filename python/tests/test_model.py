@@ -1,0 +1,170 @@
+"""L2 model tests: the paper's equivalence claims as executable checks.
+
+E4 — Figure 1(b): parallel models, precomputed first layer ≡ baseline.
+E5 — Figure 2(c): serial models, precomputed Q/K/V ≡ baseline; plus the
+     negative control of Figure 2(a): with absolute PE the precomputed
+     values are WRONG for every position > 0.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import configs, model, params, precompute
+from compile.kernels import ref
+
+RUNNABLE = ["tiny-serial", "tiny-parallel", "tiny-moe", "tiny-moe-parallel"]
+
+
+def _setup(name, seed=7, B=3, use_zero_cache=False):
+    cfg = configs.get(name)
+    w = params.init_weights(cfg, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    L, S = cfg.n_layers, cfg.max_seq
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B,)), jnp.int32)
+    pos = jnp.asarray(rng.integers(0, S - 1, (B,)), jnp.int32)
+    if use_zero_cache:
+        kc = jnp.zeros((L, B, S, KH, hd), jnp.float32)
+        vc = jnp.zeros_like(kc)
+    else:
+        kc = jnp.asarray(rng.normal(size=(L, B, S, KH, hd)), jnp.float32)
+        vc = jnp.asarray(rng.normal(size=(L, B, S, KH, hd)), jnp.float32)
+    return cfg, w, toks, pos, kc, vc
+
+
+@pytest.mark.parametrize("name", RUNNABLE)
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_decode_precompute_equivalence(name, use_pallas):
+    """The paper's core claim: first-layer precompute changes nothing."""
+    cfg, w, toks, pos, kc, vc = _setup(name)
+    lb, kb, vb = model.decode_baseline(cfg, w, toks, pos, kc, vc, use_pallas)
+    rows = precompute.build_rows(cfg, w, toks, use_pallas=use_pallas)
+    lp, kp, vp = model.decode_precomp(cfg, w, rows, pos, kc, vc, use_pallas)
+    assert_allclose(lb, lp, rtol=1e-5, atol=1e-5)
+    assert_allclose(kb, kp, rtol=1e-5, atol=1e-5)
+    assert_allclose(vb, vp, rtol=1e-5, atol=1e-5)
+    assert (np.argmax(np.asarray(lb), -1) == np.argmax(np.asarray(lp), -1)).all()
+
+
+@pytest.mark.parametrize("name", ["tiny-serial", "tiny-parallel"])
+def test_decode_precomp_gather_equivalence(name):
+    """Ablation path: in-graph Pallas gather over the full table."""
+    cfg, w, toks, pos, kc, vc = _setup(name)
+    table = precompute.build_rows(cfg, w, use_pallas=False)
+    lb, _, _ = model.decode_baseline(cfg, w, toks, pos, kc, vc, use_pallas=False)
+    lg, _, _ = model.decode_precomp_gather(
+        cfg, w, table, toks, pos, kc, vc, use_pallas=False
+    )
+    assert_allclose(lb, lg, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", RUNNABLE)
+def test_prefill_precompute_equivalence(name):
+    cfg, w, _, _, _, _ = _setup(name)
+    rng = np.random.default_rng(11)
+    B, T = 2, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+    lens = jnp.asarray([T, T // 2], jnp.int32)
+    lb, kb, vb = model.prefill(cfg, w, toks, lens, use_pallas=False)
+    rows = precompute.build_rows(cfg, w, toks.reshape(-1), use_pallas=False)
+    rows = rows.reshape(B, T, -1)
+    lp, kp, vp = model.prefill(cfg, w, toks, lens, rows=rows, use_pallas=False)
+    assert_allclose(lb, lp, rtol=1e-5, atol=1e-5)
+    # K/V only meaningful for slots < lens: compare masked.
+    for b, l in enumerate([T, T // 2]):
+        assert_allclose(kb[:, b, :l], kp[:, b, :l], rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_then_decode_matches_pure_decode():
+    """Engine invariant: prefill(prompt) + decode steps == decode from scratch."""
+    cfg, w, _, _, _, _ = _setup("tiny-serial")
+    rng = np.random.default_rng(5)
+    T = 7
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, T)), jnp.int32)
+    lens = jnp.asarray([T], jnp.int32)
+    lg_p, kc, vc = model.prefill(cfg, w, toks, lens, use_pallas=False)
+
+    L, S = cfg.n_layers, cfg.max_seq
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    kc2 = jnp.zeros((L, 1, S, KH, hd), jnp.float32)
+    vc2 = jnp.zeros_like(kc2)
+    for t in range(T):
+        lg_d, kc2, vc2 = model.decode_baseline(
+            cfg, w, toks[:, t], jnp.asarray([t], jnp.int32), kc2, vc2, False
+        )
+    assert_allclose(lg_p, lg_d, rtol=1e-4, atol=1e-5)
+    assert_allclose(kc[:, :, :T], kc2[:, :, :T], rtol=1e-4, atol=1e-5)
+
+
+def test_precompute_invalid_under_absolute_pe():
+    """Negative control (Figure 2a): with absolute PE the first-layer QKV
+    inputs depend on the position, so a per-token table is wrong for every
+    position except the one it was computed at."""
+    cfg = configs.get("tiny-abspe")
+    assert not cfg.rope
+    w = params.init_weights(cfg, seed=3)
+    tok = jnp.asarray([17], jnp.int32)
+    emb = w["emb"][tok]
+    # What a (naive) table would store: Q(norm(emb)).
+    xn = ref.rmsnorm(emb, w["l0.ln1.scale"], cfg.norm_eps)
+    q_table = xn @ w["l0.wq"]
+    # What the model actually needs at position p: Q(norm(emb + pe[p])).
+    for p in [1, 5, 50]:
+        xp = emb + w["abspe"][jnp.asarray([p])]
+        q_true = ref.rmsnorm(xp, w["l0.ln1.scale"], cfg.norm_eps) @ w["l0.wq"]
+        diff = float(jnp.max(jnp.abs(q_true - q_table)))
+        assert diff > 1e-3, f"abs-PE should break precompute at pos {p}"
+    # ... while at position 0 with zero PE it would coincide only if pe[0]=0.
+    # (RoPE models, by contrast, pass test_decode_precompute_equivalence.)
+
+
+def test_precompute_rejected_for_abspe_config():
+    cfg = configs.get("tiny-abspe")
+    w = params.init_weights(cfg, seed=3)
+    with pytest.raises(AssertionError, match="RoPE"):
+        precompute.build_rows(cfg, w)
+
+
+@pytest.mark.parametrize("name", RUNNABLE)
+def test_eliminated_weights_match_paper_formula(name):
+    """#eliminated = d*d + 2*d*e (QKV) [+ FFN weights for parallel]."""
+    cfg = configs.get(name)
+    elim = model.eliminated_weights(cfg)
+    n = 0
+    for t in elim:
+        shape = params.tensor_shape(cfg, t)
+        sz = 1
+        for s in shape:
+            sz *= s
+        n += sz
+    d, e, h, E = cfg.d, cfg.e, cfg.ffn_hidden, cfg.n_experts
+    want = d * d + 2 * d * e + d  # wq + wk/wv + ln1.scale
+    if cfg.norm_type == "layernorm":
+        want += d
+    if cfg.arch == "parallel":
+        want += cfg.ffn_weight_factor * d * h * E + d  # FFN + ln2.scale
+        if cfg.norm_type == "layernorm":
+            want += d
+        if cfg.ffn_type == "swiglu_moe":
+            want += d * E  # router
+    assert n == want
+
+
+def test_weight_order_precomp_is_subset_in_order():
+    cfg = configs.get("tiny-serial")
+    base = model.weight_order_baseline(cfg)
+    pre = model.weight_order_precomp(cfg)
+    assert [n for n in base if n in set(pre)] == pre
+
+
+def test_decode_batch_independence():
+    """Each row of a batch must be computed independently (router/batcher
+    relies on it when mixing requests)."""
+    cfg, w, toks, pos, kc, vc = _setup("tiny-serial", B=3)
+    l3, _, _ = model.decode_baseline(cfg, w, toks, pos, kc, vc, False)
+    l1, _, _ = model.decode_baseline(
+        cfg, w, toks[1:2], pos[1:2], kc[:, 1:2], vc[:, 1:2], False
+    )
+    assert_allclose(l3[1:2], l1, rtol=1e-5, atol=1e-6)

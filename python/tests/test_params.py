@@ -1,0 +1,67 @@
+"""Weight init + .fw format tests."""
+
+import os
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import configs, params
+
+
+@pytest.mark.parametrize(
+    "name", ["tiny-serial", "tiny-parallel", "tiny-moe", "tiny-abspe"]
+)
+def test_tensor_names_shapes_consistent(name):
+    cfg = configs.get(name)
+    names = params.tensor_names(cfg)
+    assert len(names) == len(set(names))
+    w = params.init_weights(cfg)
+    assert set(w) == set(names)
+    for n in names:
+        assert w[n].shape == params.tensor_shape(cfg, n), n
+
+
+def test_init_deterministic():
+    cfg = configs.get("tiny-serial")
+    a = params.init_weights(cfg, seed=42)
+    b = params.init_weights(cfg, seed=42)
+    for n in a:
+        assert_allclose(a[n], b[n], rtol=0, atol=0)
+
+
+def test_abspe_only_without_rope():
+    assert "abspe" not in params.tensor_names(configs.get("tiny-serial"))
+    assert "abspe" in params.tensor_names(configs.get("tiny-abspe"))
+
+
+def test_layernorm_has_bias_rmsnorm_does_not():
+    par = params.tensor_names(configs.get("tiny-parallel"))  # layernorm
+    ser = params.tensor_names(configs.get("tiny-serial"))  # rmsnorm
+    assert "l0.ln1.bias" in par and "lnf.bias" in par
+    assert "l0.ln1.bias" not in ser and "lnf.bias" not in ser
+
+
+def test_fw_roundtrip(tmp_path):
+    cfg = configs.get("tiny-moe")
+    w = params.init_weights(cfg)
+    order = params.tensor_names(cfg)
+    path = os.path.join(tmp_path, "w.fw")
+    params.save_fw(path, w, order)
+    back = params.load_fw(path)
+    assert list(back) == order  # order preserved
+    for n in order:
+        assert_allclose(back[n], np.asarray(w[n]), rtol=0, atol=0)
+
+
+def test_total_weight_count_matches_paper_formulas():
+    """Paper table 1: total = 2*d*vocab + L*(QP + KV + FFN) (+norm scales)."""
+    for name, expect_b in [("pythia-6.9b", 6.9e9), ("mistral-7b", 7.2e9)]:
+        cfg = configs.get(name)
+        n = 0
+        for t in params.tensor_names(cfg):
+            sz = 1
+            for s in params.tensor_shape(cfg, t):
+                sz *= s
+            n += sz
+        assert abs(n - expect_b) / expect_b < 0.02, (name, n)

@@ -1,0 +1,87 @@
+"""S3 table builder + .fpt format tests."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import configs, model, params, precompute
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("name", ["tiny-serial", "tiny-parallel", "tiny-moe"])
+def test_row_width_is_2_d_plus_e(name):
+    cfg = configs.get(name)
+    w = params.init_weights(cfg)
+    rows = precompute.build_rows(cfg, w, jnp.arange(4, dtype=jnp.int32), False)
+    assert rows.shape == (4, 2 * (cfg.d + cfg.e))
+
+
+def test_row_layout_serial():
+    """Serial rows are [Q(n(emb)) | K | V | emb] exactly."""
+    cfg = configs.get("tiny-serial")
+    w = params.init_weights(cfg)
+    toks = jnp.asarray([0, 5, 99], jnp.int32)
+    rows = precompute.build_rows(cfg, w, toks, use_pallas=False)
+    emb = w["emb"][toks]
+    xn = ref.rmsnorm(emb, w["l0.ln1.scale"], cfg.norm_eps)
+    d, e = cfg.d, cfg.e
+    assert_allclose(rows[:, :d], xn @ w["l0.wq"], rtol=1e-5, atol=1e-6)
+    assert_allclose(rows[:, d : d + e], xn @ w["l0.wk"], rtol=1e-5, atol=1e-6)
+    assert_allclose(rows[:, d + e : d + 2 * e], xn @ w["l0.wv"], rtol=1e-5, atol=1e-6)
+    assert_allclose(rows[:, d + 2 * e :], emb, rtol=0, atol=0)
+
+
+def test_row_layout_parallel_residual_includes_ffn():
+    """Parallel rows carry r = emb + FFN(norm2(emb)) — the paper's
+    'FFN and skip-connection' precompute."""
+    cfg = configs.get("tiny-parallel")
+    w = params.init_weights(cfg)
+    toks = jnp.asarray([3, 42], jnp.int32)
+    rows = precompute.build_rows(cfg, w, toks, use_pallas=False)
+    emb = w["emb"][toks]
+    x2 = ref.layernorm(emb, w["l0.ln2.scale"], w["l0.ln2.bias"], cfg.norm_eps)
+    r = emb + ref.mlp(x2, w["l0.w1"], w["l0.w2"])
+    d, e = cfg.d, cfg.e
+    assert_allclose(rows[:, d + 2 * e :], r, rtol=1e-5, atol=1e-6)
+
+
+def test_fpt_roundtrip(tmp_path):
+    cfg = configs.get("tiny-moe")
+    w = params.init_weights(cfg)
+    path = os.path.join(tmp_path, "t.fpt")
+    crc = precompute.build_table(cfg, w, path)
+    hdr, rows = precompute.load_fpt(path)
+    assert hdr["vocab"] == cfg.vocab_size
+    assert hdr["width"] == cfg.precomp_row_width
+    assert hdr["crc"] == crc
+    assert hdr["arch"] == 1  # serial
+    want = precompute.build_rows(cfg, w)
+    assert_allclose(rows, np.asarray(want), rtol=0, atol=0)
+
+
+def test_crc_changes_with_weights(tmp_path):
+    cfg = configs.get("tiny-moe")
+    w1 = params.init_weights(cfg, seed=1)
+    w2 = params.init_weights(cfg, seed=2)
+    c1 = params.fingerprint(w1, precompute.source_tensor_names(cfg))
+    c2 = params.fingerprint(w2, precompute.source_tensor_names(cfg))
+    assert c1 != c2
+
+
+def test_build_rows_batched_equals_unbatched():
+    cfg = configs.get("tiny-serial")
+    w = params.init_weights(cfg)
+    a = precompute.build_rows(cfg, w, use_pallas=False, batch=64)
+    b = precompute.build_rows(cfg, w, use_pallas=False, batch=cfg.vocab_size)
+    assert_allclose(a, b, rtol=0, atol=0)
+
+
+def test_source_tensor_names_cover_eliminated_plus_emb():
+    for name in ["tiny-serial", "tiny-parallel", "tiny-moe-parallel"]:
+        cfg = configs.get(name)
+        src = set(precompute.source_tensor_names(cfg))
+        elim = set(model.eliminated_weights(cfg))
+        assert elim | {"emb"} == src

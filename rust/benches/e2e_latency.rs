@@ -1,0 +1,97 @@
+//! Bench: E6 — decode-step latency baseline vs precompute per batch bucket,
+//! plus prefill latency, on the real PJRT engine.  This is the "slightly
+//! lower latency and cost-per-token" headline measured end to end.
+//!
+//! ```bash
+//! cargo bench --bench e2e_latency [-- tiny-serial]
+//! ```
+
+use firstlayer::manifest::Manifest;
+use firstlayer::runtime::{CacheBatch, ModelEngine, Runtime, StepPath};
+use firstlayer::util::timer::{bench, report};
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args
+        .iter()
+        .find(|a| !a.starts_with('-'))
+        .map(|s| s.as_str())
+        .unwrap_or("tiny-serial");
+
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = ModelEngine::load(&rt, &manifest, model).unwrap();
+    let cfg = engine.config().clone();
+    println!("== bench: decode/prefill latency, {model} ==\n");
+
+    for path in [StepPath::Baseline, StepPath::Precompute] {
+        engine.warmup(path).unwrap();
+        for b in [1usize, 2, 4, 8] {
+            let Ok(bucket) = engine.decode_bucket(b, path) else {
+                continue;
+            };
+            if bucket != b {
+                continue; // only exact buckets: no padding noise
+            }
+            let caches = CacheBatch::zeros(
+                cfg.n_layers,
+                bucket,
+                cfg.max_seq,
+                cfg.n_kv_heads,
+                cfg.head_dim(),
+            );
+            let tokens: Vec<u32> = (0..b as u32).collect();
+            let pos = vec![30u32; b];
+            let s = bench(5, 40, || {
+                engine.decode(path, &tokens, &pos, &caches).unwrap();
+            });
+            report(
+                &format!("decode {} B={b}", path.label()),
+                &s,
+                Some((b as f64 / s.mean.as_secs_f64(), "tok/s")),
+            );
+        }
+        // Prefill buckets.
+        for (b, t) in [(1usize, 32usize), (4, 32)] {
+            if engine.prefill_bucket(b, t, path).is_err() {
+                continue;
+            }
+            let prompts: Vec<Vec<u32>> = (0..b).map(|i| vec![i as u32 + 2; t]).collect();
+            let s = bench(2, 10, || {
+                engine.prefill(path, &prompts).unwrap();
+            });
+            report(
+                &format!("prefill {} B={b} T={t}", path.label()),
+                &s,
+                Some(((b * t) as f64 / s.mean.as_secs_f64(), "tok/s")),
+            );
+        }
+        println!();
+    }
+
+    // Ablation: rust-side mmap gather vs in-graph Pallas gather.
+    println!("-- ablation: gather placement (B=4) --");
+    for path in [StepPath::Precompute, StepPath::PrecomputeGather] {
+        let Ok(bucket) = engine.decode_bucket(4, path) else {
+            continue;
+        };
+        let caches = CacheBatch::zeros(
+            cfg.n_layers,
+            bucket,
+            cfg.max_seq,
+            cfg.n_kv_heads,
+            cfg.head_dim(),
+        );
+        let tokens = [1u32, 2, 3, 4];
+        let pos = [10u32; 4];
+        let s = bench(5, 40, || {
+            engine.decode(path, &tokens, &pos, &caches).unwrap();
+        });
+        report(&format!("decode {} B=4", path.label()), &s, None);
+    }
+}

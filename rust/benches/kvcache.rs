@@ -1,0 +1,84 @@
+//! Bench: paged KV cache hot operations (S7) — the L3 substrate the decode
+//! loop leans on every step: dense gather, row append, fork.
+//!
+//! ```bash
+//! cargo bench --bench kvcache
+//! ```
+
+use firstlayer::kvcache::PagedKvCache;
+use firstlayer::util::timer::{bench, report};
+
+fn main() {
+    println!("== bench: paged KV cache ==\n");
+    // tiny-serial shape: L=4, KH=2, hd=32; 16-token blocks.
+    let (l, kh, hd, bt) = (4usize, 2usize, 32usize, 16usize);
+    let row_w = l * kh * hd;
+    let s_cap = 128usize;
+
+    // gather_dense at several sequence lengths
+    for len in [16usize, 64, 127] {
+        let mut kv = PagedKvCache::new(64, bt, l, kh, hd);
+        kv.create(1, len).unwrap();
+        let rows = vec![0.5f32; row_w];
+        for _ in 0..len {
+            kv.append(1, &rows, &rows).unwrap();
+        }
+        let mut k = vec![0f32; l * s_cap * kh * hd];
+        let mut v = k.clone();
+        let s = bench(10, 500, || {
+            kv.gather_dense(1, s_cap, &mut k, &mut v).unwrap();
+        });
+        let bytes = 2.0 * (l * len * kh * hd * 4) as f64;
+        report(
+            &format!("gather_dense len={len}"),
+            &s,
+            Some((bytes / s.mean.as_secs_f64() / 1e9, "GB/s")),
+        );
+    }
+
+    // append throughput (with periodic block allocation)
+    {
+        let s = bench(3, 50, || {
+            let mut kv = PagedKvCache::new(512, bt, l, kh, hd);
+            kv.create(1, 1).unwrap();
+            let rows = vec![0.5f32; row_w];
+            for _ in 0..100 {
+                kv.append(1, &rows, &rows).unwrap();
+            }
+        });
+        report(
+            "append x100 (incl alloc)",
+            &s,
+            Some((100.0 / s.mean.as_secs_f64(), "appends/s")),
+        );
+    }
+
+    // fork (CoW tail copy)
+    {
+        let mut kv = PagedKvCache::new(4096, bt, l, kh, hd);
+        kv.create(1, 1).unwrap();
+        let rows = vec![0.5f32; row_w];
+        for _ in 0..33 {
+            kv.append(1, &rows, &rows).unwrap();
+        }
+        let mut next = 2u64;
+        let s = bench(10, 500, || {
+            kv.fork(1, next).unwrap();
+            kv.remove(next).unwrap();
+            next += 1;
+        });
+        report("fork+remove (33-token seq)", &s, None);
+    }
+
+    // invariant check cost (runs in selfcheck/debug builds)
+    {
+        let mut kv = PagedKvCache::new(256, bt, l, kh, hd);
+        for id in 0..32u64 {
+            kv.create(id, 16).unwrap();
+        }
+        let s = bench(10, 200, || {
+            kv.check_invariants().unwrap();
+        });
+        report("check_invariants (32 seqs)", &s, None);
+    }
+}

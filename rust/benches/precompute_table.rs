@@ -1,0 +1,74 @@
+//! Bench: precompute table primitives (S10) — the paper's runtime read.
+//! Gather throughput must be memcpy-bound (target >= 1 GB/s, DESIGN §9);
+//! also times table open (mmap) and the on-device rebuild.
+//!
+//! ```bash
+//! cargo bench --bench precompute_table
+//! ```
+
+use firstlayer::manifest::Manifest;
+use firstlayer::precompute::Table;
+use firstlayer::runtime::{ModelEngine, Runtime};
+use firstlayer::util::rng::Rng;
+use firstlayer::util::timer::{bench, report, time_once};
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let entry = manifest.model("tiny-serial").unwrap();
+    println!("== bench: precompute table ==\n");
+
+    // mmap open
+    let path = manifest.path(&entry.table_file);
+    let s = bench(3, 50, || {
+        let t = Table::open(&path).unwrap();
+        std::hint::black_box(t.row_width());
+    });
+    report("Table::open (mmap)", &s, None);
+
+    let table = Table::open(&path).unwrap();
+    let mut rng = Rng::new(3);
+
+    // Random-token gather at several batch sizes.
+    for b in [1usize, 8, 64, 512, 4096] {
+        let tokens: Vec<u32> = (0..b)
+            .map(|_| rng.below(table.vocab() as u64) as u32)
+            .collect();
+        let mut out = vec![0f32; b * table.row_width()];
+        let s = bench(10, 300, || {
+            table.gather(&tokens, &mut out).unwrap();
+            std::hint::black_box(&out);
+        });
+        let bytes = (b * table.row_width() * 4) as f64;
+        report(
+            &format!("gather B={b}"),
+            &s,
+            Some((bytes / s.mean.as_secs_f64() / 1e9, "GB/s")),
+        );
+    }
+
+    // Sequential full-table scan (page-in + checksum).
+    let s = bench(2, 20, || {
+        std::hint::black_box(table.payload_crc());
+    });
+    report(
+        "payload_crc (full scan)",
+        &s,
+        Some((table.data_bytes() as f64 / s.mean.as_secs_f64() / 1e9, "GB/s")),
+    );
+
+    // On-device rebuild via the PJRT artifact (the offline pass, timed).
+    let rt = Runtime::cpu().unwrap();
+    let engine = ModelEngine::load(&rt, &manifest, "tiny-serial").unwrap();
+    let (_t, d) = time_once(|| engine.build_table().unwrap());
+    println!(
+        "\nbuild_table via PJRT: {:.2?} for {} rows ({:.1} rows/ms)",
+        d,
+        table.vocab(),
+        table.vocab() as f64 / d.as_millis().max(1) as f64
+    );
+}

@@ -1,0 +1,108 @@
+//! Bench: scheduler tick latency (S8) — `plan()` must stay microseconds
+//! even with hundreds of waiting sequences (perf target: < 5 us @ 256
+//! waiting, see DESIGN.md §9).
+//!
+//! ```bash
+//! cargo bench --bench scheduler
+//! ```
+
+use firstlayer::scheduler::{KvBudget, Priority, SchedConfig, Scheduler};
+use firstlayer::util::timer::{bench, report};
+
+struct InfiniteKv;
+
+impl KvBudget for InfiniteKv {
+    fn free_blocks(&self) -> usize {
+        usize::MAX / 2
+    }
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(16)
+    }
+    fn blocks_held(&self, _id: u64) -> usize {
+        2
+    }
+    fn growth_needs_block(&self, _id: u64) -> bool {
+        false
+    }
+}
+
+struct TightKv;
+
+impl KvBudget for TightKv {
+    fn free_blocks(&self) -> usize {
+        0
+    }
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(16)
+    }
+    fn blocks_held(&self, _id: u64) -> usize {
+        2
+    }
+    fn growth_needs_block(&self, _id: u64) -> bool {
+        true // everyone needs a block: worst-case preemption churn
+    }
+}
+
+fn mk(n_waiting: usize, n_running: usize) -> Scheduler {
+    let mut s = Scheduler::new(SchedConfig {
+        max_batch: 8,
+        max_admit: 4,
+        max_prompt: 32,
+        max_seq: 128,
+    });
+    let mut id = 0u64;
+    // Fill running first (via admission on an infinite budget).
+    for _ in 0..n_running {
+        s.submit(id, vec![1; 16], 32, Priority::Normal).unwrap();
+        id += 1;
+    }
+    while s.n_running() < n_running {
+        let p = s.plan(&InfiniteKv);
+        for pid in p.prefill {
+            s.on_token(pid, false);
+        }
+    }
+    for i in 0..n_waiting {
+        let prio = match i % 3 {
+            0 => Priority::Interactive,
+            1 => Priority::Normal,
+            _ => Priority::Batch,
+        };
+        s.submit(id, vec![1; 16], 32, prio).unwrap();
+        id += 1;
+    }
+    s
+}
+
+fn main() {
+    println!("== bench: scheduler plan() tick ==\n");
+    for (w, r) in [(16usize, 8usize), (64, 8), (256, 8), (1024, 8)] {
+        let mut s = mk(w, r);
+        let st = bench(10, 1000, || {
+            // plan + undo the admission so the state stays stable
+            let p = s.plan(&TightKv);
+            std::hint::black_box(&p);
+        });
+        report(&format!("plan() waiting={w} running={r}"), &st, None);
+    }
+
+    // Submission throughput.
+    {
+        let st = bench(3, 100, || {
+            let mut s = Scheduler::new(SchedConfig {
+                max_batch: 8,
+                max_admit: 4,
+                max_prompt: 32,
+                max_seq: 128,
+            });
+            for id in 0..256u64 {
+                s.submit(id, vec![1; 16], 32, Priority::Normal).unwrap();
+            }
+        });
+        report(
+            "submit x256",
+            &st,
+            Some((256.0 / st.mean.as_secs_f64(), "req/s")),
+        );
+    }
+}

@@ -1,0 +1,113 @@
+//! Bench: paper table 2 (E2) — the first-layer memory traffic, both as the
+//! analytical count and as WALL-CLOCK of the two real memory operations on
+//! this host: streaming the eliminated weights (baseline) vs gathering
+//! `B·2(d+e)` table rows (precompute).
+//!
+//! The absolute numbers are host-DRAM numbers, not A100 HBM — what must
+//! (and does) hold is the *shape*: precompute wins by orders of magnitude
+//! at B=1 and the win shrinks as B amortizes the weight streaming.
+//!
+//! ```bash
+//! cargo bench --bench table_reads
+//! ```
+
+use firstlayer::config::zoo_get;
+use firstlayer::costmodel;
+use firstlayer::manifest::Manifest;
+use firstlayer::precompute::Table;
+use firstlayer::util::fmt;
+use firstlayer::util::rng::Rng;
+use firstlayer::util::timer::{bench, report};
+
+/// Simulate the baseline's first-layer weight streaming: touch `n` f32s.
+fn stream_weights(buf: &[f32]) -> f32 {
+    // Sum with stride 16 (one touch per cacheline) — bandwidth-bound like
+    // the real weight read, without being optimized out.
+    let mut acc = 0f32;
+    let mut i = 0;
+    while i < buf.len() {
+        acc += buf[i];
+        i += 16;
+    }
+    acc
+}
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    println!("== bench: first-layer reads, baseline weight streaming vs table gather ==\n");
+
+    // Live table for the runnable model.
+    let (table, cfg) = if dir.join("manifest.json").exists() {
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.model("tiny-serial").unwrap();
+        (
+            Table::open(m.path(&e.table_file)).unwrap(),
+            e.config.clone(),
+        )
+    } else {
+        eprintln!("artifacts missing; synthesizing a table");
+        let cfg = zoo_get("tiny-serial").unwrap();
+        let w = cfg.precomp_row_width();
+        let rows: Vec<f32> = (0..cfg.vocab_size * w).map(|i| i as f32).collect();
+        (
+            Table::from_rows(1, cfg.d as u32, cfg.e() as u32, 0, &rows, cfg.vocab_size as u32)
+                .unwrap(),
+            cfg,
+        )
+    };
+
+    // The baseline streams the eliminated weights each batch.
+    let n_weights = costmodel::eliminated_weights(&cfg) as usize;
+    let weights: Vec<f32> = vec![1.0; n_weights];
+    let mut rng = Rng::new(1);
+
+    println!(
+        "model tiny-serial: eliminated weights = {}, row width = {}\n",
+        fmt::commas(n_weights as u64),
+        table.row_width()
+    );
+    println!(
+        "{:>6} {:>16} {:>16} {:>12} {:>12}",
+        "batch", "baseline (ns)", "precomp (ns)", "wall ratio", "paper model"
+    );
+    for b in [1usize, 4, 16, 64, 256] {
+        let tokens: Vec<u32> = (0..b)
+            .map(|_| rng.below(table.vocab() as u64) as u32)
+            .collect();
+        let mut out = vec![0f32; b * table.row_width()];
+        let sb = bench(3, 30, || {
+            std::hint::black_box(stream_weights(&weights));
+        });
+        let sp = bench(3, 200, || {
+            table.gather(&tokens, &mut out).unwrap();
+            std::hint::black_box(&out);
+        });
+        let ratio = sb.mean.as_nanos() as f64 / sp.mean.as_nanos().max(1) as f64;
+        println!(
+            "{:>6} {:>16} {:>16} {:>11.0}x {:>11.0}x",
+            b,
+            sb.mean.as_nanos(),
+            sp.mean.as_nanos(),
+            ratio,
+            costmodel::reduction_factor(&cfg, b as u64) / 16.0, // stride-16 touch
+        );
+    }
+
+    println!("\n-- gather throughput --");
+    for b in [1usize, 8, 64, 512] {
+        let tokens: Vec<u32> = (0..b)
+            .map(|_| rng.below(table.vocab() as u64) as u32)
+            .collect();
+        let mut out = vec![0f32; b * table.row_width()];
+        let s = bench(10, 300, || {
+            table.gather(&tokens, &mut out).unwrap();
+            std::hint::black_box(&out);
+        });
+        let bytes = (b * table.row_width() * 4) as f64;
+        report(
+            &format!("table.gather B={b}"),
+            &s,
+            Some((bytes / s.mean.as_secs_f64() / 1e9, "GB/s")),
+        );
+    }
+}

@@ -1,0 +1,207 @@
+//! Model + serving configuration.
+//!
+//! `ModelConfig` mirrors `python/compile/configs.py` — the same zoo, the
+//! same derived quantities (`e`, `head_dim`, `precomp_row_width`) — and is
+//! additionally reconstructible from the AOT `manifest.json`, which is the
+//! authoritative source at serving time (`Manifest::config`).
+
+mod zoo;
+
+pub use zoo::{mixtral_like_columns, paper_models, runnable_models, zoo, zoo_get};
+
+use crate::error::{Error, Result};
+
+/// Attention/FFN arrangement (paper §1 vs §2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    /// GPT-J/Pythia/PaLM-style parallel attention+FFN: the whole first
+    /// layer except attention itself and P is precomputable (Figure 1).
+    Parallel,
+    /// Llama/Mistral/Mixtral-style serial blocks: only Q/K/V are
+    /// precomputable (Figure 2).
+    Serial,
+}
+
+/// FFN flavor; determines the (2 or 3)·d·h·E weight count of paper table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FfnType {
+    /// 2-layer GELU MLP (Pythia).
+    Mlp,
+    /// SwiGLU GLU-variant (Llama 2, Mistral): w1, w3 gate, w2.
+    SwiGlu,
+    /// Per-expert SwiGLU with top-k routing (Mixtral).
+    SwiGluMoe,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormType {
+    RmsNorm,
+    LayerNorm,
+}
+
+/// Static description of a transformer model (paper table 1 row).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub arch: Arch,
+    /// Embedding dimension (paper's `d` / `dim`).
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub ffn_hidden: usize,
+    pub ffn_type: FfnType,
+    pub n_experts: usize,
+    pub moe_top_k: usize,
+    pub vocab_size: usize,
+    pub max_seq: usize,
+    pub norm_type: NormType,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    /// False = learned absolute PE added to the embedding (Figure 2a);
+    /// precompute is then unsound and the engine refuses to enable it.
+    pub rope: bool,
+}
+
+impl ModelConfig {
+    /// Output dimension of K and V: `e = d · n_kv_heads / n_heads`
+    /// (paper: e=d for MHA, d/n_heads for MQA, scaled for GQA).
+    pub fn e(&self) -> usize {
+        self.d * self.n_kv_heads / self.n_heads
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d / self.n_heads
+    }
+
+    /// Precomputed values stored per token: `2(d+e)` (paper §1).
+    pub fn precomp_row_width(&self) -> usize {
+        2 * (self.d + self.e())
+    }
+
+    /// 2 for plain MLP, 3 for GLU variants (paper table 1's "(2 or 3)").
+    pub fn ffn_weight_factor(&self) -> usize {
+        match self.ffn_type {
+            FfnType::Mlp => 2,
+            _ => 3,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_heads % self.n_kv_heads != 0 {
+            return Err(Error::Config(format!(
+                "{}: n_heads {} not divisible by n_kv_heads {}",
+                self.name, self.n_heads, self.n_kv_heads
+            )));
+        }
+        if self.d % self.n_heads != 0 {
+            return Err(Error::Config(format!(
+                "{}: d {} not divisible by n_heads {}",
+                self.name, self.d, self.n_heads
+            )));
+        }
+        if self.ffn_type != FfnType::SwiGluMoe && self.n_experts != 1 {
+            return Err(Error::Config(format!(
+                "{}: non-MoE model with {} experts",
+                self.name, self.n_experts
+            )));
+        }
+        if self.moe_top_k == 0 || self.moe_top_k > self.n_experts {
+            return Err(Error::Config(format!("{}: bad moe_top_k", self.name)));
+        }
+        Ok(())
+    }
+
+    /// Whether the paper's trick applies at all (needs RoPE).
+    pub fn precompute_applicable(&self) -> bool {
+        self.rope
+    }
+}
+
+/// Serving-side knobs (the L3 equivalent of a vLLM engine config).
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Directory with the AOT bundle (manifest.json etc).
+    pub artifacts_dir: String,
+    /// Model name (must exist in the manifest).
+    pub model: String,
+    /// Serve with the precomputed first layer (the paper's trick) or the
+    /// baseline path. Both artifact families are always loaded so they can
+    /// be compared live.
+    pub use_precompute: bool,
+    /// Max sequences simultaneously in the decode batch (<= largest
+    /// compiled decode bucket).
+    pub max_batch: usize,
+    /// KV cache blocks (paged allocator pool size) and block size in tokens.
+    pub kv_blocks: usize,
+    pub kv_block_tokens: usize,
+    /// Max new tokens per request unless the request overrides.
+    pub max_new_tokens: usize,
+    /// Scheduler admission: max waiting->running promotions per step.
+    pub max_admit_per_step: usize,
+    /// Sampling defaults.
+    pub temperature: f64,
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            artifacts_dir: "artifacts".to_string(),
+            model: "tiny-serial".to_string(),
+            use_precompute: true,
+            max_batch: 8,
+            kv_blocks: 256,
+            kv_block_tokens: 16,
+            max_new_tokens: 32,
+            max_admit_per_step: 4,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0xF17A,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e_matches_paper_examples() {
+        // Paper: MHA e=d (Pythia), GQA e = d*n_kv/n_heads = 1024 (Mistral).
+        let p = zoo_get("pythia-6.9b").unwrap();
+        assert_eq!(p.e(), 4096);
+        let m = zoo_get("mistral-7b").unwrap();
+        assert_eq!(m.e(), 1024);
+    }
+
+    #[test]
+    fn row_width_paper_examples() {
+        // Paper table: reads with precompute B=1: Pythia 16,384 = 2(d+e);
+        // Mistral 10,240 = 2(4096+1024).
+        assert_eq!(zoo_get("pythia-6.9b").unwrap().precomp_row_width(), 16_384);
+        assert_eq!(zoo_get("mistral-7b").unwrap().precomp_row_width(), 10_240);
+        assert_eq!(zoo_get("mixtral-8x7b").unwrap().precomp_row_width(), 10_240);
+    }
+
+    #[test]
+    fn zoo_validates() {
+        for cfg in zoo() {
+            cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn mqa_e_is_d_over_heads() {
+        let mut cfg = zoo_get("pythia-6.9b").unwrap();
+        cfg.n_kv_heads = 1; // MQA
+        assert_eq!(cfg.e(), cfg.d / cfg.n_heads);
+    }
+
+    #[test]
+    fn abspe_not_applicable() {
+        let cfg = zoo_get("tiny-abspe").unwrap();
+        assert!(!cfg.precompute_applicable());
+    }
+}

@@ -1,0 +1,190 @@
+//! The model zoo: paper-scale configs (§3) + runnable tiny configs.
+//! Must stay in lockstep with `python/compile/configs.py`.
+
+use super::{Arch, FfnType, ModelConfig, NormType};
+
+fn base(name: &str) -> ModelConfig {
+    ModelConfig {
+        name: name.to_string(),
+        arch: Arch::Serial,
+        d: 0,
+        n_layers: 0,
+        n_heads: 1,
+        n_kv_heads: 1,
+        ffn_hidden: 0,
+        ffn_type: FfnType::Mlp,
+        n_experts: 1,
+        moe_top_k: 1,
+        vocab_size: 0,
+        max_seq: 0,
+        norm_type: NormType::RmsNorm,
+        rope_theta: 10_000.0,
+        norm_eps: 1e-5,
+        rope: true,
+    }
+}
+
+pub fn pythia_6_9b() -> ModelConfig {
+    ModelConfig {
+        arch: Arch::Parallel,
+        d: 4096,
+        n_layers: 32,
+        n_heads: 32,
+        n_kv_heads: 32, // MHA
+        ffn_hidden: 16_384,
+        ffn_type: FfnType::Mlp,
+        vocab_size: 50_400,
+        max_seq: 2048,
+        norm_type: NormType::LayerNorm,
+        ..base("pythia-6.9b")
+    }
+}
+
+pub fn mistral_7b() -> ModelConfig {
+    ModelConfig {
+        arch: Arch::Serial,
+        d: 4096,
+        n_layers: 32,
+        n_heads: 32,
+        n_kv_heads: 8, // GQA
+        ffn_hidden: 14_336,
+        ffn_type: FfnType::SwiGlu,
+        vocab_size: 32_000,
+        max_seq: 4096,
+        ..base("mistral-7b")
+    }
+}
+
+pub fn mixtral_8x7b() -> ModelConfig {
+    ModelConfig {
+        ffn_type: FfnType::SwiGluMoe,
+        n_experts: 8,
+        moe_top_k: 2,
+        ..{
+            let mut m = mistral_7b();
+            m.name = "mixtral-8x7b".into();
+            m
+        }
+    }
+}
+
+/// The paper's §3 third column: hypothetical Mixtral with parallel
+/// attention/FFN, where the 1.4B-weight first-layer MoE FFN becomes
+/// precomputable and total memory *shrinks* by 3%.
+pub fn mixtral_8x7b_parallel() -> ModelConfig {
+    let mut m = mixtral_8x7b();
+    m.name = "mixtral-8x7b-parallel".into();
+    m.arch = Arch::Parallel;
+    m
+}
+
+/// Whisper-tiny-like 4-layer decoder dims (the paper's "max 25% savings"
+/// example for few-layer models).
+pub fn whisper_tiny4() -> ModelConfig {
+    ModelConfig {
+        d: 384,
+        n_layers: 4,
+        n_heads: 6,
+        n_kv_heads: 6,
+        ffn_hidden: 1536,
+        vocab_size: 51_865,
+        max_seq: 448,
+        norm_type: NormType::LayerNorm,
+        ..base("whisper-tiny4")
+    }
+}
+
+pub fn tiny_parallel() -> ModelConfig {
+    ModelConfig {
+        arch: Arch::Parallel,
+        d: 128,
+        n_layers: 4,
+        n_heads: 4,
+        n_kv_heads: 4,
+        ffn_hidden: 512,
+        vocab_size: 512,
+        max_seq: 128,
+        norm_type: NormType::LayerNorm,
+        ..base("tiny-parallel")
+    }
+}
+
+pub fn tiny_serial() -> ModelConfig {
+    ModelConfig {
+        d: 128,
+        n_layers: 4,
+        n_heads: 4,
+        n_kv_heads: 2,
+        ffn_hidden: 384,
+        ffn_type: FfnType::SwiGlu,
+        vocab_size: 512,
+        max_seq: 128,
+        ..base("tiny-serial")
+    }
+}
+
+pub fn tiny_moe() -> ModelConfig {
+    ModelConfig {
+        d: 64,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        ffn_hidden: 128,
+        ffn_type: FfnType::SwiGluMoe,
+        n_experts: 4,
+        moe_top_k: 2,
+        vocab_size: 256,
+        max_seq: 64,
+        ..base("tiny-moe")
+    }
+}
+
+pub fn tiny_moe_parallel() -> ModelConfig {
+    let mut m = tiny_moe();
+    m.name = "tiny-moe-parallel".into();
+    m.arch = Arch::Parallel;
+    m
+}
+
+pub fn tiny_abspe() -> ModelConfig {
+    let mut m = tiny_serial();
+    m.name = "tiny-abspe".into();
+    m.rope = false;
+    m
+}
+
+/// Every config.
+pub fn zoo() -> Vec<ModelConfig> {
+    vec![
+        pythia_6_9b(),
+        mistral_7b(),
+        mixtral_8x7b(),
+        mixtral_8x7b_parallel(),
+        whisper_tiny4(),
+        tiny_parallel(),
+        tiny_serial(),
+        tiny_moe(),
+        tiny_moe_parallel(),
+        tiny_abspe(),
+    ]
+}
+
+/// The paper's §3 evaluation trio, in table order.
+pub fn paper_models() -> Vec<ModelConfig> {
+    vec![pythia_6_9b(), mistral_7b(), mixtral_8x7b()]
+}
+
+/// Configs with AOT artifacts (CPU-runnable end to end).
+pub fn runnable_models() -> Vec<ModelConfig> {
+    vec![tiny_serial(), tiny_parallel(), tiny_moe(), tiny_moe_parallel()]
+}
+
+pub fn zoo_get(name: &str) -> Option<ModelConfig> {
+    zoo().into_iter().find(|m| m.name == name)
+}
+
+/// The three columns of the paper's §3 tables: Pythia-6.9B, Mistral-7B and
+/// the hypothetical parallel-attention Mixtral-8x7B.
+pub fn mixtral_like_columns() -> Vec<ModelConfig> {
+    vec![pythia_6_9b(), mistral_7b(), mixtral_8x7b_parallel()]
+}

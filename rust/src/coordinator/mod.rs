@@ -1,0 +1,525 @@
+//! The coordinator (S9): request lifecycle over engine + scheduler + paged
+//! KV cache — the L3 composition the paper's trick plugs into.
+//!
+//! Per iteration ([`Coordinator::step`]):
+//! 1. ask the scheduler for a [`StepPlan`] against the KV budget;
+//! 2. apply preemptions (drop caches, fold generated tokens back into the
+//!    replay prompt);
+//! 3. run admitted prefills in compile-bucket-sized groups, sample each
+//!    sequence's first token (TTFT);
+//! 4. assemble the decode batch from the paged store, run one decode step,
+//!    scatter the new K/V rows back, sample, detect stops.
+//!
+//! Both serving paths are first-class: `StepPath::Baseline` embeds tokens
+//! in-graph; `StepPath::Precompute` gathers `2(d+e)`-value rows from the
+//! mmap'd table (the paper's Figure 1b/2c serving mode).
+
+pub mod sampling;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::ServingConfig;
+use crate::error::{Error, Result};
+use crate::kvcache::PagedKvCache;
+use crate::manifest::Manifest;
+use crate::metrics::Metrics;
+use crate::runtime::{CacheBatch, ModelEngine, Runtime, StepPath};
+use crate::scheduler::{KvBudget, Priority, SchedConfig, Scheduler, State};
+use crate::tokenizer::{Tokenizer, EOS};
+use crate::util::rng::Rng;
+
+use sampling::{sample, SamplingParams};
+
+/// Why a request finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxTokens,
+    ContextFull,
+}
+
+/// Streaming event surfaced to the server / examples.
+#[derive(Debug, Clone)]
+pub enum Event {
+    Token { id: u64, token: u32 },
+    Finished { id: u64, reason: FinishReason },
+}
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub priority: Priority,
+    pub params: SamplingParams,
+}
+
+#[derive(Debug, Default)]
+struct ReqState {
+    generated: Vec<u32>,
+    submit_t: Option<Instant>,
+    first_token_t: Option<Instant>,
+    done: Option<FinishReason>,
+}
+
+struct KvView<'a>(&'a PagedKvCache);
+
+impl KvBudget for KvView<'_> {
+    fn free_blocks(&self) -> usize {
+        self.0.free_blocks()
+    }
+    fn blocks_for(&self, tokens: usize) -> usize {
+        self.0.blocks_for(tokens)
+    }
+    fn blocks_held(&self, id: u64) -> usize {
+        self.0.blocks_held(id)
+    }
+    fn growth_needs_block(&self, id: u64) -> bool {
+        self.0.growth_needs_block(id)
+    }
+}
+
+/// The serving coordinator for one model.
+pub struct Coordinator {
+    engine: Arc<ModelEngine>,
+    kv: PagedKvCache,
+    sched: Scheduler,
+    pub tokenizer: Arc<Tokenizer>,
+    pub metrics: Arc<Metrics>,
+    path: StepPath,
+    rng: Rng,
+    next_id: u64,
+    reqs: HashMap<u64, ReqState>,
+    params: HashMap<u64, SamplingParams>,
+    events: Vec<Event>,
+    /// Largest usable decode bucket (engine-compiled).
+    max_decode_bucket: usize,
+}
+
+impl Coordinator {
+    /// Build the full stack from a serving config (used by `main`, the
+    /// server, examples and integration tests).
+    pub fn from_config(cfg: &ServingConfig) -> Result<Coordinator> {
+        let rt = Runtime::cpu()?;
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let engine = Arc::new(ModelEngine::load(&rt, &manifest, &cfg.model)?);
+        Coordinator::new(engine, cfg)
+    }
+
+    pub fn new(engine: Arc<ModelEngine>, cfg: &ServingConfig) -> Result<Coordinator> {
+        let mc = engine.config().clone();
+        let path = if cfg.use_precompute {
+            if !mc.precompute_applicable() {
+                return Err(Error::Config(format!(
+                    "model {} uses absolute PE; precompute is unsound (paper §2)",
+                    mc.name
+                )));
+            }
+            StepPath::Precompute
+        } else {
+            StepPath::Baseline
+        };
+        let max_decode_bucket = engine
+            .entry()
+            .decode_buckets(cfg.use_precompute)
+            .iter()
+            .filter_map(|a| a.batch)
+            .max()
+            .ok_or_else(|| Error::Engine("no decode artifacts".into()))?;
+        let max_prefill_t = engine
+            .entry()
+            .prefill_buckets(cfg.use_precompute)
+            .iter()
+            .filter_map(|a| a.prompt_len)
+            .max()
+            .ok_or_else(|| Error::Engine("no prefill artifacts".into()))?;
+        let max_batch = cfg.max_batch.min(max_decode_bucket);
+        let sched = Scheduler::new(SchedConfig {
+            max_batch,
+            max_admit: cfg.max_admit_per_step,
+            max_prompt: max_prefill_t,
+            max_seq: mc.max_seq,
+        });
+        let kv = PagedKvCache::new(
+            cfg.kv_blocks,
+            cfg.kv_block_tokens,
+            mc.n_layers,
+            mc.n_kv_heads,
+            mc.head_dim(),
+        );
+        let tokenizer = Arc::new(Tokenizer::train_or_fallback(
+            crate::tokenizer::bundled_corpus(),
+            mc.vocab_size,
+        )?);
+        Ok(Coordinator {
+            engine,
+            kv,
+            sched,
+            tokenizer,
+            metrics: Arc::new(Metrics::new()),
+            path,
+            rng: Rng::new(cfg.seed),
+            next_id: 1,
+            reqs: HashMap::new(),
+            params: HashMap::new(),
+            events: Vec::new(),
+            max_decode_bucket,
+        })
+    }
+
+    pub fn engine(&self) -> &ModelEngine {
+        &self.engine
+    }
+
+    pub fn path(&self) -> StepPath {
+        self.path
+    }
+
+    /// Largest compiled decode bucket for the active path.
+    pub fn max_decode_bucket(&self) -> usize {
+        self.max_decode_bucket
+    }
+
+    /// Switch the serving path live (both artifact families are loaded).
+    pub fn set_path(&mut self, path: StepPath) -> Result<()> {
+        if path != StepPath::Baseline && !self.engine.config().rope {
+            return Err(Error::Config("precompute needs RoPE".into()));
+        }
+        self.path = path;
+        Ok(())
+    }
+
+    /// Submit token ids; returns the request id.
+    pub fn submit(&mut self, req: GenRequest) -> Result<u64> {
+        let id = self.next_id;
+        let sp = req.params;
+        match self
+            .sched
+            .submit(id, req.prompt, req.max_new_tokens, req.priority)
+        {
+            Ok(()) => {
+                self.next_id += 1;
+                self.metrics
+                    .requests_in
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.reqs.insert(
+                    id,
+                    ReqState {
+                        submit_t: Some(Instant::now()),
+                        ..Default::default()
+                    },
+                );
+                self.params.insert(id, sp);
+                Ok(id)
+            }
+            Err(e) => {
+                self.metrics
+                    .requests_rejected
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit text (tokenized + BOS prepended).
+    pub fn submit_text(
+        &mut self,
+        text: &str,
+        max_new_tokens: usize,
+        params: SamplingParams,
+    ) -> Result<u64> {
+        let mut prompt = vec![crate::tokenizer::BOS];
+        prompt.extend(self.tokenizer.encode(text));
+        self.submit(GenRequest {
+            prompt,
+            max_new_tokens,
+            priority: Priority::Normal,
+            params,
+        })
+    }
+
+    /// Whether any request is still in flight.
+    pub fn busy(&self) -> bool {
+        self.sched.n_waiting() + self.sched.n_running() > 0
+    }
+
+    /// Drain accumulated streaming events.
+    pub fn take_events(&mut self) -> Vec<Event> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Generated tokens so far (including after completion).
+    pub fn generated(&self, id: u64) -> Option<&[u32]> {
+        self.reqs.get(&id).map(|r| r.generated.as_slice())
+    }
+
+    pub fn finished(&self, id: u64) -> Option<FinishReason> {
+        self.reqs.get(&id).and_then(|r| r.done)
+    }
+
+    /// Run one engine iteration. Returns the number of sequences touched.
+    pub fn step(&mut self) -> Result<usize> {
+        let plan = self.sched.plan(&KvView(&self.kv));
+        let mut touched = 0;
+
+        // -- preemptions ----------------------------------------------------
+        for id in &plan.preempt {
+            self.kv.remove(*id)?;
+            let gen = self
+                .reqs
+                .get(id)
+                .map(|r| r.generated.clone())
+                .unwrap_or_default();
+            self.sched.extend_prompt(*id, &gen);
+            self.metrics
+                .preemptions
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+
+        // -- prefills (bucket-sized groups) ----------------------------------
+        if !plan.prefill.is_empty() {
+            let max_b = self
+                .engine
+                .entry()
+                .prefill_buckets(self.path != StepPath::Baseline)
+                .iter()
+                .filter_map(|a| a.batch)
+                .max()
+                .unwrap_or(1);
+            for group in plan.prefill.chunks(max_b) {
+                touched += group.len();
+                self.run_prefill(group)?;
+            }
+        }
+
+        // -- decode ----------------------------------------------------------
+        if !plan.decode.is_empty() {
+            touched += plan.decode.len();
+            self.run_decode(&plan.decode)?;
+        }
+        Ok(touched)
+    }
+
+    /// Run until idle (blocking batch completion). Returns steps executed.
+    pub fn run_to_completion(&mut self, max_steps: usize) -> Result<usize> {
+        let mut steps = 0;
+        while self.busy() {
+            if steps >= max_steps {
+                return Err(Error::Scheduler(format!(
+                    "did not drain in {max_steps} steps"
+                )));
+            }
+            self.step()?;
+            steps += 1;
+        }
+        Ok(steps)
+    }
+
+    fn run_prefill(&mut self, ids: &[u64]) -> Result<()> {
+        let t0 = Instant::now();
+        let full: Vec<Vec<u32>> = ids
+            .iter()
+            .map(|id| self.sched.info(*id).unwrap().prompt.clone())
+            .collect();
+        // Replayed prompts of preempted sequences can exceed the largest
+        // compiled prefill bucket T: prefill the head, replay the tail one
+        // token at a time through decode (logits discarded until the end).
+        let t_cap = self
+            .engine
+            .entry()
+            .prefill_buckets(self.path != StepPath::Baseline)
+            .iter()
+            .filter_map(|a| a.prompt_len)
+            .max()
+            .unwrap_or(usize::MAX);
+        let prompts: Vec<Vec<u32>> = full
+            .iter()
+            .map(|p| p[..p.len().min(t_cap)].to_vec())
+            .collect();
+        let out = self.engine.prefill(self.path, &prompts)?;
+        self.metrics.prefill_step.record(t0.elapsed());
+        let s = out.caches.s;
+        let row = out.caches.kh * out.caches.hd;
+        for (i, id) in ids.iter().enumerate() {
+            let len = prompts[i].len();
+            self.kv.create(*id, len + 1)?;
+            // Slice this sequence's dense [L, S, row] views out of the batch.
+            let mut kd = vec![0f32; out.caches.l * s * row];
+            let mut vd = vec![0f32; out.caches.l * s * row];
+            for l in 0..out.caches.l {
+                let src = out.caches.offset(l, i, 0);
+                let dst = l * s * row;
+                kd[dst..dst + s * row]
+                    .copy_from_slice(&out.caches.k[src..src + s * row]);
+                vd[dst..dst + s * row]
+                    .copy_from_slice(&out.caches.v[src..src + s * row]);
+            }
+            self.kv.write_prefix(*id, len, s, &kd, &vd)?;
+            // Tail replay for over-bucket prompts (post-preemption).
+            let logits_vec: Vec<f32>;
+            let logits: &[f32] = if full[i].len() > len {
+                logits_vec = self.replay_tail(*id, &full[i][len..])?;
+                &logits_vec
+            } else {
+                &out.logits[i * self.vocab()..(i + 1) * self.vocab()]
+            };
+            self.emit_token(*id, logits)?;
+            if let Some(r) = self.reqs.get_mut(id) {
+                if r.first_token_t.is_none() {
+                    r.first_token_t = Some(Instant::now());
+                    if let Some(s0) = r.submit_t {
+                        self.metrics.ttft.record(s0.elapsed());
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Feed the tail tokens of an over-bucket replayed prompt one at a time
+    /// (B=1 decode steps); returns the logits after the last prompt token.
+    fn replay_tail(&mut self, id: u64, tail: &[u32]) -> Result<Vec<f32>> {
+        let cfg = self.engine.config().clone();
+        let s = cfg.max_seq;
+        let bucket = self.engine.decode_bucket(1, self.path)?;
+        let mut last = Vec::new();
+        for &tok in tail {
+            let len = self
+                .kv
+                .seq_len(id)
+                .ok_or_else(|| Error::KvCache(format!("no cache for {id}")))?;
+            let mut caches = CacheBatch::zeros(
+                cfg.n_layers,
+                bucket,
+                s,
+                cfg.n_kv_heads,
+                cfg.head_dim(),
+            );
+            let row = caches.kh * caches.hd;
+            let mut kd = vec![0f32; caches.l * s * row];
+            let mut vd = vec![0f32; caches.l * s * row];
+            self.kv.gather_dense(id, s, &mut kd, &mut vd)?;
+            for l in 0..caches.l {
+                let dst = caches.offset(l, 0, 0);
+                caches.k[dst..dst + s * row].copy_from_slice(&kd[l * s * row..(l + 1) * s * row]);
+                caches.v[dst..dst + s * row].copy_from_slice(&vd[l * s * row..(l + 1) * s * row]);
+            }
+            let out = self
+                .engine
+                .decode(self.path, &[tok], &[len as u32], &caches)?;
+            let lrow = caches.l * row;
+            self.kv.append(id, &out.new_k[..lrow], &out.new_v[..lrow])?;
+            last = out.logits;
+        }
+        Ok(last)
+    }
+
+    fn run_decode(&mut self, ids: &[u64]) -> Result<()> {
+        let t0 = Instant::now();
+        let cfg = self.engine.config().clone();
+        let n = ids.len();
+        let bucket = self.engine.decode_bucket(n, self.path)?;
+        let s = cfg.max_seq;
+        let mut caches = CacheBatch::zeros(
+            cfg.n_layers,
+            bucket,
+            s,
+            cfg.n_kv_heads,
+            cfg.head_dim(),
+        );
+        let row = caches.kh * caches.hd;
+        let mut tokens = Vec::with_capacity(n);
+        let mut pos = Vec::with_capacity(n);
+        for (i, id) in ids.iter().enumerate() {
+            // The token to feed is the last generated one (decode always
+            // follows a prefill that produced >= 1 token).
+            let st = self.reqs.get(id).ok_or_else(|| {
+                Error::Engine(format!("decode of unknown request {id}"))
+            })?;
+            let tok = *st
+                .generated
+                .last()
+                .ok_or_else(|| Error::Engine("decode before first token".into()))?;
+            tokens.push(tok);
+            let len = self
+                .kv
+                .seq_len(*id)
+                .ok_or_else(|| Error::KvCache(format!("no cache for {id}")))?;
+            pos.push(len as u32);
+            // Gather this sequence's pages straight into batch row i (§Perf:
+            // no intermediate [L, S, ·] copy).
+            self.kv
+                .gather_into_batch(*id, s, bucket, i, &mut caches.k, &mut caches.v)?;
+        }
+        let out = self.engine.decode(self.path, &tokens, &pos, &caches)?;
+        self.metrics.decode_step.record(t0.elapsed());
+        let lrow = caches.l * row;
+        for (i, id) in ids.iter().enumerate() {
+            self.kv.append(
+                *id,
+                &out.new_k[i * lrow..(i + 1) * lrow],
+                &out.new_v[i * lrow..(i + 1) * lrow],
+            )?;
+            let logits = &out.logits[i * self.vocab()..(i + 1) * self.vocab()];
+            self.emit_token(*id, logits)?;
+        }
+        Ok(())
+    }
+
+    fn vocab(&self) -> usize {
+        self.engine.config().vocab_size
+    }
+
+    /// Sample, record, and update scheduler state for one sequence.
+    fn emit_token(&mut self, id: u64, logits: &[f32]) -> Result<()> {
+        let params = self.params.get(&id).copied().unwrap_or_default();
+        let tok = sample(logits, params, &mut self.rng);
+        let eos = tok == EOS;
+        let st = self.reqs.get_mut(&id).unwrap();
+        st.generated.push(tok);
+        self.metrics
+            .tokens_out
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.events.push(Event::Token { id, token: tok });
+        self.sched.on_token(id, eos);
+        if self.sched.state(id) == Some(State::Finished) {
+            let info = self.sched.info(id).unwrap();
+            let reason = if eos {
+                FinishReason::Eos
+            } else if info.budget_left() == 0 {
+                FinishReason::MaxTokens
+            } else {
+                FinishReason::ContextFull
+            };
+            self.reqs.get_mut(&id).unwrap().done = Some(reason);
+            if let Some(t) = self.reqs[&id].submit_t {
+                self.metrics.e2e.record(t.elapsed());
+            }
+            self.metrics
+                .requests_done
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.events.push(Event::Finished { id, reason });
+            self.kv.remove(id)?;
+            self.sched.forget(id);
+        }
+        Ok(())
+    }
+}
+
+impl Coordinator {
+    /// Debug helpers (examples/diagnostics).
+    pub fn kv_free_blocks(&self) -> usize {
+        self.kv.free_blocks()
+    }
+    pub fn debug_state(&self) -> Vec<(u64, Option<usize>, usize)> {
+        let mut v: Vec<(u64, Option<usize>, usize)> = self
+            .reqs
+            .keys()
+            .map(|id| (*id, self.kv.seq_len(*id), self.kv.blocks_held(*id)))
+            .collect();
+        v.sort();
+        v
+    }
+}

@@ -1,0 +1,126 @@
+//! Token sampling: greedy, temperature, top-k — all on rust-side logits
+//! (vocab is small; no need to burn an artifact on argmax).
+
+use crate::util::rng::Rng;
+
+/// Sampling parameters for one request.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplingParams {
+    /// 0.0 = greedy.
+    pub temperature: f64,
+    /// 0 = no top-k truncation.
+    pub top_k: usize,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+        }
+    }
+}
+
+/// Sample a token id from a logits row.
+pub fn sample(logits: &[f32], params: SamplingParams, rng: &mut Rng) -> u32 {
+    if params.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // Top-k filter indices.
+    let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
+    if params.top_k > 0 && params.top_k < logits.len() {
+        idx.sort_unstable_by(|&a, &b| {
+            logits[b as usize]
+                .partial_cmp(&logits[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.truncate(params.top_k);
+    }
+    // Softmax over the kept set at the given temperature.
+    let t = params.temperature as f32;
+    let m = idx
+        .iter()
+        .map(|&i| logits[i as usize])
+        .fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i as usize] - m) / t) as f64).exp())
+        .collect();
+    idx[rng.weighted(&weights)]
+}
+
+/// Greedy argmax with lowest-index tie-break (deterministic).
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let logits = vec![0.1, 3.0, -1.0, 2.9];
+        let mut rng = Rng::new(0);
+        assert_eq!(sample(&logits, SamplingParams::default(), &mut rng), 1);
+    }
+
+    #[test]
+    fn argmax_tie_break_lowest_index() {
+        assert_eq!(argmax(&[1.0, 5.0, 5.0]), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = vec![10.0, 9.5, -50.0, -50.0];
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let t = sample(
+                &logits,
+                SamplingParams {
+                    temperature: 1.0,
+                    top_k: 2,
+                },
+                &mut rng,
+            );
+            assert!(t < 2, "sampled outside top-2: {t}");
+        }
+    }
+
+    #[test]
+    fn temperature_zero_deterministic() {
+        let logits = vec![0.0, 0.5, 0.2];
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let p = SamplingParams {
+            temperature: 0.0,
+            top_k: 3,
+        };
+        assert_eq!(sample(&logits, p, &mut a), sample(&logits, p, &mut b));
+    }
+
+    #[test]
+    fn high_temp_covers_support() {
+        let logits = vec![1.0, 1.0, 1.0, 1.0];
+        let mut rng = Rng::new(3);
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            let t = sample(
+                &logits,
+                SamplingParams {
+                    temperature: 5.0,
+                    top_k: 0,
+                },
+                &mut rng,
+            );
+            seen[t as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "uniform logits should hit all");
+    }
+}

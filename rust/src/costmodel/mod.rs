@@ -1,0 +1,374 @@
+//! Analytical cost model: the paper's §1–§3 arithmetic, exactly.
+//!
+//! Every number printed in the paper's two §3 tables is regenerated from
+//! these formulas and pinned by golden tests below.  `examples/paper_tables`
+//! prints them in the paper's layout (experiments E1/E2); `simtraffic`
+//! cross-checks the same quantities *measured* from executed engine steps
+//! (E3).
+//!
+//! Quantities (B = batch size, W = weights eliminated by precompute):
+//!
+//! * reads without precompute, per batch:  `B·d + W`
+//!   (each token reads its d-value embedding; the Q/K/V/FFN weights are
+//!   streamed once per batch)
+//! * reads with precompute, per batch:     `B·2(d+e)`
+//! * first-layer read-reduction factor:    ratio of the two
+//! * embedding memory increase: `(d+2e)·vocab` (store `2(d+e)` per token
+//!   instead of `d`)
+//! * net memory delta: increase − eliminated weights
+
+use crate::config::{Arch, ModelConfig};
+
+/// Per-model weight inventory (paper §3 table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WeightCounts {
+    /// Q + P projections per layer: `2·d²`.
+    pub qp_per_layer: u64,
+    /// K + V projections per layer: `2·d·e`.
+    pub kv_per_layer: u64,
+    /// FFN weights per layer: `(2|3)·d·hidden·n_experts`.
+    pub ffn_per_layer: u64,
+    /// Input + output embeddings: `2·d·vocab`.
+    pub embeddings: u64,
+    /// Grand total (the paper's "Total weights" row; norm scales are
+    /// negligible and excluded, as in the paper).
+    pub total: u64,
+}
+
+pub fn weight_counts(cfg: &ModelConfig) -> WeightCounts {
+    let d = cfg.d as u64;
+    let e = cfg.e() as u64;
+    let h = cfg.ffn_hidden as u64;
+    let v = cfg.vocab_size as u64;
+    let l = cfg.n_layers as u64;
+    let qp = 2 * d * d;
+    let kv = 2 * d * e;
+    let ffn = cfg.ffn_weight_factor() as u64 * d * h * cfg.n_experts as u64;
+    let emb = 2 * d * v;
+    WeightCounts {
+        qp_per_layer: qp,
+        kv_per_layer: kv,
+        ffn_per_layer: ffn,
+        embeddings: emb,
+        total: l * (qp + kv + ffn) + emb,
+    }
+}
+
+/// Weights the trick removes from serving memory (paper table 2 row 1).
+///
+/// Parallel models drop the first layer's Q, K, V *and* FFN
+/// (`d² + 2de + ffn`); serial models only Q, K, V (`d² + 2de`).
+pub fn eliminated_weights(cfg: &ModelConfig) -> u64 {
+    let d = cfg.d as u64;
+    let e = cfg.e() as u64;
+    let qkv = d * d + 2 * d * e;
+    match cfg.arch {
+        Arch::Parallel => qkv + weight_counts(cfg).ffn_per_layer,
+        Arch::Serial => qkv,
+    }
+}
+
+/// First-layer memory reads per batch WITHOUT precompute: `B·d + W`.
+pub fn reads_without(cfg: &ModelConfig, batch: u64) -> u64 {
+    batch * cfg.d as u64 + eliminated_weights(cfg)
+}
+
+/// First-layer memory reads per batch WITH precompute: `B·2(d+e)`.
+pub fn reads_with(cfg: &ModelConfig, batch: u64) -> u64 {
+    batch * cfg.precomp_row_width() as u64
+}
+
+/// First-layer read-reduction factor at a batch size (paper rounds to the
+/// nearest integer).
+pub fn reduction_factor(cfg: &ModelConfig, batch: u64) -> f64 {
+    reads_without(cfg, batch) as f64 / reads_with(cfg, batch) as f64
+}
+
+/// Memory-size effects (paper table 2, bottom half).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemoryDelta {
+    /// Embedding storage grows by `(d+2e)·vocab` values.
+    pub embedding_increase: u64,
+    /// Weights removed (`eliminated_weights`).
+    pub weights_decrease: u64,
+    /// Net change in values stored (may be negative).
+    pub net: i64,
+    /// Net relative to total weights, in percent (paper rounds).
+    pub relative_pct: i64,
+}
+
+pub fn memory_delta(cfg: &ModelConfig) -> MemoryDelta {
+    let d = cfg.d as u64;
+    let e = cfg.e() as u64;
+    let v = cfg.vocab_size as u64;
+    let inc = (d + 2 * e) * v;
+    let dec = eliminated_weights(cfg);
+    let net = inc as i64 - dec as i64;
+    let total = weight_counts(cfg).total as f64;
+    MemoryDelta {
+        embedding_increase: inc,
+        weights_decrease: dec,
+        net,
+        relative_pct: (net as f64 / total * 100.0).round() as i64,
+    }
+}
+
+/// Upper bound on whole-model savings from optimizing one layer of `n`:
+/// the paper's "4 layers ⇒ ≤25%, 32 layers ⇒ ≤3%" remark (E7).
+pub fn max_savings_fraction(n_layers: usize) -> f64 {
+    1.0 / n_layers as f64
+}
+
+/// Fraction of per-token decode FLOPs the trick removes (used by the E7
+/// layer-sweep; attention-score FLOPs depend on context length and are
+/// excluded, matching the paper's weight-read framing).
+pub fn flops_saved_fraction(cfg: &ModelConfig) -> f64 {
+    let wc = weight_counts(cfg);
+    let per_layer = (wc.qp_per_layer + wc.kv_per_layer + wc.ffn_per_layer) as f64;
+    let saved = match cfg.arch {
+        // Q,K,V (= half of qp + all kv) + FFN
+        Arch::Parallel => {
+            (wc.qp_per_layer / 2 + wc.kv_per_layer + wc.ffn_per_layer) as f64
+        }
+        Arch::Serial => (wc.qp_per_layer / 2 + wc.kv_per_layer) as f64,
+    };
+    saved / (per_layer * cfg.n_layers as f64)
+}
+
+/// The paper's batch-size grid in table 2.
+pub const PAPER_BATCHES: [u64; 4] = [1, 16, 256, 1024];
+
+/// Print the paper's §3 tables (E1/E2) in the paper's layout.
+/// Shared by `firstlayer paper-tables` and `examples/paper_tables.rs`.
+pub fn print_paper_tables() {
+    use crate::config::{mixtral_like_columns, ModelConfig};
+    use crate::util::fmt::{cell, commas, commas_i, factor, human_count};
+
+    let cols: Vec<ModelConfig> = mixtral_like_columns();
+    let w = 22;
+
+    println!("== Table 1: configurations and number of weights ==");
+    let hdr: Vec<String> = cols.iter().map(|c| c.name.clone()).collect();
+    println!("{:<38} {}", "Parameter", hdr.iter().map(|h| cell(h, w)).collect::<Vec<_>>().join(" "));
+    let row = |label: &str, vals: Vec<String>| {
+        println!(
+            "{label:<38} {}",
+            vals.iter().map(|v| cell(v, w)).collect::<Vec<_>>().join(" ")
+        );
+    };
+    row(
+        "Parallel attention/FFN?",
+        cols.iter()
+            .map(|c| match c.arch {
+                crate::config::Arch::Parallel => "parallel".into(),
+                crate::config::Arch::Serial => "serial".into(),
+            })
+            .collect(),
+    );
+    row("dim (aka d)", cols.iter().map(|c| commas(c.d as u64)).collect());
+    row("n_layers", cols.iter().map(|c| c.n_layers.to_string()).collect());
+    row(
+        "n_heads, n_kv_heads",
+        cols.iter()
+            .map(|c| format!("{}, {}", c.n_heads, c.n_kv_heads))
+            .collect(),
+    );
+    row("e (output dim of K, V)", cols.iter().map(|c| commas(c.e() as u64)).collect());
+    row("FFN hidden_dim", cols.iter().map(|c| commas(c.ffn_hidden as u64)).collect());
+    row("FFN n_experts", cols.iter().map(|c| c.n_experts.to_string()).collect());
+    row("vocab_size", cols.iter().map(|c| commas(c.vocab_size as u64)).collect());
+    let wcs: Vec<WeightCounts> = cols.iter().map(weight_counts).collect();
+    row("Q+P weights per layer", wcs.iter().map(|x| commas(x.qp_per_layer)).collect());
+    row("K+V weights per layer", wcs.iter().map(|x| commas(x.kv_per_layer)).collect());
+    row("FFN weights per layer", wcs.iter().map(|x| commas(x.ffn_per_layer)).collect());
+    row("Input+output embed.", wcs.iter().map(|x| commas(x.embeddings)).collect());
+    row("Total weights:", wcs.iter().map(|x| human_count(x.total)).collect());
+
+    println!();
+    println!("== Table 2: memory-read savings and memory-size deltas ==");
+    println!(
+        "{:<38} {}",
+        "",
+        hdr.iter().map(|h| cell(h, w)).collect::<Vec<_>>().join(" ")
+    );
+    row(
+        "Weights eliminated",
+        cols.iter().map(|c| commas(eliminated_weights(c))).collect(),
+    );
+    row(
+        "Reads w/o precompute (B=1)",
+        cols.iter().map(|c| commas(reads_without(c, 1))).collect(),
+    );
+    row(
+        "Reads with precompute (B=1)",
+        cols.iter().map(|c| commas(reads_with(c, 1))).collect(),
+    );
+    for b in PAPER_BATCHES {
+        row(
+            &format!("First-layer reduction, batch {b}:"),
+            cols.iter().map(|c| factor(reduction_factor(c, b))).collect(),
+        );
+    }
+    let mds: Vec<MemoryDelta> = cols.iter().map(memory_delta).collect();
+    row(
+        "Embedding memory increase",
+        mds.iter().map(|m| commas(m.embedding_increase)).collect(),
+    );
+    row(
+        "Eliminated-weight decrease",
+        mds.iter().map(|m| format!("-{}", commas(m.weights_decrease))).collect(),
+    );
+    row("Net memory delta", mds.iter().map(|m| commas_i(m.net)).collect());
+    row(
+        "Relative memory delta",
+        mds.iter().map(|m| format!("{:+}%", m.relative_pct)).collect(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    //! Golden tests: every number from the paper's §3 tables.
+    use super::*;
+    use crate::config::{zoo_get, ModelConfig};
+
+    fn pythia() -> ModelConfig {
+        zoo_get("pythia-6.9b").unwrap()
+    }
+    fn mistral() -> ModelConfig {
+        zoo_get("mistral-7b").unwrap()
+    }
+    fn mixtral() -> ModelConfig {
+        zoo_get("mixtral-8x7b").unwrap()
+    }
+    fn mixtral_par() -> ModelConfig {
+        zoo_get("mixtral-8x7b-parallel").unwrap()
+    }
+
+    #[test]
+    fn table1_per_layer_weights() {
+        let p = weight_counts(&pythia());
+        assert_eq!(p.qp_per_layer, 33_554_432);
+        assert_eq!(p.kv_per_layer, 33_554_432);
+        assert_eq!(p.ffn_per_layer, 134_217_728);
+        assert_eq!(p.embeddings, 412_876_800);
+
+        let m = weight_counts(&mistral());
+        assert_eq!(m.qp_per_layer, 33_554_432);
+        assert_eq!(m.kv_per_layer, 8_388_608);
+        assert_eq!(m.ffn_per_layer, 176_160_768);
+        assert_eq!(m.embeddings, 262_144_000);
+
+        let x = weight_counts(&mixtral());
+        assert_eq!(x.ffn_per_layer, 1_409_286_144);
+    }
+
+    #[test]
+    fn table1_totals() {
+        // Paper: 6.9B, 7.2B, 46.7B.
+        assert_eq!(weight_counts(&pythia()).total, 6_855_327_744);
+        assert_eq!(weight_counts(&mistral()).total, 7_241_465_856);
+        assert_eq!(weight_counts(&mixtral()).total, 46_701_477_888);
+        assert!((weight_counts(&pythia()).total as f64 / 1e9 - 6.9).abs() < 0.05);
+        assert!((weight_counts(&mistral()).total as f64 / 1e9 - 7.2).abs() < 0.05);
+        assert!((weight_counts(&mixtral()).total as f64 / 1e9 - 46.7).abs() < 0.05);
+    }
+
+    #[test]
+    fn table2_eliminated_weights() {
+        assert_eq!(eliminated_weights(&pythia()), 184_549_376);
+        assert_eq!(eliminated_weights(&mistral()), 25_165_824);
+        assert_eq!(eliminated_weights(&mixtral_par()), 1_434_451_968);
+    }
+
+    #[test]
+    fn table2_reads_batch_1() {
+        assert_eq!(reads_without(&pythia(), 1), 184_553_472);
+        assert_eq!(reads_with(&pythia(), 1), 16_384);
+        assert_eq!(reads_without(&mistral(), 1), 25_169_920);
+        assert_eq!(reads_with(&mistral(), 1), 10_240);
+        assert_eq!(reads_without(&mixtral_par(), 1), 1_434_456_064);
+        assert_eq!(reads_with(&mixtral_par(), 1), 10_240);
+    }
+
+    #[test]
+    fn table2_reduction_factors() {
+        // (model, [factor at B=1, 16, 256, 1024]) — paper's printed values.
+        let cases: [(&ModelConfig, [u64; 4]); 3] = [
+            (&pythia(), [11_264, 704, 44, 11]),
+            (&mistral(), [2_458, 154, 10, 3]),
+            (&mixtral_par(), [140_084, 8_756, 548, 137]),
+        ];
+        for (cfg, expect) in cases {
+            for (b, want) in PAPER_BATCHES.iter().zip(expect) {
+                let got = reduction_factor(cfg, *b).round() as u64;
+                assert_eq!(got, want, "{} B={b}", cfg.name);
+            }
+        }
+    }
+
+    #[test]
+    fn table2_memory_deltas() {
+        let p = memory_delta(&pythia());
+        assert_eq!(p.embedding_increase, 619_315_200);
+        assert_eq!(p.net, 434_765_824);
+        assert_eq!(p.relative_pct, 6);
+
+        let m = memory_delta(&mistral());
+        assert_eq!(m.embedding_increase, 196_608_000);
+        assert_eq!(m.net, 171_442_176);
+        assert_eq!(m.relative_pct, 2);
+
+        let x = memory_delta(&mixtral_par());
+        assert_eq!(x.net, -1_237_843_968);
+        assert_eq!(x.relative_pct, -3);
+    }
+
+    #[test]
+    fn serial_mixtral_keeps_moe() {
+        // Plain (serial) Mixtral only drops Q/K/V — same as Mistral.
+        assert_eq!(eliminated_weights(&mixtral()), 25_165_824);
+    }
+
+    #[test]
+    fn layer_bound() {
+        // Paper abstract: 4-layer ⇒ 25% cap, 32-layer ⇒ ~3% cap.
+        assert_eq!(max_savings_fraction(4), 0.25);
+        assert!((max_savings_fraction(32) - 0.03125).abs() < 1e-9);
+        // And the realized FLOP fraction is below the cap.
+        for cfg in [pythia(), mistral(), mixtral_par()] {
+            let f = flops_saved_fraction(&cfg);
+            assert!(f > 0.0 && f <= max_savings_fraction(cfg.n_layers) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn reduction_monotone_in_batch() {
+        // Savings shrink as batch grows (weights amortize) — the paper's
+        // "fewer memory reads for low batch sizes".
+        for cfg in [pythia(), mistral(), mixtral_par()] {
+            let mut prev = f64::INFINITY;
+            for b in [1u64, 4, 16, 64, 256, 1024, 4096] {
+                let f = reduction_factor(&cfg, b);
+                assert!(f < prev, "{} B={b}", cfg.name);
+                prev = f;
+            }
+        }
+    }
+
+    #[test]
+    fn reduction_asymptote_is_d_over_2dpe() {
+        // As B→∞ the factor tends to d / 2(d+e) < 1: precompute READS MORE
+        // per token than the plain embedding at huge batch. The crossover
+        // (factor = 1) is at B = W / (2(d+e) - d) = W / (d + 2e).
+        let cfg = mistral();
+        let asymptote = cfg.d as f64 / cfg.precomp_row_width() as f64;
+        let f = reduction_factor(&cfg, 100_000_000);
+        assert!((f - asymptote).abs() / asymptote < 1e-3);
+        let crossover =
+            eliminated_weights(&cfg) as f64 / (cfg.d as f64 + 2.0 * cfg.e() as f64);
+        // Mistral's crossover is exactly B = 4096: factor 1.0 there.
+        assert!(reduction_factor(&cfg, crossover as u64) >= 1.0);
+        assert!(reduction_factor(&cfg, crossover as u64 - 1) > 1.0);
+        assert!(reduction_factor(&cfg, crossover as u64 + 1) < 1.0);
+    }
+}

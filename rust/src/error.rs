@@ -1,0 +1,59 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    #[error("json parse error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("weights file error: {0}")]
+    Weights(String),
+
+    #[error("precompute table error: {0}")]
+    Table(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("scheduler error: {0}")]
+    Scheduler(String),
+
+    #[error("kv cache error: {0}")]
+    KvCache(String),
+
+    #[error("engine error: {0}")]
+    Engine(String),
+
+    #[error("tokenizer error: {0}")]
+    Tokenizer(String),
+
+    #[error("server error: {0}")]
+    Server(String),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn other(msg: impl Into<String>) -> Self {
+        Error::Other(msg.into())
+    }
+}

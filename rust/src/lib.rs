@@ -1,0 +1,36 @@
+//! # firstlayer
+//!
+//! A three-layer serving framework reproducing **"Transformer tricks:
+//! Precomputing the first layer"** (Graef, 2024): for RoPE transformers the
+//! first layer's Q/K/V projections (plus the FFN and skip-connection for
+//! parallel-attention models) depend only on the token embedding, so they
+//! can be computed offline for the whole vocabulary and served as a table
+//! lookup of `2(d+e)` values per token.
+//!
+//! Layers:
+//! * **L1/L2 (build time, Python)** — Pallas kernels + JAX model, AOT-lowered
+//!   to HLO text under `artifacts/` (see `python/compile/`).
+//! * **L3 (this crate)** — the serving coordinator: PJRT runtime, paged KV
+//!   cache, continuous-batching scheduler, precompute table manager,
+//!   tokenizer, metrics, cost model and traffic simulator, TCP server.
+//!
+//! Python never runs on the request path; the binary is self-contained once
+//! `make artifacts` has produced the AOT bundle.
+
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod error;
+pub mod kvcache;
+pub mod manifest;
+pub mod metrics;
+pub mod precompute;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod simtraffic;
+pub mod tokenizer;
+pub mod util;
+pub mod weights;
+
+pub use error::{Error, Result};

@@ -1,0 +1,260 @@
+//! `firstlayer` CLI: serve / generate / precompute / paper-tables /
+//! sweep / selfcheck.
+//!
+//! The offline build has no clap; flags are parsed by a small in-tree
+//! helper (`--key value` or `--flag`).
+
+use std::collections::HashMap;
+
+use firstlayer::config::{zoo_get, ServingConfig};
+use firstlayer::coordinator::sampling::SamplingParams;
+use firstlayer::coordinator::Coordinator;
+use firstlayer::costmodel;
+use firstlayer::manifest::Manifest;
+use firstlayer::precompute::validate_table;
+use firstlayer::runtime::{ModelEngine, Runtime, StepPath};
+use firstlayer::server::Server;
+use firstlayer::util::fmt;
+use firstlayer::Result;
+
+const USAGE: &str = "\
+firstlayer — serving framework with first-layer precompute
+  (reproduction of 'Transformer tricks: Precomputing the first layer', 2024)
+
+USAGE: firstlayer <command> [flags]
+
+COMMANDS:
+  serve         run the TCP server
+                  --addr 127.0.0.1:7411 --model tiny-serial
+                  --path precompute|baseline --artifacts artifacts
+  generate      one-shot generation from the CLI
+                  --prompt \"text\" --max-new 32 --model tiny-serial
+                  --path precompute|baseline --temperature 0 --top-k 0
+  precompute    rebuild the table via the PJRT artifact and verify/persist
+                  --model tiny-serial [--out path.fpt]
+  paper-tables  print the paper's §3 tables from the cost model
+  sweep         analytical batch sweep for one model
+                  --model mistral-7b --batches 1,16,256,1024
+  selfcheck     verify artifacts: manifest, weights, table CRC, engine smoke
+                  [--model tiny-serial]
+";
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn serving_config(flags: &HashMap<String, String>) -> ServingConfig {
+    let mut cfg = ServingConfig::default();
+    if let Some(m) = flags.get("model") {
+        cfg.model = m.clone();
+    }
+    if let Some(a) = flags.get("artifacts") {
+        cfg.artifacts_dir = a.clone();
+    }
+    if let Some(p) = flags.get("path") {
+        cfg.use_precompute = p != "baseline";
+    }
+    if let Some(b) = flags.get("max-batch") {
+        cfg.max_batch = b.parse().unwrap_or(cfg.max_batch);
+    }
+    if let Some(k) = flags.get("kv-blocks") {
+        cfg.kv_blocks = k.parse().unwrap_or(cfg.kv_blocks);
+    }
+    cfg
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().cloned().unwrap_or_default();
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    let r = match cmd.as_str() {
+        "serve" => cmd_serve(&flags),
+        "generate" => cmd_generate(&flags),
+        "precompute" => cmd_precompute(&flags),
+        "paper-tables" => cmd_paper_tables(),
+        "sweep" => cmd_sweep(&flags),
+        "selfcheck" => cmd_selfcheck(&flags),
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = serving_config(flags);
+    let addr = flags
+        .get("addr")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7411".to_string());
+    eprintln!("[firstlayer] model={} starting…", cfg.model);
+    Server::new(addr).run(move || {
+        let c = Coordinator::from_config(&cfg)?;
+        eprintln!(
+            "[firstlayer] path={} (warming up artifacts…)",
+            c.path().label()
+        );
+        c.engine().warmup(c.path())?;
+        Ok(c)
+    })
+}
+
+fn cmd_generate(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = serving_config(flags);
+    let prompt = flags
+        .get("prompt")
+        .cloned()
+        .unwrap_or_else(|| "the quick brown fox".to_string());
+    let max_new: usize = flags
+        .get("max-new")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24);
+    let params = SamplingParams {
+        temperature: flags
+            .get("temperature")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0.0),
+        top_k: flags.get("top-k").and_then(|v| v.parse().ok()).unwrap_or(0),
+    };
+    let mut c = Coordinator::from_config(&cfg)?;
+    let id = c.submit_text(&prompt, max_new, params)?;
+    c.run_to_completion(10_000)?;
+    let toks = c.generated(id).unwrap_or(&[]).to_vec();
+    println!("prompt : {prompt}");
+    println!("output : {}", c.tokenizer.decode(&toks));
+    println!("tokens : {toks:?}");
+    println!("path   : {}", c.path().label());
+    println!("--- metrics ---\n{}", c.metrics.report());
+    let t = c.engine().traffic.snapshot();
+    println!(
+        "l1 reads: baseline={} precompute={}",
+        fmt::commas(t.l1_reads_baseline),
+        fmt::commas(t.l1_reads_precomp)
+    );
+    Ok(())
+}
+
+fn cmd_precompute(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = serving_config(flags);
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let engine = ModelEngine::load(&rt, &manifest, &cfg.model)?;
+    println!(
+        "[precompute] rebuilding table for {} via PJRT ({} vocab rows of {} values)…",
+        cfg.model,
+        engine.config().vocab_size,
+        engine.config().precomp_row_width()
+    );
+    let rebuilt = engine.build_table()?;
+    let diff = firstlayer::precompute::max_abs_diff(&rebuilt, engine.table())?;
+    if diff < 1e-4 {
+        println!("[precompute] OK — rebuilt table matches shipped (max |Δ| = {diff:.2e})");
+    } else {
+        println!("[precompute] MISMATCH — max |Δ| = {diff:.3e} vs shipped table");
+    }
+    if let Some(out) = flags.get("out") {
+        rebuilt.save(out)?;
+        println!("[precompute] wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_paper_tables() -> Result<()> {
+    firstlayer::costmodel::print_paper_tables();
+    Ok(())
+}
+
+fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
+    let model = flags
+        .get("model")
+        .cloned()
+        .unwrap_or_else(|| "mistral-7b".to_string());
+    let cfg = zoo_get(&model)
+        .ok_or_else(|| firstlayer::Error::Config(format!("unknown model {model}")))?;
+    let batches: Vec<u64> = flags
+        .get("batches")
+        .map(|b| b.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_else(|| costmodel::PAPER_BATCHES.to_vec());
+    println!("first-layer read reduction for {model} (analytical):");
+    println!(
+        "{:>8} {:>20} {:>20} {:>10}",
+        "batch", "reads w/o", "reads with", "factor"
+    );
+    for b in batches {
+        println!(
+            "{:>8} {:>20} {:>20} {:>10}",
+            b,
+            fmt::commas(costmodel::reads_without(&cfg, b)),
+            fmt::commas(costmodel::reads_with(&cfg, b)),
+            fmt::factor(costmodel::reduction_factor(&cfg, b))
+        );
+    }
+    Ok(())
+}
+
+fn cmd_selfcheck(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = serving_config(flags);
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    println!("[selfcheck] manifest: {} models", manifest.models.len());
+    let rt = Runtime::cpu()?;
+    println!("[selfcheck] PJRT platform: {}", rt.platform());
+    let models: Vec<String> = if flags.contains_key("model") {
+        vec![cfg.model.clone()]
+    } else {
+        manifest.models.keys().cloned().collect()
+    };
+    for name in models {
+        let engine = ModelEngine::load(&rt, &manifest, &name)?;
+        let entry = engine.entry();
+        validate_table(engine.table(), engine.config(), entry.weights_crc)?;
+        println!(
+            "[selfcheck] {name}: weights {} params, table {} ({} rows x {}), crc ok",
+            fmt::human_count(engine.weights().total_params() as u64),
+            fmt::bytes(engine.table().data_bytes() as u64),
+            engine.table().vocab(),
+            engine.table().row_width(),
+        );
+        // Engine smoke: one decode step on both paths, argmax must agree.
+        let mc = engine.config().clone();
+        let caches = firstlayer::runtime::CacheBatch::zeros(
+            mc.n_layers,
+            engine.decode_bucket(1, StepPath::Baseline)?,
+            mc.max_seq,
+            mc.n_kv_heads,
+            mc.head_dim(),
+        );
+        let base = engine.decode(StepPath::Baseline, &[3], &[0], &caches)?;
+        if mc.rope {
+            let pre = engine.decode(StepPath::Precompute, &[3], &[0], &caches)?;
+            let am_b = firstlayer::coordinator::sampling::argmax(&base.logits);
+            let am_p = firstlayer::coordinator::sampling::argmax(&pre.logits);
+            if am_b != am_p {
+                return Err(firstlayer::Error::Engine(format!(
+                    "{name}: baseline/precompute argmax mismatch ({am_b} vs {am_p})"
+                )));
+            }
+            println!("[selfcheck] {name}: baseline ≡ precompute (argmax {am_b})");
+        }
+    }
+    println!("[selfcheck] all OK");
+    Ok(())
+}

@@ -1,0 +1,393 @@
+//! AOT manifest: the contract between `python/compile/aot.py` and the
+//! serving runtime.  `artifacts/manifest.json` lists, per model, the
+//! weights file, the precompute table, and every HLO artifact with its
+//! input/output signature and weight parameter order.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::{Arch, FfnType, ModelConfig, NormType};
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// Element type of an artifact IO slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(Error::Manifest(format!("unknown dtype `{other}`"))),
+        }
+    }
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// One named input/output tensor of an artifact.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Artifact kind (drives how the engine calls it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Decode,
+    Prefill,
+    PrecomputeBuild,
+}
+
+/// One compiled computation (HLO text file + signature).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Path relative to the artifacts dir.
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Weight tensors appended after the data inputs, in order.  The
+    /// pseudo-name `@table` denotes the precompute table buffer.
+    pub weight_params: Vec<String>,
+    pub batch: Option<usize>,
+    pub prompt_len: Option<usize>,
+    pub max_seq: Option<usize>,
+}
+
+impl ArtifactSpec {
+    /// Baseline path (embeds tokens in-graph) vs precompute path.
+    pub fn is_precompute(&self) -> bool {
+        self.name.contains("precomp")
+    }
+}
+
+/// Everything the manifest knows about one model.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub config: ModelConfig,
+    pub weights_file: String,
+    pub weights_order: Vec<String>,
+    pub table_file: String,
+    pub weights_crc: u32,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl ModelEntry {
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Manifest(format!("no artifact `{name}`")))
+    }
+
+    /// Decode artifacts of a path family, sorted by batch size.
+    pub fn decode_buckets(&self, precompute: bool) -> Vec<&ArtifactSpec> {
+        let prefix = if precompute {
+            "decode_precomp_b"
+        } else {
+            "decode_baseline_b"
+        };
+        let mut v: Vec<_> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.name.starts_with(prefix))
+            .collect();
+        v.sort_by_key(|a| a.batch.unwrap_or(0));
+        v
+    }
+
+    /// Prefill artifacts of a family, sorted by (batch, prompt_len).
+    pub fn prefill_buckets(&self, precompute: bool) -> Vec<&ArtifactSpec> {
+        let prefix = if precompute {
+            "prefill_precomp_b"
+        } else {
+            "prefill_baseline_b"
+        };
+        let mut v: Vec<_> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.name.starts_with(prefix))
+            .collect();
+        v.sort_by_key(|a| (a.batch.unwrap_or(0), a.prompt_len.unwrap_or(0)));
+        v
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!("{}: {e} (run `make artifacts`)", path.display()))
+        })?;
+        let root = json::parse(&text)?;
+        let version = root.u64_field("version")?;
+        if version != 1 {
+            return Err(Error::Manifest(format!("unsupported version {version}")));
+        }
+        let mut models = BTreeMap::new();
+        for (name, entry) in root
+            .get("models")?
+            .as_obj()
+            .ok_or_else(|| Error::Manifest("models not an object".into()))?
+        {
+            models.insert(name.clone(), parse_model(name, entry)?);
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("model `{name}` not in manifest")))
+    }
+
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+}
+
+fn parse_model(name: &str, v: &Value) -> Result<ModelEntry> {
+    let config = parse_config(v.get("config")?)?;
+    if config.name != name {
+        return Err(Error::Manifest(format!(
+            "model key `{name}` != config name `{}`",
+            config.name
+        )));
+    }
+    let weights_order = v
+        .get("weights_order")?
+        .as_arr()
+        .ok_or_else(|| Error::Manifest("weights_order not an array".into()))?
+        .iter()
+        .map(|s| s.as_str().unwrap_or_default().to_string())
+        .collect();
+    let mut artifacts = Vec::new();
+    for a in v
+        .get("artifacts")?
+        .as_arr()
+        .ok_or_else(|| Error::Manifest("artifacts not an array".into()))?
+    {
+        artifacts.push(parse_artifact(a)?);
+    }
+    Ok(ModelEntry {
+        config,
+        weights_file: v.str_field("weights_file")?.to_string(),
+        weights_order,
+        table_file: v.str_field("table_file")?.to_string(),
+        weights_crc: v.u64_field("weights_crc")? as u32,
+        artifacts,
+    })
+}
+
+fn parse_config(v: &Value) -> Result<ModelConfig> {
+    let arch = match v.str_field("arch")? {
+        "parallel" => Arch::Parallel,
+        "serial" => Arch::Serial,
+        other => return Err(Error::Manifest(format!("bad arch `{other}`"))),
+    };
+    let ffn_type = match v.str_field("ffn_type")? {
+        "mlp" => FfnType::Mlp,
+        "swiglu" => FfnType::SwiGlu,
+        "swiglu_moe" => FfnType::SwiGluMoe,
+        other => return Err(Error::Manifest(format!("bad ffn_type `{other}`"))),
+    };
+    let norm_type = match v.str_field("norm_type")? {
+        "rmsnorm" => NormType::RmsNorm,
+        "layernorm" => NormType::LayerNorm,
+        other => return Err(Error::Manifest(format!("bad norm_type `{other}`"))),
+    };
+    let cfg = ModelConfig {
+        name: v.str_field("name")?.to_string(),
+        arch,
+        d: v.u64_field("d")? as usize,
+        n_layers: v.u64_field("n_layers")? as usize,
+        n_heads: v.u64_field("n_heads")? as usize,
+        n_kv_heads: v.u64_field("n_kv_heads")? as usize,
+        ffn_hidden: v.u64_field("ffn_hidden")? as usize,
+        ffn_type,
+        n_experts: v.u64_field("n_experts")? as usize,
+        moe_top_k: v.u64_field("moe_top_k")? as usize,
+        vocab_size: v.u64_field("vocab_size")? as usize,
+        max_seq: v.u64_field("max_seq")? as usize,
+        norm_type,
+        rope_theta: v.get("rope_theta")?.as_f64().unwrap_or(10_000.0),
+        norm_eps: v.get("norm_eps")?.as_f64().unwrap_or(1e-5),
+        rope: v.get("rope")?.as_bool().unwrap_or(true),
+    };
+    cfg.validate()?;
+    // Cross-check the derived quantities the python side exported.
+    if let Some(e) = v.get_opt("e").and_then(|x| x.as_usize()) {
+        if e != cfg.e() {
+            return Err(Error::Manifest(format!(
+                "{}: e mismatch (manifest {e}, derived {})",
+                cfg.name,
+                cfg.e()
+            )));
+        }
+    }
+    if let Some(w) = v.get_opt("precomp_row_width").and_then(|x| x.as_usize()) {
+        if w != cfg.precomp_row_width() {
+            return Err(Error::Manifest(format!(
+                "{}: row width mismatch (manifest {w}, derived {})",
+                cfg.name,
+                cfg.precomp_row_width()
+            )));
+        }
+    }
+    Ok(cfg)
+}
+
+fn parse_artifact(v: &Value) -> Result<ArtifactSpec> {
+    let kind = match v.str_field("kind")? {
+        "decode" => ArtifactKind::Decode,
+        "prefill" => ArtifactKind::Prefill,
+        "precompute_build" => ArtifactKind::PrecomputeBuild,
+        other => return Err(Error::Manifest(format!("bad kind `{other}`"))),
+    };
+    let io = |key: &str| -> Result<Vec<IoSpec>> {
+        let mut out = Vec::new();
+        for x in v
+            .get(key)?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest(format!("{key} not an array")))?
+        {
+            out.push(IoSpec {
+                name: x.str_field("name")?.to_string(),
+                shape: x
+                    .get("shape")?
+                    .as_arr()
+                    .ok_or_else(|| Error::Manifest("shape not an array".into()))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: DType::parse(x.str_field("dtype")?)?,
+            });
+        }
+        Ok(out)
+    };
+    Ok(ArtifactSpec {
+        name: v.str_field("name")?.to_string(),
+        kind,
+        file: v.str_field("file")?.to_string(),
+        inputs: io("inputs")?,
+        outputs: io("outputs")?,
+        weight_params: v
+            .get("weight_params")?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("weight_params not an array".into()))?
+            .iter()
+            .map(|s| s.as_str().unwrap_or_default().to_string())
+            .collect(),
+        batch: v.get_opt("batch").and_then(|x| x.as_usize()),
+        prompt_len: v.get_opt("prompt_len").and_then(|x| x.as_usize()),
+        max_seq: v.get_opt("max_seq").and_then(|x| x.as_usize()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "tiny-serial": {
+          "config": {"name": "tiny-serial", "arch": "serial", "d": 128,
+            "n_layers": 4, "n_heads": 4, "n_kv_heads": 2, "ffn_hidden": 384,
+            "ffn_type": "swiglu", "n_experts": 1, "moe_top_k": 1,
+            "vocab_size": 512, "max_seq": 128, "norm_type": "rmsnorm",
+            "rope_theta": 10000.0, "norm_eps": 1e-05, "rope": true,
+            "e": 64, "head_dim": 32, "precomp_row_width": 384},
+          "weights_file": "w.fw",
+          "weights_order": ["emb", "unemb"],
+          "table_file": "t.fpt",
+          "weights_crc": 305419896,
+          "artifacts": [
+            {"name": "decode_baseline_b1", "kind": "decode",
+             "file": "tiny-serial/decode_baseline_b1.hlo.txt",
+             "inputs": [{"name": "tokens", "shape": [1], "dtype": "i32"}],
+             "outputs": [{"name": "logits", "shape": [1, 512], "dtype": "f32"}],
+             "weight_params": ["emb", "unemb"], "batch": 1, "max_seq": 128},
+            {"name": "decode_precomp_b4", "kind": "decode",
+             "file": "tiny-serial/decode_precomp_b4.hlo.txt",
+             "inputs": [{"name": "rows", "shape": [4, 384], "dtype": "f32"}],
+             "outputs": [{"name": "logits", "shape": [4, 512], "dtype": "f32"}],
+             "weight_params": ["unemb"], "batch": 4, "max_seq": 128}
+          ]
+        }
+      }
+    }"#;
+
+    fn write_sample(dir: &std::path::Path) {
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+    }
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("fl_manifest_test1");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.model("tiny-serial").unwrap();
+        assert_eq!(e.config.d, 128);
+        assert_eq!(e.config.e(), 64);
+        assert_eq!(e.weights_crc, 0x12345678);
+        assert_eq!(e.artifacts.len(), 2);
+        let a = e.artifact("decode_precomp_b4").unwrap();
+        assert!(a.is_precompute());
+        assert_eq!(a.inputs[0].shape, vec![4, 384]);
+        assert_eq!(a.inputs[0].elems(), 4 * 384);
+    }
+
+    #[test]
+    fn buckets_sorted() {
+        let dir = std::env::temp_dir().join("fl_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.model("tiny-serial").unwrap();
+        assert_eq!(e.decode_buckets(false).len(), 1);
+        assert_eq!(e.decode_buckets(true)[0].batch, Some(4));
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let dir = std::env::temp_dir().join("fl_manifest_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn row_width_mismatch_rejected() {
+        let bad = SAMPLE.replace("\"precomp_row_width\": 384", "\"precomp_row_width\": 999");
+        let dir = std::env::temp_dir().join("fl_manifest_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! Serving metrics (S15): counters + log-bucketed latency histograms.
+//!
+//! Lock-free on the hot path (atomics); the histogram uses power-of-√2
+//! buckets from 1 µs to ~1 h, which keeps relative error < 20% per bucket —
+//! plenty for p50/p95/p99 reporting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const BUCKETS: usize = 64;
+
+/// Log-bucketed latency histogram.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_ns: AtomicU64,
+    n: AtomicU64,
+}
+
+fn bucket_of(d: Duration) -> usize {
+    let us = d.as_micros() as u64;
+    if us == 0 {
+        return 0;
+    }
+    // two buckets per octave: idx = floor(2*log2(us))
+    let lz = 63 - us.leading_zeros() as u64;
+    let half = if us >= (1u64 << lz) + (1u64 << lz) / 2 { 1 } else { 0 };
+    ((2 * lz + half) as usize).min(BUCKETS - 1)
+}
+
+fn bucket_upper(idx: usize) -> Duration {
+    let oct = idx / 2;
+    let us = if idx % 2 == 0 {
+        (1u64 << oct) + (1u64 << oct) / 2
+    } else {
+        1u64 << (oct + 1)
+    };
+    Duration::from_micros(us)
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+            n: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.counts[bucket_of(d)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / n)
+    }
+
+    /// Upper bound of the bucket containing the q-quantile.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((n as f64) * q).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(BUCKETS - 1)
+    }
+}
+
+/// All serving-side metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Requests accepted / completed / rejected.
+    pub requests_in: AtomicU64,
+    pub requests_done: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    /// Generated tokens.
+    pub tokens_out: AtomicU64,
+    /// Scheduler preemptions (KV pressure).
+    pub preemptions: AtomicU64,
+    /// Engine step latencies.
+    pub decode_step: Histogram,
+    pub prefill_step: Histogram,
+    /// Request end-to-end latency and time-to-first-token.
+    pub e2e: Histogram,
+    pub ttft: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        use std::fmt::Write;
+        let _ = writeln!(
+            s,
+            "requests: in={} done={} rejected={}  tokens_out={}  preemptions={}",
+            self.requests_in.load(Ordering::Relaxed),
+            self.requests_done.load(Ordering::Relaxed),
+            self.requests_rejected.load(Ordering::Relaxed),
+            self.tokens_out.load(Ordering::Relaxed),
+            self.preemptions.load(Ordering::Relaxed),
+        );
+        for (name, h) in [
+            ("decode_step", &self.decode_step),
+            ("prefill_step", &self.prefill_step),
+            ("ttft", &self.ttft),
+            ("e2e", &self.e2e),
+        ] {
+            let _ = writeln!(
+                s,
+                "{name:<12} n={:<7} mean={:>10.2?} p50={:>10.2?} p95={:>10.2?} p99={:>10.2?}",
+                h.count(),
+                h.mean(),
+                h.quantile(0.50),
+                h.quantile(0.95),
+                h.quantile(0.99),
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_monotone() {
+        let mut prev = 0;
+        for us in [1u64, 2, 3, 5, 10, 100, 1000, 10_000, 1_000_000] {
+            let b = bucket_of(Duration::from_micros(us));
+            assert!(b >= prev, "us={us}");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn quantile_sane() {
+        let h = Histogram::new();
+        for i in 1..=100u64 {
+            h.record(Duration::from_micros(i * 10));
+        }
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        assert!(p50 >= Duration::from_micros(400) && p50 <= Duration::from_micros(800));
+        assert!(p95 >= p50);
+        assert!(h.mean() >= Duration::from_micros(400));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn report_contains_counts() {
+        let m = Metrics::new();
+        m.requests_in.fetch_add(3, Ordering::Relaxed);
+        m.decode_step.record(Duration::from_millis(2));
+        let r = m.report();
+        assert!(r.contains("in=3"));
+        assert!(r.contains("decode_step"));
+    }
+
+    #[test]
+    fn bucket_upper_covers_bucket_of() {
+        for us in [1u64, 7, 63, 999, 123_456] {
+            let d = Duration::from_micros(us);
+            assert!(bucket_upper(bucket_of(d)) >= d);
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Precompute table manager: the paper's runtime half (S10).
+//!
+//! The offline pass (python `precompute.py`, or `firstlayer precompute`
+//! re-running the `precompute_build` artifact) stores, for every vocab
+//! token, the first layer's `[q | k | v | r]` row of `2(d+e)` f32 values.
+//! At serving time the embedding lookup of the first layer becomes
+//! [`Table::gather`]: one contiguous row read per token — exactly the
+//! memory operation the paper counts.
+//!
+//! The file is mmap'd read-only; rows are 4-byte aligned and row-major, so
+//! a gather is `B` memcpys of `row_width * 4` bytes.
+
+mod table;
+
+pub use table::{Table, TableHeader, ARCH_PARALLEL, ARCH_SERIAL};
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+
+/// Max absolute element difference between two same-shape tables (used to
+/// compare a PJRT-rebuilt table against the shipped one: different compiler
+/// stacks need not be bit-identical, but must agree numerically).
+pub fn max_abs_diff(a: &Table, b: &Table) -> Result<f32> {
+    if a.vocab() != b.vocab() || a.row_width() != b.row_width() {
+        return Err(Error::Table("shape mismatch".into()));
+    }
+    let mut worst = 0f32;
+    let tokens: Vec<u32> = (0..a.vocab() as u32).collect();
+    let ra = a.gather_vec(&tokens)?;
+    let rb = b.gather_vec(&tokens)?;
+    for (x, y) in ra.iter().zip(&rb) {
+        worst = worst.max((x - y).abs());
+    }
+    Ok(worst)
+}
+
+/// Validate a loaded table against the model config + manifest CRC.
+pub fn validate_table(table: &Table, cfg: &ModelConfig, expect_crc: u32) -> Result<()> {
+    let h = table.header();
+    if h.vocab as usize != cfg.vocab_size {
+        return Err(Error::Table(format!(
+            "vocab mismatch: table {} vs config {}",
+            h.vocab, cfg.vocab_size
+        )));
+    }
+    if h.row_width as usize != cfg.precomp_row_width() {
+        return Err(Error::Table(format!(
+            "row width mismatch: table {} vs config {}",
+            h.row_width,
+            cfg.precomp_row_width()
+        )));
+    }
+    if h.d as usize != cfg.d || h.e as usize != cfg.e() {
+        return Err(Error::Table("d/e mismatch".into()));
+    }
+    let want_arch = match cfg.arch {
+        crate::config::Arch::Parallel => ARCH_PARALLEL,
+        crate::config::Arch::Serial => ARCH_SERIAL,
+    };
+    if h.arch != want_arch {
+        return Err(Error::Table("arch mismatch".into()));
+    }
+    if h.weights_crc != expect_crc {
+        return Err(Error::Table(format!(
+            "weights CRC mismatch: table {:#010x} vs manifest {:#010x} — \
+             table was built from different weights",
+            h.weights_crc, expect_crc
+        )));
+    }
+    Ok(())
+}

@@ -1,0 +1,317 @@
+//! `.fpt` table file: header + mmap'd row store.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+pub const MAGIC: &[u8; 4] = b"FPT1";
+pub const ARCH_PARALLEL: u32 = 0;
+pub const ARCH_SERIAL: u32 = 1;
+const HEADER_SIZE: usize = 4 + 4 * 6 + 8 + 4 + 4; // see python precompute.py
+
+/// Parsed `.fpt` header.
+#[derive(Debug, Clone, Copy)]
+pub struct TableHeader {
+    pub version: u32,
+    pub arch: u32,
+    pub d: u32,
+    pub e: u32,
+    pub vocab: u32,
+    pub dtype: u32,
+    pub row_width: u64,
+    pub weights_crc: u32,
+}
+
+enum Backing {
+    /// Read-only mmap of the file (zero-copy rows).
+    Mmap { ptr: *const u8, len: usize },
+    /// Heap copy (used for tables built in memory / tests).
+    Owned(Vec<u8>),
+}
+
+// The mmap is read-only and lives as long as the Table.
+unsafe impl Send for Backing {}
+unsafe impl Sync for Backing {}
+
+/// The precompute table: `vocab` rows of `row_width` f32 values.
+pub struct Table {
+    header: TableHeader,
+    backing: Backing,
+    /// Byte offset of row 0 within the backing.
+    data_off: usize,
+}
+
+impl Drop for Table {
+    fn drop(&mut self) {
+        if let Backing::Mmap { ptr, len } = self.backing {
+            unsafe {
+                libc::munmap(ptr as *mut libc::c_void, len);
+            }
+        }
+    }
+}
+
+fn parse_header(bytes: &[u8]) -> Result<TableHeader> {
+    if bytes.len() < HEADER_SIZE {
+        return Err(Error::Table("file shorter than header".into()));
+    }
+    if &bytes[0..4] != MAGIC {
+        return Err(Error::Table("bad magic".into()));
+    }
+    let u32_at = |off: usize| {
+        u32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]])
+    };
+    let u64_at = |off: usize| {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&bytes[off..off + 8]);
+        u64::from_le_bytes(b)
+    };
+    let h = TableHeader {
+        version: u32_at(4),
+        arch: u32_at(8),
+        d: u32_at(12),
+        e: u32_at(16),
+        vocab: u32_at(20),
+        dtype: u32_at(24),
+        row_width: u64_at(28),
+        weights_crc: u32_at(36),
+    };
+    if h.version != 1 {
+        return Err(Error::Table(format!("unsupported version {}", h.version)));
+    }
+    if h.dtype != 0 {
+        return Err(Error::Table("only f32 tables supported".into()));
+    }
+    if h.row_width != 2 * (h.d + h.e) as u64 {
+        return Err(Error::Table(format!(
+            "row_width {} != 2(d+e) = {}",
+            h.row_width,
+            2 * (h.d + h.e)
+        )));
+    }
+    Ok(h)
+}
+
+impl Table {
+    /// mmap the file read-only.  The paper's "parameter memory" residency:
+    /// the table is paged in on demand and shared across processes.
+    pub fn open(path: impl AsRef<Path>) -> Result<Table> {
+        let path = path.as_ref();
+        let file = std::fs::File::open(path)
+            .map_err(|e| Error::Table(format!("{}: {e}", path.display())))?;
+        let len = file.metadata()?.len() as usize;
+        let mut head = vec![0u8; HEADER_SIZE.min(len)];
+        use std::io::Read;
+        (&file).read_exact(&mut head)?;
+        let header = parse_header(&head)?;
+        let expect = HEADER_SIZE + header.vocab as usize * header.row_width as usize * 4;
+        if len != expect {
+            return Err(Error::Table(format!(
+                "file size {len} != expected {expect}"
+            )));
+        }
+        use std::os::unix::io::AsRawFd;
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ,
+                libc::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            return Err(Error::Table("mmap failed".into()));
+        }
+        Ok(Table {
+            header,
+            backing: Backing::Mmap {
+                ptr: ptr as *const u8,
+                len,
+            },
+            data_off: HEADER_SIZE,
+        })
+    }
+
+    /// Build an in-memory table (used by `firstlayer precompute` when
+    /// rebuilding via the PJRT artifact, and by tests).
+    pub fn from_rows(
+        arch: u32,
+        d: u32,
+        e: u32,
+        weights_crc: u32,
+        rows: &[f32],
+        vocab: u32,
+    ) -> Result<Table> {
+        let row_width = 2 * (d + e) as u64;
+        if rows.len() as u64 != vocab as u64 * row_width {
+            return Err(Error::Table(format!(
+                "rows len {} != vocab {} * width {}",
+                rows.len(),
+                vocab,
+                row_width
+            )));
+        }
+        let mut bytes = Vec::with_capacity(HEADER_SIZE + rows.len() * 4);
+        bytes.extend_from_slice(MAGIC);
+        for v in [1u32, arch, d, e, vocab, 0u32] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.extend_from_slice(&row_width.to_le_bytes());
+        bytes.extend_from_slice(&weights_crc.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        for v in rows {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let header = parse_header(&bytes)?;
+        Ok(Table {
+            header,
+            backing: Backing::Owned(bytes),
+            data_off: HEADER_SIZE,
+        })
+    }
+
+    /// Persist (for `firstlayer precompute --out`).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.bytes())?;
+        Ok(())
+    }
+
+    fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            Backing::Mmap { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Backing::Owned(v) => v,
+        }
+    }
+
+    pub fn header(&self) -> &TableHeader {
+        &self.header
+    }
+
+    pub fn row_width(&self) -> usize {
+        self.header.row_width as usize
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.header.vocab as usize
+    }
+
+    /// Total table bytes (the paper's memory-size accounting).
+    pub fn data_bytes(&self) -> usize {
+        self.vocab() * self.row_width() * 4
+    }
+
+    /// One row as raw bytes — a single `2(d+e)·4`-byte read.
+    pub fn row_bytes(&self, token: u32) -> Result<&[u8]> {
+        if token >= self.header.vocab {
+            return Err(Error::Table(format!(
+                "token {token} out of range (vocab {})",
+                self.header.vocab
+            )));
+        }
+        let w = self.row_width() * 4;
+        let start = self.data_off + token as usize * w;
+        Ok(&self.bytes()[start..start + w])
+    }
+
+    /// Gather rows for a token batch into `out` (len `tokens.len() * width`).
+    /// This is the serving hot path: `B` contiguous memcpys.
+    pub fn gather(&self, tokens: &[u32], out: &mut [f32]) -> Result<()> {
+        let w = self.row_width();
+        if out.len() != tokens.len() * w {
+            return Err(Error::Table(format!(
+                "gather out len {} != {}*{w}",
+                out.len(),
+                tokens.len()
+            )));
+        }
+        for (i, &t) in tokens.iter().enumerate() {
+            let src = self.row_bytes(t)?;
+            // f32 LE on a LE host: byte copy is the value copy.
+            let dst = &mut out[i * w..(i + 1) * w];
+            let dst_bytes = unsafe {
+                std::slice::from_raw_parts_mut(dst.as_mut_ptr() as *mut u8, w * 4)
+            };
+            dst_bytes.copy_from_slice(src);
+        }
+        Ok(())
+    }
+
+    /// Allocating convenience wrapper around [`Table::gather`].
+    pub fn gather_vec(&self, tokens: &[u32]) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; tokens.len() * self.row_width()];
+        self.gather(tokens, &mut out)?;
+        Ok(out)
+    }
+
+    /// CRC32 of the row payload (integrity self-check, `firstlayer selfcheck`).
+    pub fn payload_crc(&self) -> u32 {
+        let mut h = crc32fast::Hasher::new();
+        h.update(&self.bytes()[self.data_off..]);
+        h.finalize()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_table() -> Table {
+        // d=2, e=1 -> width 6; vocab 4.
+        let rows: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        Table::from_rows(ARCH_SERIAL, 2, 1, 0xDEAD, &rows, 4).unwrap()
+    }
+
+    #[test]
+    fn header_fields() {
+        let t = mk_table();
+        assert_eq!(t.row_width(), 6);
+        assert_eq!(t.vocab(), 4);
+        assert_eq!(t.header().weights_crc, 0xDEAD);
+        assert_eq!(t.data_bytes(), 96);
+    }
+
+    #[test]
+    fn gather_exact_rows() {
+        let t = mk_table();
+        let out = t.gather_vec(&[2, 0, 2]).unwrap();
+        assert_eq!(&out[0..6], &[12., 13., 14., 15., 16., 17.]);
+        assert_eq!(&out[6..12], &[0., 1., 2., 3., 4., 5.]);
+        assert_eq!(&out[12..18], &out[0..6]);
+    }
+
+    #[test]
+    fn out_of_range_token() {
+        let t = mk_table();
+        assert!(t.gather_vec(&[4]).is_err());
+    }
+
+    #[test]
+    fn save_open_roundtrip() {
+        let t = mk_table();
+        let p = std::env::temp_dir().join("fl_table_test.fpt");
+        t.save(&p).unwrap();
+        let t2 = Table::open(&p).unwrap();
+        assert_eq!(t2.row_width(), 6);
+        assert_eq!(t2.gather_vec(&[3]).unwrap(), t.gather_vec(&[3]).unwrap());
+        assert_eq!(t2.payload_crc(), t.payload_crc());
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let t = mk_table();
+        let p = std::env::temp_dir().join("fl_table_trunc.fpt");
+        t.save(&p).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &data[..data.len() - 4]).unwrap();
+        assert!(Table::open(&p).is_err());
+    }
+
+    #[test]
+    fn bad_width_rejected() {
+        let rows: Vec<f32> = vec![0.0; 24];
+        // d=2,e=2 -> width 8, but 24 = 4*6 mismatches vocab*width = 32.
+        assert!(Table::from_rows(ARCH_SERIAL, 2, 2, 0, &rows, 4).is_err());
+    }
+}

@@ -1,0 +1,541 @@
+//! Model engine: one loaded model (weights + table + executables) with
+//! decode/prefill step entry points for both serving paths.
+//!
+//! The engine is deliberately *stateless about sequences* — the coordinator
+//! owns the paged KV store and batch composition; the engine turns one
+//! assembled step into PJRT calls:
+//!
+//! * weights are uploaded to the device once at construction and reused by
+//!   every call (`execute_b`),
+//! * `decode` gathers precomputed rows from the mmap'd table (precompute
+//!   path) or passes token ids (baseline),
+//! * returns the logits plus only the *new* K/V rows extracted from the
+//!   returned caches, so the paged store is updated with one row per
+//!   (layer, sequence) instead of a full-cache writeback.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::manifest::{ArtifactKind, Manifest, ModelEntry};
+use crate::precompute::{validate_table, Table};
+use crate::simtraffic::Recorder;
+use crate::weights::WeightsFile;
+
+use super::{Executable, HostTensor, Runtime};
+
+/// Which serving path a step runs (the paper's comparison axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepPath {
+    /// Full first layer from the embedding (Figure 1a / 2b).
+    Baseline,
+    /// Precomputed first layer: table gather + attention only (Fig 1b / 2c).
+    Precompute,
+    /// Ablation: precompute with the gather *inside* the graph (the table
+    /// lives as a device buffer).
+    PrecomputeGather,
+}
+
+impl StepPath {
+    pub fn label(self) -> &'static str {
+        match self {
+            StepPath::Baseline => "baseline",
+            StepPath::Precompute => "precompute",
+            StepPath::PrecomputeGather => "precompute-gather",
+        }
+    }
+}
+
+/// Dense batched KV cache input: `[L, B, S, KH, hd]` f32, row-major.
+#[derive(Debug, Clone)]
+pub struct CacheBatch {
+    pub l: usize,
+    pub b: usize,
+    pub s: usize,
+    pub kh: usize,
+    pub hd: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl CacheBatch {
+    pub fn zeros(l: usize, b: usize, s: usize, kh: usize, hd: usize) -> CacheBatch {
+        let n = l * b * s * kh * hd;
+        CacheBatch {
+            l,
+            b,
+            s,
+            kh,
+            hd,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    pub fn dims(&self) -> [usize; 5] {
+        [self.l, self.b, self.s, self.kh, self.hd]
+    }
+
+    /// Offset of `[layer, seq, slot, 0, 0]`.
+    pub fn offset(&self, layer: usize, seq: usize, slot: usize) -> usize {
+        ((layer * self.b + seq) * self.s + slot) * self.kh * self.hd
+    }
+
+    /// One (layer, seq, slot) row, `kh*hd` long.
+    pub fn row<'a>(
+        &self,
+        kv: &'a [f32],
+        layer: usize,
+        seq: usize,
+        slot: usize,
+    ) -> &'a [f32] {
+        let o = self.offset(layer, seq, slot);
+        &kv[o..o + self.kh * self.hd]
+    }
+}
+
+/// Result of one decode step over `n` real sequences.
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    /// `[n, vocab]` logits for the sampled next token.
+    pub logits: Vec<f32>,
+    /// New K rows: `[n, L, kh*hd]` (seq-major for easy page writeback).
+    pub new_k: Vec<f32>,
+    /// New V rows, same layout.
+    pub new_v: Vec<f32>,
+    /// The compiled batch bucket that served this step.
+    pub bucket: usize,
+}
+
+/// Result of a prefill over `n` real sequences.
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    /// `[n, vocab]` logits at each sequence's last prompt position.
+    pub logits: Vec<f32>,
+    /// Full caches `[L, n, S, KH, hd]` (slots < len valid).
+    pub caches: CacheBatch,
+    pub bucket: (usize, usize),
+}
+
+struct Loaded {
+    exe: Arc<Executable>,
+    /// Device-resident weight buffers in artifact parameter order.
+    weight_bufs: Vec<Arc<xla::PjRtBuffer>>,
+}
+
+/// One loaded model.
+pub struct ModelEngine {
+    rt: Runtime,
+    entry: ModelEntry,
+    dir: PathBuf,
+    weights: WeightsFile,
+    table: Table,
+    /// Tensor-name → uploaded device buffer (shared across artifacts).
+    buf_by_name: Mutex<HashMap<String, Arc<xla::PjRtBuffer>>>,
+    loaded: Mutex<HashMap<String, Arc<Loaded>>>,
+    pub traffic: Arc<Recorder>,
+}
+
+impl ModelEngine {
+    pub fn load(rt: &Runtime, manifest: &Manifest, model: &str) -> Result<ModelEngine> {
+        let entry = manifest.model(model)?.clone();
+        let weights = WeightsFile::load(manifest.path(&entry.weights_file))?;
+        // Sanity: every manifest weight tensor exists on disk.
+        for name in &entry.weights_order {
+            weights.get(name)?;
+        }
+        let table = Table::open(manifest.path(&entry.table_file))?;
+        validate_table(&table, &entry.config, entry.weights_crc)?;
+        Ok(ModelEngine {
+            rt: rt.clone(),
+            entry,
+            dir: manifest.dir.clone(),
+            weights,
+            table,
+            buf_by_name: Mutex::new(HashMap::new()),
+            loaded: Mutex::new(HashMap::new()),
+            traffic: Arc::new(Recorder::new()),
+        })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.entry.config
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    pub fn table(&self) -> &Table {
+        &self.table
+    }
+
+    pub fn weights(&self) -> &WeightsFile {
+        &self.weights
+    }
+
+    /// Upload (or fetch the cached) device buffer for a weight tensor or
+    /// the `@table` pseudo-tensor.
+    fn weight_buffer(&self, name: &str) -> Result<Arc<xla::PjRtBuffer>> {
+        if let Some(b) = self.buf_by_name.lock().unwrap().get(name) {
+            return Ok(b.clone());
+        }
+        let buf = if name == "@table" {
+            let rows = self.table.gather_vec(
+                &(0..self.table.vocab() as u32).collect::<Vec<_>>(),
+            )?;
+            self.rt
+                .upload_f32(&rows, &[self.table.vocab(), self.table.row_width()])?
+        } else {
+            let t = self.weights.get(name)?;
+            let data = t.to_f32_vec()?;
+            self.rt.upload_f32(&data, &t.dims)?
+        };
+        let buf = Arc::new(buf);
+        self.buf_by_name
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), buf.clone());
+        Ok(buf)
+    }
+
+    fn load_artifact(&self, name: &str) -> Result<Arc<Loaded>> {
+        if let Some(l) = self.loaded.lock().unwrap().get(name) {
+            return Ok(l.clone());
+        }
+        let spec = self.entry.artifact(name)?.clone();
+        let exe = self.rt.load(&self.dir.join(&spec.file), spec.clone())?;
+        let mut weight_bufs = Vec::with_capacity(spec.weight_params.len());
+        for w in &spec.weight_params {
+            weight_bufs.push(self.weight_buffer(w)?);
+        }
+        let loaded = Arc::new(Loaded { exe, weight_bufs });
+        self.loaded
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Eagerly compile every artifact of a path family (avoids first-request
+    /// latency spikes; `firstlayer serve --warmup`).
+    pub fn warmup(&self, path: StepPath) -> Result<()> {
+        let names: Vec<String> = self
+            .entry
+            .artifacts
+            .iter()
+            .filter(|a| match path {
+                StepPath::Baseline => a.name.contains("baseline"),
+                StepPath::Precompute => {
+                    a.name.contains("precomp") && !a.name.contains("gather")
+                }
+                StepPath::PrecomputeGather => a.name.contains("gather"),
+            })
+            .map(|a| a.name.clone())
+            .collect();
+        for n in names {
+            self.load_artifact(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Smallest compiled decode bucket that fits `n` sequences.
+    pub fn decode_bucket(&self, n: usize, path: StepPath) -> Result<usize> {
+        let precomp = path != StepPath::Baseline;
+        let prefix = match path {
+            StepPath::Baseline => "decode_baseline_b",
+            StepPath::Precompute => "decode_precomp_b",
+            StepPath::PrecomputeGather => "decode_precomp_gather_b",
+        };
+        self.entry
+            .artifacts
+            .iter()
+            .filter(|a| a.name.starts_with(prefix) && a.kind == ArtifactKind::Decode)
+            .filter_map(|a| a.batch)
+            .filter(|b| *b >= n)
+            .min()
+            .ok_or_else(|| {
+                Error::Engine(format!(
+                    "no decode bucket >= {n} for path {} (precomp={precomp})",
+                    path.label()
+                ))
+            })
+    }
+
+    /// Smallest compiled prefill bucket fitting `n` sequences of `t` tokens.
+    pub fn prefill_bucket(&self, n: usize, t: usize, path: StepPath) -> Result<(usize, usize)> {
+        let prefix = match path {
+            StepPath::Baseline => "prefill_baseline_b",
+            _ => "prefill_precomp_b",
+        };
+        self.entry
+            .artifacts
+            .iter()
+            .filter(|a| a.name.starts_with(prefix))
+            .filter_map(|a| Some((a.batch?, a.prompt_len?)))
+            .filter(|(b, pt)| *b >= n && *pt >= t)
+            .min()
+            .ok_or_else(|| {
+                Error::Engine(format!("no prefill bucket >= ({n}, {t})"))
+            })
+    }
+
+    /// One decode step.  `tokens[i]` is the token to feed for sequence `i`,
+    /// `pos[i]` its position (= current length), `caches` the dense batch
+    /// KV with `b == bucket` rows (callers pad with zero rows).
+    pub fn decode(
+        &self,
+        path: StepPath,
+        tokens: &[u32],
+        pos: &[u32],
+        caches: &CacheBatch,
+    ) -> Result<DecodeOut> {
+        let n = tokens.len();
+        if n == 0 || n != pos.len() {
+            return Err(Error::Engine("decode: empty or mismatched batch".into()));
+        }
+        if path != StepPath::Baseline && !self.entry.config.rope {
+            return Err(Error::Engine(
+                "precompute path requires RoPE (paper §2 — abs-PE models \
+                 cannot precompute the first layer)"
+                    .into(),
+            ));
+        }
+        let bucket = self.decode_bucket(n, path)?;
+        let cfg = &self.entry.config;
+        if caches.b != bucket {
+            return Err(Error::Engine(format!(
+                "caches padded to {} but bucket is {bucket}",
+                caches.b
+            )));
+        }
+        let name = match path {
+            StepPath::Baseline => format!("decode_baseline_b{bucket}"),
+            StepPath::Precompute => format!("decode_precomp_b{bucket}"),
+            StepPath::PrecomputeGather => format!("decode_precomp_gather_b{bucket}"),
+        };
+        let loaded = self.load_artifact(&name)?;
+
+        // Pad per-token inputs out to the bucket.
+        let mut pos_p: Vec<i32> = pos.iter().map(|p| *p as i32).collect();
+        pos_p.resize(bucket, 0);
+
+        // Data inputs per path.
+        let mut data_bufs: Vec<xla::PjRtBuffer> = Vec::new();
+        match path {
+            StepPath::Baseline | StepPath::PrecomputeGather => {
+                let mut toks: Vec<i32> = tokens.iter().map(|t| *t as i32).collect();
+                toks.resize(bucket, 0);
+                data_bufs.push(self.rt.upload_i32(&toks, &[bucket])?);
+            }
+            StepPath::Precompute => {
+                // The paper's runtime read: one 2(d+e) row per token.
+                let w = self.table.row_width();
+                let mut rows = vec![0f32; bucket * w];
+                self.table.gather(tokens, &mut rows[..n * w])?;
+                data_bufs.push(self.rt.upload_f32(&rows, &[bucket, w])?);
+            }
+        }
+        data_bufs.push(self.rt.upload_i32(&pos_p, &[bucket])?);
+        let t_up = std::time::Instant::now();
+        data_bufs.push(self.rt.upload_f32(&caches.k, &caches.dims().to_vec())?);
+        data_bufs.push(self.rt.upload_f32(&caches.v, &caches.dims().to_vec())?);
+        let up = t_up.elapsed();
+
+        let mut args: Vec<&xla::PjRtBuffer> = data_bufs.iter().collect();
+        for wb in &loaded.weight_bufs {
+            args.push(wb);
+        }
+        let t_exec = std::time::Instant::now();
+        let out = loaded.exe.execute_host(&args)?;
+        let exec = t_exec.elapsed();
+        self.traffic.record_decode(cfg, path, n as u64);
+        let t_unpack = std::time::Instant::now();
+        let res = self.unpack_decode(out, n, bucket, pos, caches);
+        if std::env::var_os("FIRSTLAYER_TRACE").is_some() {
+            eprintln!(
+                "[trace] decode {} B={n}/{bucket}: upload={up:?} exec+readback={exec:?} unpack={:?}",
+                path.label(),
+                t_unpack.elapsed()
+            );
+        }
+        res
+    }
+
+    fn unpack_decode(
+        &self,
+        out: Vec<HostTensor>,
+        n: usize,
+        bucket: usize,
+        pos: &[u32],
+        caches: &CacheBatch,
+    ) -> Result<DecodeOut> {
+        let cfg = &self.entry.config;
+        let vocab = cfg.vocab_size;
+        let logits_all = out[0].as_f32()?;
+        let kc = out[1].as_f32()?;
+        let vc = out[2].as_f32()?;
+        let row = caches.kh * caches.hd;
+        let mut logits = vec![0f32; n * vocab];
+        logits.copy_from_slice(&logits_all[..n * vocab]);
+        let mut new_k = vec![0f32; n * caches.l * row];
+        let mut new_v = vec![0f32; n * caches.l * row];
+        // Extract the freshly written slot pos[i] per (seq, layer): the only
+        // rows the paged store needs.
+        let out_cb = CacheBatch {
+            l: caches.l,
+            b: bucket,
+            s: caches.s,
+            kh: caches.kh,
+            hd: caches.hd,
+            k: Vec::new(),
+            v: Vec::new(),
+        };
+        for i in 0..n {
+            for l in 0..caches.l {
+                let o = out_cb.offset(l, i, pos[i] as usize);
+                let dst = (i * caches.l + l) * row;
+                new_k[dst..dst + row].copy_from_slice(&kc[o..o + row]);
+                new_v[dst..dst + row].copy_from_slice(&vc[o..o + row]);
+            }
+        }
+        Ok(DecodeOut {
+            logits,
+            new_k,
+            new_v,
+            bucket,
+        })
+    }
+
+    /// Prefill `n` prompts (ragged, padded to the bucket's `[B, T]`).
+    pub fn prefill(
+        &self,
+        path: StepPath,
+        prompts: &[Vec<u32>],
+    ) -> Result<PrefillOut> {
+        let n = prompts.len();
+        if n == 0 {
+            return Err(Error::Engine("prefill: empty batch".into()));
+        }
+        if prompts.iter().any(|p| p.is_empty()) {
+            return Err(Error::Engine("prefill: empty prompt".into()));
+        }
+        if path != StepPath::Baseline && !self.entry.config.rope {
+            return Err(Error::Engine("precompute path requires RoPE".into()));
+        }
+        let tmax = prompts.iter().map(|p| p.len()).max().unwrap();
+        let (b, t) = self.prefill_bucket(n, tmax, path)?;
+        let cfg = &self.entry.config;
+        let name = match path {
+            StepPath::Baseline => format!("prefill_baseline_b{b}t{t}"),
+            _ => format!("prefill_precomp_b{b}t{t}"),
+        };
+        let loaded = self.load_artifact(&name)?;
+        let spec = &loaded.exe.spec;
+
+        let mut lens: Vec<i32> = prompts.iter().map(|p| p.len() as i32).collect();
+        // Padding sequences must still have len >= 1 to keep the masked
+        // softmax + last-position gather well-defined; their output is
+        // discarded.
+        lens.resize(b, 1);
+
+        let mut data_bufs: Vec<xla::PjRtBuffer> = Vec::new();
+        match path {
+            StepPath::Baseline => {
+                let mut toks = vec![0i32; b * t];
+                for (i, p) in prompts.iter().enumerate() {
+                    for (j, tok) in p.iter().enumerate() {
+                        toks[i * t + j] = *tok as i32;
+                    }
+                }
+                data_bufs.push(self.rt.upload_i32(&toks, &[b, t])?);
+            }
+            _ => {
+                let w = self.table.row_width();
+                let mut rows = vec![0f32; b * t * w];
+                for (i, p) in prompts.iter().enumerate() {
+                    self.table
+                        .gather(p, &mut rows[i * t * w..(i * t + p.len()) * w])?;
+                }
+                data_bufs.push(self.rt.upload_f32(&rows, &[b, t, w])?);
+            }
+        }
+        data_bufs.push(self.rt.upload_i32(&lens, &[b])?);
+        let mut args: Vec<&xla::PjRtBuffer> = data_bufs.iter().collect();
+        for wb in &loaded.weight_bufs {
+            args.push(wb);
+        }
+        let out = loaded.exe.execute_host(&args)?;
+        let total_tokens: u64 = prompts.iter().map(|p| p.len() as u64).sum();
+        self.traffic.record_prefill(cfg, path, total_tokens);
+
+        let s = spec
+            .max_seq
+            .ok_or_else(|| Error::Engine("prefill artifact missing max_seq".into()))?;
+        let vocab = cfg.vocab_size;
+        let logits_all = out[0].as_f32()?;
+        let mut logits = vec![0f32; n * vocab];
+        logits.copy_from_slice(&logits_all[..n * vocab]);
+        // Repack caches [L, b, S, ...] -> [L, n, S, ...] dropping pad seqs.
+        let (l, kh, hd) = (cfg.n_layers, cfg.n_kv_heads, cfg.head_dim());
+        let full_k = out[1].as_f32()?;
+        let full_v = out[2].as_f32()?;
+        let mut caches = CacheBatch::zeros(l, n, s, kh, hd);
+        let row = s * kh * hd;
+        for li in 0..l {
+            for i in 0..n {
+                let src = (li * b + i) * row;
+                let dst = (li * n + i) * row;
+                caches.k[dst..dst + row].copy_from_slice(&full_k[src..src + row]);
+                caches.v[dst..dst + row].copy_from_slice(&full_v[src..src + row]);
+            }
+        }
+        Ok(PrefillOut {
+            logits,
+            caches,
+            bucket: (b, t),
+        })
+    }
+
+    /// Rebuild the precompute table on-device via the `precompute_build`
+    /// artifact (proves the offline pass is reproducible from the serving
+    /// binary alone; used by `firstlayer precompute` and integration tests).
+    pub fn build_table(&self) -> Result<Table> {
+        let loaded = self.load_artifact("precompute_build")?;
+        let spec = &loaded.exe.spec;
+        let chunk = spec.inputs[0].shape[0];
+        let cfg = &self.entry.config;
+        let w = cfg.precomp_row_width();
+        let vocab = cfg.vocab_size;
+        let mut rows = vec![0f32; vocab * w];
+        let mut start = 0usize;
+        while start < vocab {
+            let n = chunk.min(vocab - start);
+            let mut toks: Vec<i32> = (start..start + n).map(|t| t as i32).collect();
+            toks.resize(chunk, 0);
+            let tok_buf = self.rt.upload_i32(&toks, &[chunk])?;
+            let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf];
+            for wb in &loaded.weight_bufs {
+                args.push(wb);
+            }
+            let out = loaded.exe.execute_host(&args)?;
+            let data = out[0].as_f32()?;
+            rows[start * w..(start + n) * w].copy_from_slice(&data[..n * w]);
+            start += n;
+        }
+        let arch = match cfg.arch {
+            crate::config::Arch::Parallel => crate::precompute::ARCH_PARALLEL,
+            crate::config::Arch::Serial => crate::precompute::ARCH_SERIAL,
+        };
+        Table::from_rows(
+            arch,
+            cfg.d as u32,
+            cfg.e() as u32,
+            self.entry.weights_crc,
+            &rows,
+            vocab as u32,
+        )
+    }
+}

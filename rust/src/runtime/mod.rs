@@ -1,0 +1,199 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`.  HLO *text* is
+//! the interchange format (jax ≥ 0.5 protos use 64-bit ids this XLA
+//! rejects).  All artifacts are lowered with `return_tuple=True`; outputs
+//! may surface as one tuple literal or as untupled buffers depending on the
+//! PJRT wrapper — [`Executable::execute`] normalizes both.
+
+mod engine;
+
+pub use engine::{CacheBatch, DecodeOut, ModelEngine, PrefillOut, StepPath};
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::manifest::{ArtifactSpec, DType, IoSpec};
+
+/// Shared PJRT client handle.
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+    /// Compile cache keyed by artifact file path.
+    cache: Arc<Mutex<HashMap<String, Arc<Executable>>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: Arc::new(xla::PjRtClient::cpu()?),
+            cache: Arc::new(Mutex::new(HashMap::new())),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an HLO text artifact (cached by path).
+    pub fn load(&self, path: &Path, spec: ArtifactSpec) -> Result<Arc<Executable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::other("non-utf8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let exe = Arc::new(Executable { exe, spec });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload a host f32 tensor to the device.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload a host i32 tensor to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+/// Host-side value for one artifact input/output.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => Err(Error::Engine("expected f32 tensor".into())),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => Err(Error::Engine("expected i32 tensor".into())),
+        }
+    }
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A compiled artifact bound to its manifest signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+impl Executable {
+    /// Execute with device buffers (weights stay resident across calls).
+    /// Returns one buffer per output leaf.
+    pub fn execute_buffers(
+        &self,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let out = self.exe.execute_b(args)?;
+        let row = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Engine("no outputs".into()))?;
+        Ok(row)
+    }
+
+    /// Execute and read every output back to host, normalizing the
+    /// tuple-vs-untupled output convention.
+    pub fn execute_host(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+        let t0 = std::time::Instant::now();
+        let bufs = self.execute_buffers(args)?;
+        let exec_d = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        let out = self.read_back(bufs);
+        if std::env::var_os("FIRSTLAYER_TRACE").is_some() {
+            eprintln!(
+                "[trace]   {}: execute={exec_d:?} readback={:?}",
+                self.spec.name,
+                t1.elapsed()
+            );
+        }
+        out
+    }
+
+    fn read_back(&self, bufs: Vec<xla::PjRtBuffer>) -> Result<Vec<HostTensor>> {
+        let n_out = self.spec.outputs.len();
+        let tupled = bufs.len() == 1
+            && bufs[0]
+                .on_device_shape()
+                .map(|s| s.is_tuple())
+                .unwrap_or(false);
+        let literals: Vec<xla::Literal> = if bufs.len() == n_out && !tupled {
+            bufs.iter()
+                .map(|b| b.to_literal_sync().map_err(Error::from))
+                .collect::<Result<_>>()?
+        } else if bufs.len() == 1 {
+            // Single tuple buffer: decompose on the host.
+            let mut lit = bufs[0].to_literal_sync()?;
+            let parts = lit.decompose_tuple()?;
+            if parts.len() != n_out {
+                return Err(Error::Engine(format!(
+                    "{}: tuple arity {} != {} outputs",
+                    self.spec.name,
+                    parts.len(),
+                    n_out
+                )));
+            }
+            parts
+        } else {
+            return Err(Error::Engine(format!(
+                "{}: unexpected output count {} (want {n_out})",
+                self.spec.name,
+                bufs.len()
+            )));
+        };
+        literals
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, io)| host_tensor(lit, io))
+            .collect()
+    }
+}
+
+fn host_tensor(lit: &xla::Literal, io: &IoSpec) -> Result<HostTensor> {
+    let out = match io.dtype {
+        DType::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+        DType::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
+    };
+    if out.len() != io.elems() {
+        return Err(Error::Engine(format!(
+            "output `{}`: {} elems, expected {}",
+            io.name,
+            out.len(),
+            io.elems()
+        )));
+    }
+    Ok(out)
+}

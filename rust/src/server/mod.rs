@@ -1,0 +1,310 @@
+//! TCP line-protocol server (S14): the deployable front of the stack.
+//!
+//! One JSON object per line, request → streamed response lines:
+//!
+//! ```text
+//! → {"op":"generate","prompt":"the quick","max_new_tokens":16,
+//!    "temperature":0.0,"top_k":0}
+//! ← {"event":"token","id":3,"token":287,"text":" brown"}
+//! ← {"event":"done","id":3,"reason":"max_tokens","text":"<full output>"}
+//!
+//! → {"op":"metrics"}      ← {"event":"metrics","report":"..."}
+//! → {"op":"traffic"}      ← {"event":"traffic", ...counters...}
+//! → {"op":"path","value":"baseline"|"precompute"}  (live A/B switch)
+//! → {"op":"ping"}         ← {"event":"pong"}
+//! ```
+//!
+//! Threading: a single engine loop owns the coordinator (PJRT calls are
+//! not assumed thread-safe); connection threads only enqueue requests and
+//! wait on per-request channels.  No tokio in the offline build — plain
+//! `std::net` + threads, which a coordinator at this scale genuinely
+//! doesn't need more than.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::sampling::SamplingParams;
+use crate::coordinator::{Coordinator, Event, FinishReason};
+use crate::error::{Error, Result};
+use crate::runtime::StepPath;
+use crate::util::json::{self, n, obj, s, Value};
+
+/// Commands from connection threads to the engine loop.
+enum Cmd {
+    Generate {
+        text: String,
+        max_new_tokens: usize,
+        params: SamplingParams,
+        /// Streamed events go back through this.
+        reply: Sender<Event>,
+    },
+    SetPath(StepPath),
+}
+
+/// Server handle.
+pub struct Server {
+    addr: String,
+}
+
+/// Shared handles the engine thread exports once the coordinator is built.
+/// (PJRT handles are `!Send`, so the coordinator itself must be constructed
+/// and owned entirely by the engine thread.)
+struct EngineHandles {
+    metrics: Arc<crate::metrics::Metrics>,
+    traffic: Arc<crate::simtraffic::Recorder>,
+    tokenizer: Arc<crate::tokenizer::Tokenizer>,
+}
+
+impl Server {
+    pub fn new(addr: impl Into<String>) -> Server {
+        Server { addr: addr.into() }
+    }
+
+    /// Run forever (blocking).  `make` builds the coordinator inside the
+    /// engine thread (xla handles cannot cross threads).
+    pub fn run<F>(&self, make: F) -> Result<()>
+    where
+        F: FnOnce() -> Result<Coordinator> + Send + 'static,
+    {
+        let listener = TcpListener::bind(&self.addr)
+            .map_err(|e| Error::Server(format!("bind {}: {e}", self.addr)))?;
+        eprintln!("[firstlayer] serving on {}", self.addr);
+        let (tx, rx) = channel::<Cmd>();
+        let (htx, hrx) = channel::<Result<EngineHandles>>();
+        std::thread::spawn(move || {
+            let c = match make() {
+                Ok(c) => {
+                    let _ = htx.send(Ok(EngineHandles {
+                        metrics: c.metrics.clone(),
+                        traffic: c.engine().traffic.clone(),
+                        tokenizer: c.tokenizer.clone(),
+                    }));
+                    c
+                }
+                Err(e) => {
+                    let _ = htx.send(Err(e));
+                    return;
+                }
+            };
+            engine_loop(c, rx);
+        });
+        let handles = hrx
+            .recv()
+            .map_err(|_| Error::Server("engine thread died".into()))??;
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let tx = tx.clone();
+            let metrics = handles.metrics.clone();
+            let traffic = handles.traffic.clone();
+            let tokenizer = handles.tokenizer.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, tx, metrics, traffic, tokenizer);
+            });
+        }
+        Ok(())
+    }
+}
+
+/// The engine loop: owns the coordinator, interleaves request intake with
+/// `step()`, and fans events back out to the requesting connections.
+fn engine_loop(mut c: Coordinator, rx: Receiver<Cmd>) {
+    let mut sinks: HashMap<u64, Sender<Event>> = HashMap::new();
+    loop {
+        // Intake: block when idle, drain opportunistically when busy.
+        if c.busy() {
+            while let Ok(cmd) = rx.try_recv() {
+                apply(&mut c, cmd, &mut sinks);
+            }
+        } else {
+            match rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(cmd) => apply(&mut c, cmd, &mut sinks),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(_) => return, // all senders dropped: shut down
+            }
+        }
+        if c.busy() {
+            if let Err(e) = c.step() {
+                eprintln!("[firstlayer] step error: {e}");
+            }
+        }
+        for ev in c.take_events() {
+            let id = match &ev {
+                Event::Token { id, .. } | Event::Finished { id, .. } => *id,
+            };
+            let done = matches!(ev, Event::Finished { .. });
+            if let Some(sink) = sinks.get(&id) {
+                let _ = sink.send(ev);
+            }
+            if done {
+                sinks.remove(&id);
+            }
+        }
+    }
+}
+
+fn apply(c: &mut Coordinator, cmd: Cmd, sinks: &mut HashMap<u64, Sender<Event>>) {
+    match cmd {
+        Cmd::Generate {
+            text,
+            max_new_tokens,
+            params,
+            reply,
+        } => match c.submit_text(&text, max_new_tokens, params) {
+            Ok(id) => {
+                sinks.insert(id, reply);
+            }
+            Err(e) => {
+                // Surface rejection as an immediate Finished event.
+                let _ = reply.send(Event::Finished {
+                    id: 0,
+                    reason: FinishReason::ContextFull,
+                });
+                eprintln!("[firstlayer] rejected: {e}");
+            }
+        },
+        Cmd::SetPath(p) => {
+            if let Err(e) = c.set_path(p) {
+                eprintln!("[firstlayer] set_path: {e}");
+            }
+        }
+    }
+}
+
+fn reason_str(r: FinishReason) -> &'static str {
+    match r {
+        FinishReason::Eos => "eos",
+        FinishReason::MaxTokens => "max_tokens",
+        FinishReason::ContextFull => "context_full",
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: Sender<Cmd>,
+    metrics: Arc<crate::metrics::Metrics>,
+    traffic: Arc<crate::simtraffic::Recorder>,
+    tokenizer: Arc<crate::tokenizer::Tokenizer>,
+) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let reader = BufReader::new(stream.try_clone()?);
+    let out = Arc::new(Mutex::new(stream));
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match json::parse(&line) {
+            Ok(v) => v,
+            Err(e) => {
+                send(&out, &obj(vec![("event", s("error")), ("msg", s(e.to_string()))]))?;
+                continue;
+            }
+        };
+        match req.get_opt("op").and_then(|v| v.as_str()) {
+            Some("ping") => send(&out, &obj(vec![("event", s("pong"))]))?,
+            Some("metrics") => send(
+                &out,
+                &obj(vec![("event", s("metrics")), ("report", s(metrics.report()))]),
+            )?,
+            Some("traffic") => {
+                let t = traffic.snapshot();
+                send(
+                    &out,
+                    &obj(vec![
+                        ("event", s("traffic")),
+                        ("l1_reads_baseline", n(t.l1_reads_baseline as f64)),
+                        ("l1_reads_precomp", n(t.l1_reads_precomp as f64)),
+                        ("decode_tokens", n(t.decode_tokens as f64)),
+                        ("prefill_tokens", n(t.prefill_tokens as f64)),
+                        ("table_bytes_read", n(t.table_bytes_read as f64)),
+                    ]),
+                )?
+            }
+            Some("path") => {
+                let p = match req.get_opt("value").and_then(|v| v.as_str()) {
+                    Some("baseline") => StepPath::Baseline,
+                    Some("precompute") => StepPath::Precompute,
+                    _ => {
+                        send(&out, &obj(vec![("event", s("error")), ("msg", s("bad path"))]))?;
+                        continue;
+                    }
+                };
+                tx.send(Cmd::SetPath(p))
+                    .map_err(|_| Error::Server("engine gone".into()))?;
+                send(&out, &obj(vec![("event", s("ok"))]))?;
+            }
+            Some("generate") => {
+                let text = req
+                    .get_opt("prompt")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string();
+                let max_new = req
+                    .get_opt("max_new_tokens")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(32);
+                let params = SamplingParams {
+                    temperature: req
+                        .get_opt("temperature")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0),
+                    top_k: req.get_opt("top_k").and_then(|v| v.as_usize()).unwrap_or(0),
+                };
+                let (etx, erx) = channel();
+                tx.send(Cmd::Generate {
+                    text,
+                    max_new_tokens: max_new,
+                    params,
+                    reply: etx,
+                })
+                .map_err(|_| Error::Server("engine gone".into()))?;
+                let mut tokens: Vec<u32> = Vec::new();
+                for ev in erx {
+                    match ev {
+                        Event::Token { id, token } => {
+                            tokens.push(token);
+                            let piece = tokenizer.decode(&[token]);
+                            send(
+                                &out,
+                                &obj(vec![
+                                    ("event", s("token")),
+                                    ("id", n(id as f64)),
+                                    ("token", n(token as f64)),
+                                    ("text", s(piece)),
+                                ]),
+                            )?;
+                        }
+                        Event::Finished { id, reason } => {
+                            send(
+                                &out,
+                                &obj(vec![
+                                    ("event", s("done")),
+                                    ("id", n(id as f64)),
+                                    ("reason", s(reason_str(reason))),
+                                    ("text", s(tokenizer.decode(&tokens))),
+                                ]),
+                            )?;
+                            break;
+                        }
+                    }
+                }
+            }
+            _ => send(&out, &obj(vec![("event", s("error")), ("msg", s("unknown op"))]))?,
+        }
+    }
+    let _ = peer;
+    Ok(())
+}
+
+fn send(out: &Arc<Mutex<TcpStream>>, v: &Value) -> Result<()> {
+    let mut line = json::to_string(v);
+    line.push('\n');
+    out.lock()
+        .unwrap()
+        .write_all(line.as_bytes())
+        .map_err(|e| Error::Server(e.to_string()))
+}

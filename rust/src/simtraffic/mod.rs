@@ -1,0 +1,168 @@
+//! Memory-traffic simulator (S12): *measured* read accounting.
+//!
+//! The paper's evaluation is a count of memory reads in the bandwidth-bound
+//! decode regime.  We have no A100-class testbed, so the substitution
+//! (DESIGN.md §7) is to count, inside the live engine, exactly the reads
+//! the paper counts, per executed step:
+//!
+//! * baseline first layer, per decode batch of `B`:
+//!   `B·d` embedding values + `W` weight values (Q,K,V [+FFN]) streamed,
+//! * precompute first layer: `B·2(d+e)` table values, nothing else.
+//!
+//! E3 (`examples/batch_sweep`) then reports the measured ratio next to the
+//! analytical `costmodel` prediction — they must agree exactly, which is
+//! the point: the analytical table is validated by execution, not by a
+//! second copy of the same formula.  Counters are atomics: the server path
+//! records from multiple worker threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::ModelConfig;
+use crate::costmodel;
+use crate::runtime::StepPath;
+
+/// Aggregated traffic counters (values = f32 element reads, as in the paper).
+#[derive(Debug, Default)]
+pub struct Recorder {
+    /// Decode steps executed per path.
+    pub decode_steps_baseline: AtomicU64,
+    pub decode_steps_precomp: AtomicU64,
+    /// First-layer reads per path (the paper's table-2 quantity).
+    pub l1_reads_baseline: AtomicU64,
+    pub l1_reads_precomp: AtomicU64,
+    /// Tokens processed.
+    pub decode_tokens: AtomicU64,
+    pub prefill_tokens: AtomicU64,
+    /// Precompute-table bytes actually gathered (cross-check against
+    /// `l1_reads_precomp * 4`).
+    pub table_bytes_read: AtomicU64,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn record_decode(&self, cfg: &ModelConfig, path: StepPath, batch: u64) {
+        self.decode_tokens.fetch_add(batch, Ordering::Relaxed);
+        match path {
+            StepPath::Baseline => {
+                self.decode_steps_baseline.fetch_add(1, Ordering::Relaxed);
+                self.l1_reads_baseline
+                    .fetch_add(costmodel::reads_without(cfg, batch), Ordering::Relaxed);
+            }
+            StepPath::Precompute | StepPath::PrecomputeGather => {
+                self.decode_steps_precomp.fetch_add(1, Ordering::Relaxed);
+                let reads = costmodel::reads_with(cfg, batch);
+                self.l1_reads_precomp.fetch_add(reads, Ordering::Relaxed);
+                self.table_bytes_read
+                    .fetch_add(reads * 4, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn record_prefill(&self, cfg: &ModelConfig, path: StepPath, tokens: u64) {
+        self.prefill_tokens.fetch_add(tokens, Ordering::Relaxed);
+        // Prefill reads weights once per batch too; same formulas with
+        // B = total prompt tokens in the batch.
+        match path {
+            StepPath::Baseline => {
+                self.l1_reads_baseline
+                    .fetch_add(costmodel::reads_without(cfg, tokens), Ordering::Relaxed);
+            }
+            _ => {
+                let reads = costmodel::reads_with(cfg, tokens);
+                self.l1_reads_precomp.fetch_add(reads, Ordering::Relaxed);
+                self.table_bytes_read
+                    .fetch_add(reads * 4, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            decode_steps_baseline: self.decode_steps_baseline.load(Ordering::Relaxed),
+            decode_steps_precomp: self.decode_steps_precomp.load(Ordering::Relaxed),
+            l1_reads_baseline: self.l1_reads_baseline.load(Ordering::Relaxed),
+            l1_reads_precomp: self.l1_reads_precomp.load(Ordering::Relaxed),
+            decode_tokens: self.decode_tokens.load(Ordering::Relaxed),
+            prefill_tokens: self.prefill_tokens.load(Ordering::Relaxed),
+            table_bytes_read: self.table_bytes_read.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.decode_steps_baseline.store(0, Ordering::Relaxed);
+        self.decode_steps_precomp.store(0, Ordering::Relaxed);
+        self.l1_reads_baseline.store(0, Ordering::Relaxed);
+        self.l1_reads_precomp.store(0, Ordering::Relaxed);
+        self.decode_tokens.store(0, Ordering::Relaxed);
+        self.prefill_tokens.store(0, Ordering::Relaxed);
+        self.table_bytes_read.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time copy of the counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Snapshot {
+    pub decode_steps_baseline: u64,
+    pub decode_steps_precomp: u64,
+    pub l1_reads_baseline: u64,
+    pub l1_reads_precomp: u64,
+    pub decode_tokens: u64,
+    pub prefill_tokens: u64,
+    pub table_bytes_read: u64,
+}
+
+impl Snapshot {
+    /// Measured first-layer read-reduction factor (needs both paths run on
+    /// the same workload; `examples/batch_sweep` does exactly that).
+    pub fn measured_reduction(&self) -> Option<f64> {
+        if self.l1_reads_precomp == 0 || self.l1_reads_baseline == 0 {
+            return None;
+        }
+        Some(self.l1_reads_baseline as f64 / self.l1_reads_precomp as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::zoo_get;
+
+    #[test]
+    fn decode_accounting_matches_costmodel() {
+        let cfg = zoo_get("mistral-7b").unwrap();
+        let r = Recorder::new();
+        r.record_decode(&cfg, StepPath::Baseline, 1);
+        r.record_decode(&cfg, StepPath::Precompute, 1);
+        let s = r.snapshot();
+        assert_eq!(s.l1_reads_baseline, 25_169_920); // paper value
+        assert_eq!(s.l1_reads_precomp, 10_240); // paper value
+        assert_eq!(s.table_bytes_read, 10_240 * 4);
+        let f = s.measured_reduction().unwrap();
+        assert_eq!(f.round() as u64, 2_458); // paper's 2,458x
+    }
+
+    #[test]
+    fn steps_accumulate() {
+        let cfg = zoo_get("tiny-serial").unwrap();
+        let r = Recorder::new();
+        for _ in 0..5 {
+            r.record_decode(&cfg, StepPath::Precompute, 4);
+        }
+        let s = r.snapshot();
+        assert_eq!(s.decode_steps_precomp, 5);
+        assert_eq!(s.decode_tokens, 20);
+        assert_eq!(s.l1_reads_precomp, 5 * 4 * cfg.precomp_row_width() as u64);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let cfg = zoo_get("tiny-serial").unwrap();
+        let r = Recorder::new();
+        r.record_prefill(&cfg, StepPath::Baseline, 32);
+        r.reset();
+        assert_eq!(r.snapshot(), Snapshot::default());
+    }
+}

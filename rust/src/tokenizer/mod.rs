@@ -1,0 +1,273 @@
+//! Tokenizer substrate (S13): byte-level vocabulary + greedy BPE-style
+//! merges, trained on a corpus at startup.
+//!
+//! The paper's system assumes "the token-ID provides the read-address";
+//! serving real text therefore needs real token ids.  Production systems
+//! ship a trained BPE; offline we train a small one: start from the 256
+//! byte tokens, repeatedly merge the most frequent adjacent pair until the
+//! target vocab size is reached.  Encoding replays the merges in training
+//! order (canonical BPE), so `decode(encode(x)) == x` for any bytes.
+//!
+//! Special tokens: `BOS` (0), `EOS` (1), then the 256 byte tokens, then
+//! merges.  Vocab size must match the model config's (tiny models: 256/512).
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+pub const BOS: u32 = 0;
+pub const EOS: u32 = 1;
+const N_SPECIAL: u32 = 2;
+
+/// A trained byte-pair tokenizer.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab_size: usize,
+    /// Byte bucket count: 256 for trained BPE; smaller for the fallback.
+    n_byte_buckets: usize,
+    /// Merge rules in training order: (left, right) -> merged id.
+    merges: Vec<(u32, u32)>,
+    merge_map: HashMap<(u32, u32), u32>,
+    /// Token id -> byte string.
+    pieces: Vec<Vec<u8>>,
+}
+
+impl Tokenizer {
+    /// Train on `corpus` to exactly `vocab_size` tokens (>= 258).
+    pub fn train(corpus: &str, vocab_size: usize) -> Result<Tokenizer> {
+        if vocab_size < (N_SPECIAL as usize) + 256 {
+            return Err(Error::Tokenizer(format!(
+                "vocab_size {vocab_size} < {}",
+                N_SPECIAL as usize + 256
+            )));
+        }
+        let mut pieces: Vec<Vec<u8>> = Vec::with_capacity(vocab_size);
+        pieces.push(b"<bos>".to_vec());
+        pieces.push(b"<eos>".to_vec());
+        for b in 0..=255u8 {
+            pieces.push(vec![b]);
+        }
+        // Working sequence of token ids over the corpus.
+        let mut seq: Vec<u32> = corpus.bytes().map(|b| b as u32 + N_SPECIAL).collect();
+        let mut merges = Vec::new();
+        let mut merge_map = HashMap::new();
+        while pieces.len() < vocab_size {
+            // Count adjacent pairs.
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in seq.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            let Some((&pair, &cnt)) = counts
+                .iter()
+                .max_by_key(|(p, c)| (**c, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break; // nothing merges twice: corpus exhausted
+            }
+            let id = pieces.len() as u32;
+            let mut piece = pieces[pair.0 as usize].clone();
+            piece.extend_from_slice(&pieces[pair.1 as usize]);
+            pieces.push(piece);
+            merges.push(pair);
+            merge_map.insert(pair, id);
+            // Apply the merge over the working sequence.
+            let mut out = Vec::with_capacity(seq.len());
+            let mut i = 0;
+            while i < seq.len() {
+                if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+                    out.push(id);
+                    i += 2;
+                } else {
+                    out.push(seq[i]);
+                    i += 1;
+                }
+            }
+            seq = out;
+        }
+        // Pad the vocabulary with unused slots if the corpus ran dry: ids
+        // stay valid (they decode to empty) so model vocab_size is honored.
+        while pieces.len() < vocab_size {
+            pieces.push(Vec::new());
+        }
+        Ok(Tokenizer {
+            vocab_size,
+            n_byte_buckets: 256,
+            merges,
+            merge_map,
+            pieces,
+        })
+    }
+
+    /// Degenerate byte-fallback tokenizer for demo models whose vocab is
+    /// too small for the 256 byte pieces (e.g. tiny-moe, vocab 256): bytes
+    /// hash into `vocab - 2` buckets.  Decode is lossy (demo-quality), but
+    /// ids are valid and deterministic — enough to exercise the engine.
+    pub fn byte_fallback(vocab_size: usize) -> Result<Tokenizer> {
+        if vocab_size < 4 {
+            return Err(Error::Tokenizer(format!("vocab {vocab_size} too small")));
+        }
+        let n = vocab_size - N_SPECIAL as usize;
+        let mut pieces: Vec<Vec<u8>> = Vec::with_capacity(vocab_size);
+        pieces.push(b"<bos>".to_vec());
+        pieces.push(b"<eos>".to_vec());
+        for i in 0..n {
+            pieces.push(vec![if i < 256 { i as u8 } else { b'?' }]);
+        }
+        Ok(Tokenizer {
+            vocab_size,
+            n_byte_buckets: n,
+            merges: Vec::new(),
+            merge_map: HashMap::new(),
+            pieces,
+        })
+    }
+
+    /// Train if the vocab allows BPE, else fall back to the byte hasher.
+    pub fn train_or_fallback(corpus: &str, vocab_size: usize) -> Result<Tokenizer> {
+        if vocab_size >= N_SPECIAL as usize + 256 {
+            Tokenizer::train(corpus, vocab_size)
+        } else {
+            Tokenizer::byte_fallback(vocab_size)
+        }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Encode text (no BOS/EOS added — the coordinator does that).
+    ///
+    /// Canonical BPE: repeatedly merge the present pair with the lowest
+    /// training rank.  `O(len · log(len))`-ish via the merge map instead of
+    /// replaying every merge rule over the text.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut seq: Vec<u32> = text
+            .bytes()
+            .map(|b| (b as usize % self.n_byte_buckets) as u32 + N_SPECIAL)
+            .collect();
+        loop {
+            // Find the lowest-rank (earliest-trained) applicable merge.
+            let mut best: Option<(u32, usize)> = None; // (merged id, position)
+            for i in 0..seq.len().saturating_sub(1) {
+                if let Some(&id) = self.merge_map.get(&(seq[i], seq[i + 1])) {
+                    if best.map_or(true, |(bid, _)| id < bid) {
+                        best = Some((id, i));
+                    }
+                }
+            }
+            let Some((id, _)) = best else { break };
+            let pair = self.merges[(id - N_SPECIAL - 256) as usize];
+            let mut out = Vec::with_capacity(seq.len());
+            let mut i = 0;
+            while i < seq.len() {
+                if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+                    out.push(id);
+                    i += 2;
+                } else {
+                    out.push(seq[i]);
+                    i += 1;
+                }
+            }
+            seq = out;
+        }
+        seq
+    }
+
+    /// Decode token ids back to text (lossy UTF-8 for byte fragments).
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &t in tokens {
+            if t == BOS || t == EOS {
+                continue;
+            }
+            if let Some(p) = self.pieces.get(t as usize) {
+                bytes.extend_from_slice(p);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn piece(&self, token: u32) -> Option<&[u8]> {
+        self.pieces.get(token as usize).map(|v| v.as_slice())
+    }
+}
+
+/// The tiny corpus bundled for examples/tests (examples/data/corpus.txt).
+pub fn bundled_corpus() -> &'static str {
+    include_str!("../../../examples/data/corpus.txt")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::train(bundled_corpus(), 512).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_corpus_lines() {
+        let t = tok();
+        for line in bundled_corpus().lines().take(50) {
+            assert_eq!(t.decode(&t.encode(line)), line);
+        }
+    }
+
+    #[test]
+    fn roundtrip_unseen_text() {
+        let t = tok();
+        let s = "zzz completely unseen!! 12345 \u{1F600}";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn merges_actually_compress() {
+        let t = tok();
+        assert!(t.n_merges() > 50, "corpus should yield many merges");
+        let line = "the precompute table stores the first layer";
+        let ids = t.encode(line);
+        assert!(
+            ids.len() < line.len(),
+            "encoding should be shorter than bytes ({} vs {})",
+            ids.len(),
+            line.len()
+        );
+    }
+
+    #[test]
+    fn ids_in_range() {
+        let t = tok();
+        for line in bundled_corpus().lines().take(20) {
+            for id in t.encode(line) {
+                assert!((id as usize) < t.vocab_size());
+            }
+        }
+    }
+
+    #[test]
+    fn vocab_too_small_rejected() {
+        assert!(Tokenizer::train("abc", 10).is_err());
+    }
+
+    #[test]
+    fn empty_text() {
+        let t = tok();
+        assert!(t.encode("").is_empty());
+        assert_eq!(t.decode(&[]), "");
+    }
+
+    #[test]
+    fn specials_skipped_in_decode() {
+        let t = tok();
+        let mut ids = vec![BOS];
+        ids.extend(t.encode("hi"));
+        ids.push(EOS);
+        assert_eq!(t.decode(&ids), "hi");
+    }
+}

@@ -1,0 +1,101 @@
+//! Human-readable formatting for the paper-table printers.
+
+/// `184549376` -> `"184,549,376"` (the paper's thousands style).
+pub fn commas(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    let digits = s.as_bytes();
+    for (i, d) in digits.iter().enumerate() {
+        if i > 0 && (digits.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*d as char);
+    }
+    out
+}
+
+/// Signed variant for memory deltas.
+pub fn commas_i(n: i64) -> String {
+    if n < 0 {
+        format!("-{}", commas(n.unsigned_abs()))
+    } else {
+        commas(n as u64)
+    }
+}
+
+/// `6927000000` -> `"6.9B"`, `7000000` -> `"7.0M"`.
+pub fn human_count(n: u64) -> String {
+    let f = n as f64;
+    if f >= 1e9 {
+        format!("{:.1}B", f / 1e9)
+    } else if f >= 1e6 {
+        format!("{:.1}M", f / 1e6)
+    } else if f >= 1e3 {
+        format!("{:.1}K", f / 1e3)
+    } else {
+        n.to_string()
+    }
+}
+
+/// Reduction factor in the paper's style: rounded to integer, with commas:
+/// `11264.3` -> `"11,264x"`.
+pub fn factor(x: f64) -> String {
+    format!("{}x", commas(x.round() as u64))
+}
+
+/// Bytes -> MiB/GiB string.
+pub fn bytes(n: u64) -> String {
+    let f = n as f64;
+    if f >= 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} GiB", f / (1024.0 * 1024.0 * 1024.0))
+    } else if f >= 1024.0 * 1024.0 {
+        format!("{:.2} MiB", f / (1024.0 * 1024.0))
+    } else if f >= 1024.0 {
+        format!("{:.2} KiB", f / 1024.0)
+    } else {
+        format!("{n} B")
+    }
+}
+
+/// Fixed-width right-aligned cell.
+pub fn cell(s: &str, width: usize) -> String {
+    format!("{s:>width$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commas_basic() {
+        assert_eq!(commas(0), "0");
+        assert_eq!(commas(999), "999");
+        assert_eq!(commas(1000), "1,000");
+        assert_eq!(commas(184549376), "184,549,376");
+    }
+
+    #[test]
+    fn commas_signed() {
+        assert_eq!(commas_i(-1237843968), "-1,237,843,968");
+        assert_eq!(commas_i(434765824), "434,765,824");
+    }
+
+    #[test]
+    fn human() {
+        assert_eq!(human_count(6_900_000_000), "6.9B");
+        assert_eq!(human_count(46_700_000_000), "46.7B");
+        assert_eq!(human_count(512), "512");
+    }
+
+    #[test]
+    fn factor_style() {
+        assert_eq!(factor(11264.0), "11,264x");
+        assert_eq!(factor(2.6), "3x");
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2 * 1024 * 1024), "2.00 MiB");
+    }
+}

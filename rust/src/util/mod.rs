@@ -1,0 +1,7 @@
+//! Small substrates built in-tree (the offline build has no serde/rand/
+//! criterion): JSON, deterministic RNG, formatting, timing.
+
+pub mod fmt;
+pub mod json;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,95 @@
+//! Timing helpers for the in-tree bench harness (criterion is unavailable
+//! offline; `rust/benches/*.rs` use `harness = false` binaries built on
+//! these primitives).
+
+use std::time::{Duration, Instant};
+
+/// Statistics over repeated timed runs.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        Stats {
+            n,
+            mean: total / n as u32,
+            p50: samples[n / 2],
+            p95: samples[(n * 95 / 100).min(n - 1)],
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+
+    pub fn per_sec(&self, items_per_run: usize) -> f64 {
+        items_per_run as f64 / self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` for `warmup` + `iters` iterations and collect timing stats.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Time a single closure.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+/// Pretty-print a bench row (name, stats, optional throughput).
+pub fn report(name: &str, stats: &Stats, throughput: Option<(f64, &str)>) {
+    let tp = throughput
+        .map(|(v, unit)| format!("  {v:>12.1} {unit}"))
+        .unwrap_or_default();
+    println!(
+        "{name:<44} mean {:>9.1?}  p50 {:>9.1?}  p95 {:>9.1?}  (n={}){tp}",
+        stats.mean, stats.p50, stats.p95, stats.n
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples(vec![
+            Duration::from_micros(10),
+            Duration::from_micros(30),
+            Duration::from_micros(20),
+        ]);
+        assert_eq!(s.min, Duration::from_micros(10));
+        assert_eq!(s.max, Duration::from_micros(30));
+        assert_eq!(s.p50, Duration::from_micros(20));
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+}

@@ -1,0 +1,209 @@
+//! `.fw` tensor-bag loader (written by `python/compile/params.py`).
+//!
+//! Format, little-endian:
+//! ```text
+//! magic b"FLW1" | u32 n | n x ( u32 name_len, name,
+//!     u32 ndim, u64 dims[ndim], u32 dtype, u64 nbytes, data )
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorDType {
+    F32,
+    I32,
+}
+
+/// A host tensor loaded from disk.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub dtype: TensorDType,
+    /// Raw little-endian data (4 bytes/elem).
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        if self.dtype != TensorDType::F32 {
+            return Err(Error::Weights(format!("{}: not f32", self.name)));
+        }
+        // Data is 4-aligned because Vec<u8> from read has arbitrary
+        // alignment; copy-free view requires alignment, so check.
+        let (pre, mid, post) = unsafe { self.data.align_to::<f32>() };
+        if !pre.is_empty() || !post.is_empty() {
+            return Err(Error::Weights(format!("{}: misaligned data", self.name)));
+        }
+        Ok(mid)
+    }
+
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        if self.dtype != TensorDType::F32 {
+            return Err(Error::Weights(format!("{}: not f32", self.name)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// An ordered bag of named tensors.
+#[derive(Debug, Clone)]
+pub struct WeightsFile {
+    pub order: Vec<String>,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl WeightsFile {
+    pub fn load(path: impl AsRef<Path>) -> Result<WeightsFile> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .map_err(|e| Error::Weights(format!("{}: {e}", path.display())))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"FLW1" {
+            return Err(Error::Weights(format!("{}: bad magic", path.display())));
+        }
+        let n = read_u32(&mut f)? as usize;
+        let mut order = Vec::with_capacity(n);
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = read_u32(&mut f)? as usize;
+            if name_len > 4096 {
+                return Err(Error::Weights("absurd name length".into()));
+            }
+            let mut name_buf = vec![0u8; name_len];
+            f.read_exact(&mut name_buf)?;
+            let name = String::from_utf8(name_buf)
+                .map_err(|_| Error::Weights("non-utf8 tensor name".into()))?;
+            let ndim = read_u32(&mut f)? as usize;
+            if ndim > 8 {
+                return Err(Error::Weights(format!("{name}: ndim {ndim} > 8")));
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u64(&mut f)? as usize);
+            }
+            let dtype = match read_u32(&mut f)? {
+                0 => TensorDType::F32,
+                1 => TensorDType::I32,
+                other => {
+                    return Err(Error::Weights(format!("{name}: dtype {other}")));
+                }
+            };
+            let nbytes = read_u64(&mut f)? as usize;
+            let expect = dims.iter().product::<usize>() * 4;
+            if nbytes != expect {
+                return Err(Error::Weights(format!(
+                    "{name}: payload {nbytes} != dims product {expect}"
+                )));
+            }
+            // Over-allocate to guarantee 4-byte alignment of the payload.
+            let mut data = vec![0u8; nbytes];
+            f.read_exact(&mut data)?;
+            order.push(name.clone());
+            tensors.insert(
+                name.clone(),
+                Tensor {
+                    name,
+                    dims,
+                    dtype,
+                    data,
+                },
+            );
+        }
+        Ok(WeightsFile { order, tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| Error::Weights(format!("missing tensor `{name}`")))
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|t| t.elems()).sum()
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn sample_file(path: &Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"FLW1").unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        // tensor "a": f32 [2,3]
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(b"a").unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&2u64.to_le_bytes()).unwrap();
+        f.write_all(&3u64.to_le_bytes()).unwrap();
+        f.write_all(&0u32.to_le_bytes()).unwrap();
+        f.write_all(&24u64.to_le_bytes()).unwrap();
+        for i in 0..6 {
+            f.write_all(&(i as f32).to_le_bytes()).unwrap();
+        }
+        // tensor "b": i32 [1]
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(b"b").unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&1u64.to_le_bytes()).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&4u64.to_le_bytes()).unwrap();
+        f.write_all(&7i32.to_le_bytes()).unwrap();
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = std::env::temp_dir().join("fl_weights_test.fw");
+        sample_file(&p);
+        let w = WeightsFile::load(&p).unwrap();
+        assert_eq!(w.order, vec!["a", "b"]);
+        let a = w.get("a").unwrap();
+        assert_eq!(a.dims, vec![2, 3]);
+        assert_eq!(a.to_f32_vec().unwrap(), vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(w.total_params(), 7);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = std::env::temp_dir().join("fl_weights_bad.fw");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(WeightsFile::load(&p).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let p = std::env::temp_dir().join("fl_weights_trunc.fw");
+        sample_file(&p);
+        let data = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &data[..data.len() - 3]).unwrap();
+        assert!(WeightsFile::load(&p).is_err());
+    }
+}
