@@ -11,7 +11,8 @@ RoPE is NOT applied — it depends on the position and is done at serving
 time on the gathered row.  Row width is ``2(d+e)`` in both cases.
 
 The ``.fpt`` on-disk format (little-endian), mmap'd by
-``rust/src/precompute/table.rs``:
+``rust/src/precompute/table.rs`` — the normative byte-level spec lives
+in ``docs/fpt-format.md``; keep writer, reader, and spec in lockstep:
 
   magic    b"FPT1"
   u32      version (1)

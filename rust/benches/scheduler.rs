@@ -1,12 +1,15 @@
 //! Bench: scheduler tick latency (S8) — `plan()` must stay microseconds
 //! even with hundreds of waiting sequences (perf target: < 5 us @ 256
-//! waiting, see DESIGN.md §9).
+//! waiting, see DESIGN.md §9) — plus the chunked-prefill mixing scenario:
+//! a long-prompt + decode workload must interleave decode steps between
+//! prefill chunks instead of head-of-line-blocking on whole prompts.
 //!
 //! ```bash
 //! cargo bench --bench scheduler
 //! ```
 
 use firstlayer::scheduler::{KvBudget, Priority, SchedConfig, Scheduler};
+use firstlayer::simtraffic::mixed_workload;
 use firstlayer::util::timer::{bench, report};
 
 struct InfiniteKv;
@@ -49,6 +52,8 @@ fn mk(n_waiting: usize, n_running: usize) -> Scheduler {
         max_admit: 4,
         max_prompt: 32,
         max_seq: 128,
+        chunk_tokens: 0,
+        step_token_budget: 0,
     });
     let mut id = 0u64;
     // Fill running first (via admission on an infinite budget).
@@ -58,8 +63,9 @@ fn mk(n_waiting: usize, n_running: usize) -> Scheduler {
     }
     while s.n_running() < n_running {
         let p = s.plan(&InfiniteKv);
-        for pid in p.prefill {
-            s.on_token(pid, false);
+        for c in p.prefill {
+            s.on_chunk(c.id, c.len);
+            s.on_token(c.id, false);
         }
     }
     for i in 0..n_waiting {
@@ -94,6 +100,8 @@ fn main() {
                 max_admit: 4,
                 max_prompt: 32,
                 max_seq: 128,
+                chunk_tokens: 0,
+                step_token_budget: 0,
             });
             for id in 0..256u64 {
                 s.submit(id, vec![1; 16], 32, Priority::Normal).unwrap();
@@ -105,4 +113,109 @@ fn main() {
             Some((256.0 / st.mean.as_secs_f64(), "req/s")),
         );
     }
+
+    // Chunked-prefill mixing: long documents + interactive chats.  The
+    // figure of merit is the head-of-line bound — the most prefill tokens
+    // any single step executes (every decode in that step waits behind
+    // them); chunking must cap it at the budget.
+    println!("\n== chunked prefill: long-prompt + decode mixing ==\n");
+    for (chunk, budget, label) in [
+        (0usize, 0usize, "monolithic (chunking off)"),
+        (64, 128, "chunk=64 budget=128"),
+    ] {
+        let (steps, mixed, max_step_tokens) = drive_mixed(chunk, budget);
+        // max_prefill_tokens/step is the head-of-line bound: every decode
+        // sharing a step waits behind that much prefill compute.
+        println!(
+            "{label:<28} steps={steps:<5} mixed_steps={mixed:<5} \
+             max_prefill_tokens/step={max_step_tokens}"
+        );
+        if chunk > 0 {
+            assert!(
+                mixed > 0,
+                "chunked run never mixed prefill chunks with decodes"
+            );
+            assert!(
+                max_step_tokens <= budget,
+                "a step prefilled {max_step_tokens} tokens, budget {budget}"
+            );
+        } else {
+            assert!(
+                max_step_tokens >= 512,
+                "monolithic baseline should show whole-prompt prefill steps"
+            );
+        }
+    }
+
+    // plan() latency with chunking enabled (mid-prefill continuations in
+    // the running set are the new per-tick work).
+    {
+        let mut s = Scheduler::new(SchedConfig {
+            max_batch: 16,
+            max_admit: 4,
+            max_prompt: 4096,
+            max_seq: 8192,
+            chunk_tokens: 64,
+            step_token_budget: 128,
+        });
+        let mut id = 0u64;
+        for r in mixed_workload(12, 32, 4, 1024, 32, 1000, 7) {
+            s.submit(id, r.prompt, r.max_new_tokens, r.priority).unwrap();
+            id += 1;
+        }
+        // Warm into a steady mid-prefill state.
+        for _ in 0..3 {
+            let p = s.plan(&InfiniteKv);
+            for c in p.prefill {
+                s.on_chunk(c.id, c.len);
+            }
+        }
+        let st = bench(10, 1000, || {
+            let p = s.plan(&TightKv);
+            std::hint::black_box(&p);
+        });
+        report("plan() chunked, 4 long prefills in flight", &st, None);
+    }
+}
+
+/// Drive a mixed workload to completion; returns (total steps, steps with
+/// both decode and prefill work, max prefill tokens executed in one step).
+fn drive_mixed(chunk: usize, budget: usize) -> (usize, usize, usize) {
+    let mut s = Scheduler::new(SchedConfig {
+        max_batch: 16,
+        max_admit: 4,
+        max_prompt: 4096,
+        max_seq: 8192,
+        chunk_tokens: chunk,
+        step_token_budget: budget,
+    });
+    let mut id = 0u64;
+    for r in mixed_workload(12, 32, 4, 1024, 32, 1000, 7) {
+        s.submit(id, r.prompt, r.max_new_tokens, r.priority).unwrap();
+        id += 1;
+    }
+    let (mut steps, mut mixed, mut max_tokens) = (0usize, 0usize, 0usize);
+    loop {
+        let p = s.plan(&InfiniteKv);
+        if p.prefill.is_empty() && p.decode.is_empty() {
+            break;
+        }
+        let prefill_tokens: usize = p.prefill.iter().map(|c| c.len).sum();
+        max_tokens = max_tokens.max(prefill_tokens);
+        if !p.prefill.is_empty() && !p.decode.is_empty() {
+            mixed += 1;
+        }
+        for c in &p.prefill {
+            s.on_chunk(c.id, c.len);
+            if c.last {
+                s.on_token(c.id, false);
+            }
+        }
+        for &pid in &p.decode {
+            s.on_token(pid, false);
+        }
+        steps += 1;
+        assert!(steps < 1_000_000, "mixed workload did not drain");
+    }
+    (steps, mixed, max_tokens)
 }

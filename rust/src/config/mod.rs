@@ -7,7 +7,10 @@
 
 mod zoo;
 
-pub use zoo::{mixtral_like_columns, paper_models, runnable_models, zoo, zoo_get};
+pub use zoo::{
+    default_prefill_chunk, mixtral_like_columns, paper_models, runnable_models, zoo,
+    zoo_get,
+};
 
 use crate::error::{Error, Result};
 
@@ -139,6 +142,19 @@ pub struct ServingConfig {
     pub max_new_tokens: usize,
     /// Scheduler admission: max waiting->running promotions per step.
     pub max_admit_per_step: usize,
+    /// Chunked prefill: split prompts into chunks of this many tokens and
+    /// mix them into steps alongside ongoing decodes.  0 = monolithic
+    /// whole-prompt prefill (the pre-chunking behavior).  See
+    /// `zoo::default_prefill_chunk` for a per-model starting point.
+    pub prefill_chunk_tokens: usize,
+    /// Per-step token budget shared by decode (one token per sequence,
+    /// claimed first) and prefill chunks; 0 = unbounded.  Meaningful only
+    /// with chunked prefill: it bounds the compute per engine iteration so
+    /// decode latency stays flat while long prompts stream in.
+    pub step_token_budget: usize,
+    /// Admission control: reject new requests (backpressure) once this
+    /// many are already waiting; 0 = unbounded queue.
+    pub max_waiting: usize,
     /// Sampling defaults.
     pub temperature: f64,
     pub top_k: usize,
@@ -156,6 +172,9 @@ impl Default for ServingConfig {
             kv_block_tokens: 16,
             max_new_tokens: 32,
             max_admit_per_step: 4,
+            prefill_chunk_tokens: 0,
+            step_token_budget: 0,
+            max_waiting: 256,
             temperature: 0.0,
             top_k: 0,
             seed: 0xF17A,
@@ -203,5 +222,22 @@ mod tests {
     fn abspe_not_applicable() {
         let cfg = zoo_get("tiny-abspe").unwrap();
         assert!(!cfg.precompute_applicable());
+    }
+
+    #[test]
+    fn default_chunk_block_aligned_and_floored() {
+        for cfg in zoo() {
+            let c = default_prefill_chunk(&cfg);
+            assert!(c >= 16, "{}: chunk {c} below floor", cfg.name);
+            assert_eq!(c % 16, 0, "{}: chunk {c} not block-aligned", cfg.name);
+            assert!(
+                c <= cfg.max_seq.max(16),
+                "{}: chunk {c} exceeds context {}",
+                cfg.name,
+                cfg.max_seq
+            );
+        }
+        // Paper-scale example: Mistral's 4096 context -> 512-token chunks.
+        assert_eq!(default_prefill_chunk(&zoo_get("mistral-7b").unwrap()), 512);
     }
 }

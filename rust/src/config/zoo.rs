@@ -183,6 +183,16 @@ pub fn zoo_get(name: &str) -> Option<ModelConfig> {
     zoo().into_iter().find(|m| m.name == name)
 }
 
+/// Serving-side default for `ServingConfig::prefill_chunk_tokens`: roughly
+/// an eighth of the context window, rounded down to a multiple of 16 (the
+/// default KV block size) and floored at 16.  Big enough that the chunk's
+/// batched table gather + QKV work amortizes per-step overhead, small
+/// enough that decodes interleave several times per long prompt.
+pub fn default_prefill_chunk(cfg: &ModelConfig) -> usize {
+    let chunk = (cfg.max_seq / 8) & !15;
+    chunk.max(16)
+}
+
 /// The three columns of the paper's §3 tables: Pythia-6.9B, Mistral-7B and
 /// the hypothetical parallel-attention Mixtral-8x7B.
 pub fn mixtral_like_columns() -> Vec<ModelConfig> {

@@ -5,10 +5,17 @@
 //! 1. ask the scheduler for a [`StepPlan`] against the KV budget;
 //! 2. apply preemptions (drop caches, fold generated tokens back into the
 //!    replay prompt);
-//! 3. run admitted prefills in compile-bucket-sized groups, sample each
-//!    sequence's first token (TTFT);
+//! 3. execute the planned prefill chunks: fresh `start == 0` chunks run
+//!    through the batched prefill artifact in compile-bucket-sized groups;
+//!    continuation chunks (`start > 0`) advance through decode-kernel
+//!    spans whose first layer is one batched precompute-table gather.  The
+//!    chunk that completes a prompt samples the first token (TTFT);
 //! 4. assemble the decode batch from the paged store, run one decode step,
 //!    scatter the new K/V rows back, sample, detect stops.
+//!
+//! Prefill chunks and the decode batch share the iteration (the scheduler
+//! mixes them under one token budget), so long prompts stream in without
+//! head-of-line-blocking generation — see `ARCHITECTURE.md` §step-loop.
 //!
 //! Both serving paths are first-class: `StepPath::Baseline` embeds tokens
 //! in-graph; `StepPath::Precompute` gathers `2(d+e)`-value rows from the
@@ -26,7 +33,7 @@ use crate::kvcache::PagedKvCache;
 use crate::manifest::Manifest;
 use crate::metrics::Metrics;
 use crate::runtime::{CacheBatch, ModelEngine, Runtime, StepPath};
-use crate::scheduler::{KvBudget, Priority, SchedConfig, Scheduler, State};
+use crate::scheduler::{KvBudget, PrefillChunk, Priority, SchedConfig, Scheduler, State};
 use crate::tokenizer::{Tokenizer, EOS};
 use crate::util::rng::Rng;
 
@@ -45,6 +52,9 @@ pub enum FinishReason {
 pub enum Event {
     Token { id: u64, token: u32 },
     Finished { id: u64, reason: FinishReason },
+    /// Request refused at admission (backpressure or invalid); never
+    /// entered the scheduler.  `id` is 0 when no id was assigned.
+    Rejected { id: u64, msg: String },
 }
 
 /// A generation request.
@@ -96,6 +106,8 @@ pub struct Coordinator {
     events: Vec<Event>,
     /// Largest usable decode bucket (engine-compiled).
     max_decode_bucket: usize,
+    /// Backpressure: reject submits once this many requests wait (0 = off).
+    max_waiting: usize,
 }
 
 impl Coordinator {
@@ -141,6 +153,8 @@ impl Coordinator {
             max_admit: cfg.max_admit_per_step,
             max_prompt: max_prefill_t,
             max_seq: mc.max_seq,
+            chunk_tokens: cfg.prefill_chunk_tokens,
+            step_token_budget: cfg.step_token_budget,
         });
         let kv = PagedKvCache::new(
             cfg.kv_blocks,
@@ -166,6 +180,7 @@ impl Coordinator {
             params: HashMap::new(),
             events: Vec::new(),
             max_decode_bucket,
+            max_waiting: cfg.max_waiting,
         })
     }
 
@@ -191,8 +206,20 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Submit token ids; returns the request id.
+    /// Submit token ids; returns the request id.  Errors with
+    /// [`Error::Backpressure`] when the waiting queue is full — the server
+    /// surfaces this as a `rejected` protocol event so clients can retry
+    /// elsewhere instead of piling onto a saturated engine.
     pub fn submit(&mut self, req: GenRequest) -> Result<u64> {
+        if self.max_waiting > 0 && self.sched.n_waiting() >= self.max_waiting {
+            self.metrics
+                .requests_rejected
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return Err(Error::Backpressure(format!(
+                "waiting queue full ({} requests)",
+                self.max_waiting
+            )));
+        }
         let id = self.next_id;
         let sp = req.params;
         match self
@@ -278,8 +305,15 @@ impl Coordinator {
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         }
 
-        // -- prefills (bucket-sized groups) ----------------------------------
-        if !plan.prefill.is_empty() {
+        // -- prefill chunks --------------------------------------------------
+        // Fresh sequences (start == 0) run through the batched prefill
+        // artifact; continuations advance through decode-kernel spans with
+        // the span's table rows gathered in one batched read.
+        let fresh: Vec<PrefillChunk> =
+            plan.prefill.iter().copied().filter(|c| c.start == 0).collect();
+        let cont: Vec<PrefillChunk> =
+            plan.prefill.iter().copied().filter(|c| c.start > 0).collect();
+        if !fresh.is_empty() {
             let max_b = self
                 .engine
                 .entry()
@@ -288,10 +322,14 @@ impl Coordinator {
                 .filter_map(|a| a.batch)
                 .max()
                 .unwrap_or(1);
-            for group in plan.prefill.chunks(max_b) {
+            for group in fresh.chunks(max_b) {
                 touched += group.len();
-                self.run_prefill(group)?;
+                self.run_first_chunks(group)?;
             }
+        }
+        for c in &cont {
+            touched += 1;
+            self.run_continuation(c)?;
         }
 
         // -- decode ----------------------------------------------------------
@@ -317,15 +355,16 @@ impl Coordinator {
         Ok(steps)
     }
 
-    fn run_prefill(&mut self, ids: &[u64]) -> Result<()> {
+    /// Execute a group of fresh (`start == 0`) prefill chunks through the
+    /// batched prefill artifact.  A chunk longer than the largest compiled
+    /// prefill bucket T (monolithic replay of a preempted, over-bucket
+    /// prompt) prefills the head and continues the excess as a span.
+    fn run_first_chunks(&mut self, chunks: &[PrefillChunk]) -> Result<()> {
         let t0 = Instant::now();
-        let full: Vec<Vec<u32>> = ids
+        let fulls: Vec<Vec<u32>> = chunks
             .iter()
-            .map(|id| self.sched.info(*id).unwrap().prompt.clone())
+            .map(|c| self.sched.info(c.id).unwrap().prompt.clone())
             .collect();
-        // Replayed prompts of preempted sequences can exceed the largest
-        // compiled prefill bucket T: prefill the head, replay the tail one
-        // token at a time through decode (logits discarded until the end).
         let t_cap = self
             .engine
             .entry()
@@ -334,17 +373,18 @@ impl Coordinator {
             .filter_map(|a| a.prompt_len)
             .max()
             .unwrap_or(usize::MAX);
-        let prompts: Vec<Vec<u32>> = full
+        let prompts: Vec<Vec<u32>> = chunks
             .iter()
-            .map(|p| p[..p.len().min(t_cap)].to_vec())
+            .zip(&fulls)
+            .map(|(c, f)| f[..c.len.min(t_cap)].to_vec())
             .collect();
         let out = self.engine.prefill(self.path, &prompts)?;
         self.metrics.prefill_step.record(t0.elapsed());
         let s = out.caches.s;
         let row = out.caches.kh * out.caches.hd;
-        for (i, id) in ids.iter().enumerate() {
-            let len = prompts[i].len();
-            self.kv.create(*id, len + 1)?;
+        for (i, c) in chunks.iter().enumerate() {
+            let executed = prompts[i].len();
+            self.kv.create(c.id, executed + 1)?;
             // Slice this sequence's dense [L, S, row] views out of the batch.
             let mut kd = vec![0f32; out.caches.l * s * row];
             let mut vd = vec![0f32; out.caches.l * s * row];
@@ -356,64 +396,92 @@ impl Coordinator {
                 vd[dst..dst + s * row]
                     .copy_from_slice(&out.caches.v[src..src + s * row]);
             }
-            self.kv.write_prefix(*id, len, s, &kd, &vd)?;
-            // Tail replay for over-bucket prompts (post-preemption).
-            let logits_vec: Vec<f32>;
-            let logits: &[f32] = if full[i].len() > len {
-                logits_vec = self.replay_tail(*id, &full[i][len..])?;
-                &logits_vec
+            self.kv.write_prefix(c.id, executed, s, &kd, &vd)?;
+            self.sched.on_chunk(c.id, executed);
+            self.metrics
+                .prefill_chunks
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            // Span-continue the chunk's excess over the prefill bucket.
+            let tail_logits = if c.len > executed {
+                let lg = self.run_span(c.id, &fulls[i][executed..c.len], executed)?;
+                self.sched.on_chunk(c.id, c.len - executed);
+                Some(lg)
             } else {
-                &out.logits[i * self.vocab()..(i + 1) * self.vocab()]
+                None
             };
-            self.emit_token(*id, logits)?;
-            if let Some(r) = self.reqs.get_mut(id) {
-                if r.first_token_t.is_none() {
-                    r.first_token_t = Some(Instant::now());
-                    if let Some(s0) = r.submit_t {
-                        self.metrics.ttft.record(s0.elapsed());
+            if c.last {
+                let logits_vec;
+                let logits: &[f32] = match tail_logits {
+                    Some(lg) => {
+                        logits_vec = lg;
+                        &logits_vec
                     }
+                    None => &out.logits[i * self.vocab()..(i + 1) * self.vocab()],
+                };
+                self.finish_prefill(c.id, logits)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a continuation chunk (`start > 0`) as a decode-kernel span.
+    fn run_continuation(&mut self, c: &PrefillChunk) -> Result<()> {
+        let t0 = Instant::now();
+        let full = self.sched.info(c.id).unwrap().prompt.clone();
+        let end = (c.start + c.len).min(full.len());
+        let logits = self.run_span(c.id, &full[c.start..end], c.start)?;
+        self.sched.on_chunk(c.id, end - c.start);
+        self.metrics.chunk_step.record(t0.elapsed());
+        self.metrics
+            .prefill_chunks
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if c.last {
+            self.finish_prefill(c.id, &logits)?;
+        }
+        Ok(())
+    }
+
+    /// Sample the first token from the completed prompt's logits (TTFT).
+    fn finish_prefill(&mut self, id: u64, logits: &[f32]) -> Result<()> {
+        self.emit_token(id, logits)?;
+        if let Some(r) = self.reqs.get_mut(&id) {
+            if r.first_token_t.is_none() {
+                r.first_token_t = Some(Instant::now());
+                if let Some(s0) = r.submit_t {
+                    self.metrics.ttft.record(s0.elapsed());
                 }
             }
         }
         Ok(())
     }
 
-    /// Feed the tail tokens of an over-bucket replayed prompt one at a time
-    /// (B=1 decode steps); returns the logits after the last prompt token.
-    fn replay_tail(&mut self, id: u64, tail: &[u32]) -> Result<Vec<f32>> {
+    /// Advance `id` by `tokens` starting at absolute prompt position
+    /// `start` via [`ModelEngine::decode_span`] (chunk continuations and
+    /// over-bucket replays); appends the span's K/V to the paged store and
+    /// returns the logits after the last token.
+    fn run_span(&mut self, id: u64, tokens: &[u32], start: usize) -> Result<Vec<f32>> {
         let cfg = self.engine.config().clone();
         let s = cfg.max_seq;
         let bucket = self.engine.decode_bucket(1, self.path)?;
-        let mut last = Vec::new();
-        for &tok in tail {
-            let len = self
-                .kv
-                .seq_len(id)
-                .ok_or_else(|| Error::KvCache(format!("no cache for {id}")))?;
-            let mut caches = CacheBatch::zeros(
-                cfg.n_layers,
-                bucket,
-                s,
-                cfg.n_kv_heads,
-                cfg.head_dim(),
-            );
-            let row = caches.kh * caches.hd;
-            let mut kd = vec![0f32; caches.l * s * row];
-            let mut vd = vec![0f32; caches.l * s * row];
-            self.kv.gather_dense(id, s, &mut kd, &mut vd)?;
-            for l in 0..caches.l {
-                let dst = caches.offset(l, 0, 0);
-                caches.k[dst..dst + s * row].copy_from_slice(&kd[l * s * row..(l + 1) * s * row]);
-                caches.v[dst..dst + s * row].copy_from_slice(&vd[l * s * row..(l + 1) * s * row]);
-            }
-            let out = self
-                .engine
-                .decode(self.path, &[tok], &[len as u32], &caches)?;
-            let lrow = caches.l * row;
-            self.kv.append(id, &out.new_k[..lrow], &out.new_v[..lrow])?;
-            last = out.logits;
+        let mut caches = CacheBatch::zeros(
+            cfg.n_layers,
+            bucket,
+            s,
+            cfg.n_kv_heads,
+            cfg.head_dim(),
+        );
+        let have = self
+            .kv
+            .gather_into_batch(id, s, bucket, 0, &mut caches.k, &mut caches.v)?;
+        if have != start {
+            return Err(Error::KvCache(format!(
+                "span start {start} != cached len {have} for seq {id}"
+            )));
         }
-        Ok(last)
+        let out = self.engine.decode_span(self.path, tokens, start, &mut caches)?;
+        self.kv
+            .append_span(id, tokens.len(), &out.new_k, &out.new_v)?;
+        Ok(out.logits)
     }
 
     fn run_decode(&mut self, ids: &[u64]) -> Result<()> {

@@ -40,6 +40,9 @@ pub enum Error {
     #[error("server error: {0}")]
     Server(String),
 
+    #[error("backpressure: {0}")]
+    Backpressure(String),
+
     #[error("{0}")]
     Other(String),
 }

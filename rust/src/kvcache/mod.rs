@@ -269,6 +269,33 @@ impl PagedKvCache {
         Ok(())
     }
 
+    /// Append `n` consecutive token rows at the current end of `seq` —
+    /// the partial-prompt KV span a chunked-prefill continuation produces.
+    /// `k_rows`/`v_rows` are `[n, L, KH·hd]` token-major (the engine's
+    /// `SpanOut`/`DecodeOut` layout).  On allocation failure mid-span the
+    /// rows appended so far remain (the caller drops the sequence).
+    pub fn append_span(
+        &mut self,
+        seq: u64,
+        n: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) -> Result<()> {
+        let need = n * self.slot_width;
+        if k_rows.len() != need || v_rows.len() != need {
+            return Err(Error::KvCache(format!(
+                "append_span: rows len {} != {n} x {}",
+                k_rows.len(),
+                self.slot_width
+            )));
+        }
+        for i in 0..n {
+            let at = i * self.slot_width..(i + 1) * self.slot_width;
+            self.append(seq, &k_rows[at.clone()], &v_rows[at])?;
+        }
+        Ok(())
+    }
+
     /// Bulk-write a prefilled prefix (from `PrefillOut`): `rows` is
     /// `[L, S, KH·hd]` dense for this sequence, of which the first `len`
     /// slots are valid.
@@ -512,6 +539,41 @@ mod tests {
         c.gather_dense(2, cap, &mut k2, &mut v2).unwrap();
         assert_eq!(k2[5 * 6], 100.0);
         c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_span_matches_per_token_appends() {
+        let w = 2 * 6;
+        let mut a = cache();
+        let mut b = cache();
+        a.create(1, 1).unwrap();
+        b.create(1, 1).unwrap();
+        // Prefix of 3 tokens, then a 6-token span crossing a block boundary.
+        for i in 0..3 {
+            a.append(1, &row(i as f32, w), &row(-(i as f32), w)).unwrap();
+            b.append(1, &row(i as f32, w), &row(-(i as f32), w)).unwrap();
+        }
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        for i in 3..9 {
+            ks.extend(row(i as f32, w));
+            vs.extend(row(-(i as f32), w));
+            a.append(1, &row(i as f32, w), &row(-(i as f32), w)).unwrap();
+        }
+        b.append_span(1, 6, &ks, &vs).unwrap();
+        assert_eq!(a.seq_len(1), b.seq_len(1));
+        let cap = 12;
+        let mut ka = vec![0f32; 2 * cap * 6];
+        let mut va = ka.clone();
+        let mut kb = ka.clone();
+        let mut vb = ka.clone();
+        a.gather_dense(1, cap, &mut ka, &mut va).unwrap();
+        b.gather_dense(1, cap, &mut kb, &mut vb).unwrap();
+        assert_eq!(ka, kb);
+        assert_eq!(va, vb);
+        b.check_invariants().unwrap();
+        // Bad span size rejected.
+        assert!(b.append_span(1, 2, &ks[..w], &vs[..w]).is_err());
     }
 
     #[test]

@@ -16,6 +16,11 @@
 //!
 //! Python never runs on the request path; the binary is self-contained once
 //! `make artifacts` has produced the AOT bundle.
+//!
+//! `ARCHITECTURE.md` at the repo root has the full layer diagram, the
+//! engine-thread ownership model, the request lifecycle, and the chunked
+//! prefill step loop; `docs/fpt-format.md` and `docs/protocol.md` specify
+//! the table file and the TCP wire protocol.
 
 pub mod config;
 pub mod coordinator;

@@ -27,6 +27,9 @@ COMMANDS:
   serve         run the TCP server
                   --addr 127.0.0.1:7411 --model tiny-serial
                   --path precompute|baseline --artifacts artifacts
+                  --chunk-tokens N|auto (chunked prefill; 0 = monolithic)
+                  --token-budget N (per-step decode+prefill token budget)
+                  --max-waiting N (admission backpressure; 0 = unbounded)
   generate      one-shot generation from the CLI
                   --prompt \"text\" --max-new 32 --model tiny-serial
                   --path precompute|baseline --temperature 0 --top-k 0
@@ -74,6 +77,29 @@ fn serving_config(flags: &HashMap<String, String>) -> ServingConfig {
     }
     if let Some(k) = flags.get("kv-blocks") {
         cfg.kv_blocks = k.parse().unwrap_or(cfg.kv_blocks);
+    }
+    if let Some(c) = flags.get("chunk-tokens") {
+        cfg.prefill_chunk_tokens = if c == "auto" {
+            match zoo_get(&cfg.model) {
+                Some(m) => firstlayer::config::default_prefill_chunk(&m),
+                None => {
+                    eprintln!(
+                        "[firstlayer] --chunk-tokens auto: model {} not in the \
+                         zoo; chunking stays OFF (pass an explicit size)",
+                        cfg.model
+                    );
+                    0
+                }
+            }
+        } else {
+            c.parse().unwrap_or(cfg.prefill_chunk_tokens)
+        };
+    }
+    if let Some(t) = flags.get("token-budget") {
+        cfg.step_token_budget = t.parse().unwrap_or(cfg.step_token_budget);
+    }
+    if let Some(w) = flags.get("max-waiting") {
+        cfg.max_waiting = w.parse().unwrap_or(cfg.max_waiting);
     }
     cfg
 }

@@ -101,9 +101,14 @@ pub struct Metrics {
     pub tokens_out: AtomicU64,
     /// Scheduler preemptions (KV pressure).
     pub preemptions: AtomicU64,
+    /// Prefill chunks executed (chunked prefill; monolithic prefills count
+    /// as one chunk each).
+    pub prefill_chunks: AtomicU64,
     /// Engine step latencies.
     pub decode_step: Histogram,
     pub prefill_step: Histogram,
+    /// Continuation-chunk latency (table-gather + decode-kernel spans).
+    pub chunk_step: Histogram,
     /// Request end-to-end latency and time-to-first-token.
     pub e2e: Histogram,
     pub ttft: Histogram,
@@ -119,16 +124,18 @@ impl Metrics {
         use std::fmt::Write;
         let _ = writeln!(
             s,
-            "requests: in={} done={} rejected={}  tokens_out={}  preemptions={}",
+            "requests: in={} done={} rejected={}  tokens_out={}  preemptions={}  prefill_chunks={}",
             self.requests_in.load(Ordering::Relaxed),
             self.requests_done.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
             self.tokens_out.load(Ordering::Relaxed),
             self.preemptions.load(Ordering::Relaxed),
+            self.prefill_chunks.load(Ordering::Relaxed),
         );
         for (name, h) in [
             ("decode_step", &self.decode_step),
             ("prefill_step", &self.prefill_step),
+            ("chunk_step", &self.chunk_step),
             ("ttft", &self.ttft),
             ("e2e", &self.e2e),
         ] {

@@ -1,4 +1,9 @@
 //! `.fpt` table file: header + mmap'd row store.
+//!
+//! The byte-level format (44-byte little-endian header, f32 row payload,
+//! `row_width = 2(d+e)`, CRC rules) is specified normatively in
+//! `docs/fpt-format.md`; the writer is `python/compile/precompute.py`.
+//! Keep all three in lockstep.
 
 use std::path::Path;
 

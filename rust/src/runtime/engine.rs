@@ -9,6 +9,9 @@
 //!   every call (`execute_b`),
 //! * `decode` gathers precomputed rows from the mmap'd table (precompute
 //!   path) or passes token ids (baseline),
+//! * `decode_span` advances one sequence through a chunk of prompt tokens
+//!   (chunked prefill), serving the whole span's first layer from the
+//!   table in a single batched row-gather,
 //! * returns the logits plus only the *new* K/V rows extracted from the
 //!   returned caches, so the paged store is updated with one row per
 //!   (layer, sequence) instead of a full-cache writeback.
@@ -117,6 +120,19 @@ pub struct PrefillOut {
     /// Full caches `[L, n, S, KH, hd]` (slots < len valid).
     pub caches: CacheBatch,
     pub bucket: (usize, usize),
+}
+
+/// Result of advancing ONE sequence through a span of prompt tokens
+/// ([`ModelEngine::decode_span`]: chunked-prefill continuations and
+/// post-preemption replays).
+#[derive(Debug, Clone)]
+pub struct SpanOut {
+    /// `[vocab]` logits after the last span token.
+    pub logits: Vec<f32>,
+    /// New K rows for the span: `[n, L, kh*hd]`, token-major append order.
+    pub new_k: Vec<f32>,
+    /// New V rows, same layout.
+    pub new_v: Vec<f32>,
 }
 
 struct Loaded {
@@ -292,6 +308,22 @@ impl ModelEngine {
         pos: &[u32],
         caches: &CacheBatch,
     ) -> Result<DecodeOut> {
+        self.decode_inner(path, tokens, pos, caches, None, true)
+    }
+
+    /// Decode with optionally pre-gathered table rows (`n * row_width`
+    /// f32s) — [`ModelEngine::decode_span`] batches the whole span's table
+    /// read up front — and optional traffic recording (span tokens are
+    /// accounted as prefill, not decode, traffic).
+    fn decode_inner(
+        &self,
+        path: StepPath,
+        tokens: &[u32],
+        pos: &[u32],
+        caches: &CacheBatch,
+        pregathered: Option<&[f32]>,
+        record: bool,
+    ) -> Result<DecodeOut> {
         let n = tokens.len();
         if n == 0 || n != pos.len() {
             return Err(Error::Engine("decode: empty or mismatched batch".into()));
@@ -331,10 +363,21 @@ impl ModelEngine {
                 data_bufs.push(self.rt.upload_i32(&toks, &[bucket])?);
             }
             StepPath::Precompute => {
-                // The paper's runtime read: one 2(d+e) row per token.
+                // The paper's runtime read: one 2(d+e) row per token
+                // (already gathered when the caller batched a whole span).
                 let w = self.table.row_width();
                 let mut rows = vec![0f32; bucket * w];
-                self.table.gather(tokens, &mut rows[..n * w])?;
+                match pregathered {
+                    Some(r) if r.len() == n * w => rows[..n * w].copy_from_slice(r),
+                    Some(r) => {
+                        return Err(Error::Engine(format!(
+                            "decode: pregathered rows len {} != {}",
+                            r.len(),
+                            n * w
+                        )))
+                    }
+                    None => self.table.gather(tokens, &mut rows[..n * w])?,
+                }
                 data_bufs.push(self.rt.upload_f32(&rows, &[bucket, w])?);
             }
         }
@@ -351,7 +394,9 @@ impl ModelEngine {
         let t_exec = std::time::Instant::now();
         let out = loaded.exe.execute_host(&args)?;
         let exec = t_exec.elapsed();
-        self.traffic.record_decode(cfg, path, n as u64);
+        if record {
+            self.traffic.record_decode(cfg, path, n as u64);
+        }
         let t_unpack = std::time::Instant::now();
         let res = self.unpack_decode(out, n, bucket, pos, caches);
         if std::env::var_os("FIRSTLAYER_TRACE").is_some() {
@@ -406,6 +451,76 @@ impl ModelEngine {
             new_k,
             new_v,
             bucket,
+        })
+    }
+
+    /// Advance ONE sequence through `tokens` starting at absolute position
+    /// `start_pos` — the chunked-prefill continuation path (and the
+    /// post-preemption replay of over-bucket prompts).
+    ///
+    /// `caches` holds the sequence's history in batch row 0, padded to the
+    /// B=1 decode bucket.  The first layer of the WHOLE span is served from
+    /// the precompute table in one batched row-gather (the paper's read
+    /// pattern: `len·2(d+e)` contiguous values); attention then advances
+    /// token by token through the compiled decode artifact, with each new
+    /// K/V row scattered into `caches` host-side so the next token attends
+    /// to it.  Span tokens are recorded as prefill traffic.
+    pub fn decode_span(
+        &self,
+        path: StepPath,
+        tokens: &[u32],
+        start_pos: usize,
+        caches: &mut CacheBatch,
+    ) -> Result<SpanOut> {
+        let n = tokens.len();
+        if n == 0 {
+            return Err(Error::Engine("decode_span: empty span".into()));
+        }
+        if start_pos + n > caches.s {
+            return Err(Error::Engine(format!(
+                "decode_span: span end {} exceeds cache capacity {}",
+                start_pos + n,
+                caches.s
+            )));
+        }
+        let cfg = self.entry.config.clone();
+        let w = self.table.row_width();
+        let rows = if path == StepPath::Precompute {
+            Some(self.table.gather_vec(tokens)?)
+        } else {
+            None
+        };
+        self.traffic.record_prefill(&cfg, path, n as u64);
+        let row = caches.kh * caches.hd;
+        let lrow = caches.l * row;
+        let mut new_k = vec![0f32; n * lrow];
+        let mut new_v = vec![0f32; n * lrow];
+        let mut logits = Vec::new();
+        for (i, &tok) in tokens.iter().enumerate() {
+            let pos = start_pos + i;
+            let pre = rows.as_ref().map(|r| &r[i * w..(i + 1) * w]);
+            // Known cost: decode_inner re-uploads the full dense cache per
+            // token even though only the previous position changed — a
+            // device-resident cache buffer reused across the span would cut
+            // host-to-device traffic by the span length (open ROADMAP
+            // item; requires donated/aliased PJRT buffers).
+            let out =
+                self.decode_inner(path, &[tok], &[pos as u32], caches, pre, false)?;
+            // Scatter the fresh row so the next span token attends to it.
+            for l in 0..caches.l {
+                let o = caches.offset(l, 0, pos);
+                let src = l * row..(l + 1) * row;
+                caches.k[o..o + row].copy_from_slice(&out.new_k[src.clone()]);
+                caches.v[o..o + row].copy_from_slice(&out.new_v[src]);
+            }
+            new_k[i * lrow..(i + 1) * lrow].copy_from_slice(&out.new_k);
+            new_v[i * lrow..(i + 1) * lrow].copy_from_slice(&out.new_v);
+            logits = out.logits;
+        }
+        Ok(SpanOut {
+            logits,
+            new_k,
+            new_v,
         })
     }
 

@@ -9,7 +9,7 @@
 
 mod engine;
 
-pub use engine::{CacheBatch, DecodeOut, ModelEngine, PrefillOut, StepPath};
+pub use engine::{CacheBatch, DecodeOut, ModelEngine, PrefillOut, SpanOut, StepPath};
 
 use std::collections::HashMap;
 use std::path::Path;

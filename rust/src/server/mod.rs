@@ -1,4 +1,6 @@
 //! TCP line-protocol server (S14): the deployable front of the stack.
+//! The wire format is specified normatively in `docs/protocol.md`; this
+//! doc block is a summary and must stay in sync with it.
 //!
 //! One JSON object per line, request → streamed response lines:
 //!
@@ -7,18 +9,25 @@
 //!    "temperature":0.0,"top_k":0}
 //! ← {"event":"token","id":3,"token":287,"text":" brown"}
 //! ← {"event":"done","id":3,"reason":"max_tokens","text":"<full output>"}
+//!   (or, under admission-control backpressure / on an invalid request:)
+//! ← {"event":"rejected","id":0,"msg":"backpressure: waiting queue full"}
 //!
 //! → {"op":"metrics"}      ← {"event":"metrics","report":"..."}
 //! → {"op":"traffic"}      ← {"event":"traffic", ...counters...}
-//! → {"op":"path","value":"baseline"|"precompute"}  (live A/B switch)
+//! → {"op":"path","value":"baseline"|"precompute"}  ← {"event":"ok"}
 //! → {"op":"ping"}         ← {"event":"pong"}
 //! ```
+//!
+//! Malformed JSON, an unknown `op`, or a bad `path` value produce
+//! `{"event":"error","msg":...}` on the offending line; the connection
+//! stays open.
 //!
 //! Threading: a single engine loop owns the coordinator (PJRT calls are
 //! not assumed thread-safe); connection threads only enqueue requests and
 //! wait on per-request channels.  No tokio in the offline build — plain
 //! `std::net` + threads, which a coordinator at this scale genuinely
-//! doesn't need more than.
+//! doesn't need more than.  See `ARCHITECTURE.md` for the thread/ownership
+//! diagram.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -133,9 +142,11 @@ fn engine_loop(mut c: Coordinator, rx: Receiver<Cmd>) {
         }
         for ev in c.take_events() {
             let id = match &ev {
-                Event::Token { id, .. } | Event::Finished { id, .. } => *id,
+                Event::Token { id, .. }
+                | Event::Finished { id, .. }
+                | Event::Rejected { id, .. } => *id,
             };
-            let done = matches!(ev, Event::Finished { .. });
+            let done = matches!(ev, Event::Finished { .. } | Event::Rejected { .. });
             if let Some(sink) = sinks.get(&id) {
                 let _ = sink.send(ev);
             }
@@ -158,10 +169,12 @@ fn apply(c: &mut Coordinator, cmd: Cmd, sinks: &mut HashMap<u64, Sender<Event>>)
                 sinks.insert(id, reply);
             }
             Err(e) => {
-                // Surface rejection as an immediate Finished event.
-                let _ = reply.send(Event::Finished {
+                // Surface admission failure (backpressure, oversized
+                // prompt, ...) as an immediate `rejected` event so the
+                // client can back off and retry instead of hanging.
+                let _ = reply.send(Event::Rejected {
                     id: 0,
-                    reason: FinishReason::ContextFull,
+                    msg: e.to_string(),
                 });
                 eprintln!("[firstlayer] rejected: {e}");
             }
@@ -220,6 +233,7 @@ fn handle_conn(
                         ("l1_reads_precomp", n(t.l1_reads_precomp as f64)),
                         ("decode_tokens", n(t.decode_tokens as f64)),
                         ("prefill_tokens", n(t.prefill_tokens as f64)),
+                        ("prefill_calls", n(t.prefill_calls as f64)),
                         ("table_bytes_read", n(t.table_bytes_read as f64)),
                     ]),
                 )?
@@ -286,6 +300,17 @@ fn handle_conn(
                                     ("id", n(id as f64)),
                                     ("reason", s(reason_str(reason))),
                                     ("text", s(tokenizer.decode(&tokens))),
+                                ]),
+                            )?;
+                            break;
+                        }
+                        Event::Rejected { id, msg } => {
+                            send(
+                                &out,
+                                &obj(vec![
+                                    ("event", s("rejected")),
+                                    ("id", n(id as f64)),
+                                    ("msg", s(msg)),
                                 ]),
                             )?;
                             break;

@@ -33,6 +33,10 @@ pub struct Recorder {
     /// Tokens processed.
     pub decode_tokens: AtomicU64,
     pub prefill_tokens: AtomicU64,
+    /// Prefill executions (one per `record_prefill` call: a batched
+    /// prefill group or one continuation span — NOT one per chunk; the
+    /// per-chunk count lives in `Metrics::prefill_chunks`).
+    pub prefill_calls: AtomicU64,
     /// Precompute-table bytes actually gathered (cross-check against
     /// `l1_reads_precomp * 4`).
     pub table_bytes_read: AtomicU64,
@@ -63,6 +67,7 @@ impl Recorder {
 
     pub fn record_prefill(&self, cfg: &ModelConfig, path: StepPath, tokens: u64) {
         self.prefill_tokens.fetch_add(tokens, Ordering::Relaxed);
+        self.prefill_calls.fetch_add(1, Ordering::Relaxed);
         // Prefill reads weights once per batch too; same formulas with
         // B = total prompt tokens in the batch.
         match path {
@@ -87,6 +92,7 @@ impl Recorder {
             l1_reads_precomp: self.l1_reads_precomp.load(Ordering::Relaxed),
             decode_tokens: self.decode_tokens.load(Ordering::Relaxed),
             prefill_tokens: self.prefill_tokens.load(Ordering::Relaxed),
+            prefill_calls: self.prefill_calls.load(Ordering::Relaxed),
             table_bytes_read: self.table_bytes_read.load(Ordering::Relaxed),
         }
     }
@@ -98,6 +104,7 @@ impl Recorder {
         self.l1_reads_precomp.store(0, Ordering::Relaxed);
         self.decode_tokens.store(0, Ordering::Relaxed);
         self.prefill_tokens.store(0, Ordering::Relaxed);
+        self.prefill_calls.store(0, Ordering::Relaxed);
         self.table_bytes_read.store(0, Ordering::Relaxed);
     }
 }
@@ -111,6 +118,7 @@ pub struct Snapshot {
     pub l1_reads_precomp: u64,
     pub decode_tokens: u64,
     pub prefill_tokens: u64,
+    pub prefill_calls: u64,
     pub table_bytes_read: u64,
 }
 
@@ -123,6 +131,63 @@ impl Snapshot {
         }
         Some(self.l1_reads_baseline as f64 / self.l1_reads_precomp as f64)
     }
+}
+
+/// One synthetic request for the workload generators below.
+#[derive(Debug, Clone)]
+pub struct SimRequest {
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub priority: crate::scheduler::Priority,
+}
+
+/// Synthetic mixed workload (S12b): a pool of short interactive chats plus
+/// occasional long documents — the traffic shape that motivates chunked
+/// prefill (`rust/benches/scheduler.rs` and the prefill/decode-mixing
+/// tests drive the scheduler with it).  Short requests arrive as
+/// `Interactive`, long ones as `Batch`; the order is a deterministic
+/// seed-keyed shuffle so arrivals interleave.
+pub fn mixed_workload(
+    n_short: usize,
+    short_prompt: usize,
+    n_long: usize,
+    long_prompt: usize,
+    max_new: usize,
+    vocab: u32,
+    seed: u64,
+) -> Vec<SimRequest> {
+    use crate::scheduler::Priority;
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n_short + n_long);
+    let prompt = |len: usize, rng: &mut Rng| -> Vec<u32> {
+        (0..len.max(1))
+            .map(|_| rng.below(vocab.max(1) as u64) as u32)
+            .collect()
+    };
+    for _ in 0..n_short {
+        let plen = rng.range(1, short_prompt.max(2));
+        out.push(SimRequest {
+            prompt: prompt(plen, &mut rng),
+            max_new_tokens: max_new,
+            priority: Priority::Interactive,
+        });
+    }
+    for _ in 0..n_long {
+        let lo = long_prompt / 2 + 1;
+        let plen = rng.range(lo, (long_prompt + 1).max(lo + 1));
+        out.push(SimRequest {
+            prompt: prompt(plen, &mut rng),
+            max_new_tokens: max_new,
+            priority: Priority::Batch,
+        });
+    }
+    // Fisher-Yates with the same deterministic stream.
+    for i in (1..out.len()).rev() {
+        let j = rng.range(0, i + 1);
+        out.swap(i, j);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -162,7 +227,31 @@ mod tests {
         let cfg = zoo_get("tiny-serial").unwrap();
         let r = Recorder::new();
         r.record_prefill(&cfg, StepPath::Baseline, 32);
+        assert_eq!(r.snapshot().prefill_calls, 1);
         r.reset();
         assert_eq!(r.snapshot(), Snapshot::default());
+    }
+
+    #[test]
+    fn mixed_workload_shape() {
+        use crate::scheduler::Priority;
+        let w = mixed_workload(10, 8, 3, 64, 16, 512, 42);
+        assert_eq!(w.len(), 13);
+        let longs: Vec<&SimRequest> = w
+            .iter()
+            .filter(|r| r.priority == Priority::Batch)
+            .collect();
+        assert_eq!(longs.len(), 3);
+        for r in &longs {
+            assert!(r.prompt.len() > 32 && r.prompt.len() <= 64);
+        }
+        for r in &w {
+            assert!(r.prompt.iter().all(|&t| t < 512));
+            assert_eq!(r.max_new_tokens, 16);
+        }
+        // Deterministic per seed.
+        let w2 = mixed_workload(10, 8, 3, 64, 16, 512, 42);
+        assert_eq!(w.len(), w2.len());
+        assert!(w.iter().zip(&w2).all(|(a, b)| a.prompt == b.prompt));
     }
 }

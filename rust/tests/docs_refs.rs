@@ -1,0 +1,95 @@
+//! Docs gate (artifact-free): every path-like reference in
+//! `ARCHITECTURE.md` and `docs/*.md` must point at a real file or
+//! directory in the repo, so the documentation cannot silently rot as
+//! code moves.  Run together with `cargo doc --no-deps` via
+//! `scripts/docs_gate.sh`.
+
+use std::path::PathBuf;
+
+fn repo_root() -> PathBuf {
+    // CARGO_MANIFEST_DIR is rust/; the docs live one level up.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .to_path_buf()
+}
+
+/// Whether a backtick-quoted token looks like a repo path (vs. a code
+/// identifier, flag, or JSON snippet).
+fn looks_like_repo_path(tok: &str) -> bool {
+    let prefixed = ["rust/", "python/", "docs/", "examples/", "scripts/"]
+        .iter()
+        .any(|p| tok.starts_with(p));
+    let root_md = !tok.contains('/') && tok.ends_with(".md");
+    (prefixed || root_md)
+        && !tok.contains(' ')
+        && !tok.contains('*')
+        && !tok.contains('`')
+}
+
+#[test]
+fn doc_file_references_resolve() {
+    let root = repo_root();
+    let mut doc_files = vec![root.join("ARCHITECTURE.md")];
+    let docs_dir = root.join("docs");
+    for entry in std::fs::read_dir(&docs_dir).expect("docs/ directory missing") {
+        let p = entry.unwrap().path();
+        if p.extension().and_then(|e| e.to_str()) == Some("md") {
+            doc_files.push(p);
+        }
+    }
+    assert!(doc_files.len() >= 3, "expected ARCHITECTURE.md + docs/*.md");
+
+    let mut checked = 0usize;
+    let mut missing = Vec::new();
+    for f in &doc_files {
+        let text = std::fs::read_to_string(f)
+            .unwrap_or_else(|e| panic!("{}: {e}", f.display()));
+        // Inline code spans alternate with prose when splitting on '`'.
+        for tok in text.split('`').skip(1).step_by(2) {
+            let clean = tok.trim_end_matches('/');
+            if !looks_like_repo_path(clean) {
+                continue;
+            }
+            checked += 1;
+            if !root.join(clean).exists() {
+                missing.push(format!(
+                    "{}: `{tok}`",
+                    f.file_name().unwrap().to_string_lossy()
+                ));
+            }
+        }
+    }
+    assert!(
+        checked >= 15,
+        "only {checked} path references found — did the match pattern rot?"
+    );
+    assert!(
+        missing.is_empty(),
+        "dangling doc references:\n{}",
+        missing.join("\n")
+    );
+}
+
+/// The protocol doc and the server module doc must agree on the event
+/// vocabulary (the drift this PR fixed must stay fixed).
+#[test]
+fn protocol_doc_covers_server_events() {
+    let root = repo_root();
+    let proto = std::fs::read_to_string(root.join("docs/protocol.md")).unwrap();
+    let server = std::fs::read_to_string(root.join("rust/src/server/mod.rs")).unwrap();
+    for ev in [
+        "token", "done", "rejected", "metrics", "traffic", "ok", "pong", "error",
+    ] {
+        let lit = format!("\"event\":\"{ev}\"");
+        let emitted = format!("s(\"{ev}\")");
+        assert!(
+            proto.contains(&format!("`{ev}`")) || proto.contains(&lit),
+            "docs/protocol.md does not document event `{ev}`"
+        );
+        assert!(
+            server.contains(&emitted),
+            "server/mod.rs no longer emits event `{ev}` — update docs/protocol.md"
+        );
+    }
+}

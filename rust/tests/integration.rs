@@ -179,6 +179,95 @@ fn coordinator_deterministic_across_runs() {
     assert_eq!(outs[0], outs[1]);
 }
 
+/// Chunked prefill must be token-identical to monolithic prefill at
+/// temperature 0: splitting a prompt into table-gather + decode-kernel
+/// spans changes the compute schedule, never the math.
+#[test]
+fn chunked_prefill_matches_monolithic() {
+    let dir = require_artifacts!();
+    let prompts: Vec<Vec<u32>> = vec![
+        vec![3; 24],
+        vec![11; 17],
+        (0..21).map(|i| (i * 7 % 500) as u32).collect(),
+        vec![2], // single-token prompt: first chunk is also the last
+    ];
+    let mut outs: Vec<Vec<Vec<u32>>> = Vec::new();
+    for chunk in [0usize, 8] {
+        let mut cfg = serving(&dir, "tiny-serial", true);
+        cfg.prefill_chunk_tokens = chunk;
+        cfg.step_token_budget = if chunk == 0 { 0 } else { 16 };
+        let mut c = Coordinator::from_config(&cfg).unwrap();
+        let ids: Vec<u64> = prompts
+            .iter()
+            .map(|p| {
+                c.submit(GenRequest {
+                    prompt: p.clone(),
+                    max_new_tokens: 10,
+                    priority: Priority::Normal,
+                    params: SamplingParams::default(),
+                })
+                .unwrap()
+            })
+            .collect();
+        c.run_to_completion(50_000).unwrap();
+        if chunk > 0 {
+            // The 24/17/21-token prompts cannot fit one 8-token chunk.
+            let chunks = c
+                .metrics
+                .prefill_chunks
+                .load(std::sync::atomic::Ordering::Relaxed);
+            assert!(chunks > 4, "expected chunked execution, got {chunks}");
+        }
+        outs.push(
+            ids.iter()
+                .map(|id| c.generated(*id).unwrap().to_vec())
+                .collect(),
+        );
+    }
+    assert_eq!(
+        outs[0], outs[1],
+        "chunked prefill diverges from monolithic at temperature 0"
+    );
+}
+
+/// Admission control: once `max_waiting` requests queue up, further
+/// submits bounce with `Error::Backpressure` — and the engine still
+/// drains everything it accepted.
+#[test]
+fn backpressure_rejects_then_drains() {
+    let dir = require_artifacts!();
+    let mut cfg = serving(&dir, "tiny-serial", true);
+    cfg.max_waiting = 2;
+    let mut c = Coordinator::from_config(&cfg).unwrap();
+    let mut accepted = Vec::new();
+    let mut rejected = 0;
+    for i in 0..5u32 {
+        let r = c.submit(GenRequest {
+            prompt: vec![4 + i; 6],
+            max_new_tokens: 4,
+            priority: Priority::Normal,
+            params: SamplingParams::default(),
+        });
+        match r {
+            Ok(id) => accepted.push(id),
+            Err(firstlayer::Error::Backpressure(_)) => rejected += 1,
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert_eq!(accepted.len(), 2);
+    assert_eq!(rejected, 3);
+    assert_eq!(
+        c.metrics
+            .requests_rejected
+            .load(std::sync::atomic::Ordering::Relaxed),
+        3
+    );
+    c.run_to_completion(10_000).unwrap();
+    for id in accepted {
+        assert!(c.finished(id).is_some());
+    }
+}
+
 /// KV pressure: a tiny block pool forces preemption mid-generation; the
 /// preempted request must still complete with the right token count.
 #[test]

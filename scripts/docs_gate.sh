@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Docs gate (CI-runnable):
+#   1. rustdoc must build warning-free (doc comments are part of the API);
+#   2. every file reference in ARCHITECTURE.md / docs/*.md must resolve,
+#      and docs/protocol.md must cover the server's event vocabulary
+#      (rust/tests/docs_refs.rs).
+#
+# Usage: scripts/docs_gate.sh   (from anywhere inside the repo)
+set -euo pipefail
+# The crate manifest lives under rust/ (CARGO_MANIFEST_DIR in the tests);
+# cargo also finds a workspace manifest by walking up from there.
+cd "$(dirname "$0")/../rust"
+
+echo "[docs-gate] cargo doc --no-deps (warnings are errors)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "[docs-gate] checking doc file references"
+cargo test -q --test docs_refs
+
+echo "[docs-gate] OK"
