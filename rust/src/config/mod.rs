@@ -8,8 +8,8 @@
 mod zoo;
 
 pub use zoo::{
-    default_prefill_chunk, mixtral_like_columns, paper_models, runnable_models, zoo,
-    zoo_get,
+    default_prefill_chunk, default_prefix_cache_blocks, mixtral_like_columns,
+    paper_models, runnable_models, zoo, zoo_get,
 };
 
 use crate::error::{Error, Result};
@@ -155,6 +155,16 @@ pub struct ServingConfig {
     /// Admission control: reject new requests (backpressure) once this
     /// many are already waiting; 0 = unbounded queue.
     pub max_waiting: usize,
+    /// Cross-request prefix cache (`rust/src/prefixcache/`): keep
+    /// finished requests' prompt KV alive in a radix tree so later
+    /// requests sharing the prefix (system prompts, few-shot templates)
+    /// fork the blocks and prefill only their suffix.
+    pub enable_prefix_cache: bool,
+    /// Max KV blocks the prefix cache may hold.  0 = per-model default
+    /// (`zoo::default_prefix_cache_blocks`); the coordinator
+    /// additionally caps the cache at half of `kv_blocks` so serving
+    /// always keeps pool headroom (eviction is demand-driven on top).
+    pub prefix_cache_blocks: usize,
     /// Sampling defaults.
     pub temperature: f64,
     pub top_k: usize,
@@ -175,6 +185,8 @@ impl Default for ServingConfig {
             prefill_chunk_tokens: 0,
             step_token_budget: 0,
             max_waiting: 256,
+            enable_prefix_cache: true,
+            prefix_cache_blocks: 0,
             temperature: 0.0,
             top_k: 0,
             seed: 0xF17A,
@@ -239,5 +251,37 @@ mod tests {
         }
         // Paper-scale example: Mistral's 4096 context -> 512-token chunks.
         assert_eq!(default_prefill_chunk(&zoo_get("mistral-7b").unwrap()), 512);
+    }
+
+    #[test]
+    fn default_prefix_cache_blocks_valid_for_zoo() {
+        for cfg in zoo() {
+            // Sized in the serving config's block unit, whatever it is.
+            for bt in [8usize, 16, 32] {
+                let b = default_prefix_cache_blocks(&cfg, bt);
+                assert!(b >= 4, "{}: cache default {b} below floor", cfg.name);
+                // Holds at least one full context of `bt`-token blocks.
+                assert!(
+                    b * bt >= cfg.max_seq,
+                    "{}: {b} x {bt}-token blocks cannot hold a {}-token context",
+                    cfg.name,
+                    cfg.max_seq
+                );
+            }
+            // And composes into a valid serving config for every entry.
+            let sc = ServingConfig {
+                model: cfg.name.clone(),
+                prefix_cache_blocks: default_prefix_cache_blocks(&cfg, 16),
+                ..Default::default()
+            };
+            assert!(sc.enable_prefix_cache);
+            assert!(sc.prefix_cache_blocks > 0);
+        }
+        // Paper-scale example: Mistral's 4096-token context, 16-token
+        // blocks -> 256 blocks.
+        assert_eq!(
+            default_prefix_cache_blocks(&zoo_get("mistral-7b").unwrap(), 16),
+            256
+        );
     }
 }

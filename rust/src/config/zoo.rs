@@ -193,6 +193,17 @@ pub fn default_prefill_chunk(cfg: &ModelConfig) -> usize {
     chunk.max(16)
 }
 
+/// Serving-side default for `ServingConfig::prefix_cache_blocks`: one
+/// context window's worth of KV blocks (`block_tokens` =
+/// `ServingConfig::kv_block_tokens`), floored at 4.  System prompts and
+/// few-shot templates are a fraction of `max_seq`, so this keeps
+/// several tenants' shared prefixes resident; the coordinator caps the
+/// cache at half the pool regardless, and eviction is demand-driven, so
+/// a generous default never starves serving.
+pub fn default_prefix_cache_blocks(cfg: &ModelConfig, block_tokens: usize) -> usize {
+    cfg.max_seq.div_ceil(block_tokens.max(1)).max(4)
+}
+
 /// The three columns of the paper's §3 tables: Pythia-6.9B, Mistral-7B and
 /// the hypothetical parallel-attention Mixtral-8x7B.
 pub fn mixtral_like_columns() -> Vec<ModelConfig> {

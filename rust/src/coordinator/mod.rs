@@ -32,6 +32,7 @@ use crate::error::{Error, Result};
 use crate::kvcache::PagedKvCache;
 use crate::manifest::Manifest;
 use crate::metrics::Metrics;
+use crate::prefixcache::PrefixCache;
 use crate::runtime::{CacheBatch, ModelEngine, Runtime, StepPath};
 use crate::scheduler::{KvBudget, PrefillChunk, Priority, SchedConfig, Scheduler, State};
 use crate::tokenizer::{Tokenizer, EOS};
@@ -74,20 +75,26 @@ struct ReqState {
     done: Option<FinishReason>,
 }
 
-struct KvView<'a>(&'a PagedKvCache);
+struct KvView<'a> {
+    kv: &'a PagedKvCache,
+    /// Prefix-cache blocks reclaimable on demand (refcount == 1: lease
+    /// only).  The planner treats them as free; `Coordinator::step`
+    /// evicts exactly the shortfall before executing the plan.
+    evictable: usize,
+}
 
 impl KvBudget for KvView<'_> {
     fn free_blocks(&self) -> usize {
-        self.0.free_blocks()
+        self.kv.free_blocks() + self.evictable
     }
     fn blocks_for(&self, tokens: usize) -> usize {
-        self.0.blocks_for(tokens)
+        self.kv.blocks_for(tokens)
     }
     fn blocks_held(&self, id: u64) -> usize {
-        self.0.blocks_held(id)
+        self.kv.blocks_held(id)
     }
     fn growth_needs_block(&self, id: u64) -> bool {
-        self.0.growth_needs_block(id)
+        self.kv.growth_needs_block(id)
     }
 }
 
@@ -108,6 +115,9 @@ pub struct Coordinator {
     max_decode_bucket: usize,
     /// Backpressure: reject submits once this many requests wait (0 = off).
     max_waiting: usize,
+    /// Cross-request prefix cache (None = disabled): match-on-submit,
+    /// insert-on-finish, demand-driven eviction in `step`.
+    prefix: Option<PrefixCache>,
 }
 
 impl Coordinator {
@@ -167,6 +177,20 @@ impl Coordinator {
             crate::tokenizer::bundled_corpus(),
             mc.vocab_size,
         )?);
+        // Prefix cache: per-model default when the knob is 0, and never
+        // more than half the pool — serving keeps headroom even before
+        // demand-driven eviction kicks in.
+        let prefix = if cfg.enable_prefix_cache {
+            let want = if cfg.prefix_cache_blocks == 0 {
+                crate::config::default_prefix_cache_blocks(&mc, cfg.kv_block_tokens)
+            } else {
+                cfg.prefix_cache_blocks
+            };
+            let cap = want.min(cfg.kv_blocks / 2);
+            (cap > 0).then(|| PrefixCache::new(cfg.kv_block_tokens, cap))
+        } else {
+            None
+        };
         Ok(Coordinator {
             engine,
             kv,
@@ -181,6 +205,7 @@ impl Coordinator {
             events: Vec::new(),
             max_decode_bucket,
             max_waiting: cfg.max_waiting,
+            prefix,
         })
     }
 
@@ -222,6 +247,14 @@ impl Coordinator {
         }
         let id = self.next_id;
         let sp = req.params;
+        // Prefix-cache match BEFORE the scheduler takes ownership of the
+        // prompt: a hit forks the cached blocks into the new sequence so
+        // the scheduler plans (and the engine executes) only the suffix.
+        let hit = self
+            .prefix
+            .as_mut()
+            .map(|pc| pc.match_prefix(&req.prompt))
+            .filter(|m| m.tokens > 0);
         match self
             .sched
             .submit(id, req.prompt, req.max_new_tokens, req.priority)
@@ -239,6 +272,18 @@ impl Coordinator {
                     },
                 );
                 self.params.insert(id, sp);
+                if let Some(m) = hit {
+                    // Sharing moves only refcounts, so this cannot fail
+                    // for lack of pool space; treat any error as a miss.
+                    if self.kv.create_shared(id, &m.blocks, m.tokens).is_ok() {
+                        self.sched.set_prefilled(id, m.tokens);
+                        self.record_prefix_hit(m.tokens);
+                    } else {
+                        self.record_prefix_miss();
+                    }
+                } else if self.prefix.is_some() {
+                    self.record_prefix_miss();
+                }
                 Ok(id)
             }
             Err(e) => {
@@ -267,6 +312,31 @@ impl Coordinator {
         })
     }
 
+    /// Record a submit-time match.  Preemption re-matches are *not*
+    /// recorded: every prefix counter is strictly per-request (one
+    /// sample per accepted request), so hits / (hits + misses) is a
+    /// true hit rate even when requests are preempted and re-matched.
+    fn record_prefix_hit(&self, tokens: usize) {
+        use std::sync::atomic::Ordering::Relaxed;
+        self.metrics.prefix_hits.fetch_add(1, Relaxed);
+        self.metrics
+            .prefix_cached_tokens
+            .fetch_add(tokens as u64, Relaxed);
+        self.metrics.cached_tokens.record(tokens as u64);
+    }
+
+    fn record_prefix_miss(&self) {
+        use std::sync::atomic::Ordering::Relaxed;
+        self.metrics.prefix_misses.fetch_add(1, Relaxed);
+        self.metrics.cached_tokens.record(0);
+    }
+
+    /// Blocks the prefix cache currently holds (0 when disabled) —
+    /// diagnostics and tests.
+    pub fn prefix_cache_blocks_held(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |pc| pc.held_blocks())
+    }
+
     /// Whether any request is still in flight.
     pub fn busy(&self) -> bool {
         self.sched.n_waiting() + self.sched.n_running() > 0
@@ -288,7 +358,17 @@ impl Coordinator {
 
     /// Run one engine iteration. Returns the number of sequences touched.
     pub fn step(&mut self) -> Result<usize> {
-        let plan = self.sched.plan(&KvView(&self.kv));
+        // The planner sees reclaimable prefix-cache blocks (lease-only
+        // refcounts) as free; the shortfall is evicted below, after the
+        // plan's actual block demand is known.
+        let evictable = self
+            .prefix
+            .as_ref()
+            .map_or(0, |pc| pc.evictable_blocks(&self.kv));
+        let plan = self.sched.plan(&KvView {
+            kv: &self.kv,
+            evictable,
+        });
         let mut touched = 0;
 
         // -- preemptions ----------------------------------------------------
@@ -303,6 +383,68 @@ impl Coordinator {
             self.metrics
                 .preemptions
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+
+        // -- demand-driven prefix-cache eviction -----------------------------
+        // Make the blocks this plan will allocate actually free (the
+        // planner counted reclaimable cache blocks as such).  Demand is
+        // a cheap upper bound (every chunk grows to its end + a first-
+        // token slot; every decode at a block boundary takes one block);
+        // over-evicting a little only trims cold cache entries.  This
+        // runs after preempt removals (their shared blocks just became
+        // evictable) and before the preempt re-matches below (a re-match
+        // fork pins blocks, which must not shrink the evictable supply
+        // this step's execution was promised).
+        if self.prefix.is_some() {
+            let mut demand = 0usize;
+            for c in &plan.prefill {
+                let end = c.start + c.len + 1;
+                demand += self
+                    .kv
+                    .blocks_for(end)
+                    .saturating_sub(self.kv.blocks_held(c.id));
+            }
+            for id in &plan.decode {
+                if self.kv.growth_needs_block(*id) {
+                    demand += 1;
+                }
+            }
+            if self.kv.free_blocks() < demand {
+                let pc = self.prefix.as_mut().unwrap();
+                let evicted = pc.evict_for(&mut self.kv, demand);
+                self.metrics
+                    .prefix_evictions
+                    .fetch_add(evicted as u64, std::sync::atomic::Ordering::Relaxed);
+            }
+        }
+
+        // Recompute preemption dropped each victim's cache fork along
+        // with the rest of its KV; re-match so the replay prefills only
+        // the uncached suffix of the (now extended) prompt instead of
+        // starting over from token 0.
+        for id in &plan.preempt {
+            // A victim can be re-admitted within the very plan() that
+            // preempted it (its chunk then restarts at 0 with no fork);
+            // only re-match sequences still waiting.
+            if self.sched.state(*id) != Some(State::Waiting) {
+                continue;
+            }
+            if let Some(pc) = self.prefix.as_mut() {
+                let prompt = self
+                    .sched
+                    .info(*id)
+                    .map(|i| i.prompt.clone())
+                    .unwrap_or_default();
+                let m = pc.match_prefix(&prompt);
+                if m.tokens > 0
+                    && self.kv.create_shared(*id, &m.blocks, m.tokens).is_ok()
+                {
+                    self.sched.set_prefilled(*id, m.tokens);
+                    // Deliberately not recorded in prefix_hits /
+                    // prefix_cached_tokens: those are per-request
+                    // (submit-time) counters — see record_prefix_hit.
+                }
+            }
         }
 
         // -- prefill chunks --------------------------------------------------
@@ -569,6 +711,24 @@ impl Coordinator {
                 .requests_done
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             self.events.push(Event::Finished { id, reason });
+            // Insert-on-finish: lease the prompt's full blocks into the
+            // prefix cache before the sequence releases them.  Granules
+            // already cached are skipped (their duplicate blocks free
+            // with the sequence).  Only the scheduler-side prompt is
+            // cached — the freshly generated suffix is not, EXCEPT
+            // tokens a recompute preemption folded into the replay
+            // prompt, which are cached like any prompt content (safe:
+            // matching is keyed by token content, and KV depends only
+            // on the token prefix).
+            if let Some(pc) = self.prefix.as_mut() {
+                if let (Some(info), Some(blocks)) =
+                    (self.sched.info(id), self.kv.seq_blocks(id))
+                {
+                    let prompt = info.prompt.clone();
+                    let blocks = blocks.to_vec();
+                    pc.insert(&prompt, &blocks, &mut self.kv);
+                }
+            }
             self.kv.remove(id)?;
             self.sched.forget(id);
         }

@@ -78,6 +78,11 @@ struct SeqState {
 pub struct PagedKvCache {
     alloc: BlockAllocator,
     seqs: HashMap<u64, SeqState>,
+    /// Blocks leased by the cross-request prefix cache
+    /// (`rust/src/prefixcache/`): alive without an owning sequence.
+    /// Key = block id, value = lease count (the allocator refcount
+    /// carries the same number of retains).
+    leases: HashMap<u32, u32>,
     /// Tokens per block.
     block_tokens: usize,
     /// Values per (layer-stacked) slot: `L · KH · hd`.
@@ -103,6 +108,7 @@ impl PagedKvCache {
         PagedKvCache {
             alloc: BlockAllocator::new(total_blocks),
             seqs: HashMap::new(),
+            leases: HashMap::new(),
             block_tokens,
             slot_width,
             n_layers,
@@ -228,6 +234,83 @@ impl PagedKvCache {
             *blocks.last_mut().unwrap() = fresh;
         }
         self.seqs.insert(dst, SeqState { blocks, len: st.len });
+        Ok(())
+    }
+
+    /// A sequence's block table in position order (prefix-cache insert
+    /// harvests the prompt's blocks from here on finish).
+    pub fn seq_blocks(&self, seq: u64) -> Option<&[u32]> {
+        self.seqs.get(&seq).map(|s| s.blocks.as_slice())
+    }
+
+    /// Allocator refcount of one block (0 = free).  The prefix cache
+    /// uses this to tell pinned blocks (shared with a live sequence,
+    /// refcount > 1) from evictable ones (lease only, refcount == 1).
+    pub fn block_refcount(&self, block: u32) -> u32 {
+        self.alloc.refcount(block)
+    }
+
+    /// Take a lease on an allocated block: keeps it alive independent of
+    /// any sequence (the prefix cache's ownership handle).
+    pub fn lease_block(&mut self, block: u32) {
+        self.alloc.retain(block);
+        *self.leases.entry(block).or_insert(0) += 1;
+    }
+
+    /// Drop a lease taken with [`PagedKvCache::lease_block`]; the block
+    /// returns to the free list once no sequence shares it either.
+    pub fn unlease_block(&mut self, block: u32) {
+        let c = self
+            .leases
+            .get_mut(&block)
+            .unwrap_or_else(|| panic!("unlease of unleased block {block}"));
+        *c -= 1;
+        if *c == 0 {
+            self.leases.remove(&block);
+        }
+        self.alloc.release(block);
+    }
+
+    /// Blocks currently held by leases (prefix-cache accounting).
+    pub fn leased_blocks(&self) -> usize {
+        self.leases.values().map(|&c| c as usize).sum()
+    }
+
+    /// Register `seq` sharing `blocks` (all full: `len` must equal
+    /// `blocks.len() * block_tokens`) — the prefix-cache fork.  Unlike
+    /// [`PagedKvCache::fork`] there is no copy-on-write tail to copy:
+    /// block-granular matching guarantees the shared span is
+    /// block-aligned, so every subsequent append lands in fresh blocks.
+    /// Allocates nothing; only refcounts move, so it cannot fail for
+    /// lack of pool space.
+    pub fn create_shared(&mut self, seq: u64, blocks: &[u32], len: usize) -> Result<()> {
+        if self.seqs.contains_key(&seq) {
+            return Err(Error::KvCache(format!("seq {seq} already exists")));
+        }
+        if len != blocks.len() * self.block_tokens {
+            return Err(Error::KvCache(format!(
+                "create_shared: len {len} != {} full blocks of {}",
+                blocks.len(),
+                self.block_tokens
+            )));
+        }
+        for &b in blocks {
+            if self.alloc.refcount(b) == 0 {
+                return Err(Error::KvCache(format!(
+                    "create_shared: block {b} is free"
+                )));
+            }
+        }
+        for &b in blocks {
+            self.alloc.retain(b);
+        }
+        self.seqs.insert(
+            seq,
+            SeqState {
+                blocks: blocks.to_vec(),
+                len,
+            },
+        );
         Ok(())
     }
 
@@ -423,14 +506,18 @@ impl PagedKvCache {
     }
 
     /// Invariant check used by tests and `firstlayer selfcheck`: the free
-    /// list and the per-seq block tables partition the pool, and every
-    /// refcount matches the number of owners.
+    /// list, the per-seq block tables, and the prefix-cache leases
+    /// partition the pool, and every refcount matches the number of
+    /// owners.
     pub fn check_invariants(&self) -> Result<()> {
         let mut owners = vec![0u32; self.alloc.total_blocks()];
         for st in self.seqs.values() {
             for &b in &st.blocks {
                 owners[b as usize] += 1;
             }
+        }
+        for (&b, &c) in &self.leases {
+            owners[b as usize] += c;
         }
         for b in 0..self.alloc.total_blocks() as u32 {
             let rc = self.alloc.refcount(b);
@@ -451,6 +538,25 @@ impl PagedKvCache {
             }
         }
         Ok(())
+    }
+}
+
+/// The paged store is itself a scheduler budget view — the canonical
+/// 1:1 delegation (benches and tests plan directly against a cache;
+/// the coordinator wraps it in a view that also counts reclaimable
+/// prefix-cache blocks as free).
+impl crate::scheduler::KvBudget for PagedKvCache {
+    fn free_blocks(&self) -> usize {
+        PagedKvCache::free_blocks(self)
+    }
+    fn blocks_for(&self, tokens: usize) -> usize {
+        PagedKvCache::blocks_for(self, tokens)
+    }
+    fn blocks_held(&self, id: u64) -> usize {
+        PagedKvCache::blocks_held(self, id)
+    }
+    fn growth_needs_block(&self, id: u64) -> bool {
+        PagedKvCache::growth_needs_block(self, id)
     }
 }
 
@@ -628,6 +734,51 @@ mod tests {
         }
         // Other batch rows untouched (still zero).
         assert!(kb[..cap * 6].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn create_shared_and_leases() {
+        let mut c = cache(); // 8 blocks x 4 tokens
+        let w = 12;
+        c.create(1, 1).unwrap();
+        for i in 0..8 {
+            // exactly 2 full blocks
+            c.append(1, &row(i as f32, w), &row(0.5, w)).unwrap();
+        }
+        let blocks = c.seq_blocks(1).unwrap().to_vec();
+        // Lease both (prefix-cache insert shape), then drop the owner.
+        for &b in &blocks {
+            c.lease_block(b);
+        }
+        c.remove(1).unwrap();
+        assert_eq!(c.leased_blocks(), 2);
+        assert_eq!(c.free_blocks(), 6);
+        c.check_invariants().unwrap();
+        // Fork into a new sequence; shared content must read back.
+        c.create_shared(2, &blocks, 8).unwrap();
+        assert_eq!(c.seq_len(2), Some(8));
+        for &b in &blocks {
+            assert_eq!(c.block_refcount(b), 2);
+        }
+        // Appends land in fresh blocks, never the shared span.
+        c.append(2, &row(100.0, w), &row(0.0, w)).unwrap();
+        let cap = 12;
+        let mut k = vec![0f32; 2 * cap * 6];
+        let mut v = k.clone();
+        c.gather_dense(2, cap, &mut k, &mut v).unwrap();
+        assert_eq!(k[3 * 6], 3.0); // shared block content intact
+        assert_eq!(k[8 * 6], 100.0); // the append
+        c.check_invariants().unwrap();
+        // Misaligned share rejected.
+        assert!(c.create_shared(3, &blocks, 7).is_err());
+        c.remove(2).unwrap();
+        for &b in &blocks {
+            c.unlease_block(b);
+        }
+        assert_eq!(c.free_blocks(), 8);
+        c.check_invariants().unwrap();
+        // Sharing freed blocks rejected (stale match).
+        assert!(c.create_shared(4, &blocks, 8).is_err());
     }
 
     /// Property test (in-tree harness): random alloc/append/fork/remove

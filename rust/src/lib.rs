@@ -30,6 +30,7 @@ pub mod kvcache;
 pub mod manifest;
 pub mod metrics;
 pub mod precompute;
+pub mod prefixcache;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;

@@ -30,6 +30,8 @@ COMMANDS:
                   --chunk-tokens N|auto (chunked prefill; 0 = monolithic)
                   --token-budget N (per-step decode+prefill token budget)
                   --max-waiting N (admission backpressure; 0 = unbounded)
+                  --prefix-cache-blocks N (0 = per-model zoo default)
+                  --no-prefix-cache (disable cross-request KV reuse)
   generate      one-shot generation from the CLI
                   --prompt \"text\" --max-new 32 --model tiny-serial
                   --path precompute|baseline --temperature 0 --top-k 0
@@ -100,6 +102,12 @@ fn serving_config(flags: &HashMap<String, String>) -> ServingConfig {
     }
     if let Some(w) = flags.get("max-waiting") {
         cfg.max_waiting = w.parse().unwrap_or(cfg.max_waiting);
+    }
+    if let Some(p) = flags.get("prefix-cache-blocks") {
+        cfg.prefix_cache_blocks = p.parse().unwrap_or(cfg.prefix_cache_blocks);
+    }
+    if flags.contains_key("no-prefix-cache") {
+        cfg.enable_prefix_cache = false;
     }
     cfg
 }

@@ -9,33 +9,32 @@ use std::time::Duration;
 
 const BUCKETS: usize = 64;
 
-/// Log-bucketed latency histogram.
+/// Log-bucketed latency histogram: a [`ValueHistogram`] over
+/// microseconds with a `Duration` API.
 #[derive(Debug)]
 pub struct Histogram {
-    counts: [AtomicU64; BUCKETS],
-    sum_ns: AtomicU64,
-    n: AtomicU64,
+    inner: ValueHistogram,
 }
 
-fn bucket_of(d: Duration) -> usize {
-    let us = d.as_micros() as u64;
-    if us == 0 {
+/// Power-of-√2 bucket index for a raw value (µs for latencies, token
+/// counts for [`ValueHistogram`]).
+fn vbucket_of(v: u64) -> usize {
+    if v == 0 {
         return 0;
     }
-    // two buckets per octave: idx = floor(2*log2(us))
-    let lz = 63 - us.leading_zeros() as u64;
-    let half = if us >= (1u64 << lz) + (1u64 << lz) / 2 { 1 } else { 0 };
+    // two buckets per octave: idx = floor(2*log2(v))
+    let lz = 63 - v.leading_zeros() as u64;
+    let half = if v >= (1u64 << lz) + (1u64 << lz) / 2 { 1 } else { 0 };
     ((2 * lz + half) as usize).min(BUCKETS - 1)
 }
 
-fn bucket_upper(idx: usize) -> Duration {
+fn vbucket_upper(idx: usize) -> u64 {
     let oct = idx / 2;
-    let us = if idx % 2 == 0 {
+    if idx % 2 == 0 {
         (1u64 << oct) + (1u64 << oct) / 2
     } else {
         1u64 << (oct + 1)
-    };
-    Duration::from_micros(us)
+    }
 }
 
 impl Default for Histogram {
@@ -47,16 +46,56 @@ impl Default for Histogram {
 impl Histogram {
     pub fn new() -> Histogram {
         Histogram {
-            counts: std::array::from_fn(|_| AtomicU64::new(0)),
-            sum_ns: AtomicU64::new(0),
-            n: AtomicU64::new(0),
+            inner: ValueHistogram::new(),
         }
     }
 
     pub fn record(&self, d: Duration) {
-        self.counts[bucket_of(d)].fetch_add(1, Ordering::Relaxed);
-        self.sum_ns
-            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.inner.record(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.count()
+    }
+
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos((self.inner.mean() * 1_000.0) as u64)
+    }
+
+    /// Upper bound of the bucket containing the q-quantile.
+    pub fn quantile(&self, q: f64) -> Duration {
+        Duration::from_micros(self.inner.quantile(q))
+    }
+}
+
+/// Log-bucketed histogram over unitless `u64` values (token counts and
+/// similar) — same power-of-√2 buckets as [`Histogram`], same lock-free
+/// hot path.
+#[derive(Debug)]
+pub struct ValueHistogram {
+    counts: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Default for ValueHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ValueHistogram {
+    pub fn new() -> ValueHistogram {
+        ValueHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            n: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.counts[vbucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
         self.n.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -64,29 +103,29 @@ impl Histogram {
         self.n.load(Ordering::Relaxed)
     }
 
-    pub fn mean(&self) -> Duration {
+    pub fn mean(&self) -> f64 {
         let n = self.count();
         if n == 0 {
-            return Duration::ZERO;
+            return 0.0;
         }
-        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / n)
+        self.sum.load(Ordering::Relaxed) as f64 / n as f64
     }
 
     /// Upper bound of the bucket containing the q-quantile.
-    pub fn quantile(&self, q: f64) -> Duration {
+    pub fn quantile(&self, q: f64) -> u64 {
         let n = self.count();
         if n == 0 {
-            return Duration::ZERO;
+            return 0;
         }
         let target = ((n as f64) * q).ceil() as u64;
         let mut acc = 0;
         for (i, c) in self.counts.iter().enumerate() {
             acc += c.load(Ordering::Relaxed);
             if acc >= target {
-                return bucket_upper(i);
+                return vbucket_upper(i);
             }
         }
-        bucket_upper(BUCKETS - 1)
+        vbucket_upper(BUCKETS - 1)
     }
 }
 
@@ -104,6 +143,16 @@ pub struct Metrics {
     /// Prefill chunks executed (chunked prefill; monolithic prefills count
     /// as one chunk each).
     pub prefill_chunks: AtomicU64,
+    /// Cross-request prefix cache: requests whose prompt matched a cached
+    /// prefix / requests that missed (counted only when the cache is on).
+    pub prefix_hits: AtomicU64,
+    pub prefix_misses: AtomicU64,
+    /// Cache blocks evicted (capacity LRU + demand-driven KV pressure).
+    pub prefix_evictions: AtomicU64,
+    /// Total prompt tokens served from the cache instead of prefilled.
+    pub prefix_cached_tokens: AtomicU64,
+    /// Cached-tokens-per-request distribution (0 recorded on a miss).
+    pub cached_tokens: ValueHistogram,
     /// Engine step latencies.
     pub decode_step: Histogram,
     pub prefill_step: Histogram,
@@ -131,6 +180,18 @@ impl Metrics {
             self.tokens_out.load(Ordering::Relaxed),
             self.preemptions.load(Ordering::Relaxed),
             self.prefill_chunks.load(Ordering::Relaxed),
+        );
+        let _ = writeln!(
+            s,
+            "prefix_cache: hits={} misses={} evicted={} cached_tokens={}  \
+             per-req mean={:.1} p50={} p95={}",
+            self.prefix_hits.load(Ordering::Relaxed),
+            self.prefix_misses.load(Ordering::Relaxed),
+            self.prefix_evictions.load(Ordering::Relaxed),
+            self.prefix_cached_tokens.load(Ordering::Relaxed),
+            self.cached_tokens.mean(),
+            self.cached_tokens.quantile(0.50),
+            self.cached_tokens.quantile(0.95),
         );
         for (name, h) in [
             ("decode_step", &self.decode_step),
@@ -160,9 +221,9 @@ mod tests {
     #[test]
     fn bucket_monotone() {
         let mut prev = 0;
-        for us in [1u64, 2, 3, 5, 10, 100, 1000, 10_000, 1_000_000] {
-            let b = bucket_of(Duration::from_micros(us));
-            assert!(b >= prev, "us={us}");
+        for v in [1u64, 2, 3, 5, 10, 100, 1000, 10_000, 1_000_000] {
+            let b = vbucket_of(v);
+            assert!(b >= prev, "v={v}");
             prev = b;
         }
     }
@@ -198,10 +259,30 @@ mod tests {
     }
 
     #[test]
+    fn value_histogram_tokens() {
+        let h = ValueHistogram::new();
+        h.record(0); // a prefix-cache miss
+        for _ in 0..9 {
+            h.record(64); // 64 cached tokens per hit
+        }
+        assert_eq!(h.count(), 10);
+        assert!((h.mean() - 57.6).abs() < 1e-9);
+        assert!(h.quantile(0.95) >= 64);
+        assert!(h.quantile(0.05) <= 1); // the miss sits in bucket 0
+    }
+
+    #[test]
+    fn report_contains_prefix_cache_line() {
+        let m = Metrics::new();
+        m.prefix_hits.fetch_add(2, Ordering::Relaxed);
+        m.cached_tokens.record(32);
+        assert!(m.report().contains("prefix_cache: hits=2"));
+    }
+
+    #[test]
     fn bucket_upper_covers_bucket_of() {
-        for us in [1u64, 7, 63, 999, 123_456] {
-            let d = Duration::from_micros(us);
-            assert!(bucket_upper(bucket_of(d)) >= d);
+        for v in [1u64, 7, 63, 999, 123_456] {
+            assert!(vbucket_upper(vbucket_of(v)) >= v);
         }
     }
 }

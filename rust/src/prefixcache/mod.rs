@@ -1,0 +1,573 @@
+//! Cross-request prefix cache (S16): token-level radix tree over
+//! ref-counted [`PagedKvCache`] blocks.
+//!
+//! Millions of users share system prompts and few-shot templates; without
+//! reuse their KV is recomputed per request.  This module keeps finished
+//! requests' prompt KV alive, keyed by token content, so a later request
+//! with the same prefix forks the blocks instead of re-prefilling them —
+//! and because the chunked-prefill scheduler executes `start > 0` chunks
+//! through the table-served `decode_span` path, a hit skips both the
+//! attention compute *and* the first-layer table gather for the cached
+//! span.
+//!
+//! **Granularity.**  Matching is block-granular: one radix-tree node per
+//! full KV block (`block_tokens` tokens), children keyed by the child
+//! block's exact token content.  A prefix matches only through blocks
+//! whose every token agrees, which is precisely the granule the paged
+//! allocator can share without copy-on-write (full blocks are never
+//! written again — appends only touch positions `>= len`, and a cached
+//! prefix is always block-aligned).  A match never covers the whole
+//! prompt: at least one token is left to prefill so the final chunk
+//! produces the first-token logits.
+//!
+//! **Lifecycle.**  `match_prefix` on submit (the coordinator forks the
+//! returned blocks into the new sequence), `insert` on finish (the
+//! coordinator leases the finished sequence's prompt blocks into the
+//! tree before dropping the sequence).  Leases are real allocator
+//! refcounts ([`PagedKvCache::lease_block`]), so the free list, the
+//! sequences and the cache always partition the pool —
+//! `PagedKvCache::check_invariants` covers all three.
+//!
+//! **Eviction.**  LRU over *evictable* nodes.  A node is evictable when
+//! its block's refcount is exactly 1 (only the cache's lease: no live
+//! sequence shares it) — in-use nodes are pinned by construction, which
+//! is how eviction coordinates with scheduler preemption: preempting a
+//! sequence releases its fork refs and thereby *unpins* the cached
+//! prefix, it never yanks KV out from under a running sequence.  A
+//! refcount-1 node can have no pinned descendant (any sequence sharing a
+//! child block shares its whole prefix, including this block), so
+//! leaf-first LRU eviction always makes progress.  The coordinator
+//! evicts on demand: the scheduler plans against `free + evictable`, and
+//! `evict_for` releases exactly the shortfall before execution.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::kvcache::PagedKvCache;
+
+/// Root node index in the arena.
+const ROOT: usize = 0;
+
+/// Result of [`PrefixCache::match_prefix`]: the longest cached prefix.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixMatch {
+    /// KV block ids covering the matched prefix, in order.
+    pub blocks: Vec<u32>,
+    /// Matched prefix length in tokens (`blocks.len() * block_tokens`).
+    pub tokens: usize,
+}
+
+#[derive(Debug)]
+struct Node {
+    /// Token content of this node's block (`block_tokens` tokens; empty
+    /// for the root, which owns no block).  Shared with the parent's
+    /// `children` key — one allocation per node, not two.
+    tokens: Arc<[u32]>,
+    /// The leased KV block (undefined for the root).
+    block: u32,
+    parent: usize,
+    /// Children keyed by the child block's full token content.
+    children: HashMap<Arc<[u32]>, usize>,
+    /// LRU clock value of the last match/insert touching this node.
+    last_used: u64,
+}
+
+/// The radix tree.  One instance per [`PagedKvCache`]; all block
+/// refcounting goes through the cache passed into each call (the tree
+/// itself never owns the pool, so the coordinator keeps a single
+/// mutable `PagedKvCache`).
+#[derive(Debug)]
+pub struct PrefixCache {
+    block_tokens: usize,
+    /// Capacity in blocks (the coordinator sizes this off
+    /// `ServingConfig::prefix_cache_blocks` / the zoo default).
+    max_blocks: usize,
+    nodes: Vec<Option<Node>>,
+    free_nodes: Vec<usize>,
+    /// Blocks currently leased (live non-root nodes).
+    held: usize,
+    clock: u64,
+}
+
+impl PrefixCache {
+    /// `block_tokens` must match the paged cache; `max_blocks >= 1`.
+    pub fn new(block_tokens: usize, max_blocks: usize) -> PrefixCache {
+        assert!(block_tokens >= 1, "prefix cache needs block_tokens >= 1");
+        assert!(max_blocks >= 1, "prefix cache needs capacity >= 1 block");
+        PrefixCache {
+            block_tokens,
+            max_blocks,
+            nodes: vec![Some(Node {
+                tokens: Vec::new().into(),
+                block: u32::MAX,
+                parent: ROOT,
+                children: HashMap::new(),
+                last_used: 0,
+            })],
+            free_nodes: Vec::new(),
+            held: 0,
+            clock: 0,
+        }
+    }
+
+    /// Blocks currently held (leased) by the tree.
+    pub fn held_blocks(&self) -> usize {
+        self.held
+    }
+
+    pub fn max_blocks(&self) -> usize {
+        self.max_blocks
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    fn node(&self, i: usize) -> &Node {
+        self.nodes[i].as_ref().expect("live node")
+    }
+
+    fn node_mut(&mut self, i: usize) -> &mut Node {
+        self.nodes[i].as_mut().expect("live node")
+    }
+
+    /// Longest cached block-aligned prefix of `prompt`, capped at
+    /// `prompt.len() - 1` tokens (at least one token must remain for
+    /// the final prefill chunk to produce logits).  Touches the matched
+    /// path's LRU stamps.
+    pub fn match_prefix(&mut self, prompt: &[u32]) -> PrefixMatch {
+        let bt = self.block_tokens;
+        let max_granules = prompt.len().saturating_sub(1) / bt;
+        self.clock += 1;
+        let clock = self.clock;
+        let mut at = ROOT;
+        let mut blocks = Vec::new();
+        for g in 0..max_granules {
+            let key = &prompt[g * bt..(g + 1) * bt];
+            match self.node(at).children.get(key) {
+                Some(&child) => {
+                    let n = self.node_mut(child);
+                    n.last_used = clock;
+                    blocks.push(n.block);
+                    at = child;
+                }
+                None => break,
+            }
+        }
+        let tokens = blocks.len() * bt;
+        PrefixMatch { blocks, tokens }
+    }
+
+    /// Insert the block-aligned prefix of `prompt` into the tree,
+    /// leasing the corresponding entries of `seq_blocks` (the finishing
+    /// sequence's block table, position-ordered).  Granules already
+    /// cached keep their existing block (the duplicate is simply not
+    /// leased and is freed when the sequence is removed).  Stops early —
+    /// keeping the tree prefix-closed — when capacity cannot be made by
+    /// evicting unpinned LRU nodes.  Returns the number of blocks newly
+    /// leased.
+    pub fn insert(
+        &mut self,
+        prompt: &[u32],
+        seq_blocks: &[u32],
+        kv: &mut PagedKvCache,
+    ) -> usize {
+        let bt = self.block_tokens;
+        let full = (prompt.len() / bt).min(seq_blocks.len());
+        self.clock += 1;
+        let clock = self.clock;
+        let mut at = ROOT;
+        let mut inserted = 0;
+        for g in 0..full {
+            let key = &prompt[g * bt..(g + 1) * bt];
+            if let Some(&child) = self.node(at).children.get(key) {
+                self.node_mut(child).last_used = clock;
+                at = child;
+                continue;
+            }
+            // Make room.  Nodes touched or created this call carry the
+            // current clock and are excluded, so eviction can never
+            // cannibalize the path being walked/built (newly inserted
+            // nodes are additionally pinned: the finishing sequence
+            // still holds its blocks).
+            while self.held >= self.max_blocks {
+                if self.evict_lru(kv, Some(clock)).is_none() {
+                    return inserted;
+                }
+            }
+            let block = seq_blocks[g];
+            kv.lease_block(block);
+            let key: Arc<[u32]> = key.into();
+            let node = Node {
+                tokens: key.clone(),
+                block,
+                parent: at,
+                children: HashMap::new(),
+                last_used: clock,
+            };
+            let id = match self.free_nodes.pop() {
+                Some(slot) => {
+                    self.nodes[slot] = Some(node);
+                    slot
+                }
+                None => {
+                    self.nodes.push(Some(node));
+                    self.nodes.len() - 1
+                }
+            };
+            self.node_mut(at).children.insert(key, id);
+            self.held += 1;
+            inserted += 1;
+            at = id;
+        }
+        inserted
+    }
+
+    /// Blocks reclaimable right now: live nodes whose block refcount is
+    /// 1 (the lease alone — no sequence shares it).  The coordinator
+    /// adds this to the scheduler's free-block view.  O(nodes) when the
+    /// cache is non-empty (an intrusive evictable counter is a ROADMAP
+    /// item for pools where the cache holds thousands of blocks).
+    pub fn evictable_blocks(&self, kv: &PagedKvCache) -> usize {
+        if self.held == 0 {
+            return 0;
+        }
+        self.nodes
+            .iter()
+            .skip(1)
+            .flatten()
+            .filter(|n| kv.block_refcount(n.block) == 1)
+            .count()
+    }
+
+    /// Evict the least-recently-used unpinned leaf, releasing its lease.
+    /// Returns the evicted prefix (root-to-node token path) and block,
+    /// or `None` when nothing is evictable.  Leaf-first is safe *and*
+    /// complete: an unpinned interior node (refcount 1) can have no
+    /// pinned descendant, so repeated calls drain whole unpinned chains.
+    pub fn evict_one(&mut self, kv: &mut PagedKvCache) -> Option<(Vec<u32>, u32)> {
+        self.evict_lru(kv, None)
+    }
+
+    /// LRU eviction core.  `protect_clock` excludes nodes stamped with
+    /// that clock value — the path an in-progress `insert` is standing
+    /// on.
+    fn evict_lru(
+        &mut self,
+        kv: &mut PagedKvCache,
+        protect_clock: Option<u64>,
+    ) -> Option<(Vec<u32>, u32)> {
+        let mut best: Option<usize> = None;
+        for (i, slot) in self.nodes.iter().enumerate().skip(1) {
+            let Some(n) = slot else { continue };
+            if !n.children.is_empty() || kv.block_refcount(n.block) != 1 {
+                continue;
+            }
+            if protect_clock == Some(n.last_used) {
+                continue;
+            }
+            if best.map_or(true, |b| n.last_used < self.node(b).last_used) {
+                best = Some(i);
+            }
+        }
+        let i = best?;
+        let path = self.path_tokens(i);
+        let (parent, key, block) = {
+            let n = self.node(i);
+            (n.parent, n.tokens.clone(), n.block)
+        };
+        self.node_mut(parent).children.remove(&key[..]);
+        self.nodes[i] = None;
+        self.free_nodes.push(i);
+        self.held -= 1;
+        kv.unlease_block(block);
+        Some((path, block))
+    }
+
+    /// Evict until the pool has at least `target_free` free blocks (or
+    /// nothing evictable remains).  Returns the number evicted.
+    pub fn evict_for(&mut self, kv: &mut PagedKvCache, target_free: usize) -> usize {
+        let mut evicted = 0;
+        while kv.free_blocks() < target_free {
+            if self.evict_one(kv).is_none() {
+                break;
+            }
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Full token path from the root down to node `i`.
+    fn path_tokens(&self, i: usize) -> Vec<u32> {
+        let mut rev: Vec<usize> = Vec::new();
+        let mut at = i;
+        while at != ROOT {
+            rev.push(at);
+            at = self.node(at).parent;
+        }
+        let mut out = Vec::with_capacity(rev.len() * self.block_tokens);
+        for &n in rev.iter().rev() {
+            out.extend_from_slice(&self.node(n).tokens);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::{HashMap, HashSet};
+
+    const BT: usize = 4;
+
+    fn kv(total: usize) -> PagedKvCache {
+        // `BT`-token blocks; 1 layer, kh*hd = 2 keeps appends cheap.
+        PagedKvCache::new(total, BT, 1, 1, 2)
+    }
+
+    /// Materialize a prompt as a real sequence (zero-valued KV rows) and
+    /// return its block table.
+    fn grow_seq(kv: &mut PagedKvCache, id: u64, prompt: &[u32]) -> Vec<u32> {
+        kv.create(id, 1).unwrap();
+        let row = vec![0f32; 2];
+        for _ in prompt {
+            kv.append(id, &row, &row).unwrap();
+        }
+        kv.seq_blocks(id).unwrap().to_vec()
+    }
+
+    #[test]
+    fn match_is_block_granular_and_never_whole_prompt() {
+        let mut kv = kv(16);
+        let mut pc = PrefixCache::new(BT, 16);
+        let prompt: Vec<u32> = (0..12).collect();
+        let blocks = grow_seq(&mut kv, 1, &prompt);
+        assert_eq!(pc.insert(&prompt, &blocks, &mut kv), 3);
+        kv.remove(1).unwrap();
+        kv.check_invariants().unwrap();
+
+        // Exact prompt: capped at len-1 -> 2 of 3 blocks match.
+        let m = pc.match_prefix(&prompt);
+        assert_eq!(m.tokens, 8);
+        assert_eq!(m.blocks.len(), 2);
+        // Longer prompt with same prefix: all 3 cached blocks match.
+        let mut longer = prompt.clone();
+        longer.extend([90, 91, 92]);
+        assert_eq!(pc.match_prefix(&longer).tokens, 12);
+        // One token differs inside block 2: only block 1 matches.
+        let mut diverged = prompt.clone();
+        diverged[5] = 99;
+        assert_eq!(pc.match_prefix(&diverged).tokens, 4);
+        // Shorter than one block: no match possible.
+        assert_eq!(pc.match_prefix(&prompt[..3]).tokens, 0);
+    }
+
+    #[test]
+    fn shared_prefix_inserts_once() {
+        let mut kv = kv(16);
+        let mut pc = PrefixCache::new(BT, 16);
+        let a: Vec<u32> = (0..8).collect();
+        let mut b = a.clone();
+        b.extend([50, 51, 52, 53]);
+        let ba = grow_seq(&mut kv, 1, &a);
+        assert_eq!(pc.insert(&a, &ba, &mut kv), 2);
+        kv.remove(1).unwrap();
+        let bb = grow_seq(&mut kv, 2, &b);
+        // First two granules already cached: only the third leases.
+        assert_eq!(pc.insert(&b, &bb, &mut kv), 1);
+        kv.remove(2).unwrap();
+        assert_eq!(pc.held_blocks(), 3);
+        kv.check_invariants().unwrap();
+        // The duplicate blocks from seq 2's prefix went back to the pool.
+        assert_eq!(kv.free_blocks(), 16 - 3);
+    }
+
+    #[test]
+    fn pinned_nodes_survive_eviction() {
+        let mut kv = kv(16);
+        let mut pc = PrefixCache::new(BT, 16);
+        let a: Vec<u32> = (0..8).collect();
+        let ba = grow_seq(&mut kv, 1, &a);
+        pc.insert(&a, &ba, &mut kv);
+        kv.remove(1).unwrap();
+        // Fork the cached prefix into a live sequence: both blocks pinned.
+        let m = pc.match_prefix(&[0, 1, 2, 3, 4, 5, 6, 7, 99]);
+        assert_eq!(m.tokens, 8);
+        kv.create_shared(7, &m.blocks, m.tokens).unwrap();
+        assert_eq!(pc.evictable_blocks(&kv), 0);
+        assert!(pc.evict_one(&mut kv).is_none());
+        // Dropping the sequence unpins; leaf-first LRU then drains both.
+        kv.remove(7).unwrap();
+        assert_eq!(pc.evictable_blocks(&kv), 2);
+        assert!(pc.evict_one(&mut kv).is_some());
+        assert!(pc.evict_one(&mut kv).is_some());
+        assert_eq!(pc.held_blocks(), 0);
+        assert_eq!(kv.free_blocks(), 16);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn capacity_evicts_lru_cold_path() {
+        let mut kv = kv(32);
+        let mut pc = PrefixCache::new(BT, 2); // room for two granules
+        let a = vec![1u32; 4];
+        let b = vec![2u32; 4];
+        let c = vec![3u32; 4];
+        for (id, p) in [(1u64, &a), (2, &b)] {
+            let bl = grow_seq(&mut kv, id, p);
+            pc.insert(p, &bl, &mut kv);
+            kv.remove(id).unwrap();
+        }
+        // Touch `a` so `b` is the LRU victim.
+        assert_eq!(pc.match_prefix(&[1, 1, 1, 1, 9]).tokens, 4);
+        let bl = grow_seq(&mut kv, 3, &c);
+        pc.insert(&c, &bl, &mut kv);
+        kv.remove(3).unwrap();
+        assert_eq!(pc.held_blocks(), 2);
+        assert_eq!(pc.match_prefix(&[1, 1, 1, 1, 9]).tokens, 4); // kept
+        assert_eq!(pc.match_prefix(&[2, 2, 2, 2, 9]).tokens, 0); // evicted
+        assert_eq!(pc.match_prefix(&[3, 3, 3, 3, 9]).tokens, 4); // inserted
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evict_for_frees_exactly_the_shortfall() {
+        let mut kv = kv(8);
+        let mut pc = PrefixCache::new(BT, 8);
+        let p: Vec<u32> = (0..24).collect(); // 6 blocks
+        let bl = grow_seq(&mut kv, 1, &p);
+        pc.insert(&p, &bl, &mut kv);
+        kv.remove(1).unwrap();
+        assert_eq!(kv.free_blocks(), 2);
+        assert_eq!(pc.evict_for(&mut kv, 4), 2);
+        assert_eq!(kv.free_blocks(), 4);
+        // Already satisfied: no-op.
+        assert_eq!(pc.evict_for(&mut kv, 4), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    /// Property test (in-tree harness, like the kvcache one): random
+    /// insert/match/evict against a naive `HashMap<Vec<u32>, u32>`
+    /// oracle of cached block-aligned prefixes.  Asserts match lengths
+    /// agree with the oracle, pool invariants hold after every op, and
+    /// ref-counts never leak blocks once everything is torn down.
+    #[test]
+    fn prop_matches_oracle_and_never_leaks() {
+        for seed in 0..25u64 {
+            let mut rng = Rng::new(seed);
+            let total = 48;
+            let mut kv = kv(total);
+            let mut pc = PrefixCache::new(BT, rng.range(2, 12));
+            // Oracle: cached prefix -> block id at that granule.
+            let mut oracle: HashMap<Vec<u32>, u32> = HashMap::new();
+            let mut next_id = 0u64;
+            // A small template pool makes prefix collisions likely.
+            let templates: Vec<Vec<u32>> = (0..4)
+                .map(|_| (0..BT * 3).map(|_| rng.below(6) as u32).collect())
+                .collect();
+            let mk_prompt = |rng: &mut Rng| -> Vec<u32> {
+                let mut p = templates[rng.range(0, templates.len())]
+                    [..rng.range(1, BT * 3 + 1)]
+                    .to_vec();
+                for _ in 0..rng.range(0, 5) {
+                    p.push(rng.below(6) as u32);
+                }
+                p
+            };
+            for _ in 0..300 {
+                match rng.below(10) {
+                    0..=4 => {
+                        // Insert: materialize a sequence, cache it, drop it
+                        // (the coordinator's insert-on-finish shape).
+                        let prompt = mk_prompt(&mut rng);
+                        let id = next_id;
+                        next_id += 1;
+                        if kv.free_blocks() < prompt.len().div_ceil(BT) {
+                            continue;
+                        }
+                        let blocks = grow_seq(&mut kv, id, &prompt);
+                        let n = pc.insert(&prompt, &blocks, &mut kv);
+                        // Resync the oracle against the tree: capacity
+                        // pressure inside `insert` may have evicted old
+                        // entries, and `n` new granules joined.  A path
+                        // is cached iff probing it (with one extra token
+                        // to sidestep the len-1 cap) matches fully.
+                        let cached = |pc: &mut PrefixCache, key: &[u32]| {
+                            let mut probe = key.to_vec();
+                            probe.push(0);
+                            pc.match_prefix(&probe).tokens >= key.len()
+                        };
+                        let stale: Vec<Vec<u32>> = oracle.keys().cloned().collect();
+                        for k in stale {
+                            if !cached(&mut pc, &k) {
+                                oracle.remove(&k);
+                            }
+                        }
+                        let full = prompt.len() / BT;
+                        let mut added = 0;
+                        for g in 0..full {
+                            let key = prompt[..(g + 1) * BT].to_vec();
+                            if cached(&mut pc, &key) {
+                                added += usize::from(!oracle.contains_key(&key));
+                                oracle.entry(key).or_insert(blocks[g]);
+                            }
+                        }
+                        assert_eq!(added, n, "seed {seed}: insert count drift");
+                        kv.remove(id).unwrap();
+                    }
+                    5..=7 => {
+                        let prompt = mk_prompt(&mut rng);
+                        let m = pc.match_prefix(&prompt);
+                        let mut want = 0;
+                        let cap = prompt.len().saturating_sub(1) / BT;
+                        for g in 0..cap {
+                            if oracle.contains_key(&prompt[..(g + 1) * BT]) {
+                                want = (g + 1) * BT;
+                            } else {
+                                break;
+                            }
+                        }
+                        assert_eq!(
+                            m.tokens, want,
+                            "seed {seed}: match {} != oracle {want} for {prompt:?}",
+                            m.tokens
+                        );
+                        // Returned blocks agree with the oracle's ids.
+                        for (g, &b) in m.blocks.iter().enumerate() {
+                            assert_eq!(oracle[&prompt[..(g + 1) * BT]], b);
+                        }
+                    }
+                    _ => {
+                        if let Some((path, _)) = pc.evict_one(&mut kv) {
+                            assert!(
+                                oracle.remove(&path).is_some(),
+                                "seed {seed}: evicted {path:?} unknown to oracle"
+                            );
+                        }
+                    }
+                }
+                kv.check_invariants()
+                    .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+                assert_eq!(
+                    pc.held_blocks(),
+                    oracle.len(),
+                    "seed {seed}: tree size diverged from oracle"
+                );
+                assert!(pc.held_blocks() <= pc.max_blocks(), "seed {seed}");
+                // Leased block ids are distinct (no double-lease).
+                let ids: HashSet<u32> = oracle.values().copied().collect();
+                assert_eq!(ids.len(), oracle.len(), "seed {seed}");
+            }
+            // Teardown: everything must come back.
+            while pc.evict_one(&mut kv).is_some() {}
+            assert_eq!(pc.held_blocks(), 0, "seed {seed}: cache not drained");
+            assert_eq!(
+                kv.free_blocks(),
+                total,
+                "seed {seed}: blocks leaked through the prefix cache"
+            );
+            kv.check_invariants().unwrap();
+        }
+    }
+}

@@ -238,6 +238,22 @@ impl Scheduler {
             .count()
     }
 
+    /// Mark the first `n` prompt tokens as already in the KV cache — a
+    /// cross-request prefix-cache hit (the coordinator forked the cached
+    /// blocks into this sequence's block table).  Valid only while the
+    /// sequence is `Waiting`; admission then plans a first chunk with
+    /// `start == prefilled`, which the coordinator executes through the
+    /// continuation (table-gather + `decode_span`) path.  Capped at
+    /// `prompt.len() - 1` so at least one token is prefilled and the
+    /// final chunk produces the first-token logits.
+    pub fn set_prefilled(&mut self, id: u64, n: usize) {
+        if let Some((info, st)) = self.seqs.get_mut(&id) {
+            if *st == State::Waiting {
+                info.prefilled = n.min(info.prompt.len().saturating_sub(1));
+            }
+        }
+    }
+
     /// Chunk length for a sequence with `remaining` unprefilled tokens.
     fn chunk_len(&self, remaining: usize) -> usize {
         if self.cfg.chunk_tokens == 0 {
@@ -287,7 +303,9 @@ impl Scheduler {
             // Re-prefill will replay prompt + generated-so-far; genuinely a
             // recompute (generated tokens were already reported upstream,
             // the coordinator extends the stored prompt with them).  A
-            // mid-prefill victim restarts from chunk 0.
+            // mid-prefill victim restarts from chunk 0 — unless the
+            // coordinator re-matches the prefix cache on requeue and
+            // calls `set_prefilled` with the cached span.
             info.len = info.prompt.len();
             info.prefilled = 0;
             let class = class_of(info.priority);
@@ -404,21 +422,28 @@ impl Scheduler {
                     break 'classes;
                 }
                 let (info, _) = &self.seqs[&id];
-                let need = kv.blocks_for(info.prompt.len() + 1);
+                // A prefix-cache hit arrives already holding its cached
+                // blocks (forked at submit): only the suffix needs fresh
+                // pool space, and the first chunk starts past the
+                // cached span.
+                let need = kv
+                    .blocks_for(info.prompt.len() + 1)
+                    .saturating_sub(kv.blocks_held(id));
                 if need > admit_free {
                     // FCFS head-of-line: stop rather than skip, so a large
                     // request cannot be starved by smaller late arrivals.
                     break 'classes;
                 }
-                let take = self.chunk_len(info.prompt.len()).min(budget);
+                let remaining = info.prompt.len() - info.prefilled;
+                let take = self.chunk_len(remaining).min(budget);
                 admit_free -= need;
                 budget -= take;
                 admitted.push(id);
                 plan.prefill.push(PrefillChunk {
                     id,
-                    start: 0,
+                    start: info.prefilled,
                     len: take,
-                    last: take == info.prompt.len(),
+                    last: info.prefilled + take == info.prompt.len(),
                 });
             }
         }
@@ -896,6 +921,40 @@ mod tests {
                 assert!(n <= 2, "seed {seed}: seq {id} fired last {n} times");
             }
         }
+    }
+
+    /// Prefix-cache hit: a waiting sequence marked partially prefilled
+    /// (its cached blocks already forked into the pool ledger) admits
+    /// with a suffix-only chunk and needs only suffix blocks.
+    #[test]
+    fn cached_prefix_admits_suffix_only() {
+        let mut s = sched_chunked(4, 0);
+        let mut b = Budget::new(4); // 16 token slots
+        s.submit(1, vec![7; 14], 4, Priority::Normal).unwrap();
+        b.commit_chunk(1, 8); // the forked blocks the hit already holds
+        s.set_prefilled(1, 8);
+        let p = s.plan(&b);
+        assert_eq!(p.prefill.len(), 1);
+        assert_eq!(
+            p.prefill[0],
+            PrefillChunk { id: 1, start: 8, len: 4, last: false }
+        );
+        b.commit_chunk(1, 4);
+        s.on_chunk(1, 4);
+        let p2 = s.plan(&b);
+        assert_eq!(
+            p2.prefill[0],
+            PrefillChunk { id: 1, start: 12, len: 2, last: true }
+        );
+
+        // A fully-cached prompt is capped at len-1: the final token is
+        // always prefilled so the last chunk produces logits.
+        s.submit(2, vec![9; 8], 4, Priority::Normal).unwrap();
+        s.set_prefilled(2, 8);
+        assert_eq!(s.info(2).unwrap().prefilled, 7);
+        // set_prefilled is a no-op once the sequence is running.
+        s.set_prefilled(1, 0);
+        assert_eq!(s.info(1).unwrap().prefilled, 12);
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //!   (or, under admission-control backpressure / on an invalid request:)
 //! ← {"event":"rejected","id":0,"msg":"backpressure: waiting queue full"}
 //!
-//! → {"op":"metrics"}      ← {"event":"metrics","report":"..."}
+//! → {"op":"metrics"}      ← {"event":"metrics","report":"...",
+//!                            "prefix_hits":…,"prefix_misses":…,
+//!                            "prefix_evictions":…,"prefix_cached_tokens":…}
 //! → {"op":"traffic"}      ← {"event":"traffic", ...counters...}
 //! → {"op":"path","value":"baseline"|"precompute"}  ← {"event":"ok"}
 //! → {"op":"ping"}         ← {"event":"pong"}
@@ -219,10 +221,31 @@ fn handle_conn(
         };
         match req.get_opt("op").and_then(|v| v.as_str()) {
             Some("ping") => send(&out, &obj(vec![("event", s("pong"))]))?,
-            Some("metrics") => send(
-                &out,
-                &obj(vec![("event", s("metrics")), ("report", s(metrics.report()))]),
-            )?,
+            Some("metrics") => {
+                use std::sync::atomic::Ordering::Relaxed;
+                send(
+                    &out,
+                    &obj(vec![
+                        ("event", s("metrics")),
+                        ("report", s(metrics.report())),
+                        // Prefix-cache stats as structured fields so
+                        // clients need not parse the report text.
+                        ("prefix_hits", n(metrics.prefix_hits.load(Relaxed) as f64)),
+                        (
+                            "prefix_misses",
+                            n(metrics.prefix_misses.load(Relaxed) as f64),
+                        ),
+                        (
+                            "prefix_evictions",
+                            n(metrics.prefix_evictions.load(Relaxed) as f64),
+                        ),
+                        (
+                            "prefix_cached_tokens",
+                            n(metrics.prefix_cached_tokens.load(Relaxed) as f64),
+                        ),
+                    ]),
+                )?
+            }
             Some("traffic") => {
                 let t = traffic.snapshot();
                 send(

@@ -190,6 +190,54 @@ pub fn mixed_workload(
     out
 }
 
+/// Multi-tenant shared-system-prompt workload (S12c): `n_tenants`
+/// tenants each own a fixed random system prompt of `system_tokens`
+/// tokens; every request is that shared prefix plus a fresh user suffix
+/// of 1..=`user_tokens` tokens.  This is the traffic shape the
+/// cross-request prefix cache (`rust/src/prefixcache/`) targets: within
+/// a tenant every request after the first should prefill only its
+/// suffix.  Arrivals are a deterministic seed-keyed shuffle so tenants
+/// interleave (the cache must match across unrelated traffic, not in a
+/// convenient back-to-back order).
+#[allow(clippy::too_many_arguments)]
+pub fn tenant_workload(
+    n_tenants: usize,
+    requests_per_tenant: usize,
+    system_tokens: usize,
+    user_tokens: usize,
+    max_new: usize,
+    vocab: u32,
+    seed: u64,
+) -> Vec<SimRequest> {
+    use crate::scheduler::Priority;
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let tok = |rng: &mut Rng| rng.below(vocab.max(1) as u64) as u32;
+    let systems: Vec<Vec<u32>> = (0..n_tenants)
+        .map(|_| (0..system_tokens.max(1)).map(|_| tok(&mut rng)).collect())
+        .collect();
+    let mut out = Vec::with_capacity(n_tenants * requests_per_tenant);
+    for sys in &systems {
+        for _ in 0..requests_per_tenant {
+            let mut prompt = sys.clone();
+            for _ in 0..rng.range(1, user_tokens.max(1) + 1) {
+                prompt.push(tok(&mut rng));
+            }
+            out.push(SimRequest {
+                prompt,
+                max_new_tokens: max_new,
+                priority: Priority::Normal,
+            });
+        }
+    }
+    // Fisher-Yates with the same deterministic stream.
+    for i in (1..out.len()).rev() {
+        let j = rng.range(0, i + 1);
+        out.swap(i, j);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,6 +300,31 @@ mod tests {
         // Deterministic per seed.
         let w2 = mixed_workload(10, 8, 3, 64, 16, 512, 42);
         assert_eq!(w.len(), w2.len());
+        assert!(w.iter().zip(&w2).all(|(a, b)| a.prompt == b.prompt));
+    }
+
+    #[test]
+    fn tenant_workload_shares_system_prompts() {
+        let w = tenant_workload(3, 4, 32, 8, 16, 512, 9);
+        assert_eq!(w.len(), 12);
+        // Recover the tenant system prompts from the 32-token prefixes:
+        // exactly 3 distinct ones, each shared by exactly 4 requests.
+        let mut prefixes: Vec<Vec<u32>> =
+            w.iter().map(|r| r.prompt[..32].to_vec()).collect();
+        prefixes.sort();
+        prefixes.dedup();
+        assert_eq!(prefixes.len(), 3, "expected one prefix per tenant");
+        for p in &prefixes {
+            let n = w.iter().filter(|r| r.prompt[..32] == p[..]).count();
+            assert_eq!(n, 4, "tenant prefix not shared by all its requests");
+        }
+        for r in &w {
+            let suffix = r.prompt.len() - 32;
+            assert!((1..=8).contains(&suffix));
+            assert!(r.prompt.iter().all(|&t| t < 512));
+        }
+        // Deterministic per seed.
+        let w2 = tenant_workload(3, 4, 32, 8, 16, 512, 9);
         assert!(w.iter().zip(&w2).all(|(a, b)| a.prompt == b.prompt));
     }
 }

@@ -230,6 +230,90 @@ fn chunked_prefill_matches_monolithic() {
     );
 }
 
+/// Cross-request prefix cache: two requests sharing a long system prompt
+/// produce token-identical output at temperature 0 with the cache on vs
+/// off, and the second request executes strictly fewer prefill tokens
+/// (the cached span is forked, not recomputed — neither attention nor
+/// the first-layer table gather run for it).
+#[test]
+fn prefix_cache_reuses_shared_system_prompt() {
+    let dir = require_artifacts!();
+    // 24-token shared "system prompt" (3 full 8-token KV blocks are
+    // cacheable) + distinct short user suffixes; prompts stay under the
+    // tiny models' 32-token prefill bucket.
+    let system: Vec<u32> = (0..24).map(|i| (i * 13 % 500) as u32).collect();
+    let mk = |suffix: &[u32]| {
+        let mut p = system.clone();
+        p.extend_from_slice(suffix);
+        p
+    };
+    let prompts = [mk(&[7, 9, 11]), mk(&[401, 3, 77, 12])];
+    let mut outs: Vec<Vec<Vec<u32>>> = Vec::new();
+    let mut prefill_tokens_per_req: Vec<Vec<u64>> = Vec::new();
+    for enable in [false, true] {
+        let mut cfg = serving(&dir, "tiny-serial", true);
+        cfg.enable_prefix_cache = enable;
+        cfg.kv_block_tokens = 8;
+        cfg.prefill_chunk_tokens = 8;
+        cfg.step_token_budget = 16;
+        let mut c = Coordinator::from_config(&cfg).unwrap();
+        let mut per_req = Vec::new();
+        let mut ids = Vec::new();
+        // Sequentially: the first request must be finished (and inserted
+        // into the cache) before the second submits and matches.
+        for p in &prompts {
+            let before = c.engine().traffic.snapshot().prefill_tokens;
+            let id = c
+                .submit(GenRequest {
+                    prompt: p.clone(),
+                    max_new_tokens: 8,
+                    priority: Priority::Normal,
+                    params: SamplingParams::default(),
+                })
+                .unwrap();
+            c.run_to_completion(50_000).unwrap();
+            per_req.push(c.engine().traffic.snapshot().prefill_tokens - before);
+            ids.push(id);
+        }
+        if enable {
+            use std::sync::atomic::Ordering::Relaxed;
+            assert!(c.metrics.prefix_hits.load(Relaxed) >= 1, "no cache hit");
+            assert_eq!(
+                c.metrics.prefix_cached_tokens.load(Relaxed),
+                24,
+                "second request should reuse the system prompt's 3 blocks"
+            );
+            assert!(c.prefix_cache_blocks_held() > 0);
+        }
+        outs.push(
+            ids.iter()
+                .map(|id| c.generated(*id).unwrap().to_vec())
+                .collect(),
+        );
+        prefill_tokens_per_req.push(per_req);
+    }
+    assert_eq!(
+        outs[0], outs[1],
+        "prefix cache changed temperature-0 output"
+    );
+    // Cache off: both requests prefill their whole prompt.  Cache on:
+    // the first (cold) does too, the second prefills only its suffix.
+    assert_eq!(prefill_tokens_per_req[0][1], prompts[1].len() as u64);
+    assert_eq!(prefill_tokens_per_req[1][0], prompts[0].len() as u64);
+    assert!(
+        prefill_tokens_per_req[1][1] < prefill_tokens_per_req[0][1],
+        "cache hit did not reduce executed prefill tokens \
+         ({} vs {})",
+        prefill_tokens_per_req[1][1],
+        prefill_tokens_per_req[0][1]
+    );
+    assert_eq!(
+        prefill_tokens_per_req[1][1],
+        (prompts[1].len() - 24) as u64,
+        "second request should prefill exactly the uncached suffix"
+    );
+}
+
 /// Admission control: once `max_waiting` requests queue up, further
 /// submits bounce with `Error::Backpressure` — and the engine still
 /// drains everything it accepted.

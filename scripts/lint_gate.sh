@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Lint gate (CI-runnable):
+#   1. clippy over every target (lib, bins, tests, benches, examples)
+#      with warnings promoted to errors;
+#   2. rustfmt in check mode — formatting drift fails the gate.
+#
+# Usage: scripts/lint_gate.sh   (from anywhere inside the repo)
+set -euo pipefail
+# The crate manifest lives under rust/ (same layout as docs_gate.sh).
+cd "$(dirname "$0")/../rust"
+
+echo "[lint-gate] cargo clippy --all-targets (warnings are errors)"
+cargo clippy --all-targets --quiet -- -D warnings
+
+echo "[lint-gate] cargo fmt --check"
+cargo fmt --check
+
+echo "[lint-gate] OK"
