@@ -8,7 +8,7 @@
 
 use firstlayer::manifest::Manifest;
 use firstlayer::runtime::{CacheBatch, ModelEngine, Runtime, StepPath};
-use firstlayer::util::timer::{bench, report};
+use firstlayer::util::timer::{bench, emit_json, report};
 
 fn main() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -93,5 +93,74 @@ fn main() {
             engine.decode(path, &tokens, &pos, &caches).unwrap();
         });
         report(&format!("decode {} B=4", path.label()), &s, None);
+    }
+
+    // Device-resident KV: chunk-span execution, buffer-chained device
+    // cache vs the legacy per-token upload/readback host path.  The
+    // transfer counters make the acceptance criterion measurable: the
+    // device path performs exactly ONE cache-pair upload per span.
+    println!("\n-- decode_span: device-resident vs host cache path --");
+    if let Ok(bucket) = engine.decode_bucket(1, StepPath::Precompute) {
+        let span_len = 16.min(cfg.max_seq.saturating_sub(1)).max(1);
+        let tokens: Vec<u32> = (0..span_len)
+            .map(|i| (i as u32 * 7) % cfg.vocab_size as u32)
+            .collect();
+        let (warmup, iters) = (2usize, 10usize);
+        let runs = (warmup + iters) as u64;
+        for device in [true, false] {
+            engine.set_device_kv(device);
+            let label = if device { "device" } else { "host" };
+            let stats = engine.transfers();
+            let before = stats.snapshot();
+            let s = bench(warmup, iters, || {
+                let mut caches = CacheBatch::zeros(
+                    cfg.n_layers,
+                    bucket,
+                    cfg.max_seq,
+                    cfg.n_kv_heads,
+                    cfg.head_dim(),
+                );
+                engine
+                    .decode_span(StepPath::Precompute, &tokens, 0, &mut caches)
+                    .unwrap();
+            });
+            let d = stats.snapshot().since(&before);
+            report(
+                &format!("span {label} len={span_len}"),
+                &s,
+                Some((span_len as f64 / s.mean.as_secs_f64(), "tok/s")),
+            );
+            let mib = |b: u64| b as f64 / runs as f64 / (1u64 << 20) as f64;
+            println!(
+                "  per-span-token {:?};  per span: cache h2d {:.2} MiB \
+                 ({} uploads), cache d2h {:.2} MiB ({} syncs)",
+                s.mean / span_len as u32,
+                mib(d.cache_h2d_bytes),
+                d.cache_uploads / runs,
+                mib(d.cache_d2h_bytes),
+                d.cache_syncs / runs,
+            );
+            if device && engine.device_kv_active() {
+                assert_eq!(
+                    d.cache_uploads, runs,
+                    "device span must upload the cache pair exactly once per span"
+                );
+            } else if device {
+                println!("  (device path unavailable; numbers are host-path)");
+            }
+            emit_json(
+                &format!("e2e_span_{label}"),
+                &[
+                    ("span_len", span_len as f64),
+                    ("mean_us", s.mean.as_micros() as f64),
+                    ("per_token_us", s.mean.as_micros() as f64 / span_len as f64),
+                    ("cache_h2d_bytes_per_span", d.cache_h2d_bytes as f64 / runs as f64),
+                    ("cache_d2h_bytes_per_span", d.cache_d2h_bytes as f64 / runs as f64),
+                    ("cache_uploads_per_span", d.cache_uploads as f64 / runs as f64),
+                    ("cache_syncs_per_span", d.cache_syncs as f64 / runs as f64),
+                ],
+            );
+        }
+        engine.set_device_kv(true);
     }
 }

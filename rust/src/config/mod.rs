@@ -165,6 +165,14 @@ pub struct ServingConfig {
     /// additionally caps the cache at half of `kv_blocks` so serving
     /// always keeps pool headroom (eviction is demand-driven on top).
     pub prefix_cache_blocks: usize,
+    /// Device-resident KV (`rust/src/runtime/session.rs`): chain decode
+    /// steps and prefill-continuation spans through device-held cache
+    /// buffers — one cache upload per span / decode-batch session and
+    /// logits-only per-step readback — instead of moving the full dense
+    /// cache across the bus every step.  Disabling forces the legacy
+    /// host path everywhere (the equivalence oracle); the engine also
+    /// falls back by itself if the PJRT wrapper cannot chain buffers.
+    pub enable_device_kv: bool,
     /// Sampling defaults.
     pub temperature: f64,
     pub top_k: usize,
@@ -187,6 +195,7 @@ impl Default for ServingConfig {
             max_waiting: 256,
             enable_prefix_cache: true,
             prefix_cache_blocks: 0,
+            enable_device_kv: true,
             temperature: 0.0,
             top_k: 0,
             seed: 0xF17A,

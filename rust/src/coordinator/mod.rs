@@ -33,7 +33,7 @@ use crate::kvcache::PagedKvCache;
 use crate::manifest::Manifest;
 use crate::metrics::Metrics;
 use crate::prefixcache::PrefixCache;
-use crate::runtime::{CacheBatch, ModelEngine, Runtime, StepPath};
+use crate::runtime::{CacheBatch, DeviceCacheSession, ModelEngine, Runtime, StepPath};
 use crate::scheduler::{KvBudget, PrefillChunk, Priority, SchedConfig, Scheduler, State};
 use crate::tokenizer::{Tokenizer, EOS};
 use crate::util::rng::Rng;
@@ -75,17 +75,44 @@ struct ReqState {
     done: Option<FinishReason>,
 }
 
+/// A live device-resident decode session and the batch composition it
+/// serves.  While the ids (and serving path) are unchanged step over
+/// step, the coordinator chains decode through `sess` — no cache upload,
+/// no cache readback, no paged-store append — and tracks how far each
+/// row's device cache has run ahead of the host store (`pending`).  Any
+/// composition change (finish, admission, preemption, path switch)
+/// syncs the pair down once and writes the pending rows back via
+/// `append_span`.
+struct DecodeSessionState {
+    /// Batch composition: ordered ids the session's rows are bound to.
+    ids: Vec<u64>,
+    path: StepPath,
+    /// Paged-store length per row when the session was built.
+    base: Vec<usize>,
+    /// Tokens decoded on-device per row since then (not yet in the
+    /// paged store).
+    pending: Vec<usize>,
+    sess: DeviceCacheSession,
+}
+
 struct KvView<'a> {
     kv: &'a PagedKvCache,
     /// Prefix-cache blocks reclaimable on demand (refcount == 1: lease
     /// only).  The planner treats them as free; `Coordinator::step`
     /// evicts exactly the shortfall before executing the plan.
     evictable: usize,
+    /// Blocks the live decode session's deferred writeback will consume
+    /// (device rows not yet in the paged store).  Subtracted from the
+    /// planner's free view so admission can never take space the sync
+    /// needs.
+    reserved: usize,
+    /// The live session, for virtual (device-side) sequence lengths.
+    sess: Option<&'a DecodeSessionState>,
 }
 
 impl KvBudget for KvView<'_> {
     fn free_blocks(&self) -> usize {
-        self.kv.free_blocks() + self.evictable
+        (self.kv.free_blocks() + self.evictable).saturating_sub(self.reserved)
     }
     fn blocks_for(&self, tokens: usize) -> usize {
         self.kv.blocks_for(tokens)
@@ -94,6 +121,22 @@ impl KvBudget for KvView<'_> {
         self.kv.blocks_held(id)
     }
     fn growth_needs_block(&self, id: u64) -> bool {
+        // Session rows grow on the device: judge block demand by the
+        // virtual length (base + pending), not the lagging paged store.
+        // The next token needs a block only beyond BOTH what the
+        // sequence already holds (a pre-allocated spare counts, exactly
+        // as in `PagedKvCache::growth_needs_block`) and what `reserved`
+        // already earmarks for the writeback (`blocks_for(vlen)`).
+        if let Some(d) = self.sess {
+            if let Some(i) = d.ids.iter().position(|x| *x == id) {
+                if self.kv.seq_len(id) == Some(d.base[i]) {
+                    let vlen = d.base[i] + d.pending[i];
+                    let covered =
+                        self.kv.blocks_for(vlen).max(self.kv.blocks_held(id));
+                    return self.kv.blocks_for(vlen + 1) > covered;
+                }
+            }
+        }
         self.kv.growth_needs_block(id)
     }
 }
@@ -118,6 +161,12 @@ pub struct Coordinator {
     /// Cross-request prefix cache (None = disabled): match-on-submit,
     /// insert-on-finish, demand-driven eviction in `step`.
     prefix: Option<PrefixCache>,
+    /// Live steady-state decode session, reused while the batch
+    /// composition is unchanged; synced to host on recomposition,
+    /// preemption, and path switches.  Whether the device path is used
+    /// at all lives on the engine (`ModelEngine::device_kv_active`, set
+    /// from `ServingConfig::enable_device_kv` at construction).
+    dsess: Option<DecodeSessionState>,
 }
 
 impl Coordinator {
@@ -191,6 +240,7 @@ impl Coordinator {
         } else {
             None
         };
+        engine.set_device_kv(cfg.enable_device_kv);
         Ok(Coordinator {
             engine,
             kv,
@@ -206,6 +256,7 @@ impl Coordinator {
             max_decode_bucket,
             max_waiting: cfg.max_waiting,
             prefix,
+            dsess: None,
         })
     }
 
@@ -223,12 +274,23 @@ impl Coordinator {
     }
 
     /// Switch the serving path live (both artifact families are loaded).
+    /// A live decode session is bound to its path's artifacts, so it is
+    /// synced to host before the switch.
     pub fn set_path(&mut self, path: StepPath) -> Result<()> {
         if path != StepPath::Baseline && !self.engine.config().rope {
             return Err(Error::Config("precompute needs RoPE".into()));
         }
+        if path != self.path {
+            self.sync_or_recompute(&[])?;
+        }
         self.path = path;
         Ok(())
+    }
+
+    /// Whether a device-resident decode session is currently live
+    /// (diagnostics and tests).
+    pub fn device_session_active(&self) -> bool {
+        self.dsess.is_some()
     }
 
     /// Submit token ids; returns the request id.  Errors with
@@ -360,16 +422,38 @@ impl Coordinator {
     pub fn step(&mut self) -> Result<usize> {
         // The planner sees reclaimable prefix-cache blocks (lease-only
         // refcounts) as free; the shortfall is evicted below, after the
-        // plan's actual block demand is known.
+        // plan's actual block demand is known.  Blocks the live decode
+        // session's deferred writeback will need are subtracted from the
+        // free view instead (the sync must never lose a race to
+        // admission).
         let evictable = self
             .prefix
             .as_ref()
             .map_or(0, |pc| pc.evictable_blocks(&self.kv));
+        let reserved = self.session_writeback_blocks(&[]);
         let plan = self.sched.plan(&KvView {
             kv: &self.kv,
             evictable,
+            reserved,
+            sess: self.dsess.as_ref(),
         });
         let mut touched = 0;
+
+        // -- device-session sync on recomposition ---------------------------
+        // The session survives only while this plan decodes exactly its
+        // ids on its path.  Otherwise write the device-ahead rows back
+        // BEFORE preemption removals can recycle a victim's id (a
+        // preempted-and-replayed sequence could otherwise coincide with
+        // a stale row's expected length).  Victims' pending rows are
+        // dropped, not written back — preemption recomputes them from
+        // the replay prompt anyway.
+        let reuse = self
+            .dsess
+            .as_ref()
+            .is_some_and(|d| d.path == self.path && d.ids == plan.decode);
+        if !reuse {
+            self.sync_or_recompute(&plan.preempt)?;
+        }
 
         // -- preemptions ----------------------------------------------------
         for id in &plan.preempt {
@@ -404,9 +488,14 @@ impl Coordinator {
                     .blocks_for(end)
                     .saturating_sub(self.kv.blocks_held(c.id));
             }
-            for id in &plan.decode {
-                if self.kv.growth_needs_block(*id) {
-                    demand += 1;
+            // A reused device session appends nothing to the paged store
+            // this step (rows accumulate on-device; their blocks are
+            // reserved in the planner's view and claimed at sync time).
+            if !reuse {
+                for id in &plan.decode {
+                    if self.kv.growth_needs_block(*id) {
+                        demand += 1;
+                    }
                 }
             }
             if self.kv.free_blocks() < demand {
@@ -626,8 +715,294 @@ impl Coordinator {
         Ok(out.logits)
     }
 
+    /// One decode step for `ids`.  On the device-resident path the
+    /// coordinator keeps a per-bucket [`DeviceCacheSession`] alive across
+    /// steps while the batch composition is unchanged: the cache pair is
+    /// uploaded once at session start, each step chains through the
+    /// previous step's output buffers reading back only logits, and the
+    /// paged store is caught up from the session deltas at the next sync
+    /// point.  The legacy host path (gather → upload → execute → full
+    /// readback → append, every step) remains the fallback and oracle.
     fn run_decode(&mut self, ids: &[u64]) -> Result<()> {
         let t0 = Instant::now();
+        let engine = Arc::clone(&self.engine);
+        if !engine.device_kv_active() {
+            // Disabled by config, or gone host-sticky mid-run: flush any
+            // session built before that.
+            self.sync_or_recompute(&[])?;
+            return self.run_decode_host(ids, t0);
+        }
+        let matches = self
+            .dsess
+            .as_ref()
+            .is_some_and(|d| d.ids == ids && d.path == self.path);
+        if !matches {
+            self.sync_or_recompute(&[])?;
+            if !engine.device_kv_active() {
+                // The sync's recovery path just went host-sticky.
+                return self.run_decode_host(ids, t0);
+            }
+            let cfg = engine.config().clone();
+            let n = ids.len();
+            let bucket = engine.decode_bucket(n, self.path)?;
+            let s = cfg.max_seq;
+            let mut caches = CacheBatch::zeros(
+                cfg.n_layers,
+                bucket,
+                s,
+                cfg.n_kv_heads,
+                cfg.head_dim(),
+            );
+            let mut base = vec![0usize; n];
+            for (i, id) in ids.iter().enumerate() {
+                base[i] = self.kv.gather_into_batch(
+                    *id,
+                    s,
+                    bucket,
+                    i,
+                    &mut caches.k,
+                    &mut caches.v,
+                )?;
+            }
+            match engine.begin_cache_session(&caches) {
+                Ok(sess) => {
+                    self.metrics
+                        .kv_sessions
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    self.dsess = Some(DecodeSessionState {
+                        ids: ids.to_vec(),
+                        path: self.path,
+                        base,
+                        pending: vec![0; n],
+                        sess,
+                    });
+                }
+                Err(e) => {
+                    engine.mark_device_kv_unhealthy();
+                    eprintln!(
+                        "[firstlayer] device decode session unavailable ({e}); \
+                         host path from here on (sticky)"
+                    );
+                    return self.run_decode_host(ids, t0);
+                }
+            }
+        }
+        // The token to feed is the last generated one; positions are the
+        // VIRTUAL lengths (paged store + device-ahead rows).
+        let path = self.path;
+        let mut tokens = Vec::with_capacity(ids.len());
+        let mut pos = Vec::with_capacity(ids.len());
+        {
+            let d = self.dsess.as_ref().expect("session just ensured");
+            for (i, id) in ids.iter().enumerate() {
+                let st = self.reqs.get(id).ok_or_else(|| {
+                    Error::Engine(format!("decode of unknown request {id}"))
+                })?;
+                let tok = *st
+                    .generated
+                    .last()
+                    .ok_or_else(|| Error::Engine("decode before first token".into()))?;
+                tokens.push(tok);
+                pos.push((d.base[i] + d.pending[i]) as u32);
+            }
+        }
+        let d = self.dsess.as_mut().expect("session just ensured");
+        let logits_all =
+            match engine.decode_on_session(path, &tokens, &pos, &mut d.sess, None, true, true) {
+                Ok(l) => l,
+                Err(e) => {
+                    // The session is untouched on error: write back what
+                    // already succeeded and serve host-side from here on
+                    // (sticky — rebuilding a session per step would pay
+                    // for a failed device attempt AND the host step).
+                    engine.mark_device_kv_unhealthy();
+                    eprintln!(
+                        "[firstlayer] device decode step failed ({e}); \
+                         syncing session, host path from here on (sticky)"
+                    );
+                    self.sync_or_recompute(&[])?;
+                    return self.run_decode_host(ids, t0);
+                }
+            };
+        let d = self.dsess.as_mut().expect("session survives a step");
+        for p in d.pending.iter_mut() {
+            *p += 1;
+        }
+        self.metrics
+            .kv_session_steps
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.decode_step.record(t0.elapsed());
+        let vocab = self.vocab();
+        for (i, id) in ids.iter().enumerate() {
+            let logits = &logits_all[i * vocab..(i + 1) * vocab];
+            self.emit_token(*id, logits)?;
+        }
+        Ok(())
+    }
+
+    /// [`Coordinator::sync_decode_session`] with last-resort recovery: a
+    /// sync that fails once may fail forever (a device gone bad keeps
+    /// its buffers unreadable), and the step loop must not wedge
+    /// retrying it while the session's requests never finish.  On sync
+    /// failure the device path is marked unhealthy (host-sticky) and the
+    /// device-ahead rows are *recomputed* through the host span path —
+    /// sound because KV is a pure function of the token prefix, and
+    /// every fed token is in the request's generated history.
+    fn sync_or_recompute(&mut self, skip: &[u64]) -> Result<()> {
+        match self.sync_decode_session(skip) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.engine.mark_device_kv_unhealthy();
+                eprintln!(
+                    "[firstlayer] device session sync failed ({e}); \
+                     recomputing the pending rows host-side"
+                );
+                self.recompute_session_rows(skip)
+            }
+        }
+    }
+
+    /// Drop the live session and recompute each live row's device-ahead
+    /// K/V host-side: the tokens fed on the chained steps are the last
+    /// `pending` entries of the request's generated history (minus the
+    /// not-yet-executed newest token), so a host `decode_span` over them
+    /// rebuilds exactly the missing rows into the paged store.
+    fn recompute_session_rows(&mut self, skip: &[u64]) -> Result<()> {
+        let Some(d) = self.dsess.take() else {
+            return Ok(());
+        };
+        for i in 0..d.ids.len() {
+            let (id, p, base) = (d.ids[i], d.pending[i], d.base[i]);
+            if p == 0 || skip.contains(&id) {
+                continue;
+            }
+            if self.kv.seq_len(id) != Some(base) {
+                continue;
+            }
+            let Some(gen) = self.reqs.get(&id).map(|r| r.generated.clone()) else {
+                continue;
+            };
+            // Row base+j holds the KV of the token fed at chained step j:
+            // generated[g0 - 1 + j] with g0 the generated count at
+            // session start (= gen.len() - p while the newest token has
+            // not decoded yet).
+            if gen.len() < p + 1 {
+                continue; // defensive: history shorter than the session
+            }
+            let toks = gen[gen.len() - p - 1..gen.len() - 1].to_vec();
+            self.run_span(id, &toks, base)?;
+        }
+        Ok(())
+    }
+
+    /// Blocks the live session's deferred writeback still needs, skipping
+    /// ids in `skip` (preemption victims whose rows are dropped).
+    fn session_writeback_blocks(&self, skip: &[u64]) -> usize {
+        self.dsess
+            .as_ref()
+            .map_or(0, |d| self.writeback_blocks_of(d, skip))
+    }
+
+    fn writeback_blocks_of(&self, d: &DecodeSessionState, skip: &[u64]) -> usize {
+        d.ids
+            .iter()
+            .enumerate()
+            .filter(|(_, id)| !skip.contains(id))
+            .map(|(i, id)| {
+                if self.kv.seq_len(*id) != Some(d.base[i]) {
+                    return 0; // finished/removed: nothing to write back
+                }
+                self.kv
+                    .blocks_for(d.base[i] + d.pending[i])
+                    .saturating_sub(self.kv.blocks_held(*id))
+            })
+            .sum()
+    }
+
+    /// Sync the live decode session to host: ONE cache-pair readback,
+    /// then `append_span` of each row's device-ahead tokens into the
+    /// paged store, then drop the session.  Rows of ids in `skip`
+    /// (preemption victims) and of sequences no longer in the store
+    /// (finished) are dropped.  No-op without a session.
+    ///
+    /// Failure-safe by construction: the planner may have promised the
+    /// writeback's blocks out of *evictable* prefix-cache leases, so the
+    /// shortfall is evicted here first (at the sink — every sync call
+    /// site gets the guard); and the session is consumed only on
+    /// success.  On error the already-written rows are committed into
+    /// `base`/`pending`, so a retried sync (or a continued session —
+    /// positions are `base + pending` either way) stays exact instead
+    /// of silently losing KV rows while their tokens stand.
+    fn sync_decode_session(&mut self, skip: &[u64]) -> Result<()> {
+        let Some(mut d) = self.dsess.take() else {
+            return Ok(());
+        };
+        // Nothing to write back (no pending rows, or every pending row
+        // belongs to a victim / an already-removed sequence): drop the
+        // session without paying the pair readback — the common shape
+        // when a decode batch drains by finishing.
+        let needs_rows = d.ids.iter().enumerate().any(|(i, id)| {
+            d.pending[i] > 0
+                && !skip.contains(id)
+                && self.kv.seq_len(*id) == Some(d.base[i])
+        });
+        if !needs_rows {
+            return Ok(());
+        }
+        let need = self.writeback_blocks_of(&d, skip);
+        if self.kv.free_blocks() < need {
+            if let Some(pc) = self.prefix.as_mut() {
+                let evicted = pc.evict_for(&mut self.kv, need);
+                self.metrics
+                    .prefix_evictions
+                    .fetch_add(evicted as u64, std::sync::atomic::Ordering::Relaxed);
+            }
+        }
+        let (kc, vc) = match d.sess.read_cache_pair() {
+            Ok(pair) => pair,
+            Err(e) => {
+                self.dsess = Some(d); // untouched: retry next sync point
+                return Err(e);
+            }
+        };
+        self.metrics
+            .kv_session_syncs
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let dims = d.sess.dims();
+        debug_assert!(d.ids.len() <= dims[1], "session ids exceed the bucket");
+        for i in 0..d.ids.len() {
+            let (id, p, base) = (d.ids[i], d.pending[i], d.base[i]);
+            if p == 0 || skip.contains(&id) {
+                continue;
+            }
+            // Guard against id reuse across incarnations: the store must
+            // still be exactly where the session left it.
+            if self.kv.seq_len(id) != Some(base) {
+                continue;
+            }
+            let (new_k, new_v) = CacheBatch::extract_rows(dims, &kc, &vc, i, base, p);
+            if let Err(e) = self.kv.append_span(id, p, &new_k, &new_v) {
+                // append_span may have landed a prefix of the rows;
+                // commit exactly what reached the store so a retried
+                // sync (or a continued session — positions are
+                // base + pending either way) resumes there instead of
+                // silently losing KV rows whose tokens already stand.
+                let landed = self.kv.seq_len(id).unwrap_or(base) - base;
+                d.base[i] = base + landed;
+                d.pending[i] = p - landed;
+                self.dsess = Some(d);
+                return Err(e);
+            }
+            d.base[i] += p;
+            d.pending[i] = 0;
+        }
+        Ok(())
+    }
+
+    /// The legacy host decode step: dense gather from the paged store,
+    /// full cache upload + readback, per-sequence append.  Fallback and
+    /// equivalence oracle for the session path above.
+    fn run_decode_host(&mut self, ids: &[u64], t0: Instant) -> Result<()> {
         let cfg = self.engine.config().clone();
         let n = ids.len();
         let bucket = self.engine.decode_bucket(n, self.path)?;

@@ -83,6 +83,11 @@ pub struct PagedKvCache {
     /// Key = block id, value = lease count (the allocator refcount
     /// carries the same number of retains).
     leases: HashMap<u32, u32>,
+    /// Leased blocks whose refcount equals their lease count — held by
+    /// the prefix cache alone, reclaimable right now.  Maintained on
+    /// every lease/refcount transition so the per-step planner reads it
+    /// in O(1) instead of walking the prefix-cache node arena.
+    evictable_leased: usize,
     /// Tokens per block.
     block_tokens: usize,
     /// Values per (layer-stacked) slot: `L · KH · hd`.
@@ -109,6 +114,7 @@ impl PagedKvCache {
             alloc: BlockAllocator::new(total_blocks),
             seqs: HashMap::new(),
             leases: HashMap::new(),
+            evictable_leased: 0,
             block_tokens,
             slot_width,
             n_layers,
@@ -175,7 +181,7 @@ impl PagedKvCache {
                 Ok(b) => blocks.push(b),
                 Err(e) => {
                     for b in blocks {
-                        self.alloc.release(b);
+                        self.release_block(b);
                     }
                     return Err(e);
                 }
@@ -185,6 +191,39 @@ impl PagedKvCache {
         Ok(())
     }
 
+    /// Whether `block` is held by prefix-cache leases alone (refcount ==
+    /// lease count): reclaimable without touching any sequence.
+    fn lease_evictable(&self, block: u32) -> bool {
+        self.leases
+            .get(&block)
+            .is_some_and(|&c| self.alloc.refcount(block) == c)
+    }
+
+    /// Re-derive `block`'s contribution to the evictable count after a
+    /// refcount or lease transition (`was` = evictable before it).
+    fn note_evictable(&mut self, block: u32, was: bool) {
+        let now = self.lease_evictable(block);
+        match (was, now) {
+            (false, true) => self.evictable_leased += 1,
+            (true, false) => self.evictable_leased -= 1,
+            _ => {}
+        }
+    }
+
+    /// Refcount retain that keeps the evictable-lease counter exact.
+    fn retain_block(&mut self, block: u32) {
+        let was = self.lease_evictable(block);
+        self.alloc.retain(block);
+        self.note_evictable(block, was);
+    }
+
+    /// Refcount release that keeps the evictable-lease counter exact.
+    fn release_block(&mut self, block: u32) {
+        let was = self.lease_evictable(block);
+        self.alloc.release(block);
+        self.note_evictable(block, was);
+    }
+
     /// Drop a sequence, releasing its blocks.
     pub fn remove(&mut self, seq: u64) -> Result<()> {
         let st = self
@@ -192,7 +231,7 @@ impl PagedKvCache {
             .remove(&seq)
             .ok_or_else(|| Error::KvCache(format!("seq {seq} not found")))?;
         for b in st.blocks {
-            self.alloc.release(b);
+            self.release_block(b);
         }
         Ok(())
     }
@@ -211,7 +250,7 @@ impl PagedKvCache {
         let mut blocks = st.blocks.clone();
         // Share full blocks.
         for &b in &blocks {
-            self.alloc.retain(b);
+            self.retain_block(b);
         }
         // Deep-copy the partial tail so the fork can diverge.
         if st.len % self.block_tokens != 0 && !blocks.is_empty() {
@@ -221,7 +260,7 @@ impl PagedKvCache {
                 Err(e) => {
                     // Roll back the retains: the fork was never created.
                     for &b in &blocks {
-                        self.alloc.release(b);
+                        self.release_block(b);
                     }
                     return Err(e);
                 }
@@ -230,7 +269,7 @@ impl PagedKvCache {
             let (src_o, dst_o) = (tail as usize * bw, fresh as usize * bw);
             self.k.copy_within(src_o..src_o + bw, dst_o);
             self.v.copy_within(src_o..src_o + bw, dst_o);
-            self.alloc.release(tail);
+            self.release_block(tail);
             *blocks.last_mut().unwrap() = fresh;
         }
         self.seqs.insert(dst, SeqState { blocks, len: st.len });
@@ -253,13 +292,16 @@ impl PagedKvCache {
     /// Take a lease on an allocated block: keeps it alive independent of
     /// any sequence (the prefix cache's ownership handle).
     pub fn lease_block(&mut self, block: u32) {
+        let was = self.lease_evictable(block);
         self.alloc.retain(block);
         *self.leases.entry(block).or_insert(0) += 1;
+        self.note_evictable(block, was);
     }
 
     /// Drop a lease taken with [`PagedKvCache::lease_block`]; the block
     /// returns to the free list once no sequence shares it either.
     pub fn unlease_block(&mut self, block: u32) {
+        let was = self.lease_evictable(block);
         let c = self
             .leases
             .get_mut(&block)
@@ -269,11 +311,20 @@ impl PagedKvCache {
             self.leases.remove(&block);
         }
         self.alloc.release(block);
+        self.note_evictable(block, was);
     }
 
     /// Blocks currently held by leases (prefix-cache accounting).
     pub fn leased_blocks(&self) -> usize {
         self.leases.values().map(|&c| c as usize).sum()
+    }
+
+    /// Leased blocks reclaimable right now (refcount == lease count: the
+    /// prefix cache alone holds them).  O(1) — the counter is maintained
+    /// on lease/refcount transitions, replacing the per-step O(nodes)
+    /// arena walk the prefix cache used to do.
+    pub fn evictable_leased_blocks(&self) -> usize {
+        self.evictable_leased
     }
 
     /// Register `seq` sharing `blocks` (all full: `len` must equal
@@ -302,7 +353,7 @@ impl PagedKvCache {
             }
         }
         for &b in blocks {
-            self.alloc.retain(b);
+            self.retain_block(b);
         }
         self.seqs.insert(
             seq,
@@ -536,6 +587,17 @@ impl PagedKvCache {
             if st.blocks.len() < self.blocks_for(st.len) {
                 return Err(Error::KvCache("seq has fewer blocks than len".into()));
             }
+        }
+        let evictable = self
+            .leases
+            .iter()
+            .filter(|(&b, &c)| self.alloc.refcount(b) == c)
+            .count();
+        if evictable != self.evictable_leased {
+            return Err(Error::KvCache(format!(
+                "evictable-lease counter {} != recount {evictable}",
+                self.evictable_leased
+            )));
         }
         Ok(())
     }
@@ -779,6 +841,36 @@ mod tests {
         c.check_invariants().unwrap();
         // Sharing freed blocks rejected (stale match).
         assert!(c.create_shared(4, &blocks, 8).is_err());
+    }
+
+    /// The O(1) evictable-lease counter tracks pin/unpin transitions
+    /// exactly: leasing a live sequence's blocks pins them, dropping the
+    /// sequence unpins, re-sharing pins again.
+    #[test]
+    fn evictable_lease_counter_tracks_transitions() {
+        let mut c = cache(); // 8 blocks x 4 tokens
+        let w = 12;
+        c.create(1, 1).unwrap();
+        for i in 0..8 {
+            c.append(1, &row(i as f32, w), &row(0.5, w)).unwrap();
+        }
+        let blocks = c.seq_blocks(1).unwrap().to_vec();
+        assert_eq!(c.evictable_leased_blocks(), 0);
+        for &b in &blocks {
+            c.lease_block(b); // refcount 2 (seq + lease): pinned
+        }
+        assert_eq!(c.evictable_leased_blocks(), 0);
+        c.remove(1).unwrap(); // lease only: both become evictable
+        assert_eq!(c.evictable_leased_blocks(), 2);
+        c.create_shared(2, &blocks, 8).unwrap(); // re-pinned by the fork
+        assert_eq!(c.evictable_leased_blocks(), 0);
+        c.remove(2).unwrap();
+        assert_eq!(c.evictable_leased_blocks(), 2);
+        c.unlease_block(blocks[0]);
+        assert_eq!(c.evictable_leased_blocks(), 1);
+        c.unlease_block(blocks[1]);
+        assert_eq!(c.evictable_leased_blocks(), 0);
+        c.check_invariants().unwrap();
     }
 
     /// Property test (in-tree harness): random alloc/append/fork/remove

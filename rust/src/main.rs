@@ -32,6 +32,7 @@ COMMANDS:
                   --max-waiting N (admission backpressure; 0 = unbounded)
                   --prefix-cache-blocks N (0 = per-model zoo default)
                   --no-prefix-cache (disable cross-request KV reuse)
+                  --no-device-kv (host-path caches: upload/readback per step)
   generate      one-shot generation from the CLI
                   --prompt \"text\" --max-new 32 --model tiny-serial
                   --path precompute|baseline --temperature 0 --top-k 0
@@ -108,6 +109,9 @@ fn serving_config(flags: &HashMap<String, String>) -> ServingConfig {
     }
     if flags.contains_key("no-prefix-cache") {
         cfg.enable_prefix_cache = false;
+    }
+    if flags.contains_key("no-device-kv") {
+        cfg.enable_device_kv = false;
     }
     cfg
 }

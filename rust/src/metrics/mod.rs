@@ -129,6 +129,101 @@ impl ValueHistogram {
     }
 }
 
+/// Host↔device transfer accounting for the PJRT runtime (S17): every
+/// upload and readback the engine performs, in bytes, with the KV-cache
+/// share broken out.  This is what makes the device-resident KV path
+/// auditable: `cache_uploads` counts upload *events* (one per K/V buffer
+/// pair), so a decode span that chains N tokens through one
+/// `DeviceCacheSession` shows exactly 1 where the legacy host path shows
+/// N.  Lock-free (the engine thread records, connection threads read).
+#[derive(Debug, Default)]
+pub struct TransferStats {
+    /// Total host→device / device→host bytes (all tensors).
+    pub h2d_bytes: AtomicU64,
+    pub d2h_bytes: AtomicU64,
+    /// Transfer event counts.
+    pub h2d_transfers: AtomicU64,
+    pub d2h_transfers: AtomicU64,
+    /// KV-cache share of the traffic: bytes uploaded as dense cache
+    /// batches and read back as cache syncs (subsets of the totals).
+    pub cache_h2d_bytes: AtomicU64,
+    pub cache_d2h_bytes: AtomicU64,
+    /// Cache upload events (one per K/V pair) and sync-to-host events.
+    pub cache_uploads: AtomicU64,
+    pub cache_syncs: AtomicU64,
+}
+
+impl TransferStats {
+    pub fn new() -> TransferStats {
+        TransferStats::default()
+    }
+
+    pub fn record_h2d(&self, bytes: u64, transfers: u64) {
+        self.h2d_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.h2d_transfers.fetch_add(transfers, Ordering::Relaxed);
+    }
+
+    pub fn record_d2h(&self, bytes: u64, transfers: u64) {
+        self.d2h_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.d2h_transfers.fetch_add(transfers, Ordering::Relaxed);
+    }
+
+    /// One K/V cache-pair upload of `bytes` total (already counted in the
+    /// generic totals by the upload path; this tags the cache share).
+    pub fn record_cache_upload(&self, bytes: u64) {
+        self.cache_h2d_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.cache_uploads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One cache sync-to-host (full K/V pair readback) of `bytes` total.
+    pub fn record_cache_sync(&self, bytes: u64) {
+        self.cache_d2h_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.cache_syncs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> TransferSnapshot {
+        TransferSnapshot {
+            h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
+            d2h_bytes: self.d2h_bytes.load(Ordering::Relaxed),
+            h2d_transfers: self.h2d_transfers.load(Ordering::Relaxed),
+            d2h_transfers: self.d2h_transfers.load(Ordering::Relaxed),
+            cache_h2d_bytes: self.cache_h2d_bytes.load(Ordering::Relaxed),
+            cache_d2h_bytes: self.cache_d2h_bytes.load(Ordering::Relaxed),
+            cache_uploads: self.cache_uploads.load(Ordering::Relaxed),
+            cache_syncs: self.cache_syncs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`TransferStats`] (bench deltas, server reports).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferSnapshot {
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub h2d_transfers: u64,
+    pub d2h_transfers: u64,
+    pub cache_h2d_bytes: u64,
+    pub cache_d2h_bytes: u64,
+    pub cache_uploads: u64,
+    pub cache_syncs: u64,
+}
+
+impl TransferSnapshot {
+    /// Field-wise difference against an earlier snapshot (bench sections).
+    pub fn since(&self, earlier: &TransferSnapshot) -> TransferSnapshot {
+        TransferSnapshot {
+            h2d_bytes: self.h2d_bytes - earlier.h2d_bytes,
+            d2h_bytes: self.d2h_bytes - earlier.d2h_bytes,
+            h2d_transfers: self.h2d_transfers - earlier.h2d_transfers,
+            d2h_transfers: self.d2h_transfers - earlier.d2h_transfers,
+            cache_h2d_bytes: self.cache_h2d_bytes - earlier.cache_h2d_bytes,
+            cache_d2h_bytes: self.cache_d2h_bytes - earlier.cache_d2h_bytes,
+            cache_uploads: self.cache_uploads - earlier.cache_uploads,
+            cache_syncs: self.cache_syncs - earlier.cache_syncs,
+        }
+    }
+}
+
 /// All serving-side metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -151,6 +246,12 @@ pub struct Metrics {
     pub prefix_evictions: AtomicU64,
     /// Total prompt tokens served from the cache instead of prefilled.
     pub prefix_cached_tokens: AtomicU64,
+    /// Device-resident KV decode sessions built (each begins with one
+    /// cache-pair upload) / steps served by reusing a live session
+    /// (buffer-chained, logits-only readback) / sync-to-host writebacks.
+    pub kv_sessions: AtomicU64,
+    pub kv_session_steps: AtomicU64,
+    pub kv_session_syncs: AtomicU64,
     /// Cached-tokens-per-request distribution (0 recorded on a miss).
     pub cached_tokens: ValueHistogram,
     /// Engine step latencies.
@@ -192,6 +293,13 @@ impl Metrics {
             self.cached_tokens.mean(),
             self.cached_tokens.quantile(0.50),
             self.cached_tokens.quantile(0.95),
+        );
+        let _ = writeln!(
+            s,
+            "device_kv: sessions={} chained_steps={} syncs={}",
+            self.kv_sessions.load(Ordering::Relaxed),
+            self.kv_session_steps.load(Ordering::Relaxed),
+            self.kv_session_syncs.load(Ordering::Relaxed),
         );
         for (name, h) in [
             ("decode_step", &self.decode_step),
@@ -277,6 +385,39 @@ mod tests {
         m.prefix_hits.fetch_add(2, Ordering::Relaxed);
         m.cached_tokens.record(32);
         assert!(m.report().contains("prefix_cache: hits=2"));
+    }
+
+    #[test]
+    fn transfer_stats_tag_cache_share() {
+        let t = TransferStats::new();
+        t.record_h2d(1000, 3);
+        t.record_h2d(512, 2);
+        t.record_cache_upload(512);
+        t.record_d2h(256, 1);
+        t.record_cache_sync(256);
+        let s = t.snapshot();
+        assert_eq!(s.h2d_bytes, 1512);
+        assert_eq!(s.h2d_transfers, 5);
+        assert_eq!(s.cache_h2d_bytes, 512);
+        assert_eq!(s.cache_uploads, 1);
+        assert_eq!(s.d2h_bytes, 256);
+        assert_eq!(s.cache_d2h_bytes, 256);
+        assert_eq!(s.cache_syncs, 1);
+        // Delta arithmetic for bench sections.
+        let before = s;
+        t.record_cache_upload(512);
+        let d = t.snapshot().since(&before);
+        assert_eq!(d.cache_uploads, 1);
+        assert_eq!(d.cache_h2d_bytes, 512);
+        assert_eq!(d.h2d_bytes, 0);
+    }
+
+    #[test]
+    fn report_contains_device_kv_line() {
+        let m = Metrics::new();
+        m.kv_sessions.fetch_add(2, Ordering::Relaxed);
+        m.kv_session_steps.fetch_add(10, Ordering::Relaxed);
+        assert!(m.report().contains("device_kv: sessions=2 chained_steps=10"));
     }
 
     #[test]

@@ -39,6 +39,13 @@
 //! leaf-first LRU eviction always makes progress.  The coordinator
 //! evicts on demand: the scheduler plans against `free + evictable`, and
 //! `evict_for` releases exactly the shortfall before execution.
+//!
+//! Both per-step quantities are cheap by construction: `evictable` is an
+//! O(1) counter the pool maintains on lease/refcount transitions
+//! ([`PagedKvCache::evictable_leased_blocks`]), and victim selection
+//! walks an intrusive LRU list from the cold end instead of min-scanning
+//! the node arena.  The property test below checks LRU-order
+//! equivalence against a stamped oracle on top of the set equivalence.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -47,6 +54,9 @@ use crate::kvcache::PagedKvCache;
 
 /// Root node index in the arena.
 const ROOT: usize = 0;
+
+/// Null link in the intrusive LRU list.
+const NONE: usize = usize::MAX;
 
 /// Result of [`PrefixCache::match_prefix`]: the longest cached prefix.
 #[derive(Debug, Clone, Default)]
@@ -68,8 +78,14 @@ struct Node {
     parent: usize,
     /// Children keyed by the child block's full token content.
     children: HashMap<Arc<[u32]>, usize>,
-    /// LRU clock value of the last match/insert touching this node.
+    /// LRU clock value of the last match/insert touching this node
+    /// (eviction order lives in the intrusive list below; the stamp
+    /// remains the in-progress-insert protection token).
     last_used: u64,
+    /// Intrusive LRU list links (head = least recent, tail = most
+    /// recent; `NONE` terminates).  Every live non-root node is linked.
+    lru_prev: usize,
+    lru_next: usize,
 }
 
 /// The radix tree.  One instance per [`PagedKvCache`]; all block
@@ -87,6 +103,10 @@ pub struct PrefixCache {
     /// Blocks currently leased (live non-root nodes).
     held: usize,
     clock: u64,
+    /// Intrusive LRU list ends (`NONE` when empty): eviction walks from
+    /// `lru_head` instead of min-scanning the arena.
+    lru_head: usize,
+    lru_tail: usize,
 }
 
 impl PrefixCache {
@@ -103,11 +123,61 @@ impl PrefixCache {
                 parent: ROOT,
                 children: HashMap::new(),
                 last_used: 0,
+                lru_prev: NONE,
+                lru_next: NONE,
             })],
             free_nodes: Vec::new(),
             held: 0,
             clock: 0,
+            lru_head: NONE,
+            lru_tail: NONE,
         }
+    }
+
+    /// Remove node `i` from the LRU list (it must be linked).
+    fn lru_unlink(&mut self, i: usize) {
+        let (prev, next) = {
+            let n = self.node(i);
+            (n.lru_prev, n.lru_next)
+        };
+        if prev == NONE {
+            self.lru_head = next;
+        } else {
+            self.node_mut(prev).lru_next = next;
+        }
+        if next == NONE {
+            self.lru_tail = prev;
+        } else {
+            self.node_mut(next).lru_prev = prev;
+        }
+        let n = self.node_mut(i);
+        n.lru_prev = NONE;
+        n.lru_next = NONE;
+    }
+
+    /// Append node `i` (currently unlinked) at the most-recent end.
+    fn lru_push_mru(&mut self, i: usize) {
+        let tail = self.lru_tail;
+        {
+            let n = self.node_mut(i);
+            n.lru_prev = tail;
+            n.lru_next = NONE;
+        }
+        if tail == NONE {
+            self.lru_head = i;
+        } else {
+            self.node_mut(tail).lru_next = i;
+        }
+        self.lru_tail = i;
+    }
+
+    /// Mark node `i` most-recently used.
+    fn lru_touch(&mut self, i: usize) {
+        if self.lru_tail == i {
+            return;
+        }
+        self.lru_unlink(i);
+        self.lru_push_mru(i);
     }
 
     /// Blocks currently held (leased) by the tree.
@@ -136,26 +206,51 @@ impl PrefixCache {
     /// the final prefill chunk to produce logits).  Touches the matched
     /// path's LRU stamps.
     pub fn match_prefix(&mut self, prompt: &[u32]) -> PrefixMatch {
-        let bt = self.block_tokens;
-        let max_granules = prompt.len().saturating_sub(1) / bt;
         self.clock += 1;
         let clock = self.clock;
+        let path = self.walk_prefix(prompt);
+        let mut blocks = Vec::with_capacity(path.len());
+        // Root-to-leaf touch order leaves the deepest node most recent,
+        // matching the stamp ordering.
+        for &i in &path {
+            let n = self.node_mut(i);
+            n.last_used = clock;
+            blocks.push(n.block);
+            self.lru_touch(i);
+        }
+        let tokens = blocks.len() * self.block_tokens;
+        PrefixMatch { blocks, tokens }
+    }
+
+    /// [`PrefixCache::match_prefix`] without the LRU side effects — for
+    /// diagnostics and tests that must probe the tree without promoting
+    /// entries.
+    pub fn match_prefix_peek(&self, prompt: &[u32]) -> PrefixMatch {
+        let path = self.walk_prefix(prompt);
+        let blocks: Vec<u32> = path.iter().map(|&i| self.node(i).block).collect();
+        let tokens = blocks.len() * self.block_tokens;
+        PrefixMatch { blocks, tokens }
+    }
+
+    /// The single traversal core behind both matchers: node indices of
+    /// the longest cached block-aligned prefix, capped at
+    /// `prompt.len() - 1` tokens.
+    fn walk_prefix(&self, prompt: &[u32]) -> Vec<usize> {
+        let bt = self.block_tokens;
+        let max_granules = prompt.len().saturating_sub(1) / bt;
         let mut at = ROOT;
-        let mut blocks = Vec::new();
+        let mut path = Vec::new();
         for g in 0..max_granules {
             let key = &prompt[g * bt..(g + 1) * bt];
             match self.node(at).children.get(key) {
                 Some(&child) => {
-                    let n = self.node_mut(child);
-                    n.last_used = clock;
-                    blocks.push(n.block);
+                    path.push(child);
                     at = child;
                 }
                 None => break,
             }
         }
-        let tokens = blocks.len() * bt;
-        PrefixMatch { blocks, tokens }
+        path
     }
 
     /// Insert the block-aligned prefix of `prompt` into the tree,
@@ -182,6 +277,7 @@ impl PrefixCache {
             let key = &prompt[g * bt..(g + 1) * bt];
             if let Some(&child) = self.node(at).children.get(key) {
                 self.node_mut(child).last_used = clock;
+                self.lru_touch(child);
                 at = child;
                 continue;
             }
@@ -204,6 +300,8 @@ impl PrefixCache {
                 parent: at,
                 children: HashMap::new(),
                 last_used: clock,
+                lru_prev: NONE,
+                lru_next: NONE,
             };
             let id = match self.free_nodes.pop() {
                 Some(slot) => {
@@ -216,6 +314,7 @@ impl PrefixCache {
                 }
             };
             self.node_mut(at).children.insert(key, id);
+            self.lru_push_mru(id);
             self.held += 1;
             inserted += 1;
             at = id;
@@ -225,19 +324,15 @@ impl PrefixCache {
 
     /// Blocks reclaimable right now: live nodes whose block refcount is
     /// 1 (the lease alone — no sequence shares it).  The coordinator
-    /// adds this to the scheduler's free-block view.  O(nodes) when the
-    /// cache is non-empty (an intrusive evictable counter is a ROADMAP
-    /// item for pools where the cache holds thousands of blocks).
+    /// adds this to the scheduler's free-block view every step, so this
+    /// is O(1): the pool maintains the count on lease/refcount
+    /// transitions ([`PagedKvCache::evictable_leased_blocks`]) — all
+    /// leases are this tree's, one per live node.
     pub fn evictable_blocks(&self, kv: &PagedKvCache) -> usize {
         if self.held == 0 {
             return 0;
         }
-        self.nodes
-            .iter()
-            .skip(1)
-            .flatten()
-            .filter(|n| kv.block_refcount(n.block) == 1)
-            .count()
+        kv.evictable_leased_blocks()
     }
 
     /// Evict the least-recently-used unpinned leaf, releasing its lease.
@@ -249,33 +344,38 @@ impl PrefixCache {
         self.evict_lru(kv, None)
     }
 
-    /// LRU eviction core.  `protect_clock` excludes nodes stamped with
-    /// that clock value — the path an in-progress `insert` is standing
-    /// on.
+    /// LRU eviction core: walk the intrusive list from the
+    /// least-recently-used end and take the first evictable leaf — no
+    /// arena min-scan.  Pinned and interior nodes cluster near the
+    /// recent end in practice (matching re-touches whole paths), so the
+    /// walk is typically O(1).  `protect_clock` excludes nodes stamped
+    /// with that clock value — the path an in-progress `insert` is
+    /// standing on.
     fn evict_lru(
         &mut self,
         kv: &mut PagedKvCache,
         protect_clock: Option<u64>,
     ) -> Option<(Vec<u32>, u32)> {
-        let mut best: Option<usize> = None;
-        for (i, slot) in self.nodes.iter().enumerate().skip(1) {
-            let Some(n) = slot else { continue };
-            if !n.children.is_empty() || kv.block_refcount(n.block) != 1 {
-                continue;
+        let mut at = self.lru_head;
+        let i = loop {
+            if at == NONE {
+                return None;
             }
-            if protect_clock == Some(n.last_used) {
-                continue;
+            let n = self.node(at);
+            if n.children.is_empty()
+                && kv.block_refcount(n.block) == 1
+                && protect_clock != Some(n.last_used)
+            {
+                break at;
             }
-            if best.map_or(true, |b| n.last_used < self.node(b).last_used) {
-                best = Some(i);
-            }
-        }
-        let i = best?;
+            at = n.lru_next;
+        };
         let path = self.path_tokens(i);
         let (parent, key, block) = {
             let n = self.node(i);
             (n.parent, n.tokens.clone(), n.block)
         };
+        self.lru_unlink(i);
         self.node_mut(parent).children.remove(&key[..]);
         self.nodes[i] = None;
         self.free_nodes.push(i);
@@ -450,8 +550,11 @@ mod tests {
     /// Property test (in-tree harness, like the kvcache one): random
     /// insert/match/evict against a naive `HashMap<Vec<u32>, u32>`
     /// oracle of cached block-aligned prefixes.  Asserts match lengths
-    /// agree with the oracle, pool invariants hold after every op, and
-    /// ref-counts never leak blocks once everything is torn down.
+    /// agree with the oracle, pool invariants hold after every op,
+    /// ref-counts never leak blocks once everything is torn down, AND —
+    /// via a parallel stamp map mirroring every touch — that the
+    /// intrusive-list eviction picks a least-recently-used evictable
+    /// leaf, exactly like the arena min-scan it replaced.
     #[test]
     fn prop_matches_oracle_and_never_leaks() {
         for seed in 0..25u64 {
@@ -459,8 +562,11 @@ mod tests {
             let total = 48;
             let mut kv = kv(total);
             let mut pc = PrefixCache::new(BT, rng.range(2, 12));
-            // Oracle: cached prefix -> block id at that granule.
+            // Oracle: cached prefix -> block id at that granule, plus
+            // the LRU stamp of the last op that touched it.
             let mut oracle: HashMap<Vec<u32>, u32> = HashMap::new();
+            let mut stamps: HashMap<Vec<u32>, u64> = HashMap::new();
+            let mut oclock = 0u64;
             let mut next_id = 0u64;
             // A small template pool makes prefix collisions likely.
             let templates: Vec<Vec<u32>> = (0..4)
@@ -487,20 +593,22 @@ mod tests {
                             continue;
                         }
                         let blocks = grow_seq(&mut kv, id, &prompt);
+                        oclock += 1;
                         let n = pc.insert(&prompt, &blocks, &mut kv);
                         // Resync the oracle against the tree: capacity
                         // pressure inside `insert` may have evicted old
                         // entries, and `n` new granules joined.  A path
                         // is cached iff probing it (with one extra token
-                        // to sidestep the len-1 cap) matches fully.
-                        let cached = |pc: &mut PrefixCache, key: &[u32]| {
+                        // to sidestep the len-1 cap) matches fully; the
+                        // probe must NOT touch the LRU state, hence peek.
+                        let cached = |pc: &PrefixCache, key: &[u32]| {
                             let mut probe = key.to_vec();
                             probe.push(0);
-                            pc.match_prefix(&probe).tokens >= key.len()
+                            pc.match_prefix_peek(&probe).tokens >= key.len()
                         };
                         let stale: Vec<Vec<u32>> = oracle.keys().cloned().collect();
                         for k in stale {
-                            if !cached(&mut pc, &k) {
+                            if !cached(&pc, &k) {
                                 oracle.remove(&k);
                             }
                         }
@@ -508,16 +616,30 @@ mod tests {
                         let mut added = 0;
                         for g in 0..full {
                             let key = prompt[..(g + 1) * BT].to_vec();
-                            if cached(&mut pc, &key) {
+                            if cached(&pc, &key) {
                                 added += usize::from(!oracle.contains_key(&key));
                                 oracle.entry(key).or_insert(blocks[g]);
                             }
                         }
                         assert_eq!(added, n, "seed {seed}: insert count drift");
+                        // Mirror the insert's LRU touches: the walked
+                        // path (existing + created granules, stopping at
+                        // the first one insert couldn't place) all carry
+                        // this op's stamp.
+                        stamps.retain(|k, _| oracle.contains_key(k));
+                        for g in 0..full {
+                            let key = prompt[..(g + 1) * BT].to_vec();
+                            if oracle.contains_key(&key) {
+                                stamps.insert(key, oclock);
+                            } else {
+                                break;
+                            }
+                        }
                         kv.remove(id).unwrap();
                     }
                     5..=7 => {
                         let prompt = mk_prompt(&mut rng);
+                        oclock += 1;
                         let m = pc.match_prefix(&prompt);
                         let mut want = 0;
                         let cap = prompt.len().saturating_sub(1) / BT;
@@ -533,17 +655,47 @@ mod tests {
                             "seed {seed}: match {} != oracle {want} for {prompt:?}",
                             m.tokens
                         );
-                        // Returned blocks agree with the oracle's ids.
+                        // Returned blocks agree with the oracle's ids,
+                        // and the matched path was LRU-touched.
                         for (g, &b) in m.blocks.iter().enumerate() {
-                            assert_eq!(oracle[&prompt[..(g + 1) * BT]], b);
+                            let key = prompt[..(g + 1) * BT].to_vec();
+                            assert_eq!(oracle[&key], b);
+                            stamps.insert(key, oclock);
                         }
                     }
                     _ => {
-                        if let Some((path, _)) = pc.evict_one(&mut kv) {
-                            assert!(
-                                oracle.remove(&path).is_some(),
-                                "seed {seed}: evicted {path:?} unknown to oracle"
-                            );
+                        // Expected victim class: evictable leaves (no
+                        // cached extension; nothing pinned here — every
+                        // grown sequence is removed within its op) with
+                        // the minimal stamp.
+                        let min_stamp = oracle
+                            .keys()
+                            .filter(|k| {
+                                !oracle.keys().any(|o| {
+                                    o.len() == k.len() + BT && o.starts_with(k)
+                                })
+                            })
+                            .map(|k| stamps[k.as_slice()])
+                            .min();
+                        match pc.evict_one(&mut kv) {
+                            Some((path, _)) => {
+                                assert!(
+                                    oracle.remove(&path).is_some(),
+                                    "seed {seed}: evicted {path:?} unknown to oracle"
+                                );
+                                let vstamp = stamps
+                                    .remove(&path)
+                                    .expect("victim carries a stamp");
+                                assert_eq!(
+                                    Some(vstamp),
+                                    min_stamp,
+                                    "seed {seed}: eviction of {path:?} not LRU"
+                                );
+                            }
+                            None => assert!(
+                                min_stamp.is_none(),
+                                "seed {seed}: evictable leaf left unevicted"
+                            ),
                         }
                     }
                 }
@@ -555,6 +707,13 @@ mod tests {
                     "seed {seed}: tree size diverged from oracle"
                 );
                 assert!(pc.held_blocks() <= pc.max_blocks(), "seed {seed}");
+                // Nothing is pinned between ops here, so the O(1)
+                // evictable counter must equal the tree's full holding.
+                assert_eq!(
+                    pc.evictable_blocks(&kv),
+                    pc.held_blocks(),
+                    "seed {seed}: evictable-lease counter drifted"
+                );
                 // Leased block ids are distinct (no double-lease).
                 let ids: HashSet<u32> = oracle.values().copied().collect();
                 assert_eq!(ids.len(), oracle.len(), "seed {seed}");

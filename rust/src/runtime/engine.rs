@@ -11,23 +11,27 @@
 //!   path) or passes token ids (baseline),
 //! * `decode_span` advances one sequence through a chunk of prompt tokens
 //!   (chunked prefill), serving the whole span's first layer from the
-//!   table in a single batched row-gather,
+//!   table in a single batched row-gather and — on the device-resident
+//!   path — chaining the whole span through one [`DeviceCacheSession`]
+//!   (one cache upload per span, logits-only per-token readback),
 //! * returns the logits plus only the *new* K/V rows extracted from the
 //!   returned caches, so the paged store is updated with one row per
 //!   (layer, sequence) instead of a full-cache writeback.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
 use crate::manifest::{ArtifactKind, Manifest, ModelEntry};
+use crate::metrics::TransferStats;
 use crate::precompute::{validate_table, Table};
 use crate::simtraffic::Recorder;
 use crate::weights::WeightsFile;
 
-use super::{Executable, HostTensor, Runtime};
+use super::{trace_enabled, DeviceCacheSession, Executable, HostTensor, Runtime};
 
 /// Which serving path a step runs (the paper's comparison axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -81,9 +85,66 @@ impl CacheBatch {
         [self.l, self.b, self.s, self.kh, self.hd]
     }
 
+    /// Offset of `[layer, seq, slot, 0, 0]` in a dense cache of `dims`
+    /// `[l, b, s, kh, hd]` — the one place the layout math lives, shared
+    /// with views that hold only the dims (session syncs, output
+    /// unpacking).
+    pub fn offset_in(dims: [usize; 5], layer: usize, seq: usize, slot: usize) -> usize {
+        let [_, b, s, kh, hd] = dims;
+        ((layer * b + seq) * s + slot) * kh * hd
+    }
+
     /// Offset of `[layer, seq, slot, 0, 0]`.
     pub fn offset(&self, layer: usize, seq: usize, slot: usize) -> usize {
-        ((layer * self.b + seq) * self.s + slot) * self.kh * self.hd
+        CacheBatch::offset_in(self.dims(), layer, seq, slot)
+    }
+
+    /// Slice `n` consecutive slots (`start..start + n`) of batch row
+    /// `seq` out of a dense K/V pair laid out per `dims`, into the
+    /// token-major `[n, L, KH·hd]` row layout shared by `DecodeOut` /
+    /// `SpanOut` / the paged-store writeback.  The one copy of this
+    /// extraction loop — the device sync, the span path, and output
+    /// unpacking all go through it.
+    pub fn extract_rows(
+        dims: [usize; 5],
+        kc: &[f32],
+        vc: &[f32],
+        seq: usize,
+        start: usize,
+        n: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let [l, _, _, kh, hd] = dims;
+        let mut k = vec![0f32; n * l * kh * hd];
+        let mut v = vec![0f32; n * l * kh * hd];
+        CacheBatch::extract_rows_into(dims, kc, vc, seq, start, n, &mut k, &mut v);
+        (k, v)
+    }
+
+    /// [`CacheBatch::extract_rows`] into caller-owned row buffers (each
+    /// `n · L · KH·hd` long) — the hot host-decode loop writes straight
+    /// into its batch output without per-sequence allocations.
+    #[allow(clippy::too_many_arguments)]
+    pub fn extract_rows_into(
+        dims: [usize; 5],
+        kc: &[f32],
+        vc: &[f32],
+        seq: usize,
+        start: usize,
+        n: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) {
+        let [l, _, _, kh, hd] = dims;
+        let row = kh * hd;
+        debug_assert_eq!(k_out.len(), n * l * row, "row buffer size mismatch");
+        for j in 0..n {
+            for li in 0..l {
+                let o = CacheBatch::offset_in(dims, li, seq, start + j);
+                let dst = (j * l + li) * row;
+                k_out[dst..dst + row].copy_from_slice(&kc[o..o + row]);
+                v_out[dst..dst + row].copy_from_slice(&vc[o..o + row]);
+            }
+        }
     }
 
     /// One (layer, seq, slot) row, `kh*hd` long.
@@ -152,6 +213,14 @@ pub struct ModelEngine {
     buf_by_name: Mutex<HashMap<String, Arc<xla::PjRtBuffer>>>,
     loaded: Mutex<HashMap<String, Arc<Loaded>>>,
     pub traffic: Arc<Recorder>,
+    /// Device-resident KV: serving knob (`ServingConfig::enable_device_kv`
+    /// / `--no-device-kv`) and sticky runtime health.  `device_kv_ok`
+    /// flips to false the first time buffer chaining fails (e.g. a PJRT
+    /// wrapper that returns tupled outputs, which cannot be fed back as
+    /// inputs); every later span/session then takes the legacy host path
+    /// directly instead of failing the same way per step.
+    device_kv_enabled: AtomicBool,
+    device_kv_ok: AtomicBool,
 }
 
 impl ModelEngine {
@@ -173,11 +242,40 @@ impl ModelEngine {
             buf_by_name: Mutex::new(HashMap::new()),
             loaded: Mutex::new(HashMap::new()),
             traffic: Arc::new(Recorder::new()),
+            device_kv_enabled: AtomicBool::new(true),
+            device_kv_ok: AtomicBool::new(true),
         })
     }
 
     pub fn config(&self) -> &ModelConfig {
         &self.entry.config
+    }
+
+    /// Enable/disable the device-resident KV path (spans and decode
+    /// sessions).  Disabling forces the legacy host path — the
+    /// equivalence oracle the integration tests compare against.
+    pub fn set_device_kv(&self, on: bool) {
+        self.device_kv_enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether device-resident execution is both enabled and healthy.
+    pub fn device_kv_active(&self) -> bool {
+        self.device_kv_enabled.load(Ordering::Relaxed)
+            && self.device_kv_ok.load(Ordering::Relaxed)
+    }
+
+    /// Mark the device-resident path unhealthy (sticky): after a
+    /// chaining failure every later span/session takes the host path
+    /// directly instead of rebuilding a session, failing the same way,
+    /// and paying for both.  `set_device_kv(true)` does NOT clear this —
+    /// the health bit reflects the wrapper's capability, not intent.
+    pub fn mark_device_kv_unhealthy(&self) {
+        self.device_kv_ok.store(false, Ordering::Relaxed);
+    }
+
+    /// The runtime's host↔device transfer counters.
+    pub fn transfers(&self) -> Arc<TransferStats> {
+        self.rt.transfers()
     }
 
     pub fn entry(&self) -> &ModelEntry {
@@ -350,11 +448,55 @@ impl ModelEngine {
         };
         let loaded = self.load_artifact(&name)?;
 
-        // Pad per-token inputs out to the bucket.
-        let mut pos_p: Vec<i32> = pos.iter().map(|p| *p as i32).collect();
-        pos_p.resize(bucket, 0);
+        let mut data_bufs = self.decode_data_bufs(path, tokens, pos, bucket, pregathered)?;
+        let t_up = std::time::Instant::now();
+        data_bufs.push(self.rt.upload_f32(&caches.k, &caches.dims().to_vec())?);
+        data_bufs.push(self.rt.upload_f32(&caches.v, &caches.dims().to_vec())?);
+        self.rt
+            .transfers()
+            .record_cache_upload((caches.k.len() + caches.v.len()) as u64 * 4);
+        let up = t_up.elapsed();
 
-        // Data inputs per path.
+        let mut args: Vec<&xla::PjRtBuffer> = data_bufs.iter().collect();
+        for wb in &loaded.weight_bufs {
+            args.push(wb);
+        }
+        let t_exec = std::time::Instant::now();
+        let out = loaded.exe.execute_host(&args)?;
+        let exec = t_exec.elapsed();
+        // The host path reads the full cache pair back every step.
+        self.rt
+            .transfers()
+            .record_cache_sync((caches.k.len() + caches.v.len()) as u64 * 4);
+        if record {
+            self.traffic.record_decode(cfg, path, n as u64);
+        }
+        let t_unpack = std::time::Instant::now();
+        let res = self.unpack_decode(out, n, bucket, pos, caches);
+        if trace_enabled() {
+            eprintln!(
+                "[trace] decode {} B={n}/{bucket}: upload={up:?} exec+readback={exec:?} unpack={:?}",
+                path.label(),
+                t_unpack.elapsed()
+            );
+        }
+        res
+    }
+
+    /// Build the per-step data inputs shared by the host and
+    /// device-resident decode paths: the token ids (baseline / in-graph
+    /// gather) or pre-gathered table rows (precompute), then the
+    /// positions — both padded out to the bucket.  The K/V cache
+    /// arguments follow these in the artifacts' parameter order.
+    fn decode_data_bufs(
+        &self,
+        path: StepPath,
+        tokens: &[u32],
+        pos: &[u32],
+        bucket: usize,
+        pregathered: Option<&[f32]>,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let n = tokens.len();
         let mut data_bufs: Vec<xla::PjRtBuffer> = Vec::new();
         match path {
             StepPath::Baseline | StepPath::PrecomputeGather => {
@@ -381,32 +523,108 @@ impl ModelEngine {
                 data_bufs.push(self.rt.upload_f32(&rows, &[bucket, w])?);
             }
         }
+        let mut pos_p: Vec<i32> = pos.iter().map(|p| *p as i32).collect();
+        pos_p.resize(bucket, 0);
         data_bufs.push(self.rt.upload_i32(&pos_p, &[bucket])?);
-        let t_up = std::time::Instant::now();
-        data_bufs.push(self.rt.upload_f32(&caches.k, &caches.dims().to_vec())?);
-        data_bufs.push(self.rt.upload_f32(&caches.v, &caches.dims().to_vec())?);
-        let up = t_up.elapsed();
+        Ok(data_bufs)
+    }
 
+    /// Open a device-resident cache session over `caches` (ONE K/V pair
+    /// upload).  The caller drives it with
+    /// [`ModelEngine::decode_on_session`] and syncs via
+    /// [`DeviceCacheSession::read_cache_pair`].
+    pub fn begin_cache_session(&self, caches: &CacheBatch) -> Result<DeviceCacheSession> {
+        DeviceCacheSession::begin(&self.rt, caches)
+    }
+
+    /// One buffer-chained decode step against a live
+    /// [`DeviceCacheSession`]: the resident cache pair goes in as
+    /// execution arguments, the step's output cache buffers replace it,
+    /// and at most the logits (`n · vocab` f32s) are read back —
+    /// `read_logits = false` skips even that (span interiors: only the
+    /// final token's logits are ever used) and returns an empty vec.  On
+    /// error the session is untouched (PJRT buffers are immutable), so
+    /// callers can sync what succeeded and fall back to the host path.
+    pub fn decode_on_session(
+        &self,
+        path: StepPath,
+        tokens: &[u32],
+        pos: &[u32],
+        sess: &mut DeviceCacheSession,
+        pregathered: Option<&[f32]>,
+        read_logits: bool,
+        record: bool,
+    ) -> Result<Vec<f32>> {
+        let n = tokens.len();
+        if n == 0 || n != pos.len() {
+            return Err(Error::Engine("decode: empty or mismatched batch".into()));
+        }
+        if path != StepPath::Baseline && !self.entry.config.rope {
+            return Err(Error::Engine(
+                "precompute path requires RoPE (paper §2 — abs-PE models \
+                 cannot precompute the first layer)"
+                    .into(),
+            ));
+        }
+        let bucket = self.decode_bucket(n, path)?;
+        if sess.bucket() != bucket {
+            return Err(Error::Engine(format!(
+                "session cache padded to {} but bucket is {bucket}",
+                sess.bucket()
+            )));
+        }
+        let cfg = &self.entry.config;
+        let name = match path {
+            StepPath::Baseline => format!("decode_baseline_b{bucket}"),
+            StepPath::Precompute => format!("decode_precomp_b{bucket}"),
+            StepPath::PrecomputeGather => format!("decode_precomp_gather_b{bucket}"),
+        };
+        let loaded = self.load_artifact(&name)?;
+        let data_bufs = self.decode_data_bufs(path, tokens, pos, bucket, pregathered)?;
         let mut args: Vec<&xla::PjRtBuffer> = data_bufs.iter().collect();
+        let (kb, vb) = sess.cache_args();
+        args.push(kb);
+        args.push(vb);
         for wb in &loaded.weight_bufs {
             args.push(wb);
         }
         let t_exec = std::time::Instant::now();
-        let out = loaded.exe.execute_host(&args)?;
-        let exec = t_exec.elapsed();
+        let mut out = loaded.exe.execute_buffers(&args)?;
+        // Chaining needs one buffer per output leaf — and exactly the
+        // [logits, k, v] triple.  A wrapper that hands back a single
+        // tuple buffer (or a malformed spec) cannot be buffer-chained;
+        // the caller falls back to the host path (sticky).
+        if out.len() != 3 || loaded.exe.spec.outputs.len() != 3 {
+            return Err(Error::Engine(format!(
+                "{name}: {} output buffers for {} declared outputs — buffer \
+                 chaining needs untupled [logits, k, v]",
+                out.len(),
+                loaded.exe.spec.outputs.len()
+            )));
+        }
+        let v_buf = out.pop().expect("three outputs");
+        let k_buf = out.pop().expect("three outputs");
+        let logits_buf = out.pop().expect("three outputs");
+        let logits = if read_logits {
+            let logits_all = loaded.exe.read_output(&logits_buf, 0)?;
+            let logits_all = logits_all.as_f32()?;
+            logits_all[..n * cfg.vocab_size].to_vec()
+        } else {
+            Vec::new()
+        };
         if record {
             self.traffic.record_decode(cfg, path, n as u64);
         }
-        let t_unpack = std::time::Instant::now();
-        let res = self.unpack_decode(out, n, bucket, pos, caches);
-        if std::env::var_os("FIRSTLAYER_TRACE").is_some() {
+        sess.advance(k_buf, v_buf);
+        if trace_enabled() {
             eprintln!(
-                "[trace] decode {} B={n}/{bucket}: upload={up:?} exec+readback={exec:?} unpack={:?}",
+                "[trace] decode {} B={n}/{bucket} (session step {}): exec+logits={:?}",
                 path.label(),
-                t_unpack.elapsed()
+                sess.steps(),
+                t_exec.elapsed()
             );
         }
-        res
+        Ok(logits)
     }
 
     fn unpack_decode(
@@ -425,26 +643,23 @@ impl ModelEngine {
         let row = caches.kh * caches.hd;
         let mut logits = vec![0f32; n * vocab];
         logits.copy_from_slice(&logits_all[..n * vocab]);
-        let mut new_k = vec![0f32; n * caches.l * row];
-        let mut new_v = vec![0f32; n * caches.l * row];
+        let lrow = caches.l * row;
+        let mut new_k = vec![0f32; n * lrow];
+        let mut new_v = vec![0f32; n * lrow];
         // Extract the freshly written slot pos[i] per (seq, layer): the only
         // rows the paged store needs.
-        let out_cb = CacheBatch {
-            l: caches.l,
-            b: bucket,
-            s: caches.s,
-            kh: caches.kh,
-            hd: caches.hd,
-            k: Vec::new(),
-            v: Vec::new(),
-        };
+        let out_dims = [caches.l, bucket, caches.s, caches.kh, caches.hd];
         for i in 0..n {
-            for l in 0..caches.l {
-                let o = out_cb.offset(l, i, pos[i] as usize);
-                let dst = (i * caches.l + l) * row;
-                new_k[dst..dst + row].copy_from_slice(&kc[o..o + row]);
-                new_v[dst..dst + row].copy_from_slice(&vc[o..o + row]);
-            }
+            CacheBatch::extract_rows_into(
+                out_dims,
+                kc,
+                vc,
+                i,
+                pos[i] as usize,
+                1,
+                &mut new_k[i * lrow..(i + 1) * lrow],
+                &mut new_v[i * lrow..(i + 1) * lrow],
+            );
         }
         Ok(DecodeOut {
             logits,
@@ -462,9 +677,15 @@ impl ModelEngine {
     /// B=1 decode bucket.  The first layer of the WHOLE span is served from
     /// the precompute table in one batched row-gather (the paper's read
     /// pattern: `len·2(d+e)` contiguous values); attention then advances
-    /// token by token through the compiled decode artifact, with each new
-    /// K/V row scattered into `caches` host-side so the next token attends
-    /// to it.  Span tokens are recorded as prefill traffic.
+    /// token by token through the compiled decode artifact.  On the
+    /// device-resident path ([`ModelEngine::device_kv_active`]) the whole
+    /// span chains through ONE [`DeviceCacheSession`]: one cache-pair
+    /// upload, logits-only readback per token, and a single sync at span
+    /// end that slices out the span's fresh K/V rows (the host scatter
+    /// loop is gone).  The legacy host path — one full cache upload and
+    /// readback per token — remains as the fallback and equivalence
+    /// oracle.  Either way `caches` holds the advanced history on return,
+    /// and span tokens are recorded as prefill traffic.
     pub fn decode_span(
         &self,
         path: StepPath,
@@ -484,13 +705,94 @@ impl ModelEngine {
             )));
         }
         let cfg = self.entry.config.clone();
-        let w = self.table.row_width();
         let rows = if path == StepPath::Precompute {
             Some(self.table.gather_vec(tokens)?)
         } else {
             None
         };
         self.traffic.record_prefill(&cfg, path, n as u64);
+        if self.device_kv_active() {
+            // Device writes never touch `caches` until the final sync, so
+            // a mid-span failure leaves the host state pristine and the
+            // legacy loop below can re-run the whole span.
+            match self.decode_span_device(path, tokens, start_pos, caches, rows.as_deref()) {
+                Ok(out) => return Ok(out),
+                Err(e) => {
+                    self.mark_device_kv_unhealthy();
+                    eprintln!(
+                        "[firstlayer] device-resident span failed ({e}); \
+                         falling back to the host cache path (sticky)"
+                    );
+                }
+            }
+        }
+        self.decode_span_host(path, tokens, start_pos, caches, rows.as_deref())
+    }
+
+    /// Device-resident span execution: one session, `n` chained steps,
+    /// one sync.
+    fn decode_span_device(
+        &self,
+        path: StepPath,
+        tokens: &[u32],
+        start_pos: usize,
+        caches: &mut CacheBatch,
+        rows: Option<&[f32]>,
+    ) -> Result<SpanOut> {
+        let w = self.table.row_width();
+        let mut sess = self.begin_cache_session(caches)?;
+        let mut logits = Vec::new();
+        for (i, &tok) in tokens.iter().enumerate() {
+            let pos = (start_pos + i) as u32;
+            let pre = rows.map(|r| &r[i * w..(i + 1) * w]);
+            // Only the final token's logits are ever consumed: interior
+            // steps skip even the logits readback.
+            let last = i + 1 == tokens.len();
+            logits =
+                self.decode_on_session(path, &[tok], &[pos], &mut sess, pre, last, false)?;
+        }
+        // One selective sync: the pair comes down once, the span's rows
+        // are sliced out host-side, and the host mirror is refreshed so
+        // the caller sees the advanced history.
+        let (kc, vc) = sess.read_cache_pair()?;
+        let n = tokens.len();
+        let (new_k, new_v) =
+            CacheBatch::extract_rows(caches.dims(), &kc, &vc, 0, start_pos, n);
+        // Refresh ONLY the span's rows in the host mirror — the same
+        // scatter the host path performs, and the only slots this call
+        // changed (the pair was uploaded from `caches`, and chained
+        // steps pass everything else through).  Copying the whole pair
+        // back would cost two full-cache memcpys per span for a mirror
+        // most callers drop.
+        let row = caches.kh * caches.hd;
+        for i in 0..n {
+            for l in 0..caches.l {
+                let o = caches.offset(l, 0, start_pos + i);
+                let src = (i * caches.l + l) * row;
+                caches.k[o..o + row].copy_from_slice(&new_k[src..src + row]);
+                caches.v[o..o + row].copy_from_slice(&new_v[src..src + row]);
+            }
+        }
+        Ok(SpanOut {
+            logits,
+            new_k,
+            new_v,
+        })
+    }
+
+    /// Legacy host span execution: per-token full cache upload + readback
+    /// with a host-side scatter between tokens.  Kept as the fallback and
+    /// the equivalence oracle for the device-resident path.
+    fn decode_span_host(
+        &self,
+        path: StepPath,
+        tokens: &[u32],
+        start_pos: usize,
+        caches: &mut CacheBatch,
+        rows: Option<&[f32]>,
+    ) -> Result<SpanOut> {
+        let n = tokens.len();
+        let w = self.table.row_width();
         let row = caches.kh * caches.hd;
         let lrow = caches.l * row;
         let mut new_k = vec![0f32; n * lrow];
@@ -498,12 +800,7 @@ impl ModelEngine {
         let mut logits = Vec::new();
         for (i, &tok) in tokens.iter().enumerate() {
             let pos = start_pos + i;
-            let pre = rows.as_ref().map(|r| &r[i * w..(i + 1) * w]);
-            // Known cost: decode_inner re-uploads the full dense cache per
-            // token even though only the previous position changed — a
-            // device-resident cache buffer reused across the span would cut
-            // host-to-device traffic by the span length (open ROADMAP
-            // item; requires donated/aliased PJRT buffers).
+            let pre = rows.map(|r| &r[i * w..(i + 1) * w]);
             let out =
                 self.decode_inner(path, &[tok], &[pos as u32], caches, pre, false)?;
             // Scatter the fresh row so the next span token attends to it.

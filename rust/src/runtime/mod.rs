@@ -8,15 +8,26 @@
 //! PJRT wrapper — [`Executable::execute`] normalizes both.
 
 mod engine;
+mod session;
 
 pub use engine::{CacheBatch, DecodeOut, ModelEngine, PrefillOut, SpanOut, StepPath};
+pub use session::DeviceCacheSession;
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::error::{Error, Result};
 use crate::manifest::{ArtifactSpec, DType, IoSpec};
+use crate::metrics::TransferStats;
+
+/// Cached `FIRSTLAYER_TRACE` lookup — the env var cannot change mid-run,
+/// so it is read once per process instead of once per decode step /
+/// artifact execution (hot-path hygiene).
+pub(crate) fn trace_enabled() -> bool {
+    static TRACE: OnceLock<bool> = OnceLock::new();
+    *TRACE.get_or_init(|| std::env::var_os("FIRSTLAYER_TRACE").is_some())
+}
 
 /// Shared PJRT client handle.
 #[derive(Clone)]
@@ -24,6 +35,9 @@ pub struct Runtime {
     client: Arc<xla::PjRtClient>,
     /// Compile cache keyed by artifact file path.
     cache: Arc<Mutex<HashMap<String, Arc<Executable>>>>,
+    /// Host↔device transfer accounting (uploads here, readbacks in
+    /// [`Executable`] and [`DeviceCacheSession`]).
+    transfers: Arc<TransferStats>,
 }
 
 impl Runtime {
@@ -31,6 +45,7 @@ impl Runtime {
         Ok(Runtime {
             client: Arc::new(xla::PjRtClient::cpu()?),
             cache: Arc::new(Mutex::new(HashMap::new())),
+            transfers: Arc::new(TransferStats::new()),
         })
     }
 
@@ -40,6 +55,11 @@ impl Runtime {
 
     pub fn client(&self) -> &xla::PjRtClient {
         &self.client
+    }
+
+    /// The runtime's transfer counters (shared with every clone).
+    pub fn transfers(&self) -> Arc<TransferStats> {
+        self.transfers.clone()
     }
 
     /// Load + compile an HLO text artifact (cached by path).
@@ -54,7 +74,11 @@ impl Runtime {
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
-        let exe = Arc::new(Executable { exe, spec });
+        let exe = Arc::new(Executable {
+            exe,
+            spec,
+            stats: self.transfers.clone(),
+        });
         self.cache
             .lock()
             .unwrap()
@@ -64,11 +88,13 @@ impl Runtime {
 
     /// Upload a host f32 tensor to the device.
     pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.transfers.record_h2d(data.len() as u64 * 4, 1);
         Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
     }
 
     /// Upload a host i32 tensor to the device.
     pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.transfers.record_h2d(data.len() as u64 * 4, 1);
         Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
     }
 }
@@ -108,6 +134,7 @@ impl HostTensor {
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     pub spec: ArtifactSpec,
+    stats: Arc<TransferStats>,
 }
 
 impl Executable {
@@ -133,7 +160,7 @@ impl Executable {
         let exec_d = t0.elapsed();
         let t1 = std::time::Instant::now();
         let out = self.read_back(bufs);
-        if std::env::var_os("FIRSTLAYER_TRACE").is_some() {
+        if trace_enabled() {
             eprintln!(
                 "[trace]   {}: execute={exec_d:?} readback={:?}",
                 self.spec.name,
@@ -141,6 +168,24 @@ impl Executable {
             );
         }
         out
+    }
+
+    /// Read ONE output buffer back to host (selective readback: the
+    /// device-resident decode path reads logits this way and leaves the
+    /// cache outputs on the device for the next chained step).  `idx` is
+    /// the output's position in the artifact signature; the caller must
+    /// pass a buffer from an *untupled* [`Executable::execute_buffers`]
+    /// result.
+    pub fn read_output(&self, buf: &xla::PjRtBuffer, idx: usize) -> Result<HostTensor> {
+        let io = self
+            .spec
+            .outputs
+            .get(idx)
+            .ok_or_else(|| Error::Engine(format!("{}: no output {idx}", self.spec.name)))?;
+        let lit = buf.to_literal_sync()?;
+        let out = host_tensor(&lit, io)?;
+        self.stats.record_d2h(out.len() as u64 * 4, 1);
+        Ok(out)
     }
 
     fn read_back(&self, bufs: Vec<xla::PjRtBuffer>) -> Result<Vec<HostTensor>> {
@@ -174,11 +219,14 @@ impl Executable {
                 bufs.len()
             )));
         };
-        literals
+        let out: Vec<HostTensor> = literals
             .iter()
             .zip(&self.spec.outputs)
             .map(|(lit, io)| host_tensor(lit, io))
-            .collect()
+            .collect::<Result<_>>()?;
+        let bytes: u64 = out.iter().map(|t| t.len() as u64 * 4).sum();
+        self.stats.record_d2h(bytes, out.len() as u64);
+        Ok(out)
     }
 }
 

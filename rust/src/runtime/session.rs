@@ -1,0 +1,121 @@
+//! Device-resident KV cache session: the buffer-chaining half of the
+//! device-resident serving path (see `ARCHITECTURE.md` §Device-resident
+//! KV).
+//!
+//! A [`DeviceCacheSession`] uploads one dense `[L, B, S, KH, hd]` K/V
+//! [`CacheBatch`] to the device ONCE and then hands the live buffer pair
+//! to every subsequent decode step as execution arguments; each step's
+//! output cache buffers (the decode artifacts return the full updated
+//! caches as PJRT buffers) are swapped in as the next step's inputs via
+//! [`DeviceCacheSession::advance`].  While the session is live, the only
+//! per-step device→host traffic is the logits tensor — the cache crosses
+//! the bus exactly twice per session lifetime: once up at `begin`, once
+//! down at the first [`DeviceCacheSession::read_cache_pair`] sync.
+//!
+//! Sync points are explicit and owned by the caller (`ModelEngine` for
+//! spans, the coordinator for steady-state decode): span end, decode
+//! batch recomposition, preemption, serving-path switch, and paged-store
+//! writeback.  The PJRT wrapper (`xla` 0.5.1) only exposes whole-buffer
+//! literal transfer, so a sync reads the full pair and the caller slices
+//! out the freshly written rows host-side; "selective readback" is
+//! therefore about *frequency* (one pair per session instead of one per
+//! token) plus the logits-only per-step read.
+//!
+//! The session never owns a PJRT client — buffers keep their client
+//! alive — and is `!Send` like every other PJRT handle: it lives and
+//! dies on the engine thread.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::metrics::TransferStats;
+
+use super::{CacheBatch, Runtime};
+
+/// A device-resident K/V cache pair being advanced by chained decode
+/// steps.
+pub struct DeviceCacheSession {
+    k: xla::PjRtBuffer,
+    v: xla::PjRtBuffer,
+    /// `[L, B, S, KH, hd]` of the resident pair.
+    dims: [usize; 5],
+    /// Chained steps executed since `begin` (diagnostics).
+    steps: u64,
+    stats: Arc<TransferStats>,
+}
+
+impl DeviceCacheSession {
+    /// Upload `caches` once and open the session.  This is the single
+    /// cache-pair host→device transfer of the session's lifetime.
+    pub(crate) fn begin(rt: &Runtime, caches: &CacheBatch) -> Result<DeviceCacheSession> {
+        let dims = caches.dims();
+        let shape = dims.to_vec();
+        let k = rt.upload_f32(&caches.k, &shape)?;
+        let v = rt.upload_f32(&caches.v, &shape)?;
+        let stats = rt.transfers();
+        stats.record_cache_upload((caches.k.len() + caches.v.len()) as u64 * 4);
+        Ok(DeviceCacheSession {
+            k,
+            v,
+            dims,
+            steps: 0,
+            stats,
+        })
+    }
+
+    /// `[L, B, S, KH, hd]` of the resident cache pair.
+    pub fn dims(&self) -> [usize; 5] {
+        self.dims
+    }
+
+    /// The compiled batch bucket the pair was built for (`dims[1]`).
+    pub fn bucket(&self) -> usize {
+        self.dims[1]
+    }
+
+    /// Chained steps executed since the upload.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// The live cache pair, in the decode artifacts' (K, V) argument
+    /// order.
+    pub(crate) fn cache_args(&self) -> (&xla::PjRtBuffer, &xla::PjRtBuffer) {
+        (&self.k, &self.v)
+    }
+
+    /// Swap in one step's output cache buffers as the next step's inputs.
+    /// PJRT buffers are immutable, so on any step failure the previous
+    /// pair is still valid and the session state is unchanged — callers
+    /// can sync and fall back to the host path without data loss.
+    pub(crate) fn advance(&mut self, k: xla::PjRtBuffer, v: xla::PjRtBuffer) {
+        self.k = k;
+        self.v = v;
+        self.steps += 1;
+    }
+
+    /// Sync the resident pair to host (ONE full K/V readback — the
+    /// session's only cache device→host transfer).  Callers slice the
+    /// freshly written rows out of the returned dense pair; the buffers
+    /// stay resident, so the session remains usable afterwards.
+    pub fn read_cache_pair(&self) -> Result<(Vec<f32>, Vec<f32>)> {
+        let elems: usize = self.dims.iter().product();
+        let read = |buf: &xla::PjRtBuffer| -> Result<Vec<f32>> {
+            let lit = buf.to_literal_sync()?;
+            let v = lit.to_vec::<f32>()?;
+            if v.len() != elems {
+                return Err(Error::Engine(format!(
+                    "cache sync read {} elems, expected {elems}",
+                    v.len()
+                )));
+            }
+            Ok(v)
+        };
+        let kc = read(&self.k)?;
+        let vc = read(&self.v)?;
+        let bytes = 2 * elems as u64 * 4;
+        self.stats.record_d2h(bytes, 2);
+        self.stats.record_cache_sync(bytes);
+        Ok((kc, vc))
+    }
+}

@@ -14,7 +14,10 @@
 //!
 //! → {"op":"metrics"}      ← {"event":"metrics","report":"...",
 //!                            "prefix_hits":…,"prefix_misses":…,
-//!                            "prefix_evictions":…,"prefix_cached_tokens":…}
+//!                            "prefix_evictions":…,"prefix_cached_tokens":…,
+//!                            "h2d_bytes":…,"d2h_bytes":…,"kv_h2d_bytes":…,
+//!                            "kv_d2h_bytes":…,"kv_cache_uploads":…,
+//!                            "kv_cache_syncs":…}
 //! → {"op":"traffic"}      ← {"event":"traffic", ...counters...}
 //! → {"op":"path","value":"baseline"|"precompute"}  ← {"event":"ok"}
 //! → {"op":"ping"}         ← {"event":"pong"}
@@ -68,6 +71,7 @@ struct EngineHandles {
     metrics: Arc<crate::metrics::Metrics>,
     traffic: Arc<crate::simtraffic::Recorder>,
     tokenizer: Arc<crate::tokenizer::Tokenizer>,
+    transfers: Arc<crate::metrics::TransferStats>,
 }
 
 impl Server {
@@ -93,6 +97,7 @@ impl Server {
                         metrics: c.metrics.clone(),
                         traffic: c.engine().traffic.clone(),
                         tokenizer: c.tokenizer.clone(),
+                        transfers: c.engine().transfers(),
                     }));
                     c
                 }
@@ -112,8 +117,9 @@ impl Server {
             let metrics = handles.metrics.clone();
             let traffic = handles.traffic.clone();
             let tokenizer = handles.tokenizer.clone();
+            let transfers = handles.transfers.clone();
             std::thread::spawn(move || {
-                let _ = handle_conn(stream, tx, metrics, traffic, tokenizer);
+                let _ = handle_conn(stream, tx, metrics, traffic, tokenizer, transfers);
             });
         }
         Ok(())
@@ -203,6 +209,7 @@ fn handle_conn(
     metrics: Arc<crate::metrics::Metrics>,
     traffic: Arc<crate::simtraffic::Recorder>,
     tokenizer: Arc<crate::tokenizer::Tokenizer>,
+    transfers: Arc<crate::metrics::TransferStats>,
 ) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let reader = BufReader::new(stream.try_clone()?);
@@ -223,6 +230,7 @@ fn handle_conn(
             Some("ping") => send(&out, &obj(vec![("event", s("pong"))]))?,
             Some("metrics") => {
                 use std::sync::atomic::Ordering::Relaxed;
+                let t = transfers.snapshot();
                 send(
                     &out,
                     &obj(vec![
@@ -243,6 +251,14 @@ fn handle_conn(
                             "prefix_cached_tokens",
                             n(metrics.prefix_cached_tokens.load(Relaxed) as f64),
                         ),
+                        // Host↔device transfer accounting (device-resident
+                        // KV observability; `kv_*` is the cache share).
+                        ("h2d_bytes", n(t.h2d_bytes as f64)),
+                        ("d2h_bytes", n(t.d2h_bytes as f64)),
+                        ("kv_h2d_bytes", n(t.cache_h2d_bytes as f64)),
+                        ("kv_d2h_bytes", n(t.cache_d2h_bytes as f64)),
+                        ("kv_cache_uploads", n(t.cache_uploads as f64)),
+                        ("kv_cache_syncs", n(t.cache_syncs as f64)),
                     ]),
                 )?
             }

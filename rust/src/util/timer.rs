@@ -57,6 +57,22 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
     (out, t.elapsed())
 }
 
+/// Emit one machine-readable bench result as a `BENCHJSON {...}` stdout
+/// line.  `scripts/bench_gate.sh` collects these lines from the bench
+/// binaries into `BENCH_engine.json`, so the perf trajectory is recorded
+/// run over run.  Non-finite values are clamped to 0 to keep the output
+/// valid JSON.
+pub fn emit_json(bench: &str, fields: &[(&str, f64)]) {
+    use std::fmt::Write;
+    let mut s = format!("BENCHJSON {{\"bench\":\"{bench}\"");
+    for (k, v) in fields {
+        let v = if v.is_finite() { *v } else { 0.0 };
+        let _ = write!(s, ",\"{k}\":{v}");
+    }
+    s.push('}');
+    println!("{s}");
+}
+
 /// Pretty-print a bench row (name, stats, optional throughput).
 pub fn report(name: &str, stats: &Stats, throughput: Option<(f64, &str)>) {
     let tp = throughput
@@ -91,5 +107,11 @@ mod tests {
         let s = bench(2, 5, || count += 1);
         assert_eq!(count, 7);
         assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn emit_json_is_line_safe() {
+        // Smoke: must not panic on non-finite values (clamped to 0).
+        emit_json("t", &[("a", 1.5), ("b", f64::NAN), ("c", f64::INFINITY)]);
     }
 }

@@ -314,6 +314,216 @@ fn prefix_cache_reuses_shared_system_prompt() {
     );
 }
 
+/// Device-resident KV: a span chained through one `DeviceCacheSession`
+/// uploads the cache pair exactly ONCE (the acceptance criterion the
+/// transfer counters make measurable), where the host path uploads it
+/// once per token — and the two paths produce bit-identical logits and
+/// K/V rows (same kernels, same inputs; chaining only changes where the
+/// bytes live between steps).
+#[test]
+fn device_span_uploads_cache_once_and_matches_host() {
+    let dir = require_artifacts!();
+    let (_rt, eng) = engine(&dir, "tiny-serial");
+    let cfg = eng.config().clone();
+    let bucket = eng.decode_bucket(1, StepPath::Precompute).unwrap();
+    let mk_caches = || {
+        CacheBatch::zeros(
+            cfg.n_layers,
+            bucket,
+            cfg.max_seq,
+            cfg.n_kv_heads,
+            cfg.head_dim(),
+        )
+    };
+    let span: Vec<u32> = (0..6u32).map(|i| (i * 31) % cfg.vocab_size as u32).collect();
+    let pair_bytes =
+        2 * (cfg.n_layers * bucket * cfg.max_seq * cfg.n_kv_heads * cfg.head_dim()) as u64 * 4;
+
+    eng.set_device_kv(true);
+    let stats = eng.transfers();
+    let before = stats.snapshot();
+    let mut dev_caches = mk_caches();
+    let dev = eng
+        .decode_span(StepPath::Precompute, &span, 0, &mut dev_caches)
+        .unwrap();
+    let d = stats.snapshot().since(&before);
+    if eng.device_kv_active() {
+        assert_eq!(d.cache_uploads, 1, "device span must upload the pair once");
+        assert_eq!(d.cache_h2d_bytes, pair_bytes);
+        assert_eq!(d.cache_syncs, 1, "device span must sync the pair once");
+    } else {
+        // Not silent: the engine must have EXPLICITLY gone host-sticky
+        // (wrapper cannot chain buffers); a device path that quietly
+        // degrades without flipping the health bit is a regression.
+        eprintln!("note: device path unavailable — upload-count asserts skipped");
+    }
+
+    eng.set_device_kv(false);
+    let before = stats.snapshot();
+    let mut host_caches = mk_caches();
+    let host = eng
+        .decode_span(StepPath::Precompute, &span, 0, &mut host_caches)
+        .unwrap();
+    let h = stats.snapshot().since(&before);
+    assert_eq!(h.cache_uploads, span.len() as u64, "host path uploads per token");
+    assert_eq!(h.cache_h2d_bytes, pair_bytes * span.len() as u64);
+    eng.set_device_kv(true);
+
+    assert_eq!(dev.logits, host.logits, "span logits diverge across paths");
+    assert_eq!(dev.new_k, host.new_k, "span K rows diverge across paths");
+    assert_eq!(dev.new_v, host.new_v, "span V rows diverge across paths");
+    // The host mirror the caller sees must agree on the written span.
+    let row = cfg.n_kv_heads * cfg.head_dim();
+    for l in 0..cfg.n_layers {
+        for p in 0..span.len() {
+            let o = dev_caches.offset(l, 0, p);
+            assert_eq!(
+                dev_caches.k[o..o + row],
+                host_caches.k[o..o + row],
+                "cache mirror diverges at layer {l} pos {p}"
+            );
+        }
+    }
+}
+
+/// Device-resident vs legacy host KV must be temperature-0
+/// TOKEN-IDENTICAL end to end across the three serving shapes that
+/// exercise every sync point: chunked prefill (span sessions), KV
+/// pressure with preemption + requeue (session writeback and replay),
+/// and a prefix-cache hit served as a suffix-only span fill.
+#[test]
+fn device_resident_kv_matches_host_path() {
+    let dir = require_artifacts!();
+    let mut all: Vec<Vec<Vec<u32>>> = Vec::new();
+    for enable_device in [false, true] {
+        let mut outputs: Vec<Vec<u32>> = Vec::new();
+
+        // Scenario 1: chunked prefill + steady-state decode batches.
+        {
+            let mut cfg = serving(&dir, "tiny-serial", true);
+            cfg.enable_device_kv = enable_device;
+            cfg.prefill_chunk_tokens = 8;
+            cfg.step_token_budget = 16;
+            let mut c = Coordinator::from_config(&cfg).unwrap();
+            let prompts: Vec<Vec<u32>> = vec![
+                vec![3; 24],
+                (0..21).map(|i| (i * 7 % 500) as u32).collect(),
+                vec![2],
+            ];
+            let ids: Vec<u64> = prompts
+                .iter()
+                .map(|p| {
+                    c.submit(GenRequest {
+                        prompt: p.clone(),
+                        max_new_tokens: 10,
+                        priority: Priority::Normal,
+                        params: SamplingParams::default(),
+                    })
+                    .unwrap()
+                })
+                .collect();
+            // Step manually so a live device session is observable, and
+            // guard against the device path silently regressing to the
+            // host fallback: either sessions formed, or the engine
+            // explicitly reports itself host-sticky.
+            let mut saw_session = false;
+            let mut steps = 0;
+            while c.busy() {
+                c.step().unwrap();
+                saw_session |= c.device_session_active();
+                steps += 1;
+                assert!(steps < 50_000, "did not drain");
+            }
+            if enable_device {
+                use std::sync::atomic::Ordering::Relaxed;
+                assert!(
+                    (saw_session && c.metrics.kv_sessions.load(Relaxed) > 0)
+                        || !c.engine().device_kv_active(),
+                    "no device session formed, yet the engine claims the \
+                     device path is healthy (silent host fallback)"
+                );
+            } else {
+                assert!(!saw_session, "host-only run built a device session");
+            }
+            for id in &ids {
+                outputs.push(c.generated(*id).unwrap().to_vec());
+            }
+        }
+
+        // Scenario 2: tiny pool -> preemption mid-generation, requeue,
+        // replay (session rows dropped for victims, synced for others).
+        {
+            let mut cfg = serving(&dir, "tiny-serial", true);
+            cfg.enable_device_kv = enable_device;
+            cfg.kv_blocks = 8;
+            cfg.kv_block_tokens = 16;
+            cfg.max_batch = 4;
+            let mut c = Coordinator::from_config(&cfg).unwrap();
+            let ids: Vec<u64> = (0..4)
+                .map(|i| {
+                    c.submit(GenRequest {
+                        prompt: vec![2 + i as u32 * 3; 20],
+                        max_new_tokens: 24,
+                        priority: Priority::Normal,
+                        params: SamplingParams::default(),
+                    })
+                    .unwrap()
+                })
+                .collect();
+            c.run_to_completion(20_000).unwrap();
+            assert!(
+                c.metrics
+                    .preemptions
+                    .load(std::sync::atomic::Ordering::Relaxed)
+                    > 0,
+                "scenario must exercise preemption (device={enable_device})"
+            );
+            for id in &ids {
+                outputs.push(c.generated(*id).unwrap().to_vec());
+            }
+        }
+
+        // Scenario 3: prefix-cache hit -> suffix-only span fill.
+        {
+            let mut cfg = serving(&dir, "tiny-serial", true);
+            cfg.enable_device_kv = enable_device;
+            cfg.enable_prefix_cache = true;
+            cfg.kv_block_tokens = 8;
+            cfg.prefill_chunk_tokens = 8;
+            cfg.step_token_budget = 16;
+            let mut c = Coordinator::from_config(&cfg).unwrap();
+            let system: Vec<u32> = (0..24).map(|i| (i * 13 % 500) as u32).collect();
+            for suffix in [&[7u32, 9, 11][..], &[401, 3, 77, 12][..]] {
+                let mut p = system.clone();
+                p.extend_from_slice(suffix);
+                let id = c
+                    .submit(GenRequest {
+                        prompt: p,
+                        max_new_tokens: 8,
+                        priority: Priority::Normal,
+                        params: SamplingParams::default(),
+                    })
+                    .unwrap();
+                c.run_to_completion(50_000).unwrap();
+                outputs.push(c.generated(id).unwrap().to_vec());
+            }
+            assert!(
+                c.metrics
+                    .prefix_hits
+                    .load(std::sync::atomic::Ordering::Relaxed)
+                    >= 1,
+                "scenario must exercise a prefix-cache hit (device={enable_device})"
+            );
+        }
+
+        all.push(outputs);
+    }
+    assert_eq!(
+        all[0], all[1],
+        "device-resident KV diverges from the legacy host path at temperature 0"
+    );
+}
+
 /// Admission control: once `max_waiting` requests queue up, further
 /// submits bounce with `Error::Backpressure` — and the engine still
 /// drains everything it accepted.

@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# Bench gate (CI-runnable): run the engine-facing benches and record the
+# perf trajectory machine-readably.
+#
+#   1. `cargo bench --bench scheduler` — scheduler tick, chunked-prefill
+#      mixing, prefix reuse, and the modeled device-resident KV cache
+#      movement (all artifact-free, self-asserting);
+#   2. `cargo bench --bench e2e_latency` — real-engine decode/prefill
+#      latency plus the decode_span device-vs-host section with
+#      upload/readback byte counts (skips cleanly without `make
+#      artifacts`).
+#
+# Benches print `BENCHJSON {...}` lines; this script collects them into
+# BENCH_engine.json at the repo root:
+#
+#   {"generated_at": "...", "results": [ {"bench": "...", ...}, ... ]}
+#
+# Usage: scripts/bench_gate.sh   (from anywhere inside the repo)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+out="BENCH_engine.json"
+lines="$(mktemp)"
+trap 'rm -f "$lines"' EXIT
+
+run_bench() {
+  local name="$1" log
+  log="$(mktemp)"
+  # The bench output stays visible; JSON lines are harvested from the log.
+  (cd rust && cargo bench --bench "$name") | tee "$log"
+  grep '^BENCHJSON ' "$log" | sed 's/^BENCHJSON //' >> "$lines" || true
+  rm -f "$log"
+}
+
+run_bench scheduler
+run_bench e2e_latency
+
+{
+  echo '{'
+  echo "  \"generated_at\": \"$(date -u +%Y-%m-%dT%H:%M:%SZ)\","
+  echo '  "results": ['
+  # Comma-join the collected JSON objects (empty file -> empty array).
+  sed '$!s/$/,/' "$lines" | sed 's/^/    /'
+  echo '  ]'
+  echo '}'
+} > "$out"
+
+echo "[bench-gate] wrote $out ($(wc -l < "$lines" | tr -d ' ') results)"
