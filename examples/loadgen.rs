@@ -13,8 +13,7 @@
 use std::time::{Duration, Instant};
 
 use firstlayer::config::ServingConfig;
-use firstlayer::coordinator::sampling::SamplingParams;
-use firstlayer::coordinator::Coordinator;
+use firstlayer::coordinator::{Coordinator, Request};
 use firstlayer::runtime::StepPath;
 use firstlayer::util::rng::Rng;
 
@@ -57,7 +56,7 @@ fn run(model: &str, precompute: bool, rate: f64, n: usize) -> firstlayer::Result
         let now = t0.elapsed().as_secs_f64();
         while next < schedule.len() && schedule[next].0 <= now {
             let (_, p, gen) = schedule[next];
-            c.submit_text(p, gen, SamplingParams::default())?;
+            c.submit(Request::from_text(p, gen))?;
             next += 1;
         }
         if c.busy() {

@@ -14,8 +14,7 @@
 //! ```
 
 use firstlayer::config::{zoo_get, ServingConfig};
-use firstlayer::coordinator::sampling::SamplingParams;
-use firstlayer::coordinator::Coordinator;
+use firstlayer::coordinator::{Coordinator, Request};
 use firstlayer::costmodel;
 use firstlayer::util::fmt;
 
@@ -71,11 +70,10 @@ fn live() -> firstlayer::Result<()> {
         let mut c = Coordinator::from_config(&cfg)?;
         let ids: Vec<u64> = (0..4)
             .map(|i| {
-                c.submit_text(
+                c.submit(Request::from_text(
                     ["the fox", "a cache", "experts route", "blocks allocate"][i],
                     8,
-                    SamplingParams::default(),
-                )
+                ))
             })
             .collect::<firstlayer::Result<_>>()?;
         c.run_to_completion(10_000)?;

@@ -6,8 +6,7 @@
 //! ```
 
 use firstlayer::config::ServingConfig;
-use firstlayer::coordinator::sampling::SamplingParams;
-use firstlayer::coordinator::Coordinator;
+use firstlayer::coordinator::{Coordinator, Request};
 use firstlayer::costmodel;
 use firstlayer::util::fmt;
 
@@ -32,7 +31,7 @@ fn main() -> firstlayer::Result<()> {
     ];
     let ids: Vec<u64> = prompts
         .iter()
-        .map(|p| c.submit_text(p, 16, SamplingParams::default()))
+        .map(|p| c.submit(Request::from_text(*p, 16)))
         .collect::<firstlayer::Result<_>>()?;
 
     c.run_to_completion(10_000)?;

@@ -13,8 +13,7 @@
 use std::time::Instant;
 
 use firstlayer::config::ServingConfig;
-use firstlayer::coordinator::sampling::SamplingParams;
-use firstlayer::coordinator::Coordinator;
+use firstlayer::coordinator::{Coordinator, Request};
 use firstlayer::costmodel;
 use firstlayer::runtime::StepPath;
 use firstlayer::util::fmt;
@@ -61,7 +60,7 @@ fn run(model: &str, precompute: bool, n_req: usize, max_new: usize) -> firstlaye
     let ids: Vec<u64> = (0..n_req)
         .map(|_| {
             let p = PROMPTS[rng.range(0, PROMPTS.len())];
-            c.submit_text(p, max_new, SamplingParams::default())
+            c.submit(Request::from_text(p, max_new))
         })
         .collect::<firstlayer::Result<_>>()?;
     c.run_to_completion(100_000)?;

@@ -155,6 +155,10 @@ pub struct ServingConfig {
     /// Admission control: reject new requests (backpressure) once this
     /// many are already waiting; 0 = unbounded queue.
     pub max_waiting: usize,
+    /// Cap on simultaneously open chat conversations (`chat.open`);
+    /// 0 = unbounded.  Transcripts are server-held until `chat.close`,
+    /// so an uncapped count is a memory-exhaustion vector.
+    pub max_conversations: usize,
     /// Cross-request prefix cache (`rust/src/prefixcache/`): keep
     /// finished requests' prompt KV alive in a radix tree so later
     /// requests sharing the prefix (system prompts, few-shot templates)
@@ -193,6 +197,7 @@ impl Default for ServingConfig {
             prefill_chunk_tokens: 0,
             step_token_budget: 0,
             max_waiting: 256,
+            max_conversations: 1024,
             enable_prefix_cache: true,
             prefix_cache_blocks: 0,
             enable_device_kv: true,

@@ -35,7 +35,7 @@ use crate::metrics::Metrics;
 use crate::prefixcache::PrefixCache;
 use crate::runtime::{CacheBatch, DeviceCacheSession, ModelEngine, Runtime, StepPath};
 use crate::scheduler::{KvBudget, PrefillChunk, Priority, SchedConfig, Scheduler, State};
-use crate::tokenizer::{Tokenizer, EOS};
+use crate::tokenizer::{Tokenizer, BOS, EOS};
 use crate::util::rng::Rng;
 
 use sampling::{sample, SamplingParams};
@@ -46,25 +46,104 @@ pub enum FinishReason {
     Eos,
     MaxTokens,
     ContextFull,
+    /// A stop sequence matched in the detokenized output
+    /// ([`SamplingParams::stop`]).
+    Stop,
+    /// Aborted by [`Coordinator::cancel`] before a natural finish.
+    Cancelled,
 }
 
 /// Streaming event surfaced to the server / examples.
+///
+/// Admission rejections are NOT events: [`Coordinator::submit`] returns
+/// them as errors, and the protocol layer reports them on its own
+/// channel (the wire `rejected` event, correlated by the request's
+/// echoed tag) — deliberately outside the event stream, so a rejection
+/// can never perturb a live stream's state.
 #[derive(Debug, Clone)]
 pub enum Event {
     Token { id: u64, token: u32 },
     Finished { id: u64, reason: FinishReason },
-    /// Request refused at admission (backpressure or invalid); never
-    /// entered the scheduler.  `id` is 0 when no id was assigned.
-    Rejected { id: u64, msg: String },
 }
 
-/// A generation request.
+/// The one typed request shape every front end submits — server ops,
+/// `simtraffic` generators, examples and tests all build this instead
+/// of the old `submit_text(&str, usize, SamplingParams)` plumbing.
+///
+/// Inputs, in precedence order:
+/// * `conversation: Some(cv)` — a **turn delta**: the prompt is the
+///   conversation's transcript plus `text` (tokenized) or `prompt`
+///   (raw ids) appended.  At most one turn per conversation may be in
+///   flight.
+/// * `text: Some(..)` — tokenized server-side, BOS prepended.
+/// * otherwise — `prompt` is used verbatim (no BOS added).
 #[derive(Debug, Clone)]
-pub struct GenRequest {
+pub struct Request {
+    /// Raw token-id prompt (or turn delta when `conversation` is set
+    /// and `text` is `None`).
     pub prompt: Vec<u32>,
+    /// Text input, tokenized at submit (takes precedence over `prompt`).
+    pub text: Option<String>,
+    /// Conversation handle from [`Coordinator::chat_open`]: submit this
+    /// request as the conversation's next turn.
+    pub conversation: Option<u64>,
     pub max_new_tokens: usize,
     pub priority: Priority,
     pub params: SamplingParams,
+    /// Client-chosen correlation tag; the coordinator ignores it, the
+    /// protocol layer echoes it on every event of this request.
+    pub tag: Option<String>,
+}
+
+impl Request {
+    /// Request over raw token ids (no BOS prepended).
+    pub fn from_tokens(prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request {
+            prompt,
+            text: None,
+            conversation: None,
+            max_new_tokens,
+            priority: Priority::Normal,
+            params: SamplingParams::default(),
+            tag: None,
+        }
+    }
+
+    /// Request over text (tokenized at submit, BOS prepended).
+    pub fn from_text(text: impl Into<String>, max_new_tokens: usize) -> Request {
+        Request {
+            prompt: Vec::new(),
+            text: Some(text.into()),
+            conversation: None,
+            max_new_tokens,
+            priority: Priority::Normal,
+            params: SamplingParams::default(),
+            tag: None,
+        }
+    }
+
+    /// A conversation turn: `text` appended to `conv`'s transcript.
+    pub fn turn(conv: u64, text: impl Into<String>, max_new_tokens: usize) -> Request {
+        Request {
+            conversation: Some(conv),
+            ..Request::from_text(text, max_new_tokens)
+        }
+    }
+
+    pub fn with_params(mut self, params: SamplingParams) -> Request {
+        self.params = params;
+        self
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> Request {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_tag(mut self, tag: impl Into<String>) -> Request {
+        self.tag = Some(tag.into());
+        self
+    }
 }
 
 #[derive(Debug, Default)]
@@ -73,6 +152,27 @@ struct ReqState {
     submit_t: Option<Instant>,
     first_token_t: Option<Instant>,
     done: Option<FinishReason>,
+    /// Detokenized tail of the output, kept only while the request has
+    /// stop sequences (bounded to the longest stop pattern).
+    stop_buf: Vec<u8>,
+}
+
+/// One open multi-turn conversation ([`Coordinator::chat_open`]).
+///
+/// The transcript is the full token history (first turn's BOS included,
+/// assistant turns appended on finish).  Each `chat.send` submits
+/// `transcript + user delta` as an ordinary request; because finished
+/// requests insert their block-aligned **generated** spans into the
+/// prefix cache, the next turn's prefill is served from the cache for
+/// everything but the new user delta.
+#[derive(Debug, Default)]
+struct ConvState {
+    transcript: Vec<u32>,
+    /// In-flight request id for the current turn (at most one).
+    active: Option<u64>,
+    /// The prompt the active turn submitted (transcript + user delta);
+    /// becomes the new transcript prefix on finish.
+    pending_prompt: Vec<u32>,
 }
 
 /// A live device-resident decode session and the batch composition it
@@ -167,6 +267,19 @@ pub struct Coordinator {
     /// at all lives on the engine (`ModelEngine::device_kv_active`, set
     /// from `ServingConfig::enable_device_kv` at construction).
     dsess: Option<DecodeSessionState>,
+    /// Open multi-turn conversations, keyed by the handle
+    /// [`Coordinator::chat_open`] returned.
+    convs: HashMap<u64, ConvState>,
+    /// Request id -> owning conversation, for finish-time transcript
+    /// updates.
+    conv_of: HashMap<u64, u64>,
+    /// Handle entropy: a per-process randomly-keyed hasher state
+    /// (OS-seeded, independent of the deterministic sampling rng) so
+    /// conversation handles are not predictable from the serving seed.
+    conv_keys: std::collections::hash_map::RandomState,
+    conv_ctr: u64,
+    /// Cap on simultaneously open conversations (0 = unbounded).
+    max_convs: usize,
 }
 
 impl Coordinator {
@@ -257,6 +370,11 @@ impl Coordinator {
             max_waiting: cfg.max_waiting,
             prefix,
             dsess: None,
+            convs: HashMap::new(),
+            conv_of: HashMap::new(),
+            conv_keys: std::collections::hash_map::RandomState::new(),
+            conv_ctr: 0,
+            max_convs: cfg.max_conversations,
         })
     }
 
@@ -293,11 +411,65 @@ impl Coordinator {
         self.dsess.is_some()
     }
 
-    /// Submit token ids; returns the request id.  Errors with
+    /// Submit a typed [`Request`]; returns the request id.  Errors with
     /// [`Error::Backpressure`] when the waiting queue is full — the server
     /// surfaces this as a `rejected` protocol event so clients can retry
-    /// elsewhere instead of piling onto a saturated engine.
-    pub fn submit(&mut self, req: GenRequest) -> Result<u64> {
+    /// elsewhere instead of piling onto a saturated engine — and with
+    /// [`Error::Chat`] when a turn targets an unknown conversation or one
+    /// whose previous turn is still in flight.
+    pub fn submit(&mut self, req: Request) -> Result<u64> {
+        let Request {
+            prompt,
+            text,
+            conversation,
+            max_new_tokens,
+            priority,
+            params,
+            tag: _,
+        } = req;
+        // Resolve the input to a token prompt (turn delta > text > ids).
+        let reject = |m: &Metrics, e: Error| {
+            m.requests_rejected
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            e
+        };
+        let (prompt, conv) = match conversation {
+            Some(cv) => {
+                let Some(cs) = self.convs.get(&cv) else {
+                    return Err(reject(
+                        &self.metrics,
+                        Error::Chat(format!("unknown conversation {cv}")),
+                    ));
+                };
+                if let Some(active) = cs.active {
+                    return Err(reject(
+                        &self.metrics,
+                        Error::Chat(format!(
+                            "conversation {cv} already has a turn in flight \
+                             (request {active})"
+                        )),
+                    ));
+                }
+                let tlen = cs.transcript.len();
+                let mut p = cs.transcript.clone();
+                if p.is_empty() {
+                    p.push(BOS);
+                }
+                match &text {
+                    Some(t) => p.extend(self.tokenizer.encode(t)),
+                    None => p.extend_from_slice(&prompt),
+                }
+                (p, Some((cv, tlen)))
+            }
+            None => match &text {
+                Some(t) => {
+                    let mut p = vec![BOS];
+                    p.extend(self.tokenizer.encode(t));
+                    (p, None)
+                }
+                None => (prompt, None),
+            },
+        };
         if self.max_waiting > 0 && self.sched.n_waiting() >= self.max_waiting {
             self.metrics
                 .requests_rejected
@@ -308,19 +480,18 @@ impl Coordinator {
             )));
         }
         let id = self.next_id;
-        let sp = req.params;
         // Prefix-cache match BEFORE the scheduler takes ownership of the
         // prompt: a hit forks the cached blocks into the new sequence so
         // the scheduler plans (and the engine executes) only the suffix.
+        // For a conversation turn the transcript IS the prompt prefix, so
+        // this is where multi-turn reuse happens.
         let hit = self
             .prefix
             .as_mut()
-            .map(|pc| pc.match_prefix(&req.prompt))
+            .map(|pc| pc.match_prefix(&prompt))
             .filter(|m| m.tokens > 0);
-        match self
-            .sched
-            .submit(id, req.prompt, req.max_new_tokens, req.priority)
-        {
+        let pending = conv.map(|_| prompt.clone());
+        match self.sched.submit(id, prompt, max_new_tokens, priority) {
             Ok(()) => {
                 self.next_id += 1;
                 self.metrics
@@ -333,18 +504,35 @@ impl Coordinator {
                         ..Default::default()
                     },
                 );
-                self.params.insert(id, sp);
+                self.params.insert(id, params);
                 if let Some(m) = hit {
                     // Sharing moves only refcounts, so this cannot fail
                     // for lack of pool space; treat any error as a miss.
                     if self.kv.create_shared(id, &m.blocks, m.tokens).is_ok() {
                         self.sched.set_prefilled(id, m.tokens);
                         self.record_prefix_hit(m.tokens);
+                        // Chat reuse counts only the span served out of
+                        // THIS conversation's own transcript — a first
+                        // turn hitting another request's cached prompt
+                        // is ordinary prefix reuse, not multi-turn
+                        // reuse, and must not inflate the chat metric.
+                        if let Some((_, tlen)) = conv {
+                            self.metrics.chat_reused_tokens.fetch_add(
+                                m.tokens.min(tlen) as u64,
+                                std::sync::atomic::Ordering::Relaxed,
+                            );
+                        }
                     } else {
                         self.record_prefix_miss();
                     }
                 } else if self.prefix.is_some() {
                     self.record_prefix_miss();
+                }
+                if let (Some((cv, _)), Some(p)) = (conv, pending) {
+                    let cs = self.convs.get_mut(&cv).expect("conv checked above");
+                    cs.active = Some(id);
+                    cs.pending_prompt = p;
+                    self.conv_of.insert(id, cv);
                 }
                 Ok(id)
             }
@@ -357,21 +545,140 @@ impl Coordinator {
         }
     }
 
-    /// Submit text (tokenized + BOS prepended).
-    pub fn submit_text(
-        &mut self,
-        text: &str,
-        max_new_tokens: usize,
-        params: SamplingParams,
-    ) -> Result<u64> {
-        let mut prompt = vec![crate::tokenizer::BOS];
-        prompt.extend(self.tokenizer.encode(text));
-        self.submit(GenRequest {
-            prompt,
-            max_new_tokens,
-            priority: Priority::Normal,
-            params,
-        })
+    /// Abort an in-flight request: release its KV blocks and scheduler
+    /// state, emit a terminal [`Event::Finished`] with
+    /// [`FinishReason::Cancelled`], and finalize its conversation turn
+    /// (partial output included) if it was one.
+    ///
+    /// Safe against the device-resident decode path: if the live
+    /// [`DeviceCacheSession`] serves this id, the session is synced (the
+    /// *other* rows written back, this id's device-ahead rows dropped)
+    /// BEFORE the store removal — exactly the preemption ordering, so a
+    /// recycled slot can never alias a stale device row.
+    pub fn cancel(&mut self, id: u64) -> Result<()> {
+        match self.reqs.get(&id) {
+            None => {
+                return Err(Error::Cancel(format!("unknown request {id}")));
+            }
+            Some(st) if st.done.is_some() => {
+                return Err(Error::Cancel(format!(
+                    "request {id} already finished"
+                )));
+            }
+            Some(_) => {}
+        }
+        if self
+            .dsess
+            .as_ref()
+            .is_some_and(|d| d.ids.contains(&id))
+        {
+            self.sync_or_recompute(&[id])?;
+        }
+        if self.kv.seq_len(id).is_some() {
+            self.kv.remove(id)?;
+        }
+        self.sched.forget(id);
+        self.finish_conv_turn(id, FinishReason::Cancelled);
+        let st = self.reqs.get_mut(&id).expect("checked above");
+        st.done = Some(FinishReason::Cancelled);
+        if let Some(t) = st.submit_t {
+            self.metrics.e2e.record(t.elapsed());
+        }
+        self.metrics
+            .requests_cancelled
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.events.push(Event::Finished {
+            id,
+            reason: FinishReason::Cancelled,
+        });
+        Ok(())
+    }
+
+    /// Open a multi-turn conversation; returns its handle.  Turns are
+    /// submitted via [`Request::turn`] (one in flight at a time) and the
+    /// transcript grows by `user delta + assistant output` per turn.
+    ///
+    /// Handles are **capabilities**: conversations are engine-global
+    /// (they survive reconnects), so possession of the handle is the
+    /// authorization.  Handles are derived from an OS-seeded per-process
+    /// random hasher state — NOT the deterministic sampling rng, whose
+    /// stream is reproducible from `ServingConfig::seed` — and kept
+    /// below 2^53 so they round-trip JSON number encoding exactly.
+    ///
+    /// Errors with [`Error::Backpressure`] at the
+    /// [`ServingConfig::max_conversations`] cap — an uncapped `chat.open`
+    /// would be a trivial memory-exhaustion vector (transcripts are
+    /// server-held and live until [`Coordinator::chat_close`]).
+    pub fn chat_open(&mut self) -> Result<u64> {
+        if self.max_convs > 0 && self.convs.len() >= self.max_convs {
+            return Err(Error::Backpressure(format!(
+                "conversation limit reached ({})",
+                self.max_convs
+            )));
+        }
+        use std::hash::{BuildHasher, Hasher};
+        let cv = loop {
+            self.conv_ctr = self.conv_ctr.wrapping_add(1);
+            let mut h = self.conv_keys.build_hasher();
+            h.write_u64(self.conv_ctr);
+            let c = h.finish() & ((1u64 << 53) - 1);
+            if c != 0 && !self.convs.contains_key(&c) {
+                break c;
+            }
+        };
+        self.convs.insert(cv, ConvState::default());
+        Ok(cv)
+    }
+
+    /// Close a conversation, cancelling its in-flight turn if any.
+    pub fn chat_close(&mut self, conv: u64) -> Result<()> {
+        let active = self
+            .convs
+            .get(&conv)
+            .ok_or_else(|| Error::Chat(format!("unknown conversation {conv}")))?
+            .active;
+        if let Some(id) = active {
+            self.cancel(id)?;
+        }
+        self.convs.remove(&conv);
+        Ok(())
+    }
+
+    /// The conversation's token transcript so far (None if unknown).
+    pub fn chat_transcript(&self, conv: u64) -> Option<&[u32]> {
+        self.convs.get(&conv).map(|c| c.transcript.as_slice())
+    }
+
+    /// Open conversations (diagnostics).
+    pub fn chat_count(&self) -> usize {
+        self.convs.len()
+    }
+
+    /// Fold a finishing (or cancelled) turn back into its conversation:
+    /// the transcript becomes the submitted prompt plus everything
+    /// generated (a trailing EOS is dropped — it would sit mid-sequence
+    /// in the next turn's prompt).
+    fn finish_conv_turn(&mut self, id: u64, reason: FinishReason) {
+        let Some(cv) = self.conv_of.remove(&id) else {
+            return;
+        };
+        let Some(cs) = self.convs.get_mut(&cv) else {
+            return;
+        };
+        let mut t = std::mem::take(&mut cs.pending_prompt);
+        if let Some(r) = self.reqs.get(&id) {
+            t.extend_from_slice(&r.generated);
+        }
+        if reason == FinishReason::Eos && t.last() == Some(&EOS) {
+            t.pop();
+        }
+        cs.transcript = t;
+        cs.active = None;
+        if reason != FinishReason::Cancelled {
+            self.metrics
+                .chat_turns
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
     }
 
     /// Record a submit-time match.  Preemption re-matches are *not*
@@ -1059,20 +1366,51 @@ impl Coordinator {
 
     /// Sample, record, and update scheduler state for one sequence.
     fn emit_token(&mut self, id: u64, logits: &[f32]) -> Result<()> {
-        let params = self.params.get(&id).copied().unwrap_or_default();
-        let tok = sample(logits, params, &mut self.rng);
+        // Per-token hot path: sampling parameters are read in place
+        // (fields are disjoint: params / rng / reqs / tokenizer), never
+        // cloned — stop sequences would otherwise cost a Vec + String
+        // allocation per generated token.
+        let tok = match self.params.get(&id) {
+            Some(p) => sample(logits, p, &mut self.rng),
+            None => sampling::argmax(logits),
+        };
         let eos = tok == EOS;
+        let has_stop = self.params.get(&id).is_some_and(|p| !p.stop.is_empty());
         let st = self.reqs.get_mut(&id).unwrap();
         st.generated.push(tok);
+        // Stop sequences: byte-level match over the detokenized tail, so
+        // a pattern split across token boundaries still matches.  The
+        // token completing the match is emitted; the buffer is bounded
+        // by the longest pattern (plus the piece that just landed).
+        let mut stop_hit = false;
+        if has_stop && !eos {
+            if let Some(piece) = self.tokenizer.piece(tok) {
+                st.stop_buf.extend_from_slice(piece);
+            }
+            let p = self.params.get(&id).expect("has_stop checked above");
+            stop_hit = p.stop.iter().any(|sq| {
+                !sq.is_empty()
+                    && st
+                        .stop_buf
+                        .windows(sq.len())
+                        .any(|w| w == sq.as_bytes())
+            });
+            let keep = p.stop.iter().map(|s| s.len()).max().unwrap_or(1);
+            if st.stop_buf.len() > keep {
+                st.stop_buf.drain(..st.stop_buf.len() - keep);
+            }
+        }
         self.metrics
             .tokens_out
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.events.push(Event::Token { id, token: tok });
-        self.sched.on_token(id, eos);
+        self.sched.on_token(id, eos || stop_hit);
         if self.sched.state(id) == Some(State::Finished) {
             let info = self.sched.info(id).unwrap();
             let reason = if eos {
                 FinishReason::Eos
+            } else if stop_hit {
+                FinishReason::Stop
             } else if info.budget_left() == 0 {
                 FinishReason::MaxTokens
             } else {
@@ -1086,24 +1424,46 @@ impl Coordinator {
                 .requests_done
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             self.events.push(Event::Finished { id, reason });
-            // Insert-on-finish: lease the prompt's full blocks into the
-            // prefix cache before the sequence releases them.  Granules
+            // Insert-on-finish: lease the sequence's full blocks into
+            // the prefix cache before it releases them.  Granules
             // already cached are skipped (their duplicate blocks free
-            // with the sequence).  Only the scheduler-side prompt is
-            // cached — the freshly generated suffix is not, EXCEPT
-            // tokens a recompute preemption folded into the replay
-            // prompt, which are cached like any prompt content (safe:
+            // with the sequence).  The cached token path covers the
+            // prompt AND the block-aligned **generated** span — every
+            // token whose K/V row is in the paged store (all but the
+            // newest, never-executed token, and minus any rows still
+            // device-ahead in a live decode session).  That is what
+            // makes assistant turns the next chat request's prefix:
             // matching is keyed by token content, and KV depends only
-            // on the token prefix).
+            // on the token prefix, so generated rows are as reusable as
+            // prompt rows.
             if let Some(pc) = self.prefix.as_mut() {
                 if let (Some(info), Some(blocks)) =
                     (self.sched.info(id), self.kv.seq_blocks(id))
                 {
-                    let prompt = info.prompt.clone();
                     let blocks = blocks.to_vec();
-                    pc.insert(&prompt, &blocks, &mut self.kv);
+                    let mut toks = info.prompt.clone();
+                    let n_store = self.kv.seq_len(id).unwrap_or(toks.len());
+                    // Rows past the prompt hold the tokens fed on decode
+                    // steps: with P device-ahead (pending) rows, the
+                    // store's extra rows are generated[G-1-extra-P ..
+                    // G-1-P] (the newest token was sampled, never fed).
+                    let pend = self
+                        .dsess
+                        .as_ref()
+                        .and_then(|d| {
+                            d.ids.iter().position(|x| *x == id).map(|i| d.pending[i])
+                        })
+                        .unwrap_or(0);
+                    let extra = n_store.saturating_sub(toks.len());
+                    let gen = &self.reqs[&id].generated;
+                    if extra > 0 && gen.len() >= extra + pend + 1 {
+                        let start = gen.len() - 1 - pend - extra;
+                        toks.extend_from_slice(&gen[start..start + extra]);
+                    }
+                    pc.insert(&toks, &blocks, &mut self.kv);
                 }
             }
+            self.finish_conv_turn(id, reason);
             self.kv.remove(id)?;
             self.sched.forget(id);
         }
@@ -1116,6 +1476,11 @@ impl Coordinator {
     pub fn kv_free_blocks(&self) -> usize {
         self.kv.free_blocks()
     }
+    /// Assert the pool partition invariant (free + sequences + leases);
+    /// tests call this after cancel/finish churn.
+    pub fn check_kv_invariants(&self) -> Result<()> {
+        self.kv.check_invariants()
+    }
     pub fn debug_state(&self) -> Vec<(u64, Option<usize>, usize)> {
         let mut v: Vec<(u64, Option<usize>, usize)> = self
             .reqs
@@ -1125,4 +1490,38 @@ impl Coordinator {
         v.sort();
         v
     }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_builders_compose() {
+        let r = Request::from_tokens(vec![1, 2, 3], 8);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert!(r.text.is_none() && r.conversation.is_none() && r.tag.is_none());
+        assert_eq!(r.max_new_tokens, 8);
+        assert_eq!(r.priority, Priority::Normal);
+
+        let r = Request::from_text("hi", 4)
+            .with_priority(Priority::Interactive)
+            .with_tag("t1")
+            .with_params(SamplingParams {
+                temperature: 0.7,
+                top_k: 5,
+                top_p: 0.9,
+                stop: vec!["\n".into()],
+            });
+        assert_eq!(r.text.as_deref(), Some("hi"));
+        assert_eq!(r.tag.as_deref(), Some("t1"));
+        assert_eq!(r.priority, Priority::Interactive);
+        assert_eq!(r.params.top_k, 5);
+        assert_eq!(r.params.stop, vec!["\n".to_string()]);
+
+        let r = Request::turn(3, "next", 4);
+        assert_eq!(r.conversation, Some(3));
+        assert_eq!(r.text.as_deref(), Some("next"));
+    }
+
 }

@@ -1,15 +1,35 @@
-//! Token sampling: greedy, temperature, top-k — all on rust-side logits
-//! (vocab is small; no need to burn an artifact on argmax).
+//! Token sampling: greedy, temperature, top-k, top-p — all on rust-side
+//! logits (vocab is small; no need to burn an artifact on argmax).
+//!
+//! [`SamplingParams`] also carries the request's **stop sequences**;
+//! matching happens in the coordinator (it owns the tokenizer and the
+//! per-request detokenized tail), not here — sampling stays a pure
+//! logits→token function.
 
 use crate::util::rng::Rng;
 
 /// Sampling parameters for one request.
-#[derive(Debug, Clone, Copy)]
+///
+/// Not `Copy` (stop sequences own heap data): the coordinator stores one
+/// per request and clones on the per-token hot path only when a request
+/// actually set something beyond the defaults is *not* worth special
+/// casing at this scale — the clone is two `usize`s, two `f64`s and an
+/// (almost always empty) `Vec`.
+#[derive(Debug, Clone)]
 pub struct SamplingParams {
     /// 0.0 = greedy.
     pub temperature: f64,
     /// 0 = no top-k truncation.
     pub top_k: usize,
+    /// Nucleus sampling: keep the smallest probability mass >= `top_p`.
+    /// Values outside (0, 1) disable the truncation.
+    pub top_p: f64,
+    /// Stop sequences, matched server-side against the detokenized
+    /// output (byte-level, so multi-token sequences match across token
+    /// boundaries).  A match finishes the request with
+    /// `FinishReason::Stop`; the token that completed the match is
+    /// still emitted.
+    pub stop: Vec<String>,
 }
 
 impl Default for SamplingParams {
@@ -17,12 +37,14 @@ impl Default for SamplingParams {
         SamplingParams {
             temperature: 0.0,
             top_k: 0,
+            top_p: 1.0,
+            stop: Vec::new(),
         }
     }
 }
 
 /// Sample a token id from a logits row.
-pub fn sample(logits: &[f32], params: SamplingParams, rng: &mut Rng) -> u32 {
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> u32 {
     if params.temperature <= 0.0 {
         return argmax(logits);
     }
@@ -42,10 +64,36 @@ pub fn sample(logits: &[f32], params: SamplingParams, rng: &mut Rng) -> u32 {
         .iter()
         .map(|&i| logits[i as usize])
         .fold(f32::NEG_INFINITY, f32::max);
-    let weights: Vec<f64> = idx
+    let mut weights: Vec<f64> = idx
         .iter()
         .map(|&i| (((logits[i as usize] - m) / t) as f64).exp())
         .collect();
+    // Nucleus (top-p) truncation: keep the smallest weight-ordered set
+    // whose probability mass reaches `top_p` (the boundary candidate is
+    // kept, matching the usual definition).
+    if params.top_p > 0.0 && params.top_p < 1.0 {
+        let total: f64 = weights.iter().sum();
+        let mut order: Vec<usize> = (0..weights.len()).collect();
+        order.sort_unstable_by(|&a, &b| {
+            weights[b]
+                .partial_cmp(&weights[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut acc = 0.0f64;
+        let mut keep = order.len();
+        for (rank, &o) in order.iter().enumerate() {
+            acc += weights[o];
+            if acc >= params.top_p * total {
+                keep = rank + 1;
+                break;
+            }
+        }
+        order.truncate(keep);
+        let idx2: Vec<u32> = order.iter().map(|&o| idx[o]).collect();
+        let w2: Vec<f64> = order.iter().map(|&o| weights[o]).collect();
+        idx = idx2;
+        weights = w2;
+    }
     idx[rng.weighted(&weights)]
 }
 
@@ -68,7 +116,7 @@ mod tests {
     fn greedy_is_argmax() {
         let logits = vec![0.1, 3.0, -1.0, 2.9];
         let mut rng = Rng::new(0);
-        assert_eq!(sample(&logits, SamplingParams::default(), &mut rng), 1);
+        assert_eq!(sample(&logits, &SamplingParams::default(), &mut rng), 1);
     }
 
     #[test]
@@ -80,15 +128,13 @@ mod tests {
     fn top_k_restricts_support() {
         let logits = vec![10.0, 9.5, -50.0, -50.0];
         let mut rng = Rng::new(7);
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_k: 2,
+            ..Default::default()
+        };
         for _ in 0..100 {
-            let t = sample(
-                &logits,
-                SamplingParams {
-                    temperature: 1.0,
-                    top_k: 2,
-                },
-                &mut rng,
-            );
+            let t = sample(&logits, &p, &mut rng);
             assert!(t < 2, "sampled outside top-2: {t}");
         }
     }
@@ -101,8 +147,9 @@ mod tests {
         let p = SamplingParams {
             temperature: 0.0,
             top_k: 3,
+            ..Default::default()
         };
-        assert_eq!(sample(&logits, p, &mut a), sample(&logits, p, &mut b));
+        assert_eq!(sample(&logits, &p, &mut a), sample(&logits, &p, &mut b));
     }
 
     #[test]
@@ -110,17 +157,67 @@ mod tests {
         let logits = vec![1.0, 1.0, 1.0, 1.0];
         let mut rng = Rng::new(3);
         let mut seen = [false; 4];
+        let p = SamplingParams {
+            temperature: 5.0,
+            top_k: 0,
+            ..Default::default()
+        };
         for _ in 0..200 {
-            let t = sample(
-                &logits,
-                SamplingParams {
-                    temperature: 5.0,
-                    top_k: 0,
-                },
-                &mut rng,
-            );
+            let t = sample(&logits, &p, &mut rng);
             seen[t as usize] = true;
         }
         assert!(seen.iter().all(|&s| s), "uniform logits should hit all");
+    }
+
+    #[test]
+    fn top_p_restricts_support() {
+        // One dominant candidate holds > 90% of the mass: a 0.5 nucleus
+        // keeps exactly it, so sampling is deterministic despite heat.
+        let logits = vec![10.0, 2.0, 1.0, 0.0];
+        let mut rng = Rng::new(11);
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 0.5,
+            stop: Vec::new(),
+        };
+        for _ in 0..100 {
+            assert_eq!(sample(&logits, &p, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn top_p_one_is_noop_support() {
+        let logits = vec![1.0, 1.0, 1.0, 1.0];
+        let mut rng = Rng::new(13);
+        let p = SamplingParams {
+            temperature: 5.0,
+            top_k: 0,
+            top_p: 1.0,
+            stop: Vec::new(),
+        };
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[sample(&logits, &p, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "top_p=1.0 must not truncate");
+    }
+
+    #[test]
+    fn top_p_composes_with_top_k() {
+        // top-k keeps {0, 2} (the two largest); a tight nucleus over
+        // that near-even pair then keeps only 0.
+        let logits = vec![10.0, 5.0, 9.9, 9.8];
+        let mut rng = Rng::new(17);
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_k: 2,
+            top_p: 0.5,
+            stop: Vec::new(),
+        };
+        for _ in 0..100 {
+            let t = sample(&logits, &p, &mut rng);
+            assert_eq!(t, 0, "nucleus over the top-k set should keep only 0");
+        }
     }
 }

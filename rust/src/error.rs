@@ -43,6 +43,12 @@ pub enum Error {
     #[error("backpressure: {0}")]
     Backpressure(String),
 
+    #[error("chat error: {0}")]
+    Chat(String),
+
+    #[error("cancel error: {0}")]
+    Cancel(String),
+
     #[error("{0}")]
     Other(String),
 }

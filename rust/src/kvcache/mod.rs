@@ -224,7 +224,10 @@ impl PagedKvCache {
         self.note_evictable(block, was);
     }
 
-    /// Drop a sequence, releasing its blocks.
+    /// Drop a sequence, releasing its blocks — the finish, preemption
+    /// AND cancellation path (a `Coordinator::cancel` removes here after
+    /// the device-session sync; blocks a prefix-cache lease still holds
+    /// survive, everything else returns to the free list).
     pub fn remove(&mut self, seq: u64) -> Result<()> {
         let st = self
             .seqs
@@ -277,7 +280,8 @@ impl PagedKvCache {
     }
 
     /// A sequence's block table in position order (prefix-cache insert
-    /// harvests the prompt's blocks from here on finish).
+    /// harvests the prompt's — and, since protocol v2, the generated
+    /// span's — full blocks from here on finish).
     pub fn seq_blocks(&self, seq: u64) -> Option<&[u32]> {
         self.seqs.get(&seq).map(|s| s.blocks.as_slice())
     }

@@ -8,7 +8,7 @@ use std::collections::HashMap;
 
 use firstlayer::config::{zoo_get, ServingConfig};
 use firstlayer::coordinator::sampling::SamplingParams;
-use firstlayer::coordinator::Coordinator;
+use firstlayer::coordinator::{Coordinator, Request};
 use firstlayer::costmodel;
 use firstlayer::manifest::Manifest;
 use firstlayer::precompute::validate_table;
@@ -30,12 +30,14 @@ COMMANDS:
                   --chunk-tokens N|auto (chunked prefill; 0 = monolithic)
                   --token-budget N (per-step decode+prefill token budget)
                   --max-waiting N (admission backpressure; 0 = unbounded)
+                  --max-conversations N (chat.open cap; 0 = unbounded)
                   --prefix-cache-blocks N (0 = per-model zoo default)
                   --no-prefix-cache (disable cross-request KV reuse)
                   --no-device-kv (host-path caches: upload/readback per step)
   generate      one-shot generation from the CLI
                   --prompt \"text\" --max-new 32 --model tiny-serial
                   --path precompute|baseline --temperature 0 --top-k 0
+                  --top-p 1.0 --stop \"sequence\" (finish on a match)
   precompute    rebuild the table via the PJRT artifact and verify/persist
                   --model tiny-serial [--out path.fpt]
   paper-tables  print the paper's §3 tables from the cost model
@@ -103,6 +105,9 @@ fn serving_config(flags: &HashMap<String, String>) -> ServingConfig {
     }
     if let Some(w) = flags.get("max-waiting") {
         cfg.max_waiting = w.parse().unwrap_or(cfg.max_waiting);
+    }
+    if let Some(m) = flags.get("max-conversations") {
+        cfg.max_conversations = m.parse().unwrap_or(cfg.max_conversations);
     }
     if let Some(p) = flags.get("prefix-cache-blocks") {
         cfg.prefix_cache_blocks = p.parse().unwrap_or(cfg.prefix_cache_blocks);
@@ -172,9 +177,14 @@ fn cmd_generate(flags: &HashMap<String, String>) -> Result<()> {
             .and_then(|v| v.parse().ok())
             .unwrap_or(0.0),
         top_k: flags.get("top-k").and_then(|v| v.parse().ok()).unwrap_or(0),
+        top_p: flags
+            .get("top-p")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.0),
+        stop: flags.get("stop").cloned().into_iter().collect(),
     };
     let mut c = Coordinator::from_config(&cfg)?;
-    let id = c.submit_text(&prompt, max_new, params)?;
+    let id = c.submit(Request::from_text(prompt.clone(), max_new).with_params(params))?;
     c.run_to_completion(10_000)?;
     let toks = c.generated(id).unwrap_or(&[]).to_vec();
     println!("prompt : {prompt}");

@@ -227,10 +227,18 @@ impl TransferSnapshot {
 /// All serving-side metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    /// Requests accepted / completed / rejected.
+    /// Requests accepted / completed / rejected / cancelled (the v2
+    /// protocol's `cancel` op, surfaced as finish reason `cancelled`).
     pub requests_in: AtomicU64,
     pub requests_done: AtomicU64,
     pub requests_rejected: AtomicU64,
+    pub requests_cancelled: AtomicU64,
+    /// Multi-turn chat: completed turns across all conversations, and
+    /// prompt tokens a turn reused from the prefix cache instead of
+    /// re-prefilling (the prior transcript served from generated-span
+    /// KV; a subset of `prefix_cached_tokens`).
+    pub chat_turns: AtomicU64,
+    pub chat_reused_tokens: AtomicU64,
     /// Generated tokens.
     pub tokens_out: AtomicU64,
     /// Scheduler preemptions (KV pressure).
@@ -274,13 +282,20 @@ impl Metrics {
         use std::fmt::Write;
         let _ = writeln!(
             s,
-            "requests: in={} done={} rejected={}  tokens_out={}  preemptions={}  prefill_chunks={}",
+            "requests: in={} done={} rejected={} cancelled={}  tokens_out={}  preemptions={}  prefill_chunks={}",
             self.requests_in.load(Ordering::Relaxed),
             self.requests_done.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
+            self.requests_cancelled.load(Ordering::Relaxed),
             self.tokens_out.load(Ordering::Relaxed),
             self.preemptions.load(Ordering::Relaxed),
             self.prefill_chunks.load(Ordering::Relaxed),
+        );
+        let _ = writeln!(
+            s,
+            "chat: turns={} reused_tokens={}",
+            self.chat_turns.load(Ordering::Relaxed),
+            self.chat_reused_tokens.load(Ordering::Relaxed),
         );
         let _ = writeln!(
             s,
@@ -410,6 +425,17 @@ mod tests {
         assert_eq!(d.cache_uploads, 1);
         assert_eq!(d.cache_h2d_bytes, 512);
         assert_eq!(d.h2d_bytes, 0);
+    }
+
+    #[test]
+    fn report_contains_chat_and_cancel_counters() {
+        let m = Metrics::new();
+        m.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+        m.chat_turns.fetch_add(3, Ordering::Relaxed);
+        m.chat_reused_tokens.fetch_add(48, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("cancelled=1"));
+        assert!(r.contains("chat: turns=3 reused_tokens=48"));
     }
 
     #[test]

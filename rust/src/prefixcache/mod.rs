@@ -21,11 +21,16 @@
 //! produces the first-token logits.
 //!
 //! **Lifecycle.**  `match_prefix` on submit (the coordinator forks the
-//! returned blocks into the new sequence), `insert` on finish (the
-//! coordinator leases the finished sequence's prompt blocks into the
-//! tree before dropping the sequence).  Leases are real allocator
-//! refcounts ([`PagedKvCache::lease_block`]), so the free list, the
-//! sequences and the cache always partition the pool —
+//! returned blocks into the new sequence), `insert` on finish.  The
+//! inserted token path covers the prompt **and the block-aligned
+//! generated span** — every token whose K/V row landed in the paged
+//! store (the tree is keyed by token content and KV depends only on the
+//! token prefix, so generated rows are as reusable as prompt rows).
+//! This is what serves multi-turn chat: an assistant turn's KV becomes
+//! the next request's cached prefix, so each turn re-prefills only the
+//! new user delta.  Leases are real allocator refcounts
+//! ([`PagedKvCache::lease_block`]), so the free list, the sequences and
+//! the cache always partition the pool —
 //! `PagedKvCache::check_invariants` covers all three.
 //!
 //! **Eviction.**  LRU over *evictable* nodes.  A node is evictable when
@@ -461,6 +466,32 @@ mod tests {
         assert_eq!(pc.match_prefix(&diverged).tokens, 4);
         // Shorter than one block: no match possible.
         assert_eq!(pc.match_prefix(&prompt[..3]).tokens, 0);
+    }
+
+    /// The multi-turn chat shape: insert a finished turn's FULL token
+    /// path (prompt + generated span), then match the next turn's
+    /// prompt — the whole prior transcript is served, so only the new
+    /// user delta would prefill.
+    #[test]
+    fn generated_span_serves_next_turn() {
+        let mut kv = kv(16);
+        let mut pc = PrefixCache::new(BT, 16);
+        // Turn 1: 6-token prompt + 6 generated tokens with KV rows.
+        let prompt: Vec<u32> = (0..6).collect();
+        let generated: Vec<u32> = (100..106).collect();
+        let mut transcript = prompt.clone();
+        transcript.extend_from_slice(&generated);
+        let blocks = grow_seq(&mut kv, 1, &transcript);
+        // 12 tokens = 3 full 4-token blocks, generated span included.
+        assert_eq!(pc.insert(&transcript, &blocks, &mut kv), 3);
+        kv.remove(1).unwrap();
+        // Turn 2: transcript + new user delta matches all 3 blocks.
+        let mut next = transcript.clone();
+        next.extend([7, 8, 9]);
+        let m = pc.match_prefix(&next);
+        assert_eq!(m.tokens, 12, "prior transcript must be fully served");
+        assert_eq!(m.blocks.len(), 3);
+        kv.check_invariants().unwrap();
     }
 
     #[test]

@@ -4,7 +4,11 @@
 //! Sequences move `Waiting → Running → Finished`, with `Preempted` as the
 //! KV-pressure escape hatch (preempted sequences drop their cache and
 //! re-queue at the front for re-prefill — "recompute" preemption, vLLM's
-//! default).  Each engine iteration the scheduler produces a [`StepPlan`]:
+//! default).  [`Scheduler::forget`] removes a sequence from whatever
+//! state it is in — it is both the finish cleanup and the **cancel**
+//! primitive (`Coordinator::cancel` drops the KV, then forgets here; a
+//! forgotten id is never planned again).  Each engine iteration the
+//! scheduler produces a [`StepPlan`]:
 //!
 //! 1. if the pool cannot grow every decoding sequence by one token,
 //!    preempt the lowest-priority / youngest sequence until it can;
@@ -126,7 +130,9 @@ pub struct SchedConfig {
     pub max_batch: usize,
     /// Cap on prefills admitted per iteration (compile-bucket width).
     pub max_admit: usize,
-    /// Longest admissible prompt (prefill bucket T).
+    /// Largest compiled prefill bucket T (advisory: longer prompts still
+    /// admit — their excess executes as decode-kernel spans; the hard
+    /// bound is `max_seq`).
     pub max_prompt: usize,
     /// Max context (cache capacity S).
     pub max_seq: usize,
@@ -171,7 +177,13 @@ impl Scheduler {
         &self.cfg
     }
 
-    /// Enqueue a new request. Returns Err if the prompt can never fit.
+    /// Enqueue a new request. Returns Err if the request can never fit
+    /// the context.  Prompts longer than the compiled prefill bucket
+    /// (`max_prompt`) are admissible: the coordinator prefills the head
+    /// through the batched artifact and advances the excess as
+    /// decode-kernel spans (the same machinery preemption replay uses) —
+    /// which is what lets multi-turn chat transcripts keep growing past
+    /// one bucket.  Only the context bound is a hard limit.
     pub fn submit(
         &mut self,
         id: u64,
@@ -181,13 +193,6 @@ impl Scheduler {
     ) -> Result<()> {
         if prompt.is_empty() {
             return Err(crate::Error::Scheduler("empty prompt".into()));
-        }
-        if prompt.len() > self.cfg.max_prompt {
-            return Err(crate::Error::Scheduler(format!(
-                "prompt len {} exceeds max {}",
-                prompt.len(),
-                self.cfg.max_prompt
-            )));
         }
         if prompt.len() + max_new_tokens > self.cfg.max_seq {
             return Err(crate::Error::Scheduler(format!(
@@ -488,7 +493,9 @@ impl Scheduler {
         }
     }
 
-    /// Remove a finished sequence's record.
+    /// Remove a sequence's record in ANY state — finish cleanup and the
+    /// cancel primitive (waiting entries leave their queue, running ones
+    /// leave the batch; callers drop the KV separately).
     pub fn forget(&mut self, id: u64) {
         self.seqs.remove(&id);
         for q in &mut self.waiting {
@@ -957,12 +964,48 @@ mod tests {
         assert_eq!(s.info(1).unwrap().prefilled, 12);
     }
 
+    /// `forget` as the cancel primitive: a mid-prefill running sequence
+    /// and a waiting one both vanish from every future plan, and the
+    /// survivors keep decoding.
+    #[test]
+    fn forget_cancels_waiting_and_running() {
+        let mut s = sched_chunked(4, 0);
+        let b = Budget::new(100);
+        s.submit(1, vec![7; 10], 4, Priority::Normal).unwrap();
+        s.submit(2, vec![5; 4], 4, Priority::Normal).unwrap();
+        let p = s.plan(&b);
+        for c in &p.prefill {
+            s.on_chunk(c.id, c.len);
+            if c.last {
+                s.on_token(c.id, false);
+            }
+        }
+        // Seq 1 (10-token prompt, 4-token chunks) is mid-prefill.
+        assert_eq!(s.n_prefilling(), 1);
+        s.forget(1);
+        assert_eq!(s.state(1), None);
+        assert_eq!(s.n_prefilling(), 0);
+        let p2 = s.plan(&b);
+        assert!(p2.prefill.iter().all(|c| c.id != 1), "cancelled id planned");
+        assert_eq!(p2.decode, vec![2], "survivor must keep decoding");
+        // A waiting sequence cancels out of its queue the same way.
+        s.submit(3, vec![9; 4], 4, Priority::Normal).unwrap();
+        s.forget(3);
+        assert_eq!(s.state(3), None);
+        let p3 = s.plan(&b);
+        assert!(p3.prefill.iter().all(|c| c.id != 3));
+    }
+
     #[test]
     fn rejects_oversized() {
         let mut s = sched(4);
-        assert!(s.submit(1, vec![0; 33], 4, Priority::Normal).is_err());
+        // Over the prefill bucket (max_prompt 32) but within context:
+        // admissible — the excess runs as spans (chat transcripts grow).
+        assert!(s.submit(1, vec![0; 33], 4, Priority::Normal).is_ok());
+        // Over the context (max_seq 64): never fits, hard reject.
         assert!(s.submit(2, vec![0; 8], 60, Priority::Normal).is_err());
         assert!(s.submit(3, vec![], 4, Priority::Normal).is_err());
+        assert!(s.submit(4, vec![0; 65], 0, Priority::Normal).is_err());
     }
 
     /// Property: under random arrivals/finishes the scheduler never plans

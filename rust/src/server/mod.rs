@@ -1,60 +1,104 @@
-//! TCP line-protocol server (S14): the deployable front of the stack.
+//! TCP line-protocol server (S14): the deployable front of the stack,
+//! speaking **protocol v2** — session-oriented, multiplexed, cancellable.
 //! The wire format is specified normatively in `docs/protocol.md`; this
 //! doc block is a summary and must stay in sync with it.
 //!
-//! One JSON object per line, request → streamed response lines:
+//! One JSON object per line.  Every request may carry a client-chosen
+//! `tag`; the tag is echoed on every event the request produces, and a
+//! **tagged** `generate`/`chat.send` returns control to the line reader
+//! immediately, so one connection can hold many in-flight requests whose
+//! token streams interleave (demultiplex by `tag`).  **Untagged**
+//! requests keep the v1 contract: the connection blocks until the
+//! terminal event.
 //!
 //! ```text
-//! → {"op":"generate","prompt":"the quick","max_new_tokens":16,
-//!    "temperature":0.0,"top_k":0}
-//! ← {"event":"token","id":3,"token":287,"text":" brown"}
-//! ← {"event":"done","id":3,"reason":"max_tokens","text":"<full output>"}
-//!   (or, under admission-control backpressure / on an invalid request:)
-//! ← {"event":"rejected","id":0,"msg":"backpressure: waiting queue full"}
+//! → {"op":"generate","tag":"a","prompt":"the quick","max_new_tokens":16,
+//!    "temperature":0.0,"top_k":0,"top_p":1.0,"stop":["\n"]}
+//! ← {"event":"token","tag":"a","id":3,"token":287,"text":" brown"}
+//! ← {"event":"done","tag":"a","id":3,"reason":"max_tokens","text":"…"}
+//!   (admission failure / invalid request → terminal instead of stream:)
+//! ← {"event":"rejected","tag":"a","id":0,"msg":"backpressure: …"}
 //!
-//! → {"op":"metrics"}      ← {"event":"metrics","report":"...",
-//!                            "prefix_hits":…,"prefix_misses":…,
-//!                            "prefix_evictions":…,"prefix_cached_tokens":…,
-//!                            "h2d_bytes":…,"d2h_bytes":…,"kv_h2d_bytes":…,
-//!                            "kv_d2h_bytes":…,"kv_cache_uploads":…,
-//!                            "kv_cache_syncs":…}
-//! → {"op":"traffic"}      ← {"event":"traffic", ...counters...}
+//! → {"op":"cancel","tag":"a"}        ← {"event":"ok","op":"cancel","tag":"a"}
+//!                                      (stream then ends with
+//!                                       {"event":"done","tag":"a","reason":"cancelled",…})
+//!
+//! → {"op":"chat.open"}               ← {"event":"chat.opened","conv":1}
+//! → {"op":"chat.send","conv":1,"tag":"t1","text":"hello","max_new_tokens":16}
+//! ← token*/done as for generate (the turn's prompt is the transcript
+//!   plus the new text; prior turns are served from cached KV)
+//! → {"op":"chat.close","conv":1}     ← {"event":"chat.closed","conv":1}
+//!
+//! → {"op":"metrics"}   ← {"event":"metrics","report":"…", …structured
+//!                         prefix_*/kv_*/chat_*/requests_cancelled fields}
+//! → {"op":"traffic"}   ← {"event":"traffic", …counters…}
 //! → {"op":"path","value":"baseline"|"precompute"}  ← {"event":"ok"}
-//! → {"op":"ping"}         ← {"event":"pong"}
+//! → {"op":"ping"}      ← {"event":"pong"}
 //! ```
 //!
-//! Malformed JSON, an unknown `op`, or a bad `path` value produce
-//! `{"event":"error","msg":...}` on the offending line; the connection
-//! stays open.
+//! Malformed JSON, an unknown `op`, or bad field values produce
+//! `{"event":"error","msg":…}` on the offending line — with the failing
+//! `op` and the request's `tag` echoed when they could be parsed — and
+//! the connection stays open.
 //!
 //! Threading: a single engine loop owns the coordinator (PJRT calls are
-//! not assumed thread-safe); connection threads only enqueue requests and
-//! wait on per-request channels.  No tokio in the offline build — plain
-//! `std::net` + threads, which a coordinator at this scale genuinely
-//! doesn't need more than.  See `ARCHITECTURE.md` for the thread/ownership
-//! diagram.
+//! not assumed thread-safe); connection threads only enqueue requests.
+//! Each connection runs one reader thread (parses ops, serves v1
+//! blocking requests inline) and one writer thread (streams tagged
+//! events as the engine fans them out); both write lines under the same
+//! socket mutex, so lines never interleave mid-record.  No tokio in the
+//! offline build — plain `std::net` + threads.  See `ARCHITECTURE.md`
+//! for the thread/ownership diagram.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::sampling::SamplingParams;
-use crate::coordinator::{Coordinator, Event, FinishReason};
+use crate::coordinator::{Coordinator, Event, FinishReason, Request};
 use crate::error::{Error, Result};
 use crate::runtime::StepPath;
+use crate::scheduler::Priority;
+use crate::tokenizer::Tokenizer;
 use crate::util::json::{self, n, obj, s, Value};
+
+/// A streamed event plus the tag it must be echoed with.
+type TaggedEvent = (Option<String>, Event);
 
 /// Commands from connection threads to the engine loop.
 enum Cmd {
+    /// Submit a typed request.  `admit` gets the admission outcome
+    /// (`Err` = rejected, with the reason); on success `reply` receives
+    /// every event of the request (tag attached by the engine loop).
+    /// Keeping rejection OFF the event channel matters: the shared
+    /// writer keys per-stream state by tag, and a rejection must never
+    /// be able to touch a live stream's accumulation (duplicate tags).
     Generate {
-        text: String,
-        max_new_tokens: usize,
-        params: SamplingParams,
-        /// Streamed events go back through this.
-        reply: Sender<Event>,
+        conn: u64,
+        req: Request,
+        admit: Sender<std::result::Result<u64, String>>,
+        reply: Sender<TaggedEvent>,
+    },
+    /// Cancel the in-flight request `tag` on connection `conn`.
+    /// `reply` gets `None` on success, `Some(msg)` when nothing matched.
+    Cancel {
+        conn: u64,
+        tag: String,
+        reply: Sender<Option<String>>,
+    },
+    /// Open a conversation; `reply` gets the handle, or the refusal
+    /// reason (conversation cap).
+    ChatOpen {
+        reply: Sender<std::result::Result<u64, String>>,
+    },
+    /// Close a conversation (cancelling its in-flight turn, if any).
+    ChatClose {
+        conv: u64,
+        reply: Sender<Option<String>>,
     },
     SetPath(StepPath),
 }
@@ -111,6 +155,7 @@ impl Server {
         let handles = hrx
             .recv()
             .map_err(|_| Error::Server("engine thread died".into()))??;
+        let conn_ids = AtomicU64::new(1);
         for stream in listener.incoming() {
             let Ok(stream) = stream else { continue };
             let tx = tx.clone();
@@ -118,27 +163,39 @@ impl Server {
             let traffic = handles.traffic.clone();
             let tokenizer = handles.tokenizer.clone();
             let transfers = handles.transfers.clone();
+            let conn = conn_ids.fetch_add(1, Ordering::Relaxed);
             std::thread::spawn(move || {
-                let _ = handle_conn(stream, tx, metrics, traffic, tokenizer, transfers);
+                let _ =
+                    handle_conn(stream, tx, metrics, traffic, tokenizer, transfers, conn);
             });
         }
         Ok(())
     }
 }
 
+/// Per-request event routing state the engine loop keeps.
+struct Sink {
+    tx: Sender<TaggedEvent>,
+    tag: Option<String>,
+    conn: u64,
+}
+
 /// The engine loop: owns the coordinator, interleaves request intake with
 /// `step()`, and fans events back out to the requesting connections.
+/// Tags are attached here (the coordinator speaks ids only); the
+/// `(conn, tag) -> id` index is what `cancel` resolves against.
 fn engine_loop(mut c: Coordinator, rx: Receiver<Cmd>) {
-    let mut sinks: HashMap<u64, Sender<Event>> = HashMap::new();
+    let mut sinks: HashMap<u64, Sink> = HashMap::new();
+    let mut by_tag: HashMap<(u64, String), u64> = HashMap::new();
     loop {
         // Intake: block when idle, drain opportunistically when busy.
         if c.busy() {
             while let Ok(cmd) = rx.try_recv() {
-                apply(&mut c, cmd, &mut sinks);
+                apply(&mut c, cmd, &mut sinks, &mut by_tag);
             }
         } else {
             match rx.recv_timeout(Duration::from_millis(200)) {
-                Ok(cmd) => apply(&mut c, cmd, &mut sinks),
+                Ok(cmd) => apply(&mut c, cmd, &mut sinks, &mut by_tag),
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
                 Err(_) => return, // all senders dropped: shut down
             }
@@ -150,43 +207,83 @@ fn engine_loop(mut c: Coordinator, rx: Receiver<Cmd>) {
         }
         for ev in c.take_events() {
             let id = match &ev {
-                Event::Token { id, .. }
-                | Event::Finished { id, .. }
-                | Event::Rejected { id, .. } => *id,
+                Event::Token { id, .. } | Event::Finished { id, .. } => *id,
             };
-            let done = matches!(ev, Event::Finished { .. } | Event::Rejected { .. });
+            let done = matches!(ev, Event::Finished { .. });
             if let Some(sink) = sinks.get(&id) {
-                let _ = sink.send(ev);
+                let _ = sink.tx.send((sink.tag.clone(), ev));
             }
             if done {
-                sinks.remove(&id);
+                if let Some(sink) = sinks.remove(&id) {
+                    if let Some(t) = sink.tag {
+                        by_tag.remove(&(sink.conn, t));
+                    }
+                }
             }
         }
     }
 }
 
-fn apply(c: &mut Coordinator, cmd: Cmd, sinks: &mut HashMap<u64, Sender<Event>>) {
+fn apply(
+    c: &mut Coordinator,
+    cmd: Cmd,
+    sinks: &mut HashMap<u64, Sink>,
+    by_tag: &mut HashMap<(u64, String), u64>,
+) {
     match cmd {
         Cmd::Generate {
-            text,
-            max_new_tokens,
-            params,
+            conn,
+            req,
+            admit,
             reply,
-        } => match c.submit_text(&text, max_new_tokens, params) {
-            Ok(id) => {
-                sinks.insert(id, reply);
+        } => {
+            let tag = req.tag.clone();
+            if let Some(t) = &tag {
+                if by_tag.contains_key(&(conn, t.clone())) {
+                    // A duplicate tag would make the interleaved streams
+                    // un-demultiplexable; refuse up front (counted like
+                    // any admission rejection).
+                    c.metrics
+                        .requests_rejected
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let _ = admit.send(Err(format!(
+                        "tag `{t}` already in flight on this connection"
+                    )));
+                    return;
+                }
             }
-            Err(e) => {
-                // Surface admission failure (backpressure, oversized
-                // prompt, ...) as an immediate `rejected` event so the
-                // client can back off and retry instead of hanging.
-                let _ = reply.send(Event::Rejected {
-                    id: 0,
-                    msg: e.to_string(),
-                });
-                eprintln!("[firstlayer] rejected: {e}");
+            match c.submit(req) {
+                Ok(id) => {
+                    if let Some(t) = &tag {
+                        by_tag.insert((conn, t.clone()), id);
+                    }
+                    sinks.insert(id, Sink { tx: reply, tag, conn });
+                    let _ = admit.send(Ok(id));
+                }
+                Err(e) => {
+                    // Surface admission failure (backpressure, context
+                    // overflow, bad conversation, ...) back to the
+                    // reader, which writes the `rejected` event — never
+                    // through the shared event writer, so a rejection
+                    // cannot perturb a live stream.
+                    eprintln!("[firstlayer] rejected: {e}");
+                    let _ = admit.send(Err(e.to_string()));
+                }
             }
-        },
+        }
+        Cmd::Cancel { conn, tag, reply } => {
+            let outcome = match by_tag.get(&(conn, tag.clone())).copied() {
+                Some(id) => c.cancel(id).err().map(|e| e.to_string()),
+                None => Some(format!("no in-flight request tagged `{tag}`")),
+            };
+            let _ = reply.send(outcome);
+        }
+        Cmd::ChatOpen { reply } => {
+            let _ = reply.send(c.chat_open().map_err(|e| e.to_string()));
+        }
+        Cmd::ChatClose { conv, reply } => {
+            let _ = reply.send(c.chat_close(conv).err().map(|e| e.to_string()));
+        }
         Cmd::SetPath(p) => {
             if let Err(e) = c.set_path(p) {
                 eprintln!("[firstlayer] set_path: {e}");
@@ -200,9 +297,132 @@ fn reason_str(r: FinishReason) -> &'static str {
         FinishReason::Eos => "eos",
         FinishReason::MaxTokens => "max_tokens",
         FinishReason::ContextFull => "context_full",
+        FinishReason::Stop => "stop",
+        FinishReason::Cancelled => "cancelled",
     }
 }
 
+/// Append `tag` to an event's field list when present.
+fn push_tag(fields: &mut Vec<(&str, Value)>, tag: &Option<String>) {
+    if let Some(t) = tag {
+        fields.push(("tag", s(t.clone())));
+    }
+}
+
+/// An `error` event, attributing the failure to `op` and `tag` when the
+/// offending line carried them (multiplexed clients demand this — see
+/// `docs/protocol.md` §errors).
+fn err_line(op: Option<&str>, tag: &Option<String>, msg: String) -> Value {
+    let mut fields = vec![("event", s("error")), ("msg", s(msg))];
+    if let Some(o) = op {
+        fields.push(("op", s(o)));
+    }
+    push_tag(&mut fields, tag);
+    obj(fields)
+}
+
+/// Format one streamed event as a protocol line.  `acc` carries the
+/// per-request token accumulation the terminal `done` event reports as
+/// full decoded text.
+fn event_line(
+    tag: &Option<String>,
+    ev: &Event,
+    acc: &mut Vec<u32>,
+    tokenizer: &Tokenizer,
+) -> (Value, bool) {
+    match ev {
+        Event::Token { id, token } => {
+            acc.push(*token);
+            let mut fields = vec![
+                ("event", s("token")),
+                ("id", n(*id as f64)),
+                ("token", n(*token as f64)),
+                ("text", s(tokenizer.decode(&[*token]))),
+            ];
+            push_tag(&mut fields, tag);
+            (obj(fields), false)
+        }
+        Event::Finished { id, reason } => {
+            let mut fields = vec![
+                ("event", s("done")),
+                ("id", n(*id as f64)),
+                ("reason", s(reason_str(*reason))),
+                ("text", s(tokenizer.decode(acc))),
+            ];
+            push_tag(&mut fields, tag);
+            (obj(fields), true)
+        }
+    }
+}
+
+/// The per-connection writer thread: streams every tagged (multiplexed)
+/// event as it arrives, accumulating tokens per tag so `done` can carry
+/// the full decoded output.  Exits when the last sender (reader thread +
+/// engine-side sinks) is gone, or on a write error (client hung up).
+fn conn_writer(
+    rx: Receiver<TaggedEvent>,
+    out: Arc<Mutex<TcpStream>>,
+    tokenizer: Arc<Tokenizer>,
+) {
+    let mut acc: HashMap<String, Vec<u32>> = HashMap::new();
+    for (tag, ev) in rx {
+        let key = tag.clone().unwrap_or_default();
+        let tokens = acc.entry(key.clone()).or_default();
+        let (line, terminal) = event_line(&tag, &ev, tokens, &tokenizer);
+        if terminal {
+            acc.remove(&key);
+        }
+        if send(&out, &line).is_err() {
+            return; // client gone; in-flight requests drain server-side
+        }
+    }
+}
+
+/// Parse the generation-shaped fields shared by `generate` and
+/// `chat.send`: budget, sampling (including `top_p` and `stop`),
+/// priority, tag.
+fn parse_gen_fields(req: &Value) -> (usize, SamplingParams, Priority, Option<String>) {
+    let max_new = req
+        .get_opt("max_new_tokens")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(32);
+    let stop = match req.get_opt("stop") {
+        Some(Value::Str(one)) => vec![one.clone()],
+        Some(v) => v
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                    .collect()
+            })
+            .unwrap_or_default(),
+        None => Vec::new(),
+    };
+    let params = SamplingParams {
+        temperature: req
+            .get_opt("temperature")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0),
+        top_k: req.get_opt("top_k").and_then(|v| v.as_usize()).unwrap_or(0),
+        top_p: req
+            .get_opt("top_p")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(1.0),
+        stop,
+    };
+    let priority = match req.get_opt("priority").and_then(|v| v.as_str()) {
+        Some("interactive") => Priority::Interactive,
+        Some("batch") => Priority::Batch,
+        _ => Priority::Normal,
+    };
+    let tag = req
+        .get_opt("tag")
+        .and_then(|v| v.as_str())
+        .map(|t| t.to_string());
+    (max_new, params, priority, tag)
+}
+
+#[allow(clippy::too_many_arguments)]
 fn handle_conn(
     stream: TcpStream,
     tx: Sender<Cmd>,
@@ -210,10 +430,18 @@ fn handle_conn(
     traffic: Arc<crate::simtraffic::Recorder>,
     tokenizer: Arc<crate::tokenizer::Tokenizer>,
     transfers: Arc<crate::metrics::TransferStats>,
+    conn: u64,
 ) -> Result<()> {
-    let peer = stream.peer_addr().ok();
     let reader = BufReader::new(stream.try_clone()?);
     let out = Arc::new(Mutex::new(stream));
+    // The multiplexed path: tagged requests stream through this channel
+    // and the writer thread, so the reader below can keep accepting ops.
+    let (atx, arx) = channel::<TaggedEvent>();
+    {
+        let out = Arc::clone(&out);
+        let tokenizer = Arc::clone(&tokenizer);
+        std::thread::spawn(move || conn_writer(arx, out, tokenizer));
+    }
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
@@ -222,73 +450,92 @@ fn handle_conn(
         let req = match json::parse(&line) {
             Ok(v) => v,
             Err(e) => {
-                send(&out, &obj(vec![("event", s("error")), ("msg", s(e.to_string()))]))?;
+                send(&out, &err_line(None, &None, e.to_string()))?;
                 continue;
             }
         };
-        match req.get_opt("op").and_then(|v| v.as_str()) {
-            Some("ping") => send(&out, &obj(vec![("event", s("pong"))]))?,
+        let op = req.get_opt("op").and_then(|v| v.as_str()).map(|s| s.to_string());
+        let tag = req
+            .get_opt("tag")
+            .and_then(|v| v.as_str())
+            .map(|t| t.to_string());
+        match op.as_deref() {
+            Some("ping") => {
+                let mut fields = vec![("event", s("pong"))];
+                push_tag(&mut fields, &tag);
+                send(&out, &obj(fields))?;
+            }
             Some("metrics") => {
                 use std::sync::atomic::Ordering::Relaxed;
                 let t = transfers.snapshot();
-                send(
-                    &out,
-                    &obj(vec![
-                        ("event", s("metrics")),
-                        ("report", s(metrics.report())),
-                        // Prefix-cache stats as structured fields so
-                        // clients need not parse the report text.
-                        ("prefix_hits", n(metrics.prefix_hits.load(Relaxed) as f64)),
-                        (
-                            "prefix_misses",
-                            n(metrics.prefix_misses.load(Relaxed) as f64),
-                        ),
-                        (
-                            "prefix_evictions",
-                            n(metrics.prefix_evictions.load(Relaxed) as f64),
-                        ),
-                        (
-                            "prefix_cached_tokens",
-                            n(metrics.prefix_cached_tokens.load(Relaxed) as f64),
-                        ),
-                        // Host↔device transfer accounting (device-resident
-                        // KV observability; `kv_*` is the cache share).
-                        ("h2d_bytes", n(t.h2d_bytes as f64)),
-                        ("d2h_bytes", n(t.d2h_bytes as f64)),
-                        ("kv_h2d_bytes", n(t.cache_h2d_bytes as f64)),
-                        ("kv_d2h_bytes", n(t.cache_d2h_bytes as f64)),
-                        ("kv_cache_uploads", n(t.cache_uploads as f64)),
-                        ("kv_cache_syncs", n(t.cache_syncs as f64)),
-                    ]),
-                )?
+                let mut fields = vec![
+                    ("event", s("metrics")),
+                    ("report", s(metrics.report())),
+                    // Prefix-cache stats as structured fields so
+                    // clients need not parse the report text.
+                    ("prefix_hits", n(metrics.prefix_hits.load(Relaxed) as f64)),
+                    (
+                        "prefix_misses",
+                        n(metrics.prefix_misses.load(Relaxed) as f64),
+                    ),
+                    (
+                        "prefix_evictions",
+                        n(metrics.prefix_evictions.load(Relaxed) as f64),
+                    ),
+                    (
+                        "prefix_cached_tokens",
+                        n(metrics.prefix_cached_tokens.load(Relaxed) as f64),
+                    ),
+                    // Host↔device transfer accounting (device-resident
+                    // KV observability; `kv_*` is the cache share).
+                    ("h2d_bytes", n(t.h2d_bytes as f64)),
+                    ("d2h_bytes", n(t.d2h_bytes as f64)),
+                    ("kv_h2d_bytes", n(t.cache_h2d_bytes as f64)),
+                    ("kv_d2h_bytes", n(t.cache_d2h_bytes as f64)),
+                    ("kv_cache_uploads", n(t.cache_uploads as f64)),
+                    ("kv_cache_syncs", n(t.cache_syncs as f64)),
+                    // v2: conversation + cancellation counters.
+                    (
+                        "requests_cancelled",
+                        n(metrics.requests_cancelled.load(Relaxed) as f64),
+                    ),
+                    ("chat_turns", n(metrics.chat_turns.load(Relaxed) as f64)),
+                    (
+                        "chat_reused_tokens",
+                        n(metrics.chat_reused_tokens.load(Relaxed) as f64),
+                    ),
+                ];
+                push_tag(&mut fields, &tag);
+                send(&out, &obj(fields))?;
             }
             Some("traffic") => {
                 let t = traffic.snapshot();
-                send(
-                    &out,
-                    &obj(vec![
-                        ("event", s("traffic")),
-                        ("l1_reads_baseline", n(t.l1_reads_baseline as f64)),
-                        ("l1_reads_precomp", n(t.l1_reads_precomp as f64)),
-                        ("decode_tokens", n(t.decode_tokens as f64)),
-                        ("prefill_tokens", n(t.prefill_tokens as f64)),
-                        ("prefill_calls", n(t.prefill_calls as f64)),
-                        ("table_bytes_read", n(t.table_bytes_read as f64)),
-                    ]),
-                )?
+                let mut fields = vec![
+                    ("event", s("traffic")),
+                    ("l1_reads_baseline", n(t.l1_reads_baseline as f64)),
+                    ("l1_reads_precomp", n(t.l1_reads_precomp as f64)),
+                    ("decode_tokens", n(t.decode_tokens as f64)),
+                    ("prefill_tokens", n(t.prefill_tokens as f64)),
+                    ("prefill_calls", n(t.prefill_calls as f64)),
+                    ("table_bytes_read", n(t.table_bytes_read as f64)),
+                ];
+                push_tag(&mut fields, &tag);
+                send(&out, &obj(fields))?;
             }
             Some("path") => {
                 let p = match req.get_opt("value").and_then(|v| v.as_str()) {
                     Some("baseline") => StepPath::Baseline,
                     Some("precompute") => StepPath::Precompute,
                     _ => {
-                        send(&out, &obj(vec![("event", s("error")), ("msg", s("bad path"))]))?;
+                        send(&out, &err_line(Some("path"), &tag, "bad path".into()))?;
                         continue;
                     }
                 };
                 tx.send(Cmd::SetPath(p))
                     .map_err(|_| Error::Server("engine gone".into()))?;
-                send(&out, &obj(vec![("event", s("ok"))]))?;
+                let mut fields = vec![("event", s("ok")), ("op", s("path"))];
+                push_tag(&mut fields, &tag);
+                send(&out, &obj(fields))?;
             }
             Some("generate") => {
                 let text = req
@@ -296,71 +543,167 @@ fn handle_conn(
                     .and_then(|v| v.as_str())
                     .unwrap_or("")
                     .to_string();
-                let max_new = req
-                    .get_opt("max_new_tokens")
-                    .and_then(|v| v.as_usize())
-                    .unwrap_or(32);
-                let params = SamplingParams {
-                    temperature: req
-                        .get_opt("temperature")
-                        .and_then(|v| v.as_f64())
-                        .unwrap_or(0.0),
-                    top_k: req.get_opt("top_k").and_then(|v| v.as_usize()).unwrap_or(0),
-                };
-                let (etx, erx) = channel();
-                tx.send(Cmd::Generate {
-                    text,
-                    max_new_tokens: max_new,
-                    params,
-                    reply: etx,
-                })
-                .map_err(|_| Error::Server("engine gone".into()))?;
-                let mut tokens: Vec<u32> = Vec::new();
-                for ev in erx {
-                    match ev {
-                        Event::Token { id, token } => {
-                            tokens.push(token);
-                            let piece = tokenizer.decode(&[token]);
-                            send(
-                                &out,
-                                &obj(vec![
-                                    ("event", s("token")),
-                                    ("id", n(id as f64)),
-                                    ("token", n(token as f64)),
-                                    ("text", s(piece)),
-                                ]),
-                            )?;
-                        }
-                        Event::Finished { id, reason } => {
-                            send(
-                                &out,
-                                &obj(vec![
-                                    ("event", s("done")),
-                                    ("id", n(id as f64)),
-                                    ("reason", s(reason_str(reason))),
-                                    ("text", s(tokenizer.decode(&tokens))),
-                                ]),
-                            )?;
-                            break;
-                        }
-                        Event::Rejected { id, msg } => {
-                            send(
-                                &out,
-                                &obj(vec![
-                                    ("event", s("rejected")),
-                                    ("id", n(id as f64)),
-                                    ("msg", s(msg)),
-                                ]),
-                            )?;
-                            break;
-                        }
+                let (max_new, params, priority, tag) = parse_gen_fields(&req);
+                let mut r = Request::from_text(text, max_new)
+                    .with_params(params)
+                    .with_priority(priority);
+                r.tag = tag;
+                submit_request(&out, &tx, &atx, &tokenizer, conn, r)?;
+            }
+            Some("chat.open") => {
+                let (rtx, rrx) = channel();
+                tx.send(Cmd::ChatOpen { reply: rtx })
+                    .map_err(|_| Error::Server("engine gone".into()))?;
+                match rrx.recv() {
+                    Ok(Ok(conv)) => {
+                        let mut fields =
+                            vec![("event", s("chat.opened")), ("conv", n(conv as f64))];
+                        push_tag(&mut fields, &tag);
+                        send(&out, &obj(fields))?;
                     }
+                    Ok(Err(msg)) => {
+                        send(&out, &err_line(Some("chat.open"), &tag, msg))?
+                    }
+                    Err(_) => return Err(Error::Server("engine gone".into())),
                 }
             }
-            _ => send(&out, &obj(vec![("event", s("error")), ("msg", s("unknown op"))]))?,
+            Some("chat.send") => {
+                let Some(conv) = req.get_opt("conv").and_then(|v| v.as_u64()) else {
+                    send(
+                        &out,
+                        &err_line(Some("chat.send"), &tag, "missing conv".into()),
+                    )?;
+                    continue;
+                };
+                let text = req
+                    .get_opt("text")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string();
+                let (max_new, params, priority, tag) = parse_gen_fields(&req);
+                let mut r = Request::turn(conv, text, max_new)
+                    .with_params(params)
+                    .with_priority(priority);
+                r.tag = tag;
+                submit_request(&out, &tx, &atx, &tokenizer, conn, r)?;
+            }
+            Some("chat.close") => {
+                let Some(conv) = req.get_opt("conv").and_then(|v| v.as_u64()) else {
+                    send(
+                        &out,
+                        &err_line(Some("chat.close"), &tag, "missing conv".into()),
+                    )?;
+                    continue;
+                };
+                let (rtx, rrx) = channel();
+                tx.send(Cmd::ChatClose { conv, reply: rtx })
+                    .map_err(|_| Error::Server("engine gone".into()))?;
+                match rrx.recv() {
+                    Ok(None) => {
+                        let mut fields =
+                            vec![("event", s("chat.closed")), ("conv", n(conv as f64))];
+                        push_tag(&mut fields, &tag);
+                        send(&out, &obj(fields))?;
+                    }
+                    Ok(Some(msg)) => {
+                        send(&out, &err_line(Some("chat.close"), &tag, msg))?
+                    }
+                    Err(_) => return Err(Error::Server("engine gone".into())),
+                }
+            }
+            Some("cancel") => {
+                let Some(t) = tag.clone() else {
+                    send(
+                        &out,
+                        &err_line(Some("cancel"), &None, "cancel needs a tag".into()),
+                    )?;
+                    continue;
+                };
+                let (rtx, rrx) = channel();
+                tx.send(Cmd::Cancel {
+                    conn,
+                    tag: t.clone(),
+                    reply: rtx,
+                })
+                .map_err(|_| Error::Server("engine gone".into()))?;
+                match rrx.recv() {
+                    Ok(None) => {
+                        let fields = vec![
+                            ("event", s("ok")),
+                            ("op", s("cancel")),
+                            ("tag", s(t)),
+                        ];
+                        send(&out, &obj(fields))?;
+                    }
+                    Ok(Some(msg)) => send(&out, &err_line(Some("cancel"), &tag, msg))?,
+                    Err(_) => return Err(Error::Server("engine gone".into())),
+                }
+            }
+            other => {
+                let msg = match other {
+                    Some(o) => format!("unknown op `{o}`"),
+                    None => "missing op".to_string(),
+                };
+                send(&out, &err_line(other, &tag, msg))?;
+            }
         }
     }
-    let _ = peer;
+    Ok(())
+}
+
+/// Route a typed request.  Admission is resolved synchronously (the
+/// engine answers on `admit` between steps): a rejection is written
+/// here as the terminal `rejected` event — it never enters the shared
+/// event writer, so it cannot perturb a live stream's accumulation.
+/// On admission, tagged requests stream through the connection's
+/// multiplexed writer (the reader returns immediately); untagged
+/// requests keep the v1 contract — drain the stream inline, blocking
+/// this connection until the terminal event.
+fn submit_request(
+    out: &Arc<Mutex<TcpStream>>,
+    tx: &Sender<Cmd>,
+    atx: &Sender<TaggedEvent>,
+    tokenizer: &Tokenizer,
+    conn: u64,
+    req: Request,
+) -> Result<()> {
+    let tag = req.tag.clone();
+    let tagged = tag.is_some();
+    let (admit_tx, admit_rx) = channel();
+    let (etx, erx) = channel();
+    let reply = if tagged { atx.clone() } else { etx };
+    tx.send(Cmd::Generate {
+        conn,
+        req,
+        admit: admit_tx,
+        reply,
+    })
+    .map_err(|_| Error::Server("engine gone".into()))?;
+    match admit_rx.recv() {
+        Ok(Ok(_id)) => {}
+        Ok(Err(msg)) => {
+            let mut fields = vec![
+                ("event", s("rejected")),
+                ("id", n(0.0)),
+                ("msg", s(msg)),
+            ];
+            push_tag(&mut fields, &tag);
+            send(out, &obj(fields))?;
+            return Ok(());
+        }
+        Err(_) => return Err(Error::Server("engine gone".into())),
+    }
+    if tagged {
+        return Ok(());
+    }
+    let mut tokens: Vec<u32> = Vec::new();
+    for (tag, ev) in erx {
+        let (line, terminal) = event_line(&tag, &ev, &mut tokens, tokenizer);
+        send(out, &line)?;
+        if terminal {
+            break;
+        }
+    }
     Ok(())
 }
 
@@ -371,4 +714,103 @@ fn send(out: &Arc<Mutex<TcpStream>>, v: &Value) -> Result<()> {
         .unwrap()
         .write_all(line.as_bytes())
         .map_err(|e| Error::Server(e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reason_str_covers_every_finish_reason() {
+        // Exhaustive match in `reason_str` guarantees coverage at
+        // compile time; pin the wire words so they cannot drift from
+        // docs/protocol.md silently.
+        assert_eq!(reason_str(FinishReason::Eos), "eos");
+        assert_eq!(reason_str(FinishReason::MaxTokens), "max_tokens");
+        assert_eq!(reason_str(FinishReason::ContextFull), "context_full");
+        assert_eq!(reason_str(FinishReason::Stop), "stop");
+        assert_eq!(reason_str(FinishReason::Cancelled), "cancelled");
+    }
+
+    #[test]
+    fn parse_gen_fields_reads_v2_sampling() {
+        let req = json::parse(
+            r#"{"op":"generate","tag":"a","prompt":"x","max_new_tokens":7,
+                "temperature":0.5,"top_k":3,"top_p":0.9,
+                "stop":["\n","END"],"priority":"interactive"}"#,
+        )
+        .unwrap();
+        let (max_new, params, priority, tag) = parse_gen_fields(&req);
+        assert_eq!(max_new, 7);
+        assert_eq!(params.top_k, 3);
+        assert!((params.top_p - 0.9).abs() < 1e-12);
+        assert!((params.temperature - 0.5).abs() < 1e-12);
+        assert_eq!(params.stop, vec!["\n".to_string(), "END".to_string()]);
+        assert_eq!(priority, Priority::Interactive);
+        assert_eq!(tag.as_deref(), Some("a"));
+    }
+
+    #[test]
+    fn parse_gen_fields_defaults_and_scalar_stop() {
+        let req = json::parse(r#"{"op":"generate","stop":"\n\n"}"#).unwrap();
+        let (max_new, params, priority, tag) = parse_gen_fields(&req);
+        assert_eq!(max_new, 32);
+        assert_eq!(params.top_k, 0);
+        assert!((params.top_p - 1.0).abs() < 1e-12);
+        assert_eq!(params.stop, vec!["\n\n".to_string()]);
+        assert_eq!(priority, Priority::Normal);
+        assert!(tag.is_none());
+    }
+
+    #[test]
+    fn err_line_attributes_op_and_tag() {
+        let v = err_line(Some("chat.send"), &Some("t7".into()), "missing conv".into());
+        let line = json::to_string(&v);
+        let back = json::parse(&line).unwrap();
+        assert_eq!(back.get_opt("event").and_then(|e| e.as_str()), Some("error"));
+        assert_eq!(back.get_opt("op").and_then(|o| o.as_str()), Some("chat.send"));
+        assert_eq!(back.get_opt("tag").and_then(|t| t.as_str()), Some("t7"));
+        // Unparseable lines carry neither.
+        let v = err_line(None, &None, "bad json".into());
+        assert!(v.get_opt("op").is_none() && v.get_opt("tag").is_none());
+    }
+
+    #[test]
+    fn event_line_tags_and_accumulates() {
+        let tok = Tokenizer::train_or_fallback(
+            crate::tokenizer::bundled_corpus(),
+            512,
+        )
+        .unwrap();
+        let tag = Some("a".to_string());
+        let mut acc = Vec::new();
+        let piece = tok.encode("hi")[0];
+        let (v, terminal) =
+            event_line(&tag, &Event::Token { id: 3, token: piece }, &mut acc, &tok);
+        assert!(!terminal);
+        assert_eq!(v.get_opt("tag").and_then(|t| t.as_str()), Some("a"));
+        assert_eq!(acc, vec![piece]);
+        let (v, terminal) = event_line(
+            &tag,
+            &Event::Finished {
+                id: 3,
+                reason: FinishReason::Cancelled,
+            },
+            &mut acc,
+            &tok,
+        );
+        assert!(terminal);
+        assert_eq!(
+            v.get_opt("reason").and_then(|r| r.as_str()),
+            Some("cancelled")
+        );
+        assert_eq!(
+            v.get_opt("text").and_then(|t| t.as_str()),
+            Some(tok.decode(&acc)).as_deref()
+        );
+        // Untagged (v1) events carry no tag field at all.
+        let (v, _) =
+            event_line(&None, &Event::Token { id: 1, token: piece }, &mut acc, &tok);
+        assert!(v.get_opt("tag").is_none());
+    }
 }

@@ -133,20 +133,17 @@ impl Snapshot {
     }
 }
 
-/// One synthetic request for the workload generators below.
-#[derive(Debug, Clone)]
-pub struct SimRequest {
-    pub prompt: Vec<u32>,
-    pub max_new_tokens: usize,
-    pub priority: crate::scheduler::Priority,
-}
-
 /// Synthetic mixed workload (S12b): a pool of short interactive chats plus
 /// occasional long documents — the traffic shape that motivates chunked
 /// prefill (`rust/benches/scheduler.rs` and the prefill/decode-mixing
 /// tests drive the scheduler with it).  Short requests arrive as
 /// `Interactive`, long ones as `Batch`; the order is a deterministic
 /// seed-keyed shuffle so arrivals interleave.
+///
+/// Generators emit the serving stack's typed
+/// [`Request`](crate::coordinator::Request) — the same shape the server
+/// and examples submit — so a workload can be replayed against a bare
+/// `Scheduler` (fields) or a full `Coordinator` (`submit`) unchanged.
 pub fn mixed_workload(
     n_short: usize,
     short_prompt: usize,
@@ -155,7 +152,8 @@ pub fn mixed_workload(
     max_new: usize,
     vocab: u32,
     seed: u64,
-) -> Vec<SimRequest> {
+) -> Vec<crate::coordinator::Request> {
+    use crate::coordinator::Request;
     use crate::scheduler::Priority;
     use crate::util::rng::Rng;
     let mut rng = Rng::new(seed);
@@ -167,20 +165,18 @@ pub fn mixed_workload(
     };
     for _ in 0..n_short {
         let plen = rng.range(1, short_prompt.max(2));
-        out.push(SimRequest {
-            prompt: prompt(plen, &mut rng),
-            max_new_tokens: max_new,
-            priority: Priority::Interactive,
-        });
+        out.push(
+            Request::from_tokens(prompt(plen, &mut rng), max_new)
+                .with_priority(Priority::Interactive),
+        );
     }
     for _ in 0..n_long {
         let lo = long_prompt / 2 + 1;
         let plen = rng.range(lo, (long_prompt + 1).max(lo + 1));
-        out.push(SimRequest {
-            prompt: prompt(plen, &mut rng),
-            max_new_tokens: max_new,
-            priority: Priority::Batch,
-        });
+        out.push(
+            Request::from_tokens(prompt(plen, &mut rng), max_new)
+                .with_priority(Priority::Batch),
+        );
     }
     // Fisher-Yates with the same deterministic stream.
     for i in (1..out.len()).rev() {
@@ -208,8 +204,8 @@ pub fn tenant_workload(
     max_new: usize,
     vocab: u32,
     seed: u64,
-) -> Vec<SimRequest> {
-    use crate::scheduler::Priority;
+) -> Vec<crate::coordinator::Request> {
+    use crate::coordinator::Request;
     use crate::util::rng::Rng;
     let mut rng = Rng::new(seed);
     let tok = |rng: &mut Rng| rng.below(vocab.max(1) as u64) as u32;
@@ -223,11 +219,7 @@ pub fn tenant_workload(
             for _ in 0..rng.range(1, user_tokens.max(1) + 1) {
                 prompt.push(tok(&mut rng));
             }
-            out.push(SimRequest {
-                prompt,
-                max_new_tokens: max_new,
-                priority: Priority::Normal,
-            });
+            out.push(Request::from_tokens(prompt, max_new));
         }
     }
     // Fisher-Yates with the same deterministic stream.
@@ -285,7 +277,7 @@ mod tests {
         use crate::scheduler::Priority;
         let w = mixed_workload(10, 8, 3, 64, 16, 512, 42);
         assert_eq!(w.len(), 13);
-        let longs: Vec<&SimRequest> = w
+        let longs: Vec<&crate::coordinator::Request> = w
             .iter()
             .filter(|r| r.priority == Priority::Batch)
             .collect();

@@ -72,14 +72,24 @@ fn doc_file_references_resolve() {
 }
 
 /// The protocol doc and the server module doc must agree on the event
-/// vocabulary (the drift this PR fixed must stay fixed).
+/// vocabulary (the drift this PR fixed must stay fixed) — including the
+/// v2 conversation events.
 #[test]
 fn protocol_doc_covers_server_events() {
     let root = repo_root();
     let proto = std::fs::read_to_string(root.join("docs/protocol.md")).unwrap();
     let server = std::fs::read_to_string(root.join("rust/src/server/mod.rs")).unwrap();
     for ev in [
-        "token", "done", "rejected", "metrics", "traffic", "ok", "pong", "error",
+        "token",
+        "done",
+        "rejected",
+        "metrics",
+        "traffic",
+        "ok",
+        "pong",
+        "error",
+        "chat.opened",
+        "chat.closed",
     ] {
         let lit = format!("\"event\":\"{ev}\"");
         let emitted = format!("s(\"{ev}\")");

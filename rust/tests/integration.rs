@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use firstlayer::config::ServingConfig;
 use firstlayer::coordinator::sampling::SamplingParams;
-use firstlayer::coordinator::{Coordinator, GenRequest};
+use firstlayer::coordinator::{Coordinator, FinishReason, Request};
 use firstlayer::manifest::Manifest;
 use firstlayer::runtime::{CacheBatch, ModelEngine, Runtime, StepPath};
 use firstlayer::scheduler::Priority;
@@ -148,7 +148,7 @@ fn coordinator_greedy_outputs_identical() {
         let mut c = Coordinator::from_config(&cfg).unwrap();
         let ids: Vec<u64> = prompts
             .iter()
-            .map(|p| c.submit_text(p, 12, SamplingParams::default()).unwrap())
+            .map(|p| c.submit(Request::from_text(*p, 12)).unwrap())
             .collect();
         c.run_to_completion(10_000).unwrap();
         outputs.push(
@@ -172,7 +172,9 @@ fn coordinator_deterministic_across_runs() {
     let mut outs = Vec::new();
     for _ in 0..2 {
         let mut c = Coordinator::from_config(&cfg).unwrap();
-        let id = c.submit_text("the scheduler admits", 10, SamplingParams::default()).unwrap();
+        let id = c
+            .submit(Request::from_text("the scheduler admits", 10))
+            .unwrap();
         c.run_to_completion(10_000).unwrap();
         outs.push(c.generated(id).unwrap().to_vec());
     }
@@ -199,15 +201,7 @@ fn chunked_prefill_matches_monolithic() {
         let mut c = Coordinator::from_config(&cfg).unwrap();
         let ids: Vec<u64> = prompts
             .iter()
-            .map(|p| {
-                c.submit(GenRequest {
-                    prompt: p.clone(),
-                    max_new_tokens: 10,
-                    priority: Priority::Normal,
-                    params: SamplingParams::default(),
-                })
-                .unwrap()
-            })
+            .map(|p| c.submit(Request::from_tokens(p.clone(), 10)).unwrap())
             .collect();
         c.run_to_completion(50_000).unwrap();
         if chunk > 0 {
@@ -263,14 +257,7 @@ fn prefix_cache_reuses_shared_system_prompt() {
         // into the cache) before the second submits and matches.
         for p in &prompts {
             let before = c.engine().traffic.snapshot().prefill_tokens;
-            let id = c
-                .submit(GenRequest {
-                    prompt: p.clone(),
-                    max_new_tokens: 8,
-                    priority: Priority::Normal,
-                    params: SamplingParams::default(),
-                })
-                .unwrap();
+            let id = c.submit(Request::from_tokens(p.clone(), 8)).unwrap();
             c.run_to_completion(50_000).unwrap();
             per_req.push(c.engine().traffic.snapshot().prefill_tokens - before);
             ids.push(id);
@@ -412,15 +399,7 @@ fn device_resident_kv_matches_host_path() {
             ];
             let ids: Vec<u64> = prompts
                 .iter()
-                .map(|p| {
-                    c.submit(GenRequest {
-                        prompt: p.clone(),
-                        max_new_tokens: 10,
-                        priority: Priority::Normal,
-                        params: SamplingParams::default(),
-                    })
-                    .unwrap()
-                })
+                .map(|p| c.submit(Request::from_tokens(p.clone(), 10)).unwrap())
                 .collect();
             // Step manually so a live device session is observable, and
             // guard against the device path silently regressing to the
@@ -461,13 +440,8 @@ fn device_resident_kv_matches_host_path() {
             let mut c = Coordinator::from_config(&cfg).unwrap();
             let ids: Vec<u64> = (0..4)
                 .map(|i| {
-                    c.submit(GenRequest {
-                        prompt: vec![2 + i as u32 * 3; 20],
-                        max_new_tokens: 24,
-                        priority: Priority::Normal,
-                        params: SamplingParams::default(),
-                    })
-                    .unwrap()
+                    c.submit(Request::from_tokens(vec![2 + i as u32 * 3; 20], 24))
+                        .unwrap()
                 })
                 .collect();
             c.run_to_completion(20_000).unwrap();
@@ -496,14 +470,7 @@ fn device_resident_kv_matches_host_path() {
             for suffix in [&[7u32, 9, 11][..], &[401, 3, 77, 12][..]] {
                 let mut p = system.clone();
                 p.extend_from_slice(suffix);
-                let id = c
-                    .submit(GenRequest {
-                        prompt: p,
-                        max_new_tokens: 8,
-                        priority: Priority::Normal,
-                        params: SamplingParams::default(),
-                    })
-                    .unwrap();
+                let id = c.submit(Request::from_tokens(p, 8)).unwrap();
                 c.run_to_completion(50_000).unwrap();
                 outputs.push(c.generated(id).unwrap().to_vec());
             }
@@ -536,12 +503,7 @@ fn backpressure_rejects_then_drains() {
     let mut accepted = Vec::new();
     let mut rejected = 0;
     for i in 0..5u32 {
-        let r = c.submit(GenRequest {
-            prompt: vec![4 + i; 6],
-            max_new_tokens: 4,
-            priority: Priority::Normal,
-            params: SamplingParams::default(),
-        });
+        let r = c.submit(Request::from_tokens(vec![4 + i; 6], 4));
         match r {
             Ok(id) => accepted.push(id),
             Err(firstlayer::Error::Backpressure(_)) => rejected += 1,
@@ -574,13 +536,8 @@ fn preemption_recovers_and_completes() {
     let mut c = Coordinator::from_config(&cfg).unwrap();
     let ids: Vec<u64> = (0..4)
         .map(|i| {
-            c.submit(GenRequest {
-                prompt: vec![2 + i as u32 * 3; 20],
-                max_new_tokens: 24,
-                priority: Priority::Normal,
-                params: SamplingParams::default(),
-            })
-            .unwrap()
+            c.submit(Request::from_tokens(vec![2 + i as u32 * 3; 20], 24))
+                .unwrap()
         })
         .collect();
     c.run_to_completion(20_000).unwrap();
@@ -610,20 +567,12 @@ fn interactive_priority_served_first() {
     cfg.max_admit_per_step = 1;
     let mut c = Coordinator::from_config(&cfg).unwrap();
     let slow = c
-        .submit(GenRequest {
-            prompt: vec![5; 4],
-            max_new_tokens: 8,
-            priority: Priority::Batch,
-            params: SamplingParams::default(),
-        })
+        .submit(Request::from_tokens(vec![5; 4], 8).with_priority(Priority::Batch))
         .unwrap();
     let fast = c
-        .submit(GenRequest {
-            prompt: vec![9; 4],
-            max_new_tokens: 8,
-            priority: Priority::Interactive,
-            params: SamplingParams::default(),
-        })
+        .submit(
+            Request::from_tokens(vec![9; 4], 8).with_priority(Priority::Interactive),
+        )
         .unwrap();
     // Step until the interactive one finishes; the batch one must not have
     // produced more tokens than it.
@@ -758,4 +707,417 @@ fn server_tcp_roundtrip() {
     BufReader::new(m).read_line(&mut line).unwrap();
     let v = firstlayer::util::json::parse(&line).unwrap();
     assert!(v.get_opt("l1_reads_precomp").is_some());
+}
+
+/// `Coordinator::cancel` mid-generation: the cancelled request's blocks
+/// all return to the pool (partition invariant holds), a terminal
+/// `cancelled` finish is reported exactly once, and the surviving
+/// stream's output is token-identical to a run without the cancelled
+/// neighbor (temperature 0).
+#[test]
+fn cancel_frees_kv_and_leaves_others_untouched() {
+    let dir = require_artifacts!();
+    let solo = {
+        let mut cfg = serving(&dir, "tiny-serial", true);
+        cfg.enable_prefix_cache = false;
+        let mut c = Coordinator::from_config(&cfg).unwrap();
+        let b = c.submit(Request::from_tokens(vec![9; 6], 12)).unwrap();
+        c.run_to_completion(10_000).unwrap();
+        c.generated(b).unwrap().to_vec()
+    };
+    let mut cfg = serving(&dir, "tiny-serial", true);
+    cfg.enable_prefix_cache = false;
+    let mut c = Coordinator::from_config(&cfg).unwrap();
+    let total_free = c.kv_free_blocks();
+    let a = c.submit(Request::from_tokens(vec![5; 8], 40)).unwrap();
+    let b = c.submit(Request::from_tokens(vec![9; 6], 12)).unwrap();
+    // Step until A is mid-generation (device decode sessions live on
+    // this path when enabled), then cancel it.
+    let mut steps = 0;
+    while c.generated(a).map_or(0, |g| g.len()) < 3 {
+        c.step().unwrap();
+        steps += 1;
+        assert!(steps < 10_000, "request A never started generating");
+    }
+    c.cancel(a).unwrap();
+    assert_eq!(c.finished(a), Some(FinishReason::Cancelled));
+    let evs = c.take_events();
+    assert!(
+        evs.iter().any(|e| matches!(
+            e,
+            firstlayer::coordinator::Event::Finished {
+                id,
+                reason: FinishReason::Cancelled,
+            } if *id == a
+        )),
+        "no terminal cancelled event for A"
+    );
+    // Cancelling twice is an error, not a double free.
+    assert!(c.cancel(a).is_err());
+    c.run_to_completion(10_000).unwrap();
+    assert_eq!(
+        c.generated(b).unwrap(),
+        &solo[..],
+        "survivor stream perturbed by the cancel"
+    );
+    assert_eq!(
+        c.kv_free_blocks(),
+        total_free,
+        "cancelled request leaked KV blocks"
+    );
+    c.check_kv_invariants().unwrap();
+    assert_eq!(
+        c.metrics
+            .requests_cancelled
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+}
+
+/// A 3-turn chat session: each turn's prompt is the prior transcript
+/// plus the new user delta, and the prior transcript — generated spans
+/// included — is served from the prefix cache rather than re-prefilled.
+/// `prefix_cached_tokens` must grow by (block-aligned) transcript spans
+/// and the executed prefill must be exactly the uncached suffix.
+#[test]
+fn chat_three_turns_reuse_prior_transcript() {
+    let dir = require_artifacts!();
+    use std::sync::atomic::Ordering::Relaxed;
+    let mut cfg = serving(&dir, "tiny-serial", true);
+    cfg.enable_prefix_cache = true;
+    cfg.kv_block_tokens = 4;
+    cfg.prefill_chunk_tokens = 4;
+    cfg.step_token_budget = 16;
+    let mut c = Coordinator::from_config(&cfg).unwrap();
+    let conv = c.chat_open().unwrap();
+    let turns = ["the quick brown fox", " jumps over", " the lazy dog"];
+    let mut prev_transcript_len = 0usize;
+    for (i, t) in turns.iter().enumerate() {
+        let delta_tokens = c.tokenizer.encode(t).len();
+        let cached_before = c.metrics.prefix_cached_tokens.load(Relaxed);
+        let prefill_before = c.engine().traffic.snapshot().prefill_tokens;
+        let id = c.submit(Request::turn(conv, *t, 6)).unwrap();
+        c.run_to_completion(50_000).unwrap();
+        assert!(c.finished(id).is_some(), "turn {i} did not finish");
+        let cached =
+            (c.metrics.prefix_cached_tokens.load(Relaxed) - cached_before) as usize;
+        let prefilled =
+            (c.engine().traffic.snapshot().prefill_tokens - prefill_before) as usize;
+        let prompt_len = if i == 0 {
+            1 + delta_tokens // BOS
+        } else {
+            prev_transcript_len + delta_tokens
+        };
+        if i == 0 {
+            assert_eq!(cached, 0, "first turn must be cold");
+        } else {
+            // At least one 4-token block, block-aligned, and within one
+            // block of the full prior transcript (its newest token has
+            // no KV row, so the last partial block stays uncached).
+            assert!(cached >= 4, "turn {i}: prior transcript not reused");
+            assert_eq!(cached % 4, 0, "turn {i}: cache reuse not block-aligned");
+            assert!(
+                cached + 4 > prev_transcript_len.saturating_sub(1),
+                "turn {i}: cache served only {cached} of ~{prev_transcript_len} \
+                 transcript tokens"
+            );
+        }
+        assert_eq!(
+            prefilled,
+            prompt_len - cached,
+            "turn {i}: executed prefill is not exactly the uncached suffix"
+        );
+        let tr = c.chat_transcript(conv).unwrap();
+        assert!(tr.len() >= prompt_len, "turn {i}: transcript shrank");
+        prev_transcript_len = tr.len();
+    }
+    assert_eq!(c.metrics.chat_turns.load(Relaxed), 3);
+    assert!(c.metrics.chat_reused_tokens.load(Relaxed) > 0);
+    c.chat_close(conv).unwrap();
+    assert_eq!(c.chat_count(), 0);
+    c.check_kv_invariants().unwrap();
+}
+
+/// Stop sequences: a second identical greedy request with a stop string
+/// drawn from the first run's decoded output finishes early with reason
+/// `stop`, and its stream is a prefix of the unconstrained one.
+#[test]
+fn stop_sequence_finishes_with_stop_reason() {
+    let dir = require_artifacts!();
+    let cfg = serving(&dir, "tiny-serial", true);
+    let mut c = Coordinator::from_config(&cfg).unwrap();
+    let free = c.submit(Request::from_tokens(vec![7; 5], 12)).unwrap();
+    c.run_to_completion(10_000).unwrap();
+    let unconstrained = c.generated(free).unwrap().to_vec();
+    // Use the first generated token with a non-empty piece as the stop
+    // (earlier tokens decode to nothing, so the match fires exactly
+    // there).
+    let Some((pos, stop)) = unconstrained.iter().enumerate().find_map(|(i, t)| {
+        let piece = c.tokenizer.decode(&[*t]);
+        (!piece.is_empty()).then_some((i, piece))
+    }) else {
+        eprintln!("skipping: every generated piece decodes empty");
+        return;
+    };
+    let stopped = c
+        .submit(
+            Request::from_tokens(vec![7; 5], 12).with_params(SamplingParams {
+                stop: vec![stop.clone()],
+                ..Default::default()
+            }),
+        )
+        .unwrap();
+    c.run_to_completion(10_000).unwrap();
+    assert_eq!(c.finished(stopped), Some(FinishReason::Stop));
+    let got = c.generated(stopped).unwrap();
+    assert_eq!(got.len(), pos + 1, "must stop at the matching token");
+    assert_eq!(got, &unconstrained[..pos + 1]);
+}
+
+/// Protocol v2 over a real socket: one connection runs four tagged
+/// `generate`s whose token streams interleave; demultiplexing by tag
+/// reconstructs exactly the sequential v1 (untagged) outputs at
+/// temperature 0.  A tagged admission failure comes back as `rejected`
+/// with the tag, and `cancel` aborts a long-running stream with reason
+/// `cancelled` without perturbing the other in-flight streams.
+#[test]
+fn server_v2_interleaved_tagged_streams() {
+    let dir = require_artifacts!();
+    use std::collections::HashMap;
+    use std::io::{BufRead, BufReader, Write};
+    let cfg = serving(&dir, "tiny-serial", true);
+    let addr = "127.0.0.1:7912";
+    std::thread::spawn(move || {
+        let server = firstlayer::server::Server::new(addr);
+        let _ = server.run(move || Coordinator::from_config(&cfg));
+    });
+    let mut stream = None;
+    for _ in 0..100 {
+        match std::net::TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(100)),
+        }
+    }
+    let mut stream = stream.expect("server did not come up");
+    let prompts = ["the quick", "attention is", "memory bandwidth", "a cache"];
+    let mut batch = String::new();
+    for (i, p) in prompts.iter().enumerate() {
+        batch.push_str(&format!(
+            "{{\"op\":\"generate\",\"tag\":\"t{i}\",\"prompt\":\"{p}\",\"max_new_tokens\":5}}\n"
+        ));
+    }
+    // Never admissible (budget exceeds the context): rejected, tag echoed.
+    batch.push_str(
+        "{\"op\":\"generate\",\"tag\":\"bad\",\"prompt\":\"x\",\"max_new_tokens\":10000}\n",
+    );
+    // A long-running stream, then its cancellation.
+    batch.push_str(
+        "{\"op\":\"generate\",\"tag\":\"victim\",\"prompt\":\"zzz\",\"max_new_tokens\":90}\n",
+    );
+    batch.push_str("{\"op\":\"cancel\",\"tag\":\"victim\"}\n");
+    stream.write_all(batch.as_bytes()).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    let mut tokens: HashMap<String, Vec<u32>> = HashMap::new();
+    let mut done: HashMap<String, String> = HashMap::new();
+    let mut rejected_bad = false;
+    let mut cancel_acked = false;
+    let mut cancel_lost_race = false;
+    let mut lines_seen = 0usize;
+    for line in reader.lines() {
+        let line = line.unwrap();
+        lines_seen += 1;
+        assert!(lines_seen < 10_000, "event flood");
+        let v = firstlayer::util::json::parse(&line).unwrap();
+        let tag = v
+            .get_opt("tag")
+            .and_then(|t| t.as_str())
+            .unwrap_or("")
+            .to_string();
+        match v.get_opt("event").and_then(|e| e.as_str()) {
+            Some("token") => {
+                let t = v.get_opt("token").and_then(|t| t.as_usize()).unwrap();
+                assert!(!tag.is_empty(), "tagged request emitted untagged token");
+                tokens.entry(tag).or_default().push(t as u32);
+            }
+            Some("done") => {
+                let reason = v
+                    .get_opt("reason")
+                    .and_then(|r| r.as_str())
+                    .unwrap()
+                    .to_string();
+                done.insert(tag, reason);
+            }
+            Some("rejected") => {
+                assert_eq!(tag, "bad", "only the oversized request may bounce");
+                rejected_bad = true;
+            }
+            Some("ok") => {
+                assert_eq!(
+                    v.get_opt("op").and_then(|o| o.as_str()),
+                    Some("cancel")
+                );
+                cancel_acked = true;
+            }
+            Some("error") => {
+                // Only one benign race can produce an error here: the
+                // victim finished naturally (e.g. greedy EOS) before the
+                // cancel command was drained.
+                assert_eq!(
+                    v.get_opt("op").and_then(|o| o.as_str()),
+                    Some("cancel"),
+                    "unexpected error event: {line}"
+                );
+                cancel_acked = true;
+                cancel_lost_race = true;
+            }
+            other => panic!("unexpected event {other:?} in {line}"),
+        }
+        if done.len() == 5 && rejected_bad && cancel_acked {
+            break;
+        }
+    }
+    if cancel_lost_race {
+        assert!(
+            done.contains_key("victim"),
+            "victim neither finished nor was cancelled"
+        );
+    } else {
+        assert_eq!(
+            done.get("victim").map(String::as_str),
+            Some("cancelled"),
+            "cancelled stream must terminate with reason cancelled"
+        );
+    }
+    drop(stream);
+    // Sequential v1 (untagged) runs on fresh connections must match the
+    // demultiplexed streams token for token.
+    for (i, p) in prompts.iter().enumerate() {
+        let mut s2 = std::net::TcpStream::connect(addr).unwrap();
+        s2.write_all(
+            format!("{{\"op\":\"generate\",\"prompt\":\"{p}\",\"max_new_tokens\":5}}\n")
+                .as_bytes(),
+        )
+        .unwrap();
+        let r2 = BufReader::new(s2.try_clone().unwrap());
+        let mut seq_tokens = Vec::new();
+        for line in r2.lines() {
+            let line = line.unwrap();
+            let v = firstlayer::util::json::parse(&line).unwrap();
+            match v.get_opt("event").and_then(|e| e.as_str()) {
+                Some("token") => seq_tokens.push(
+                    v.get_opt("token").and_then(|t| t.as_usize()).unwrap() as u32,
+                ),
+                Some("done") => break,
+                other => panic!("unexpected event {other:?} in {line}"),
+            }
+        }
+        let key = format!("t{i}");
+        assert_eq!(
+            seq_tokens, tokens[&key],
+            "stream {key} diverges from its sequential v1 run"
+        );
+    }
+}
+
+/// Protocol v2 chat ops over TCP: open → two blocking sends (the server
+/// holds the transcript; the client never re-sends history) → metrics
+/// reports the turns → close → a send on the closed conversation is
+/// rejected.
+#[test]
+fn server_v2_chat_session() {
+    let dir = require_artifacts!();
+    use std::io::{BufRead, BufReader, Write};
+    let cfg = serving(&dir, "tiny-serial", true);
+    let addr = "127.0.0.1:7913";
+    std::thread::spawn(move || {
+        let server = firstlayer::server::Server::new(addr);
+        let _ = server.run(move || Coordinator::from_config(&cfg));
+    });
+    let mut stream = None;
+    for _ in 0..100 {
+        match std::net::TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(100)),
+        }
+    }
+    let mut stream = stream.expect("server did not come up");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    fn read_json(reader: &mut BufReader<std::net::TcpStream>) -> firstlayer::util::json::Value {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        firstlayer::util::json::parse(&line).unwrap()
+    }
+    stream.write_all(b"{\"op\":\"chat.open\"}\n").unwrap();
+    let opened = read_json(&mut reader);
+    assert_eq!(opened.get_opt("event").and_then(|e| e.as_str()), Some("chat.opened"));
+    let conv = opened.get_opt("conv").and_then(|c| c.as_u64()).unwrap();
+    for text in ["the quick brown", " fox jumps"] {
+        stream
+            .write_all(
+                format!(
+                    "{{\"op\":\"chat.send\",\"conv\":{conv},\"text\":\"{text}\",\"max_new_tokens\":4}}\n"
+                )
+                .as_bytes(),
+            )
+            .unwrap();
+        let mut tokens = 0;
+        loop {
+            let v = read_json(&mut reader);
+            match v.get_opt("event").and_then(|e| e.as_str()) {
+                Some("token") => tokens += 1,
+                Some("done") => break,
+                other => panic!("unexpected chat event {other:?}"),
+            }
+        }
+        assert!(tokens >= 1, "turn produced no tokens");
+    }
+    stream.write_all(b"{\"op\":\"metrics\"}\n").unwrap();
+    let m = read_json(&mut reader);
+    assert_eq!(m.get_opt("event").and_then(|e| e.as_str()), Some("metrics"));
+    assert!(
+        m.get_opt("chat_turns").and_then(|v| v.as_usize()).unwrap() >= 2,
+        "metrics must report the chat turns"
+    );
+    stream
+        .write_all(format!("{{\"op\":\"chat.close\",\"conv\":{conv}}}\n").as_bytes())
+        .unwrap();
+    let closed = read_json(&mut reader);
+    assert_eq!(closed.get_opt("event").and_then(|e| e.as_str()), Some("chat.closed"));
+    // A turn on the closed conversation bounces with a rejected event.
+    stream
+        .write_all(
+            format!(
+                "{{\"op\":\"chat.send\",\"conv\":{conv},\"text\":\"hi\",\"max_new_tokens\":4}}\n"
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    let rej = read_json(&mut reader);
+    assert_eq!(rej.get_opt("event").and_then(|e| e.as_str()), Some("rejected"));
+}
+
+/// `chat.open` is admission-controlled: past `max_conversations` it
+/// refuses with backpressure, and closing a conversation frees a slot.
+#[test]
+fn chat_open_capped() {
+    let dir = require_artifacts!();
+    let mut cfg = serving(&dir, "tiny-serial", true);
+    cfg.max_conversations = 2;
+    let mut c = Coordinator::from_config(&cfg).unwrap();
+    let a = c.chat_open().unwrap();
+    let b = c.chat_open().unwrap();
+    assert_ne!(a, b, "handles must be distinct");
+    assert!(a > 0 && a < (1u64 << 53) && b < (1u64 << 53));
+    assert!(matches!(
+        c.chat_open(),
+        Err(firstlayer::Error::Backpressure(_))
+    ));
+    c.chat_close(a).unwrap();
+    assert!(c.chat_open().is_ok(), "closing must free a slot");
 }

@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_engine.json files (scripts/bench_gate.sh output).
+
+Usage: bench_diff.py OLD.json NEW.json
+
+Matches results by their "bench" name and prints the relative change of
+every shared numeric field.  Purely informational (exit 0 unless the
+files are unreadable): the CI gate surfaces drift, it does not judge it
+— perf gating thresholds belong to a human reading the trajectory.
+"""
+
+import json
+import sys
+
+
+def index(path):
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for r in doc.get("results", []):
+        name = r.get("bench")
+        if isinstance(name, str):
+            out[name] = r
+    return out
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__.strip())
+        return 2
+    old, new = index(sys.argv[1]), index(sys.argv[2])
+    names = sorted(set(old) | set(new))
+    if not names:
+        print("bench-diff: no results on either side")
+        return 0
+    for name in names:
+        if name not in old:
+            print(f"  {name}: NEW (no previous run)")
+            continue
+        if name not in new:
+            print(f"  {name}: GONE (present in previous run)")
+            continue
+        o, n = old[name], new[name]
+        fields = sorted(
+            k
+            for k in set(o) & set(n)
+            if k != "bench"
+            and isinstance(o[k], (int, float))
+            and isinstance(n[k], (int, float))
+        )
+        deltas = []
+        for k in fields:
+            ov, nv = float(o[k]), float(n[k])
+            if ov == 0.0:
+                change = "0->%+g" % nv if nv else "0"
+            else:
+                change = "%+.1f%%" % (100.0 * (nv - ov) / ov)
+            deltas.append(f"{k} {change}")
+        print(f"  {name}: " + ("; ".join(deltas) if deltas else "no shared numeric fields"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

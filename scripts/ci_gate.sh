@@ -1,0 +1,51 @@
+#!/usr/bin/env bash
+# CI gate: the one entry point a CI job runs.  Chains every repo gate in
+# fail-fast order, then records the perf trajectory:
+#
+#   1. release build                     (cargo build --release)
+#   2. tier-1 tests                      (cargo test -q)
+#   3. docs gate                         (scripts/docs_gate.sh)
+#   4. lint gate                         (scripts/lint_gate.sh)
+#   5. bench gate                        (scripts/bench_gate.sh →
+#      BENCH_engine.json at the repo root) — and, when a previous
+#      BENCH_engine.json exists, a per-bench numeric diff so run-over-run
+#      drift is visible in the CI log.
+#
+# Usage: scripts/ci_gate.sh   (from anywhere inside the repo)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "[ci-gate] 1/5 cargo build --release"
+(cd rust && cargo build --release)
+
+echo "[ci-gate] 2/5 tier-1 tests (cargo test -q)"
+(cd rust && cargo test -q)
+
+echo "[ci-gate] 3/5 docs gate"
+scripts/docs_gate.sh
+
+echo "[ci-gate] 4/5 lint gate"
+scripts/lint_gate.sh
+
+echo "[ci-gate] 5/5 bench gate"
+prev=""
+if [ -f BENCH_engine.json ]; then
+  prev="$(mktemp)"
+  cp BENCH_engine.json "$prev"
+fi
+scripts/bench_gate.sh
+
+if [ -n "$prev" ]; then
+  echo "[ci-gate] bench diff vs previous BENCH_engine.json"
+  if command -v python3 >/dev/null 2>&1; then
+    python3 scripts/bench_diff.py "$prev" BENCH_engine.json || true
+  else
+    echo "[ci-gate] python3 unavailable; raw diff:"
+    diff "$prev" BENCH_engine.json || true
+  fi
+  rm -f "$prev"
+else
+  echo "[ci-gate] no previous BENCH_engine.json — baseline recorded"
+fi
+
+echo "[ci-gate] OK"
