@@ -13,6 +13,8 @@ Per runnable model this writes:
   <m>/decode_precomp_gather_b{B}.hlo.txt  ablation: in-graph Pallas gather
   <m>/prefill_baseline_b{B}t{T}.hlo.txt
   <m>/prefill_precomp_b{B}t{T}.hlo.txt
+  <m>/span_baseline_t{T}.hlo.txt        batched span: T tokens, one execution
+  <m>/span_precomp_t{T}.hlo.txt         (rows for the whole span from rust)
   <m>/precompute_build.hlo.txt          lets rust (re)build the table itself
   manifest.json              everything the rust side needs to load them
 """
@@ -44,6 +46,15 @@ PREFILL_BUCKETS = {
     "tiny-parallel": [(1, 32), (4, 32)],
     "tiny-moe": [(1, 32)],
     "tiny-moe-parallel": [(1, 32)],
+}
+# Batched span artifact buckets (tokens per execution, B = 1): a span of
+# S tokens tiles into ceil(S/T) executions instead of S single-token
+# decode dispatches.  Ragged tails pad to the smallest fitting bucket.
+SPAN_BUCKETS = {
+    "tiny-serial": [8, 32],
+    "tiny-parallel": [8, 32],
+    "tiny-moe": [8, 16],
+    "tiny-moe-parallel": [8, 16],
 }
 GATHER_ABLATION_BATCH = 4
 BUILD_CHUNK = 256  # vocab rows per precompute_build invocation
@@ -198,6 +209,55 @@ class Emitter:
                 outputs, order, extra=extra,
             )
 
+    def span(self, T: int, path: str):
+        """Batched span artifact: T tokens of ONE sequence against the
+        existing KV history in a single execution (`span_*_t{T}`).
+
+        Outputs are [logits, kcaches, vcaches, new_k, new_v]: the caches
+        chain through a DeviceCacheSession like decode steps; the fresh
+        rows make the per-execution readback logits + rows only (no
+        full-pair sync at span end).
+        """
+        cfg = self.cfg
+        L, S = cfg.n_layers, cfg.max_seq
+        KH, hd = cfg.n_kv_heads, cfg.head_dim
+        cache = [L, 1, S, KH, hd]
+        outputs = [
+            _io("logits", [T, cfg.vocab_size]),
+            _io("kcaches", cache),
+            _io("vcaches", cache),
+            _io("new_k", [T, L, KH, hd]),
+            _io("new_v", [T, L, KH, hd]),
+        ]
+        extra = {"batch": 1, "span_tokens": T, "max_seq": S}
+        if path == "baseline":
+            order = model.weight_order_baseline(cfg)
+
+            def fn(tokens, start, kc, vc, *ws):
+                w = dict(zip(order, ws))
+                return model.decode_span_baseline(cfg, w, tokens, start, kc, vc)
+
+            self.emit(
+                f"span_baseline_t{T}", "span", fn,
+                [_io("tokens", [T], "i32"), _io("start", [1], "i32"),
+                 _io("kcaches", cache), _io("vcaches", cache)],
+                outputs, order, extra=extra,
+            )
+        else:
+            order = model.weight_order_precomp(cfg)
+            W = cfg.precomp_row_width
+
+            def fn(rows, start, kc, vc, *ws):
+                w = dict(zip(order, ws))
+                return model.decode_span_precomp(cfg, w, rows, start, kc, vc)
+
+            self.emit(
+                f"span_precomp_t{T}", "span", fn,
+                [_io("rows", [T, W]), _io("start", [1], "i32"),
+                 _io("kcaches", cache), _io("vcaches", cache)],
+                outputs, order, extra=extra,
+            )
+
     def precompute_build(self):
         """Vocab-chunk table builder, runnable from rust (`firstlayer precompute`)."""
         cfg = self.cfg
@@ -235,6 +295,9 @@ def emit_model(cfg: ModelConfig, out_dir: str) -> dict:
     for B, T in PREFILL_BUCKETS[cfg.name]:
         em.prefill(B, T, "baseline")
         em.prefill(B, T, "precomp")
+    for T in SPAN_BUCKETS[cfg.name]:
+        em.span(T, "baseline")
+        em.span(T, "precomp")
     em.precompute_build()
 
     cfg_d = dataclasses.asdict(cfg)

@@ -12,5 +12,6 @@ from .rope import rope as rope_kernel  # noqa: F401
 from .attention import decode_attention  # noqa: F401
 from .ffn import swiglu as swiglu_kernel, gelu_mlp as gelu_mlp_kernel  # noqa: F401
 from .gather_rows import gather_rows as gather_rows_kernel  # noqa: F401
+from .span_attention import span_attention as span_attention_kernel  # noqa: F401
 
 INTERPRET = True  # CPU-PJRT target; see module docstring.

@@ -113,6 +113,35 @@ def attention_decode(
     return ctx.reshape(B, H, hd)
 
 
+def attention_span(
+    q: jax.Array,  # [T, H, hd] — span queries at absolute positions start+t
+    kcache: jax.Array,  # [S, KH, hd] — full cache, span rows already inserted
+    vcache: jax.Array,  # [S, KH, hd]
+    start,  # scalar int32: absolute position of span token 0
+) -> jax.Array:
+    """Causal-over-history span attention for ONE sequence (oracle for
+    kernels/span_attention.py).  Token ``t`` attends every cache slot
+    ``s <= start + t``: the history below ``start`` plus the span's own
+    earlier (and current) rows.  ``start == 0`` degenerates to causal
+    prefill; ``T == 1`` to decode attention with ``lens = start + 1``.
+    Returns [T, H, hd].
+    """
+    T, H, hd = q.shape
+    S, KH = kcache.shape[0], kcache.shape[1]
+    g = H // KH
+    qg = q.reshape(T, KH, g, hd)
+    scores = jnp.einsum("tkgh,skh->tkgs", qg, kcache) / jnp.sqrt(
+        jnp.asarray(hd, jnp.float32)
+    )
+    pos = start + jnp.arange(T)
+    mask = jnp.arange(S)[None, :] <= pos[:, None]  # [T, S]
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    # Every row attends at least its own slot, so no all-masked-row guard.
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("tkgs,skh->tkgh", p, vcache)
+    return ctx.reshape(T, H, hd)
+
+
 def attention_prefill(
     q: jax.Array,  # [B, T, H, hd]
     k: jax.Array,  # [B, T, KH, hd]

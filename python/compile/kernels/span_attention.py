@@ -1,0 +1,110 @@
+"""Causal-over-history span attention Pallas kernel, GQA-aware.
+
+The batched span artifact advances ONE sequence through ``T`` new tokens
+in a single execution: token ``t`` sits at absolute position
+``start + t`` and attends every cache slot up to and including its own
+(the span's K/V rows are inserted into the cache *before* attention, so
+slots ``start .. start+t`` hold the span's own fresh keys).  This is the
+kernel that turns a chunked-prefill continuation from ``T`` PJRT
+dispatches into one: the mask generalizes both neighbours —
+
+  * ``start == 0``  →  plain causal prefill attention,
+  * ``T == 1``      →  single-token decode attention with ``lens = start+1``.
+
+Grid: ``(T / block_q,)`` — one program per query block; inner
+``fori_loop`` over KV chunks with an online softmax, so the ``[T, S]``
+score matrix never materializes.
+
+VMEM at paper scale (block_q = 32, block_k = 512, H=32, KH=8, hd=128):
+  q 32·32·128 + k,v 2·512·8·128 + acc 32·32·128 floats ≈ 4.3 MiB.
+
+Padding query rows (a ragged span tail padded up to the compiled bucket)
+attend garbage slots past the valid frontier but their output is
+discarded host-side; every row attends at least its own slot, so the
+softmax never sees an all-masked row.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, start_ref, o_ref, *, block_q, block_k, n_heads):
+    # q: [bq, H, hd]; k/v: [S, KH, hd]; start: [1]
+    qi = pl.program_id(0)
+    q = q_ref[...]  # [bq, H, hd]
+    bq, H, hd = q.shape
+    S = k_ref.shape[0]
+    KH = k_ref.shape[1]
+    g = n_heads // KH
+    qg = q.reshape(bq, KH, g, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    # Absolute position of each query row: token t lives at start + t.
+    q_pos = start_ref[0] + qi * block_q + jax.lax.iota(jnp.int32, bq)
+
+    n_chunks = S // block_k
+
+    def body(c, carry):
+        m, l, acc = carry  # [bq, KH, g], [bq, KH, g], [bq, KH, g, hd]
+        k = pl.load(k_ref, (pl.ds(c * block_k, block_k), slice(None), slice(None)))
+        v = pl.load(v_ref, (pl.ds(c * block_k, block_k), slice(None), slice(None)))
+        s = jnp.einsum("qkgh,skh->qkgs", qg, k) * scale  # [bq, KH, g, bk]
+        k_pos = c * block_k + jax.lax.iota(jnp.int32, block_k)
+        # Causal over the WHOLE history: slot s is visible iff s <= start+t.
+        valid = k_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_new[..., None]), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("qkgs,skh->qkgh", p, v)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq, KH, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bq, KH, g), jnp.float32)
+    acc0 = jnp.zeros((bq, KH, g, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, acc0))
+    ctx = acc / jnp.maximum(l, 1e-37)[..., None]
+    o_ref[...] = ctx.reshape(bq, H, hd).astype(o_ref.dtype)
+
+
+def span_attention(
+    q: jax.Array,  # [T, H, hd] — span queries, already RoPE'd at start+t
+    kcache: jax.Array,  # [S, KH, hd] — full cache, span rows inserted
+    vcache: jax.Array,  # [S, KH, hd]
+    start: jax.Array,  # [1] (or scalar) int32: absolute position of token 0
+    *,
+    block_q: int = 32,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Causal-over-history attention for one sequence's span: [T, H, hd]."""
+    T, H, hd = q.shape
+    S, KH = kcache.shape[0], kcache.shape[1]
+    bq = min(block_q, T)
+    bk = min(block_k, S)
+    Tq = (T + bq - 1) // bq * bq
+    Sk = (S + bk - 1) // bk * bk
+    qp = jnp.pad(q, ((0, Tq - T), (0, 0), (0, 0)))
+    # Padded KV slots sit at positions >= S > start + T - 1: always masked.
+    kp = jnp.pad(kcache, ((0, Sk - S), (0, 0), (0, 0)))
+    vp = jnp.pad(vcache, ((0, Sk - S), (0, 0), (0, 0)))
+    start_arr = jnp.reshape(start, (1,)).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_q=bq, block_k=bk, n_heads=H),
+        grid=(Tq // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, H, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((Sk, KH, hd), lambda i: (0, 0, 0)),
+            pl.BlockSpec((Sk, KH, hd), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bq, H, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tq, H, hd), q.dtype),
+        interpret=interpret,
+    )(qp, kp, vp, start_arr)
+    return out[:T]

@@ -306,6 +306,184 @@ def decode_precomp_gather(
 
 
 # ---------------------------------------------------------------------------
+# Span step: T new tokens of ONE sequence against the existing KV history
+# ---------------------------------------------------------------------------
+#
+# The batched span artifact: a chunked-prefill continuation (or preemption
+# replay, prefix-cache suffix fill, chat turn delta) advances ``T`` tokens
+# in ONE execution instead of ``T`` single-token decode dispatches.  The
+# cache keeps the decode layout ``[L, 1, S, KH, hd]`` so the rust engine
+# can chain the output cache buffers through a ``DeviceCacheSession``
+# exactly like decode steps.  Ragged spans are padded up to the compiled
+# bucket: padding rows write garbage K/V at slots past the valid frontier,
+# which the causal-over-history mask keeps invisible to every valid token
+# and the next tile (or nothing) overwrites.
+
+
+def _span_attn_core(
+    cfg: ModelConfig,
+    w: Weights,
+    i: int,
+    q: jax.Array,  # [T, d]
+    k: jax.Array,  # [T, e]
+    v: jax.Array,  # [T, e]
+    start,  # scalar int32: absolute position of span token 0
+    kcache: jax.Array,  # [1, S, KH, hd]
+    vcache: jax.Array,
+    use_pallas: bool,
+):
+    """Span attention tail: RoPE at start+t, contiguous cache insert,
+    causal-over-history attention, P projection.
+
+    Returns (attn_out [T, d], kcache', vcache', k_rows, v_rows) where
+    k_rows/v_rows are the span's fresh (post-RoPE) rows [T, KH, hd].
+    """
+    T = q.shape[0]
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    qh = q.reshape(T, H, hd)
+    kh = k.reshape(T, KH, hd)
+    vh = v.reshape(T, KH, hd)
+    pos = start + jnp.arange(T, dtype=jnp.int32)
+    qh, kh = _rope_pair(cfg, qh, kh, pos, use_pallas)
+    # The span's slots are contiguous: ONE dynamic_update_slice per cache.
+    zero = jnp.int32(0)
+    kcache = jax.lax.dynamic_update_slice(kcache, kh[None], (zero, start, zero, zero))
+    vcache = jax.lax.dynamic_update_slice(vcache, vh[None], (zero, start, zero, zero))
+    if use_pallas:
+        ctx = kernels.span_attention_kernel(qh, kcache[0], vcache[0], start)
+    else:
+        ctx = ref.attention_span(qh, kcache[0], vcache[0], start)
+    attn_out = ctx.reshape(T, cfg.d) @ w[f"l{i}.wp"]
+    return attn_out, kcache, vcache, kh, vh
+
+
+def block_span(
+    cfg: ModelConfig,
+    w: Weights,
+    i: int,
+    x: jax.Array,  # [T, d]
+    start,
+    kcache: jax.Array,
+    vcache: jax.Array,
+    use_pallas: bool,
+):
+    """Full transformer block over a span (baseline path)."""
+    q, k, v = _qkv(cfg, w, i, x, use_pallas)
+    attn_out, kcache, vcache, kr, vr = _span_attn_core(
+        cfg, w, i, q, k, v, start, kcache, vcache, use_pallas
+    )
+    if cfg.arch == "parallel":
+        ffn_out = _ffn(cfg, w, i, _norm(cfg, w, f"l{i}.ln2", x), use_pallas)
+        x = x + attn_out + ffn_out
+    else:
+        h = x + attn_out
+        x = h + _ffn(cfg, w, i, _norm(cfg, w, f"l{i}.ln2", h), use_pallas)
+    return x, kcache, vcache, kr, vr
+
+
+def block_span_precomp(
+    cfg: ModelConfig,
+    w: Weights,
+    rows: jax.Array,  # [T, 2(d+e)] gathered precomputed rows
+    start,
+    kcache: jax.Array,
+    vcache: jax.Array,
+    use_pallas: bool,
+):
+    """First span block with precompute: the batched table rows feed the
+    span exactly like the single-token gather feeds decode."""
+    d, e = cfg.d, cfg.e
+    q = rows[:, :d]
+    k = rows[:, d : d + e]
+    v = rows[:, d + e : d + 2 * e]
+    r = rows[:, d + 2 * e :]
+    attn_out, kcache, vcache, kr, vr = _span_attn_core(
+        cfg, w, 0, q, k, v, start, kcache, vcache, use_pallas
+    )
+    if cfg.arch == "parallel":
+        x = r + attn_out  # r = emb + ffn_out (precomputed skip)
+    else:
+        h = r + attn_out  # r = emb
+        x = h + _ffn(cfg, w, 0, _norm(cfg, w, "l0.ln2", h), use_pallas)
+    return x, kcache, vcache, kr, vr
+
+
+def _span_outputs(cfg, w, x, kout, vout, krows, vrows):
+    """Shared span epilogue: logits at EVERY span position plus the fresh
+    K/V rows in the token-major [T, L, KH, hd] layout the rust paged-store
+    writeback expects (`SpanOut::new_k`)."""
+    logits = _logits(cfg, w, x)  # [T, V]
+    new_k = jnp.stack(krows).transpose(1, 0, 2, 3)  # [L,T,..] -> [T,L,KH,hd]
+    new_v = jnp.stack(vrows).transpose(1, 0, 2, 3)
+    return logits, jnp.stack(kout), jnp.stack(vout), new_k, new_v
+
+
+def decode_span_baseline(
+    cfg: ModelConfig,
+    w: Weights,
+    tokens: jax.Array,  # [T] int32 span tokens
+    start: jax.Array,  # [1] int32 absolute position of tokens[0]
+    kcaches: jax.Array,  # [L, 1, S, KH, hd]
+    vcaches: jax.Array,
+    use_pallas: bool = True,
+):
+    """Advance one sequence through T tokens in a single execution.
+
+    Returns (logits [T, V], kcaches', vcaches', new_k [T, L, KH, hd],
+    new_v) — the caches for device buffer chaining, the fresh rows for
+    selective readback (the host never needs a full-pair sync).
+    """
+    s0 = start[0]
+    x = w["emb"][tokens]  # [T, d]
+    if not cfg.rope:
+        T = tokens.shape[0]
+        x = x + w["abspe"][s0 + jnp.arange(T, dtype=jnp.int32)]
+    kout, vout, krows, vrows = [], [], [], []
+    for i in range(cfg.n_layers):
+        x, kc, vc, kr, vr = block_span(
+            cfg, w, i, x, s0, kcaches[i], vcaches[i], use_pallas
+        )
+        kout.append(kc)
+        vout.append(vc)
+        krows.append(kr)
+        vrows.append(vr)
+    return _span_outputs(cfg, w, x, kout, vout, krows, vrows)
+
+
+def decode_span_precomp(
+    cfg: ModelConfig,
+    w: Weights,
+    rows: jax.Array,  # [T, 2(d+e)] rust-gathered precomputed rows
+    start: jax.Array,  # [1] int32
+    kcaches: jax.Array,
+    vcaches: jax.Array,
+    use_pallas: bool = True,
+):
+    """Batched-span step with the precomputed first layer: the whole
+    span's table rows arrive in one gather (the paper's `len·2(d+e)`
+    read) and one execution covers layers 1..L."""
+    assert cfg.rope, "precompute requires RoPE (paper §2)"
+    s0 = start[0]
+    kout, vout, krows, vrows = [], [], [], []
+    x, kc, vc, kr, vr = block_span_precomp(
+        cfg, w, rows, s0, kcaches[0], vcaches[0], use_pallas
+    )
+    kout.append(kc)
+    vout.append(vc)
+    krows.append(kr)
+    vrows.append(vr)
+    for i in range(1, cfg.n_layers):
+        x, kc, vc, kr, vr = block_span(
+            cfg, w, i, x, s0, kcaches[i], vcaches[i], use_pallas
+        )
+        kout.append(kc)
+        vout.append(vc)
+        krows.append(kr)
+        vrows.append(vr)
+    return _span_outputs(cfg, w, x, kout, vout, krows, vrows)
+
+
+# ---------------------------------------------------------------------------
 # Prefill (batched prompt processing, causal)
 # ---------------------------------------------------------------------------
 

@@ -62,6 +62,50 @@ def test_decode_artifact_lowering_has_no_l0_qkv_matmul():
         assert hb.count(" dot(") > hp.count(" dot("), name
 
 
+@pytest.mark.parametrize("path", ["baseline", "precomp"])
+def test_span_artifact_lowers_with_five_outputs(path):
+    """The batched span artifact must lower through the HLO-text pipeline
+    with the [logits, kcaches, vcaches, new_k, new_v] output quintuple the
+    rust engine chains/reads (artifact-free structural check)."""
+    cfg = configs.get("tiny-serial")
+    T = 8
+    L, S = cfg.n_layers, cfg.max_seq
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    cache = jax.ShapeDtypeStruct((L, 1, S, KH, hd), jnp.float32)
+    start = jax.ShapeDtypeStruct((1,), jnp.int32)
+    if path == "baseline":
+        order = model.weight_order_baseline(cfg)
+        data = jax.ShapeDtypeStruct((T,), jnp.int32)
+
+        def fn(tokens, st, kc, vc, *ws):
+            return model.decode_span_baseline(
+                cfg, dict(zip(order, ws)), tokens, st, kc, vc, False
+            )
+    else:
+        order = model.weight_order_precomp(cfg)
+        data = jax.ShapeDtypeStruct((T, cfg.precomp_row_width), jnp.float32)
+
+        def fn(rows, st, kc, vc, *ws):
+            return model.decode_span_precomp(
+                cfg, dict(zip(order, ws)), rows, st, kc, vc, False
+            )
+
+    ws = [
+        jax.ShapeDtypeStruct(params.tensor_shape(cfg, n), jnp.float32)
+        for n in order
+    ]
+    text = aot.to_hlo_text(jax.jit(fn).lower(data, start, cache, cache, *ws))
+    assert "HloModule" in text and "ENTRY" in text
+    # The root tuple must carry the five output leaves, in these shapes.
+    shapes = [
+        f"f32[{T},{cfg.vocab_size}]",  # logits
+        f"f32[{L},1,{S},{KH},{hd}]",  # chained caches (x2)
+        f"f32[{T},{L},{KH},{hd}]",  # fresh rows (x2)
+    ]
+    for s in shapes:
+        assert s in text.replace(" ", ""), f"missing output shape {s}"
+
+
 needs_artifacts = pytest.mark.skipif(
     not os.path.exists(os.path.join(ART, "manifest.json")),
     reason="run `make artifacts` first",

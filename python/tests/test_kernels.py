@@ -173,6 +173,96 @@ def test_decode_attention_ignores_garbage_beyond_len():
 
 
 # ---------------------------------------------------------------------------
+# span attention (causal over history)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 9),
+    kh=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 4]),
+    hd=st.sampled_from([8, 32]),
+    s=st.sampled_from([16, 40, 64]),
+    bq=st.sampled_from([2, 8, 32]),
+    bk=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_span_attention(t, kh, g, hd, s, bq, bk, seed):
+    rng = np.random.default_rng(seed)
+    h = kh * g
+    start = int(rng.integers(0, s - t + 1))
+    q = _arr(rng, (t, h, hd))
+    kc = _arr(rng, (s, kh, hd))
+    vc = _arr(rng, (s, kh, hd))
+    st_arr = jnp.asarray([start], jnp.int32)
+    got = kernels.span_attention_kernel(q, kc, vc, st_arr, block_q=bq, block_k=bk)
+    assert_allclose(
+        got, ref.attention_span(q, kc, vc, start), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_span_attention_t1_is_decode_attention():
+    """A one-token span at position p equals decode attention with lens=p+1
+    — the degenerate case the span kernel must share with the decode path."""
+    rng = np.random.default_rng(5)
+    q = _arr(rng, (1, 4, 8))
+    kc = _arr(rng, (24, 2, 8))
+    vc = _arr(rng, (24, 2, 8))
+    for p in [0, 3, 23]:
+        got = kernels.span_attention_kernel(q, kc, vc, jnp.asarray([p], jnp.int32))
+        want = ref.attention_decode(
+            q, kc[None], vc[None], jnp.asarray([p + 1], jnp.int32)
+        )
+        assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_span_attention_start_zero_is_causal_prefill():
+    """start == 0 degenerates to plain causal prefill attention."""
+    rng = np.random.default_rng(6)
+    T = 12
+    q = _arr(rng, (T, 4, 8))
+    kc = _arr(rng, (16, 2, 8))
+    vc = _arr(rng, (16, 2, 8))
+    got = ref.attention_span(q, kc, vc, 0)
+    want = ref.attention_prefill(
+        q[None, :, :, :],
+        kc[None, :T],
+        vc[None, :T],
+        jnp.asarray([T], jnp.int32),
+    )[0]
+    # attention_span sees the full 16-slot cache but masks slots > t, and
+    # slots T..16 are never visible (t <= T-1 < T) — identical result.
+    assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_span_attention_ignores_slots_beyond_own_position():
+    """Garbage at slots past start+t (ragged padding rows, future span
+    tokens) must not leak into any token's output."""
+    rng = np.random.default_rng(7)
+    T, S, start = 4, 32, 10
+    q = _arr(rng, (T, 2, 8))
+    kc = _arr(rng, (S, 2, 8))
+    vc = _arr(rng, (S, 2, 8))
+    base = kernels.span_attention_kernel(q, kc, vc, jnp.asarray([start], jnp.int32))
+    # Poison everything past the LAST span token; earlier tokens also must
+    # not see their successors, checked token-wise below.
+    kc2 = kc.at[start + T :].set(1e9)
+    vc2 = vc.at[start + T :].set(-1e9)
+    poisoned = kernels.span_attention_kernel(
+        q, kc2, vc2, jnp.asarray([start], jnp.int32)
+    )
+    assert_allclose(base, poisoned, rtol=1e-6, atol=1e-6)
+    for t in range(T):
+        kc3 = kc.at[start + t + 1 :].set(1e9)
+        vc3 = vc.at[start + t + 1 :].set(-1e9)
+        per_tok = kernels.span_attention_kernel(
+            q, kc3, vc3, jnp.asarray([start], jnp.int32)
+        )
+        assert_allclose(base[t], per_tok[t], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # FFN kernels
 # ---------------------------------------------------------------------------
 

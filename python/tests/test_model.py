@@ -77,6 +77,109 @@ def test_prefill_precompute_equivalence(name):
         assert_allclose(kb[:, b, :l], kp[:, b, :l], rtol=1e-5, atol=1e-5)
 
 
+def _span_setup(name, prefix_len, seed=9):
+    """History of `prefix_len` tokens built token-by-token from a zero
+    cache; returns (cfg, w, caches after prefix, prefix tokens)."""
+    cfg = configs.get(name)
+    w = params.init_weights(cfg, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    L, S = cfg.n_layers, cfg.max_seq
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    kc = jnp.zeros((L, 1, S, KH, hd), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    prefix = jnp.asarray(rng.integers(0, cfg.vocab_size, (prefix_len,)), jnp.int32)
+    for t in range(prefix_len):
+        _, kc, vc = model.decode_baseline(
+            cfg, w, prefix[t : t + 1], jnp.asarray([t], jnp.int32), kc, vc, False
+        )
+    return cfg, w, kc, vc, rng
+
+
+@pytest.mark.parametrize("name", ["tiny-serial", "tiny-parallel"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_decode_span_matches_token_by_token(name, use_pallas):
+    """The batched span step is a pure re-schedule: one execution over T
+    tokens must equal T single-token decode steps — logits at every span
+    position, the advanced caches, and the fresh K/V rows."""
+    P, T = 5, 6
+    cfg, w, kc, vc, rng = _span_setup(name, P)
+    span = jnp.asarray(rng.integers(0, cfg.vocab_size, (T,)), jnp.int32)
+
+    # Oracle: token-by-token through the decode step.
+    kc_o, vc_o = kc, vc
+    logits_o = []
+    for t in range(T):
+        lg, kc_o, vc_o = model.decode_baseline(
+            cfg, w, span[t : t + 1], jnp.asarray([P + t], jnp.int32),
+            kc_o, vc_o, False,
+        )
+        logits_o.append(lg[0])
+
+    lg_s, kc_s, vc_s, new_k, new_v = model.decode_span_baseline(
+        cfg, w, span, jnp.asarray([P], jnp.int32), kc, vc, use_pallas
+    )
+    assert_allclose(lg_s, jnp.stack(logits_o), rtol=1e-4, atol=1e-4)
+    end = P + T
+    assert_allclose(kc_s[:, :, :end], kc_o[:, :, :end], rtol=1e-4, atol=1e-4)
+    assert_allclose(vc_s[:, :, :end], vc_o[:, :, :end], rtol=1e-4, atol=1e-4)
+    # The fresh-rows outputs are exactly the span's cache rows,
+    # token-major ([T, L, KH, hd] — the rust SpanOut layout).
+    for t in range(T):
+        for li in range(cfg.n_layers):
+            assert_allclose(
+                new_k[t, li], kc_s[li, 0, P + t], rtol=1e-6, atol=1e-6
+            )
+            assert_allclose(
+                new_v[t, li], vc_s[li, 0, P + t], rtol=1e-6, atol=1e-6
+            )
+
+
+@pytest.mark.parametrize("name", RUNNABLE)
+def test_decode_span_precomp_equivalence(name):
+    """Precomputed span == baseline span: the batched table rows feed the
+    span artifact exactly like the per-token gather feeds decode."""
+    P, T = 4, 5
+    cfg, w, kc, vc, rng = _span_setup(name, P)
+    span = jnp.asarray(rng.integers(0, cfg.vocab_size, (T,)), jnp.int32)
+    lb, kb, vb, nkb, nvb = model.decode_span_baseline(
+        cfg, w, span, jnp.asarray([P], jnp.int32), kc, vc, False
+    )
+    rows = precompute.build_rows(cfg, w, span, use_pallas=False)
+    lp, kp, vp, nkp, nvp = model.decode_span_precomp(
+        cfg, w, rows, jnp.asarray([P], jnp.int32), kc, vc, False
+    )
+    assert_allclose(lb, lp, rtol=1e-5, atol=1e-5)
+    end = P + T
+    assert_allclose(kb[:, :, :end], kp[:, :, :end], rtol=1e-5, atol=1e-5)
+    assert_allclose(nkb, nkp, rtol=1e-5, atol=1e-5)
+    assert_allclose(nvb, nvp, rtol=1e-5, atol=1e-5)
+    assert (np.argmax(np.asarray(lb), -1) == np.argmax(np.asarray(lp), -1)).all()
+
+
+def test_decode_span_ragged_padding_is_inert():
+    """A ragged span padded up to the bucket (garbage tail tokens) must
+    leave every VALID position's logits, rows, and cache slots unchanged
+    — the engine masks the tail host-side, the graph must keep padding
+    from leaking backward."""
+    P, n, pad = 6, 3, 5  # 3 valid tokens padded up to an 8-token bucket
+    cfg, w, kc, vc, rng = _span_setup("tiny-serial", P)
+    valid = jnp.asarray(rng.integers(0, cfg.vocab_size, (n,)), jnp.int32)
+    lg_v, kc_v, vc_v, nk_v, nv_v = model.decode_span_baseline(
+        cfg, w, valid, jnp.asarray([P], jnp.int32), kc, vc, False
+    )
+    garbage = jnp.asarray(rng.integers(0, cfg.vocab_size, (pad,)), jnp.int32)
+    padded = jnp.concatenate([valid, garbage])
+    lg_p, kc_p, vc_p, nk_p, nv_p = model.decode_span_baseline(
+        cfg, w, padded, jnp.asarray([P], jnp.int32), kc, vc, False
+    )
+    assert_allclose(lg_p[:n], lg_v, rtol=1e-5, atol=1e-5)
+    assert_allclose(nk_p[:n], nk_v[:n], rtol=1e-6, atol=1e-6)
+    assert_allclose(nv_p[:n], nv_v[:n], rtol=1e-6, atol=1e-6)
+    end = P + n
+    assert_allclose(kc_p[:, :, :end], kc_v[:, :, :end], rtol=1e-6, atol=1e-6)
+    assert_allclose(vc_p[:, :, :end], vc_v[:, :, :end], rtol=1e-6, atol=1e-6)
+
+
 def test_prefill_then_decode_matches_pure_decode():
     """Engine invariant: prefill(prompt) + decode steps == decode from scratch."""
     cfg, w, _, _, _, _ = _setup("tiny-serial")

@@ -100,6 +100,9 @@ fn main() {
     // transfer counters make the acceptance criterion measurable: the
     // device path performs exactly ONE cache-pair upload per span.
     println!("\n-- decode_span: device-resident vs host cache path --");
+    // Token-by-token oracle isolation: this section measures the device
+    // buffer-chaining effect alone, so the batched span artifact is off.
+    engine.set_span_exec(false);
     if let Ok(bucket) = engine.decode_bucket(1, StepPath::Precompute) {
         let span_len = 16.min(cfg.max_seq.saturating_sub(1)).max(1);
         let tokens: Vec<u32> = (0..span_len)
@@ -162,5 +165,105 @@ fn main() {
             );
         }
         engine.set_device_kv(true);
+    }
+    engine.set_span_exec(true);
+
+    // Batched span artifact vs per-token span execution: the tentpole
+    // comparison — a 64-token continuation span as ceil(64/T) bucketed
+    // executions (one cache upload, logits + fresh rows readback per
+    // tile) against one decode dispatch per token.  Execution counts come
+    // from the engine's span counters, so the `<= ceil(len/T)` acceptance
+    // bound is asserted here, not eyeballed.
+    println!("\n-- decode_span: batched span artifact vs per-token --");
+    let span_buckets = engine.span_buckets_for(StepPath::Precompute);
+    if span_buckets.is_empty() {
+        println!("  (no span artifacts in this bundle; re-run `make artifacts`)");
+    } else if let Ok(bucket) = engine.decode_bucket(1, StepPath::Precompute) {
+        let span_len = 64.min(cfg.max_seq.saturating_sub(1)).max(1);
+        let largest = *span_buckets.last().unwrap();
+        let (warmup, iters) = (2usize, 10usize);
+        let runs = (warmup + iters) as u64;
+        let mut per_token_us = Vec::new();
+        for batched in [true, false] {
+            engine.set_span_exec(batched);
+            let label = if batched { "batched" } else { "per_token" };
+            let tokens: Vec<u32> = (0..span_len)
+                .map(|i| (i as u32 * 7) % cfg.vocab_size as u32)
+                .collect();
+            let execs_before = engine.span_executions();
+            let fallbacks_before = engine.span_fallbacks();
+            let stats = engine.transfers();
+            let before = stats.snapshot();
+            let s = bench(warmup, iters, || {
+                let mut caches = CacheBatch::zeros(
+                    cfg.n_layers,
+                    bucket,
+                    cfg.max_seq,
+                    cfg.n_kv_heads,
+                    cfg.head_dim(),
+                );
+                engine
+                    .decode_span(StepPath::Precompute, &tokens, 0, &mut caches)
+                    .unwrap();
+            });
+            let d = stats.snapshot().since(&before);
+            let execs = if batched {
+                (engine.span_executions() - execs_before) as f64 / runs as f64
+            } else {
+                // The oracle dispatches once per token by definition.
+                span_len as f64
+            };
+            let fallbacks = engine.span_fallbacks() - fallbacks_before;
+            report(
+                &format!("span {label} len={span_len}"),
+                &s,
+                Some((span_len as f64 / s.mean.as_secs_f64(), "tok/s")),
+            );
+            println!(
+                "  per-span-token {:?};  {execs:.1} executions/span, \
+                 cache uploads/span {:.1}",
+                s.mean / span_len as u32,
+                d.cache_uploads as f64 / runs as f64,
+            );
+            if batched && fallbacks == 0 {
+                let bound = span_len.div_ceil(largest);
+                assert!(
+                    execs <= bound as f64 + 1e-9,
+                    "batched span must run in <= ceil({span_len}/{largest}) = \
+                     {bound} executions, measured {execs:.1}"
+                );
+            } else if batched {
+                println!("  (batched path unavailable; numbers are fallback-path)");
+            }
+            per_token_us.push(s.mean.as_micros() as f64 / span_len as f64);
+            emit_json(
+                &format!("e2e_span_{label}"),
+                &[
+                    ("span_len", span_len as f64),
+                    ("mean_us", s.mean.as_micros() as f64),
+                    ("per_token_us", s.mean.as_micros() as f64 / span_len as f64),
+                    ("execs_per_span", execs),
+                    (
+                        "cache_uploads_per_span",
+                        d.cache_uploads as f64 / runs as f64,
+                    ),
+                    (
+                        "cache_h2d_bytes_per_span",
+                        d.cache_h2d_bytes as f64 / runs as f64,
+                    ),
+                ],
+            );
+        }
+        engine.set_span_exec(true);
+        if per_token_us.len() == 2 {
+            // per_token_us[0] is the batched run, [1] the per-token run.
+            println!(
+                "  batched span speedup: {:.2}x (batched {:.1} vs \
+                 per-token {:.1} us/token)",
+                per_token_us[1] / per_token_us[0].max(1e-9),
+                per_token_us[0],
+                per_token_us[1],
+            );
+        }
     }
 }

@@ -57,6 +57,7 @@ fn mk(n_waiting: usize, n_running: usize) -> Scheduler {
         max_seq: 128,
         chunk_tokens: 0,
         step_token_budget: 0,
+        span_bucket_tokens: 0,
     });
     let mut id = 0u64;
     // Fill running first (via admission on an infinite budget).
@@ -105,6 +106,7 @@ fn main() {
                 max_seq: 128,
                 chunk_tokens: 0,
                 step_token_budget: 0,
+                span_bucket_tokens: 0,
             });
             for id in 0..256u64 {
                 s.submit(id, vec![1; 16], 32, Priority::Normal).unwrap();
@@ -160,6 +162,7 @@ fn main() {
             max_seq: 8192,
             chunk_tokens: 64,
             step_token_budget: 128,
+            span_bucket_tokens: 0,
         });
         let mut id = 0u64;
         for r in mixed_workload(12, 32, 4, 1024, 32, 1000, 7) {
@@ -225,6 +228,7 @@ fn kv_movement_section() {
         max_seq: cfg.max_seq,
         chunk_tokens: 64,
         step_token_budget: 128,
+        span_bucket_tokens: 0,
     });
     let mut id = 0u64;
     for r in mixed_workload(12, 32, 4, 1024, 32, 1000, 7) {
@@ -336,6 +340,7 @@ fn prefix_reuse_section() {
         max_seq: 8192,
         chunk_tokens: 32,
         step_token_budget: 0,
+        span_bucket_tokens: 0,
     });
     // 2 tenants x 3 requests, 96-token system prompts, short suffixes.
     let reqs = tenant_workload(2, 3, 96, 16, 4, 1000, 11);
@@ -437,6 +442,7 @@ fn drive_mixed(chunk: usize, budget: usize) -> (usize, usize, usize) {
         max_seq: 8192,
         chunk_tokens: chunk,
         step_token_budget: budget,
+        span_bucket_tokens: 0,
     });
     let mut id = 0u64;
     for r in mixed_workload(12, 32, 4, 1024, 32, 1000, 7) {

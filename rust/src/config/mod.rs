@@ -8,8 +8,8 @@
 mod zoo;
 
 pub use zoo::{
-    default_prefill_chunk, default_prefix_cache_blocks, mixtral_like_columns,
-    paper_models, runnable_models, zoo, zoo_get,
+    default_prefill_chunk, default_prefix_cache_blocks, default_span_bucket,
+    mixtral_like_columns, paper_models, runnable_models, zoo, zoo_get,
 };
 
 use crate::error::{Error, Result};
@@ -177,6 +177,17 @@ pub struct ServingConfig {
     /// host path everywhere (the equivalence oracle); the engine also
     /// falls back by itself if the PJRT wrapper cannot chain buffers.
     pub enable_device_kv: bool,
+    /// Batched span execution (`ModelEngine::decode_span` tiling through
+    /// the compiled span artifacts): a continuation span of S tokens runs
+    /// as `ceil(S/T)` bucketed executions instead of S single-token
+    /// decode dispatches.  Disabling forces the token-by-token oracle
+    /// everywhere (the equivalence baseline); the engine also falls back
+    /// by itself — sticky — if a span-artifact execution fails.
+    pub enable_span_exec: bool,
+    /// Largest span tile (tokens per span execution) serving may use.
+    /// 0 = the largest compiled span bucket; see
+    /// `zoo::default_span_bucket` for a per-model starting point.
+    pub span_bucket_tokens: usize,
     /// Sampling defaults.
     pub temperature: f64,
     pub top_k: usize,
@@ -201,6 +212,8 @@ impl Default for ServingConfig {
             enable_prefix_cache: true,
             prefix_cache_blocks: 0,
             enable_device_kv: true,
+            enable_span_exec: true,
+            span_bucket_tokens: 0,
             temperature: 0.0,
             top_k: 0,
             seed: 0xF17A,
@@ -265,6 +278,34 @@ mod tests {
         }
         // Paper-scale example: Mistral's 4096 context -> 512-token chunks.
         assert_eq!(default_prefill_chunk(&zoo_get("mistral-7b").unwrap()), 512);
+    }
+
+    #[test]
+    fn default_span_bucket_divides_default_chunk() {
+        for cfg in zoo() {
+            let b = default_span_bucket(&cfg);
+            assert!((8..=64).contains(&b), "{}: span bucket {b}", cfg.name);
+            let chunk = default_prefill_chunk(&cfg);
+            // Interior tiles must tile the default chunk exactly — no
+            // ragged tail mid-prompt (the scheduler aligns to this).
+            assert_eq!(
+                chunk % b,
+                0,
+                "{}: span bucket {b} does not divide chunk {chunk}",
+                cfg.name
+            );
+        }
+        // Paper-scale example: Mistral's 4096 context -> 64-token tiles
+        // under the 512-token default chunk.
+        assert_eq!(default_span_bucket(&zoo_get("mistral-7b").unwrap()), 64);
+        // Tiny models stay on their compiled 8-token bucket floor.
+        assert_eq!(default_span_bucket(&zoo_get("tiny-serial").unwrap()), 8);
+        // And the knob composes into a valid serving config.
+        let sc = ServingConfig {
+            span_bucket_tokens: default_span_bucket(&zoo_get("mistral-7b").unwrap()),
+            ..Default::default()
+        };
+        assert!(sc.enable_span_exec && sc.span_bucket_tokens == 64);
     }
 
     #[test]

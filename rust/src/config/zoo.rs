@@ -204,6 +204,16 @@ pub fn default_prefix_cache_blocks(cfg: &ModelConfig, block_tokens: usize) -> us
     cfg.max_seq.div_ceil(block_tokens.max(1)).max(4)
 }
 
+/// Serving-side default for `ServingConfig::span_bucket_tokens`: half
+/// the default prefill chunk, clamped to [8, 64].  Derived from the
+/// chunk (not the raw context) so interior span tiles divide the chunk
+/// exactly — a continuation chunk then tiles with no ragged tail; the
+/// clamp keeps tiny models on their compiled bucket floor and
+/// paper-scale models from wanting enormous single-tile graphs.
+pub fn default_span_bucket(cfg: &ModelConfig) -> usize {
+    (default_prefill_chunk(cfg) / 2).clamp(8, 64)
+}
+
 /// The three columns of the paper's §3 tables: Pythia-6.9B, Mistral-7B and
 /// the hypothetical parallel-attention Mixtral-8x7B.
 pub fn mixtral_like_columns() -> Vec<ModelConfig> {

@@ -320,6 +320,17 @@ impl Coordinator {
             .max()
             .ok_or_else(|| Error::Engine("no prefill artifacts".into()))?;
         let max_batch = cfg.max_batch.min(max_decode_bucket);
+        // Batched span execution: knobs land on the engine first so the
+        // scheduler can plan against the tile granularity it will get.
+        engine.set_span_exec(cfg.enable_span_exec);
+        engine.set_span_bucket_cap(cfg.span_bucket_tokens);
+        let span_bucket = if cfg.enable_span_exec {
+            // Both path families compile the same buckets; the initial
+            // path's view is representative across live path switches.
+            engine.max_span_bucket(path)
+        } else {
+            0
+        };
         let sched = Scheduler::new(SchedConfig {
             max_batch,
             max_admit: cfg.max_admit_per_step,
@@ -327,6 +338,7 @@ impl Coordinator {
             max_seq: mc.max_seq,
             chunk_tokens: cfg.prefill_chunk_tokens,
             step_token_budget: cfg.step_token_budget,
+            span_bucket_tokens: span_bucket,
         });
         let kv = PagedKvCache::new(
             cfg.kv_blocks,
@@ -1017,6 +1029,20 @@ impl Coordinator {
             )));
         }
         let out = self.engine.decode_span(self.path, tokens, start, &mut caches)?;
+        // Span-execution accounting: how many device executions the span
+        // cost (batched tiles vs one per token) and the tokens-per-
+        // execution distribution — the observable the batched span
+        // artifact exists to improve.
+        use std::sync::atomic::Ordering::Relaxed;
+        self.metrics
+            .span_executions
+            .fetch_add(out.executions as u64, Relaxed);
+        if !out.batched {
+            self.metrics.span_fallbacks.fetch_add(1, Relaxed);
+        }
+        for t in &out.exec_tokens {
+            self.metrics.span_exec_tokens.record(*t as u64);
+        }
         self.kv
             .append_span(id, tokens.len(), &out.new_k, &out.new_v)?;
         Ok(out.logits)

@@ -113,6 +113,45 @@ pub fn memory_delta(cfg: &ModelConfig) -> MemoryDelta {
     }
 }
 
+/// Device executions a continuation span of `len` tokens costs when tiled
+/// into `bucket`-token span-artifact executions (`ceil(len/bucket)`); the
+/// per-token path costs `len`.
+pub fn span_exec_count(len: u64, bucket: u64) -> u64 {
+    len.div_ceil(bucket.max(1))
+}
+
+/// Weight values streamed per span **execution** — everything the
+/// artifact must read besides its per-token inputs.  The precompute path
+/// drops the eliminated first-layer weights AND the input embedding (the
+/// table rows arrive as data); the baseline keeps the weights but still
+/// embeds in-graph (its embedding reads are per-token, counted by
+/// `reads_without`, not here).
+pub fn streamed_weights(cfg: &ModelConfig, precompute: bool) -> u64 {
+    let total = weight_counts(cfg).total;
+    let emb_in = (cfg.d * cfg.vocab_size) as u64;
+    if precompute {
+        total - eliminated_weights(cfg) - emb_in
+    } else {
+        total - emb_in
+    }
+}
+
+/// Whole-span weight traffic: weights stream once per execution, so a
+/// span of `len` tokens reads `span_exec_count(len, bucket)` times the
+/// per-execution streamed weights (vs `len` times on the per-token path).
+pub fn span_weight_reads(cfg: &ModelConfig, precompute: bool, len: u64, bucket: u64) -> u64 {
+    span_exec_count(len, bucket) * streamed_weights(cfg, precompute)
+}
+
+/// Weight-read reduction of batched span execution over per-token span
+/// execution: `len / ceil(len/bucket)` — exactly `bucket` when the
+/// bucket divides the span.  This is the second batching axis the span
+/// artifact adds on top of the paper's first-layer table (which already
+/// made the span's layer-1 reads `len·2(d+e)` on either schedule).
+pub fn span_read_reduction(len: u64, bucket: u64) -> f64 {
+    len as f64 / span_exec_count(len, bucket) as f64
+}
+
 /// Upper bound on whole-model savings from optimizing one layer of `n`:
 /// the paper's "4 layers ⇒ ≤25%, 32 layers ⇒ ≤3%" remark (E7).
 pub fn max_savings_fraction(n_layers: usize) -> f64 {
@@ -338,6 +377,38 @@ mod tests {
         for cfg in [pythia(), mistral(), mixtral_par()] {
             let f = flops_saved_fraction(&cfg);
             assert!(f > 0.0 && f <= max_savings_fraction(cfg.n_layers) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn span_accounting_matches_tiling() {
+        // Mistral, default 512-token chunk tiled at the 64-token default
+        // span bucket: 8 executions, 64x fewer weight streams.
+        let m = mistral();
+        assert_eq!(span_exec_count(512, 64), 8);
+        assert_eq!(span_exec_count(64, 32), 2); // the acceptance shape
+        assert_eq!(span_exec_count(65, 32), 3); // ragged tail
+        assert_eq!(span_exec_count(5, 8), 1);
+        assert!((span_read_reduction(512, 64) - 64.0).abs() < 1e-9);
+        assert!((span_read_reduction(40, 32) - 20.0).abs() < 1e-9);
+        // Streamed weights: precompute drops eliminated + input embedding;
+        // baseline only the input embedding (its reads are per-token).
+        let emb_in = (m.d * m.vocab_size) as u64;
+        assert_eq!(
+            streamed_weights(&m, true),
+            weight_counts(&m).total - eliminated_weights(&m) - emb_in
+        );
+        assert_eq!(streamed_weights(&m, false), weight_counts(&m).total - emb_in);
+        assert_eq!(
+            span_weight_reads(&m, true, 512, 64),
+            8 * streamed_weights(&m, true)
+        );
+        // Batched always no worse than per-token, on both paths.
+        for pre in [false, true] {
+            assert!(
+                span_weight_reads(&m, pre, 512, 64)
+                    <= 512 * streamed_weights(&m, pre)
+            );
         }
     }
 

@@ -34,6 +34,8 @@ COMMANDS:
                   --prefix-cache-blocks N (0 = per-model zoo default)
                   --no-prefix-cache (disable cross-request KV reuse)
                   --no-device-kv (host-path caches: upload/readback per step)
+                  --span-tokens N|auto (largest span tile; 0 = largest compiled)
+                  --no-span-exec (token-by-token spans: one dispatch per token)
   generate      one-shot generation from the CLI
                   --prompt \"text\" --max-new 32 --model tiny-serial
                   --path precompute|baseline --temperature 0 --top-k 0
@@ -117,6 +119,26 @@ fn serving_config(flags: &HashMap<String, String>) -> ServingConfig {
     }
     if flags.contains_key("no-device-kv") {
         cfg.enable_device_kv = false;
+    }
+    if let Some(t) = flags.get("span-tokens") {
+        cfg.span_bucket_tokens = if t == "auto" {
+            match zoo_get(&cfg.model) {
+                Some(m) => firstlayer::config::default_span_bucket(&m),
+                None => {
+                    eprintln!(
+                        "[firstlayer] --span-tokens auto: model {} not in the \
+                         zoo; using the largest compiled bucket",
+                        cfg.model
+                    );
+                    0
+                }
+            }
+        } else {
+            t.parse().unwrap_or(cfg.span_bucket_tokens)
+        };
+    }
+    if flags.contains_key("no-span-exec") {
+        cfg.enable_span_exec = false;
     }
     cfg
 }

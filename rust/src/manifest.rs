@@ -49,6 +49,9 @@ impl IoSpec {
 pub enum ArtifactKind {
     Decode,
     Prefill,
+    /// Batched span: T tokens of ONE sequence against the existing KV
+    /// history in a single execution (`ModelEngine::decode_span` tiling).
+    Span,
     PrecomputeBuild,
 }
 
@@ -66,6 +69,8 @@ pub struct ArtifactSpec {
     pub weight_params: Vec<String>,
     pub batch: Option<usize>,
     pub prompt_len: Option<usize>,
+    /// Span-artifact bucket: tokens advanced per execution (kind == Span).
+    pub span_tokens: Option<usize>,
     pub max_seq: Option<usize>,
 }
 
@@ -108,6 +113,22 @@ impl ModelEntry {
             .filter(|a| a.name.starts_with(prefix))
             .collect();
         v.sort_by_key(|a| a.batch.unwrap_or(0));
+        v
+    }
+
+    /// Span artifacts of a path family, sorted by their token bucket.
+    pub fn span_buckets(&self, precompute: bool) -> Vec<&ArtifactSpec> {
+        let prefix = if precompute {
+            "span_precomp_t"
+        } else {
+            "span_baseline_t"
+        };
+        let mut v: Vec<_> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.name.starts_with(prefix) && a.kind == ArtifactKind::Span)
+            .collect();
+        v.sort_by_key(|a| a.span_tokens.unwrap_or(0));
         v
     }
 
@@ -264,6 +285,7 @@ fn parse_artifact(v: &Value) -> Result<ArtifactSpec> {
     let kind = match v.str_field("kind")? {
         "decode" => ArtifactKind::Decode,
         "prefill" => ArtifactKind::Prefill,
+        "span" => ArtifactKind::Span,
         "precompute_build" => ArtifactKind::PrecomputeBuild,
         other => return Err(Error::Manifest(format!("bad kind `{other}`"))),
     };
@@ -303,6 +325,7 @@ fn parse_artifact(v: &Value) -> Result<ArtifactSpec> {
             .collect(),
         batch: v.get_opt("batch").and_then(|x| x.as_usize()),
         prompt_len: v.get_opt("prompt_len").and_then(|x| x.as_usize()),
+        span_tokens: v.get_opt("span_tokens").and_then(|x| x.as_usize()),
         max_seq: v.get_opt("max_seq").and_then(|x| x.as_usize()),
     })
 }

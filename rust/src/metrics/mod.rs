@@ -260,6 +260,15 @@ pub struct Metrics {
     pub kv_sessions: AtomicU64,
     pub kv_session_steps: AtomicU64,
     pub kv_session_syncs: AtomicU64,
+    /// Batched span execution: device executions serving continuation
+    /// spans (span-artifact tiles, or one per token on the fallback) and
+    /// spans that fell back to the token-by-token oracle entirely.
+    pub span_executions: AtomicU64,
+    pub span_fallbacks: AtomicU64,
+    /// Tokens advanced per span execution (bucket-sized on the batched
+    /// path, 1 on the fallback) — the distribution that shows whether
+    /// spans actually batch.
+    pub span_exec_tokens: ValueHistogram,
     /// Cached-tokens-per-request distribution (0 recorded on a miss).
     pub cached_tokens: ValueHistogram,
     /// Engine step latencies.
@@ -315,6 +324,15 @@ impl Metrics {
             self.kv_sessions.load(Ordering::Relaxed),
             self.kv_session_steps.load(Ordering::Relaxed),
             self.kv_session_syncs.load(Ordering::Relaxed),
+        );
+        let _ = writeln!(
+            s,
+            "span_exec: executions={} fallbacks={} tokens/exec mean={:.1} p50={} p95={}",
+            self.span_executions.load(Ordering::Relaxed),
+            self.span_fallbacks.load(Ordering::Relaxed),
+            self.span_exec_tokens.mean(),
+            self.span_exec_tokens.quantile(0.50),
+            self.span_exec_tokens.quantile(0.95),
         );
         for (name, h) in [
             ("decode_step", &self.decode_step),
@@ -436,6 +454,18 @@ mod tests {
         let r = m.report();
         assert!(r.contains("cancelled=1"));
         assert!(r.contains("chat: turns=3 reused_tokens=48"));
+    }
+
+    #[test]
+    fn report_contains_span_exec_line() {
+        let m = Metrics::new();
+        m.span_executions.fetch_add(2, Ordering::Relaxed);
+        m.span_fallbacks.fetch_add(1, Ordering::Relaxed);
+        m.span_exec_tokens.record(32);
+        m.span_exec_tokens.record(8);
+        let r = m.report();
+        assert!(r.contains("span_exec: executions=2 fallbacks=1"));
+        assert!((m.span_exec_tokens.mean() - 20.0).abs() < 1e-9);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::ModelConfig;
@@ -194,12 +194,60 @@ pub struct SpanOut {
     pub new_k: Vec<f32>,
     /// New V rows, same layout.
     pub new_v: Vec<f32>,
+    /// Device executions this span cost: `ceil(S/T)` span-artifact tiles
+    /// on the batched path, one per token on the fallback oracle.
+    pub executions: usize,
+    /// Tokens advanced per execution, in order (feeds the
+    /// `span_exec_tokens` histogram).
+    pub exec_tokens: Vec<usize>,
+    /// Whether the batched span artifact served this span (false = the
+    /// token-by-token oracle ran).
+    pub batched: bool,
 }
 
 struct Loaded {
     exe: Arc<Executable>,
     /// Device-resident weight buffers in artifact parameter order.
     weight_bufs: Vec<Arc<xla::PjRtBuffer>>,
+}
+
+/// Greedy span tiling over the compiled buckets (ascending): per tile the
+/// smallest bucket covering the remainder (pad-minimal), else the largest;
+/// shrunk to whatever still fits the cache capacity `s` (a padded tile
+/// writes up to `pos + bucket` slots, and `dynamic_update_slice` would
+/// clamp — corrupting history — past the end).  Returns `(bucket, take)`
+/// pairs with `take` summing to `n`, or `None` when no compiled bucket
+/// fits — the caller then serves the span token-by-token (a capability
+/// gap near `max_seq`, not a health event).
+fn plan_span_tiles(
+    buckets: &[usize],
+    n: usize,
+    start: usize,
+    s: usize,
+) -> Option<Vec<(usize, usize)>> {
+    if buckets.is_empty() {
+        return None;
+    }
+    let mut tiles = Vec::new();
+    let mut done = 0usize;
+    while done < n {
+        let remaining = n - done;
+        let pos = start + done;
+        let want = buckets
+            .iter()
+            .copied()
+            .find(|b| *b >= remaining)
+            .unwrap_or(*buckets.last().expect("nonempty"));
+        let bucket = if pos + want <= s {
+            want
+        } else {
+            buckets.iter().rev().copied().find(|b| pos + *b <= s)?
+        };
+        let take = bucket.min(remaining);
+        tiles.push((bucket, take));
+        done += take;
+    }
+    Some(tiles)
 }
 
 /// One loaded model.
@@ -221,6 +269,21 @@ pub struct ModelEngine {
     /// directly instead of failing the same way per step.
     device_kv_enabled: AtomicBool,
     device_kv_ok: AtomicBool,
+    /// Batched span execution (`decode_span` tiling through the compiled
+    /// span artifacts): serving knob (`ServingConfig::enable_span_exec` /
+    /// `--no-span-exec`) and sticky runtime health, mirroring the
+    /// device-KV pair above.  `span_ok` flips to false the first time a
+    /// span-artifact execution fails; every later span then takes the
+    /// token-by-token oracle directly.
+    span_enabled: AtomicBool,
+    span_ok: AtomicBool,
+    /// Largest span tile serving may use (`ServingConfig::
+    /// span_bucket_tokens`; 0 = the largest compiled bucket).
+    span_bucket_cap: AtomicUsize,
+    /// Cumulative span-artifact executions / spans served token-by-token
+    /// (the execution counters the acceptance tests assert against).
+    span_execs: AtomicU64,
+    span_fallback_count: AtomicU64,
 }
 
 impl ModelEngine {
@@ -244,6 +307,11 @@ impl ModelEngine {
             traffic: Arc::new(Recorder::new()),
             device_kv_enabled: AtomicBool::new(true),
             device_kv_ok: AtomicBool::new(true),
+            span_enabled: AtomicBool::new(true),
+            span_ok: AtomicBool::new(true),
+            span_bucket_cap: AtomicUsize::new(0),
+            span_execs: AtomicU64::new(0),
+            span_fallback_count: AtomicU64::new(0),
         })
     }
 
@@ -271,6 +339,78 @@ impl ModelEngine {
     /// the health bit reflects the wrapper's capability, not intent.
     pub fn mark_device_kv_unhealthy(&self) {
         self.device_kv_ok.store(false, Ordering::Relaxed);
+    }
+
+    /// Enable/disable batched span execution.  Disabling forces every
+    /// span through the token-by-token oracle — the equivalence baseline
+    /// the integration tests and benches compare against.
+    pub fn set_span_exec(&self, on: bool) {
+        self.span_enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether batched span execution is both enabled and healthy.
+    pub fn span_exec_active(&self) -> bool {
+        self.span_enabled.load(Ordering::Relaxed) && self.span_ok.load(Ordering::Relaxed)
+    }
+
+    /// Mark the batched span path unhealthy (sticky, like the device-KV
+    /// bit): after one span-artifact failure every later span goes
+    /// token-by-token directly instead of failing the same way per chunk.
+    /// `set_span_exec(true)` does NOT clear this — health reflects the
+    /// runtime's capability, not intent.
+    pub fn mark_span_exec_unhealthy(&self) {
+        self.span_ok.store(false, Ordering::Relaxed);
+    }
+
+    /// Cap the largest span tile serving may use
+    /// (`ServingConfig::span_bucket_tokens`; 0 = largest compiled).
+    pub fn set_span_bucket_cap(&self, cap: usize) {
+        self.span_bucket_cap.store(cap, Ordering::Relaxed);
+    }
+
+    /// Cumulative span-artifact executions (one per tile).
+    pub fn span_executions(&self) -> u64 {
+        self.span_execs.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative spans served by the token-by-token fallback.
+    pub fn span_fallbacks(&self) -> u64 {
+        self.span_fallback_count.load(Ordering::Relaxed)
+    }
+
+    /// Compiled span buckets (tokens per execution) usable for `path`,
+    /// ascending, after the serving-side cap.  Empty when the bundle has
+    /// no span artifacts (pre-span AOT builds keep working).
+    pub fn span_buckets_for(&self, path: StepPath) -> Vec<usize> {
+        if path == StepPath::PrecomputeGather {
+            // No span family for the in-graph-gather ablation.
+            return Vec::new();
+        }
+        let mut v: Vec<usize> = self
+            .entry
+            .span_buckets(path != StepPath::Baseline)
+            .iter()
+            .filter_map(|a| a.span_tokens)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        let cap = self.span_bucket_cap.load(Ordering::Relaxed);
+        if cap > 0 && !v.is_empty() {
+            let capped: Vec<usize> = v.iter().copied().filter(|t| *t <= cap).collect();
+            if !capped.is_empty() {
+                return capped;
+            }
+            // Cap below the smallest compiled bucket: the smallest tile
+            // still beats one execution per token.
+            v.truncate(1);
+        }
+        v
+    }
+
+    /// Largest span tile serving would use for `path` (0 = none compiled)
+    /// — the granularity the scheduler aligns continuation chunks to.
+    pub fn max_span_bucket(&self, path: StepPath) -> usize {
+        self.span_buckets_for(path).last().copied().unwrap_or(0)
     }
 
     /// The runtime's host↔device transfer counters.
@@ -671,21 +811,25 @@ impl ModelEngine {
 
     /// Advance ONE sequence through `tokens` starting at absolute position
     /// `start_pos` — the chunked-prefill continuation path (and the
-    /// post-preemption replay of over-bucket prompts).
+    /// post-preemption replay of over-bucket prompts, prefix-cache suffix
+    /// fills, and chat turn deltas).
     ///
     /// `caches` holds the sequence's history in batch row 0, padded to the
     /// B=1 decode bucket.  The first layer of the WHOLE span is served from
     /// the precompute table in one batched row-gather (the paper's read
-    /// pattern: `len·2(d+e)` contiguous values); attention then advances
-    /// token by token through the compiled decode artifact.  On the
-    /// device-resident path ([`ModelEngine::device_kv_active`]) the whole
-    /// span chains through ONE [`DeviceCacheSession`]: one cache-pair
-    /// upload, logits-only readback per token, and a single sync at span
-    /// end that slices out the span's fresh K/V rows (the host scatter
-    /// loop is gone).  The legacy host path — one full cache upload and
-    /// readback per token — remains as the fallback and equivalence
-    /// oracle.  Either way `caches` holds the advanced history on return,
-    /// and span tokens are recorded as prefill traffic.
+    /// pattern: `len·2(d+e)` contiguous values).  Layers 2..L then advance
+    /// through the **batched span artifact** when one is compiled
+    /// ([`ModelEngine::span_exec_active`]): the span tiles into
+    /// `ceil(S/T)` bucketed executions — ragged tails padded to the
+    /// bucket and masked — each emitting the tile's logits plus its fresh
+    /// K/V rows.  On the device-resident path the tiles buffer-chain
+    /// through ONE [`DeviceCacheSession`] (a single cache-pair upload per
+    /// span, per-execution readback of logits + fresh rows only, no
+    /// span-end pair sync at all).  The token-by-token decode loop is
+    /// kept verbatim below as the fallback and equivalence oracle, with a
+    /// sticky health switch mirroring the device-KV one.  Either way
+    /// `caches` holds the advanced history on return, and span tokens are
+    /// recorded as prefill traffic.
     pub fn decode_span(
         &self,
         path: StepPath,
@@ -705,12 +849,45 @@ impl ModelEngine {
             )));
         }
         let cfg = self.entry.config.clone();
+        if path != StepPath::Baseline && !cfg.rope {
+            return Err(Error::Engine(
+                "precompute path requires RoPE (paper §2 — abs-PE models \
+                 cannot precompute the first layer)"
+                    .into(),
+            ));
+        }
         let rows = if path == StepPath::Precompute {
             Some(self.table.gather_vec(tokens)?)
         } else {
             None
         };
         self.traffic.record_prefill(&cfg, path, n as u64);
+        if self.span_exec_active() {
+            let buckets = self.span_buckets_for(path);
+            // A plan can fail only when the span ends too close to the
+            // cache capacity for any compiled bucket (or none exist) —
+            // a capability gap, not a health event.
+            if let Some(tiles) = plan_span_tiles(&buckets, n, start_pos, caches.s) {
+                match self.decode_span_batched(
+                    path,
+                    tokens,
+                    start_pos,
+                    caches,
+                    rows.as_deref(),
+                    &tiles,
+                ) {
+                    Ok(out) => return Ok(out),
+                    Err(e) => {
+                        self.mark_span_exec_unhealthy();
+                        eprintln!(
+                            "[firstlayer] batched span execution failed ({e}); \
+                             token-by-token path from here on (sticky)"
+                        );
+                    }
+                }
+            }
+        }
+        self.span_fallback_count.fetch_add(1, Ordering::Relaxed);
         if self.device_kv_active() {
             // Device writes never touch `caches` until the final sync, so
             // a mid-span failure leaves the host state pristine and the
@@ -727,6 +904,298 @@ impl ModelEngine {
             }
         }
         self.decode_span_host(path, tokens, start_pos, caches, rows.as_deref())
+    }
+
+    fn span_artifact_name(&self, path: StepPath, bucket: usize) -> String {
+        match path {
+            StepPath::Baseline => format!("span_baseline_t{bucket}"),
+            _ => format!("span_precomp_t{bucket}"),
+        }
+    }
+
+    /// Data inputs for one span tile: the tile's tokens (baseline) or
+    /// pre-gathered table rows (precompute) padded out to the bucket,
+    /// then the `[1]`-shaped absolute start position.  The cache pair and
+    /// weights follow in the artifact's parameter order.
+    fn span_data_bufs(
+        &self,
+        path: StepPath,
+        tokens: &[u32],
+        bucket: usize,
+        start: usize,
+        rows: Option<&[f32]>,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let n = tokens.len();
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::new();
+        match path {
+            StepPath::Baseline => {
+                let mut toks: Vec<i32> = tokens.iter().map(|t| *t as i32).collect();
+                toks.resize(bucket, 0);
+                bufs.push(self.rt.upload_i32(&toks, &[bucket])?);
+            }
+            _ => {
+                let w = self.table.row_width();
+                let r = rows.ok_or_else(|| {
+                    Error::Engine("span tile: missing pregathered rows".into())
+                })?;
+                if r.len() != n * w {
+                    return Err(Error::Engine(format!(
+                        "span tile: rows len {} != {}",
+                        r.len(),
+                        n * w
+                    )));
+                }
+                let mut padded = vec![0f32; bucket * w];
+                padded[..n * w].copy_from_slice(r);
+                bufs.push(self.rt.upload_f32(&padded, &[bucket, w])?);
+            }
+        }
+        bufs.push(self.rt.upload_i32(&[start as i32], &[1])?);
+        Ok(bufs)
+    }
+
+    /// Serve a span through the compiled span artifact: `tiles` bucketed
+    /// executions instead of one decode dispatch per token.  `caches` is
+    /// written only on success (the final fresh-row scatter), so a
+    /// mid-span failure leaves the host state pristine for the
+    /// token-by-token fallback to re-run the whole span.
+    fn decode_span_batched(
+        &self,
+        path: StepPath,
+        tokens: &[u32],
+        start_pos: usize,
+        caches: &mut CacheBatch,
+        rows: Option<&[f32]>,
+        tiles: &[(usize, usize)],
+    ) -> Result<SpanOut> {
+        let n = tokens.len();
+        let device = self.device_kv_active();
+        // The span artifacts are compiled against a B=1 cache; callers
+        // holding a wider decode bucket get a local B=1 view of batch row
+        // 0.  Host-mode tiles additionally write the full updated pair
+        // back between executions, so they must never run on the caller's
+        // mirror directly (failure safety).
+        let mut local: Option<CacheBatch> = None;
+        if caches.b != 1 || !device {
+            let mut c1 = CacheBatch::zeros(caches.l, 1, caches.s, caches.kh, caches.hd);
+            let srow = caches.s * caches.kh * caches.hd;
+            for l in 0..caches.l {
+                let src = caches.offset(l, 0, 0);
+                let dst = c1.offset(l, 0, 0);
+                c1.k[dst..dst + srow].copy_from_slice(&caches.k[src..src + srow]);
+                c1.v[dst..dst + srow].copy_from_slice(&caches.v[src..src + srow]);
+            }
+            local = Some(c1);
+        }
+        let out = if device {
+            let work: &CacheBatch = local.as_ref().unwrap_or(caches);
+            self.span_tiles_device(path, tokens, start_pos, work, rows, tiles)?
+        } else {
+            let work = local.as_mut().expect("host mode always copies");
+            self.span_tiles_host(path, tokens, start_pos, work, rows, tiles)?
+        };
+        // Refresh ONLY the span's rows in the caller's mirror — the same
+        // scatter every other span path performs; padding-tile garbage
+        // past the span end never leaves the device/local copy.
+        let row = caches.kh * caches.hd;
+        for i in 0..n {
+            for l in 0..caches.l {
+                let o = caches.offset(l, 0, start_pos + i);
+                let src = (i * caches.l + l) * row;
+                caches.k[o..o + row].copy_from_slice(&out.new_k[src..src + row]);
+                caches.v[o..o + row].copy_from_slice(&out.new_v[src..src + row]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Device-resident span tiles: ONE cache-pair upload for the whole
+    /// span, each tile buffer-chained through the session, per-execution
+    /// readback of the tile's fresh rows (and the last tile's logits).
+    /// The fresh-row outputs make the span-end full-pair sync of the
+    /// token-by-token device path unnecessary.
+    fn span_tiles_device(
+        &self,
+        path: StepPath,
+        tokens: &[u32],
+        start_pos: usize,
+        caches: &CacheBatch,
+        rows: Option<&[f32]>,
+        tiles: &[(usize, usize)],
+    ) -> Result<SpanOut> {
+        let cfg = &self.entry.config;
+        let w = self.table.row_width();
+        let row = caches.kh * caches.hd;
+        let lrow = caches.l * row;
+        let n = tokens.len();
+        let mut sess = self.begin_cache_session(caches)?;
+        let mut new_k = vec![0f32; n * lrow];
+        let mut new_v = vec![0f32; n * lrow];
+        let mut logits = Vec::new();
+        let mut exec_tokens = Vec::with_capacity(tiles.len());
+        let mut done = 0usize;
+        for (ti, &(bucket, take)) in tiles.iter().enumerate() {
+            let last = ti + 1 == tiles.len();
+            let name = self.span_artifact_name(path, bucket);
+            let loaded = self.load_artifact(&name)?;
+            let tile_rows = rows.map(|r| &r[done * w..(done + take) * w]);
+            let data = self.span_data_bufs(
+                path,
+                &tokens[done..done + take],
+                bucket,
+                start_pos + done,
+                tile_rows,
+            )?;
+            let mut args: Vec<&xla::PjRtBuffer> = data.iter().collect();
+            let (kb, vb) = sess.cache_args();
+            args.push(kb);
+            args.push(vb);
+            for wb in &loaded.weight_bufs {
+                args.push(wb);
+            }
+            let t_exec = std::time::Instant::now();
+            let mut out = loaded.exe.execute_buffers(&args)?;
+            // Chaining needs one buffer per output leaf — exactly the
+            // [logits, k, v, new_k, new_v] quintuple.
+            if out.len() != 5 || loaded.exe.spec.outputs.len() != 5 {
+                return Err(Error::Engine(format!(
+                    "{name}: {} output buffers for {} declared outputs — span \
+                     chaining needs untupled [logits, k, v, new_k, new_v]",
+                    out.len(),
+                    loaded.exe.spec.outputs.len()
+                )));
+            }
+            let vr_buf = out.pop().expect("five outputs");
+            let kr_buf = out.pop().expect("five outputs");
+            let v_buf = out.pop().expect("five outputs");
+            let k_buf = out.pop().expect("five outputs");
+            let logits_buf = out.pop().expect("five outputs");
+            // Selective readback: the tile's fresh rows always (the paged
+            // store needs them), logits only on the last tile (interior
+            // logits are never consumed).
+            let kr = self.read_span_rows(&loaded.exe, &kr_buf, 3, take, lrow)?;
+            let vr = self.read_span_rows(&loaded.exe, &vr_buf, 4, take, lrow)?;
+            new_k[done * lrow..(done + take) * lrow].copy_from_slice(&kr);
+            new_v[done * lrow..(done + take) * lrow].copy_from_slice(&vr);
+            if last {
+                let la = loaded.exe.read_output(&logits_buf, 0)?;
+                let la = la.as_f32()?;
+                logits = la[(take - 1) * cfg.vocab_size..take * cfg.vocab_size].to_vec();
+            }
+            sess.advance(k_buf, v_buf);
+            self.span_execs.fetch_add(1, Ordering::Relaxed);
+            exec_tokens.push(take);
+            done += take;
+            if trace_enabled() {
+                eprintln!(
+                    "[trace] span {} tile T={bucket} take={take} (device): {:?}",
+                    path.label(),
+                    t_exec.elapsed()
+                );
+            }
+        }
+        Ok(SpanOut {
+            logits,
+            new_k,
+            new_v,
+            executions: tiles.len(),
+            exec_tokens,
+            batched: true,
+        })
+    }
+
+    /// Read a tile's `new_k`/`new_v` output (`[T, L, KH, hd]`, token-major
+    /// — exactly the [`SpanOut`] row layout) and slice the valid prefix.
+    fn read_span_rows(
+        &self,
+        exe: &Executable,
+        buf: &xla::PjRtBuffer,
+        idx: usize,
+        take: usize,
+        lrow: usize,
+    ) -> Result<Vec<f32>> {
+        let t = exe.read_output(buf, idx)?;
+        let t = t.as_f32()?;
+        if t.len() < take * lrow {
+            return Err(Error::Engine(format!(
+                "span rows output {idx}: {} elems < {}",
+                t.len(),
+                take * lrow
+            )));
+        }
+        Ok(t[..take * lrow].to_vec())
+    }
+
+    /// Host span tiles: the fallback when buffer chaining is unavailable
+    /// — each tile uploads the full pair and reads the updated pair back,
+    /// but the execution count stays `ceil(S/T)` instead of `S`.
+    fn span_tiles_host(
+        &self,
+        path: StepPath,
+        tokens: &[u32],
+        start_pos: usize,
+        work: &mut CacheBatch,
+        rows: Option<&[f32]>,
+        tiles: &[(usize, usize)],
+    ) -> Result<SpanOut> {
+        let cfg = &self.entry.config;
+        let w = self.table.row_width();
+        let row = work.kh * work.hd;
+        let lrow = work.l * row;
+        let n = tokens.len();
+        let pair_bytes = (work.k.len() + work.v.len()) as u64 * 4;
+        let mut new_k = vec![0f32; n * lrow];
+        let mut new_v = vec![0f32; n * lrow];
+        let mut logits = Vec::new();
+        let mut exec_tokens = Vec::with_capacity(tiles.len());
+        let mut done = 0usize;
+        for (ti, &(bucket, take)) in tiles.iter().enumerate() {
+            let last = ti + 1 == tiles.len();
+            let name = self.span_artifact_name(path, bucket);
+            let loaded = self.load_artifact(&name)?;
+            let tile_rows = rows.map(|r| &r[done * w..(done + take) * w]);
+            let mut data = self.span_data_bufs(
+                path,
+                &tokens[done..done + take],
+                bucket,
+                start_pos + done,
+                tile_rows,
+            )?;
+            data.push(self.rt.upload_f32(&work.k, &work.dims().to_vec())?);
+            data.push(self.rt.upload_f32(&work.v, &work.dims().to_vec())?);
+            self.rt.transfers().record_cache_upload(pair_bytes);
+            let mut args: Vec<&xla::PjRtBuffer> = data.iter().collect();
+            for wb in &loaded.weight_bufs {
+                args.push(wb);
+            }
+            let out = loaded.exe.execute_host(&args)?;
+            // The full updated pair comes back; the next tile attends the
+            // span rows this one wrote.
+            work.k.copy_from_slice(out[1].as_f32()?);
+            work.v.copy_from_slice(out[2].as_f32()?);
+            self.rt.transfers().record_cache_sync(pair_bytes);
+            let kr = out[3].as_f32()?;
+            let vr = out[4].as_f32()?;
+            new_k[done * lrow..(done + take) * lrow]
+                .copy_from_slice(&kr[..take * lrow]);
+            new_v[done * lrow..(done + take) * lrow]
+                .copy_from_slice(&vr[..take * lrow]);
+            if last {
+                let la = out[0].as_f32()?;
+                logits = la[(take - 1) * cfg.vocab_size..take * cfg.vocab_size].to_vec();
+            }
+            self.span_execs.fetch_add(1, Ordering::Relaxed);
+            exec_tokens.push(take);
+            done += take;
+        }
+        Ok(SpanOut {
+            logits,
+            new_k,
+            new_v,
+            executions: tiles.len(),
+            exec_tokens,
+            batched: true,
+        })
     }
 
     /// Device-resident span execution: one session, `n` chained steps,
@@ -777,6 +1246,9 @@ impl ModelEngine {
             logits,
             new_k,
             new_v,
+            executions: n,
+            exec_tokens: vec![1; n],
+            batched: false,
         })
     }
 
@@ -818,6 +1290,9 @@ impl ModelEngine {
             logits,
             new_k,
             new_v,
+            executions: n,
+            exec_tokens: vec![1; n],
+            batched: false,
         })
     }
 
@@ -949,5 +1424,58 @@ impl ModelEngine {
             &rows,
             vocab as u32,
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::plan_span_tiles;
+
+    #[test]
+    fn span_tiling_covers_exactly_with_minimal_executions() {
+        let buckets = [8usize, 32];
+        // 64-token span, plenty of capacity: ceil(64/32) = 2 executions.
+        let tiles = plan_span_tiles(&buckets, 64, 0, 128).unwrap();
+        assert_eq!(tiles, vec![(32, 32), (32, 32)]);
+        // Ragged: 40 = 32 + 8 (the tail picks the pad-minimal bucket).
+        let tiles = plan_span_tiles(&buckets, 40, 10, 128).unwrap();
+        assert_eq!(tiles, vec![(32, 32), (8, 8)]);
+        // Shorter than every bucket: one padded execution.
+        let tiles = plan_span_tiles(&buckets, 3, 5, 128).unwrap();
+        assert_eq!(tiles, vec![(8, 3)]);
+        // Mid-size: smallest covering bucket, not the largest.
+        let tiles = plan_span_tiles(&buckets, 7, 0, 128).unwrap();
+        assert_eq!(tiles, vec![(8, 7)]);
+        for (n, start) in [(64usize, 0usize), (40, 10), (3, 5), (33, 60)] {
+            let tiles = plan_span_tiles(&buckets, n, start, 128).unwrap();
+            let total: usize = tiles.iter().map(|(_, t)| t).sum();
+            assert_eq!(total, n);
+            assert!(tiles.len() <= n.div_ceil(8));
+            // Every tile's padded write stays inside the cache.
+            let mut pos = start;
+            for (b, t) in tiles {
+                assert!(pos + b <= 128);
+                pos += t;
+            }
+        }
+    }
+
+    #[test]
+    fn span_tiling_respects_cache_capacity() {
+        let buckets = [8usize, 32];
+        // Span ending at capacity: the tail tile must shrink to a bucket
+        // that still fits (120 + 8 = 128 <= 128).
+        let tiles = plan_span_tiles(&buckets, 40, 88, 128).unwrap();
+        let mut pos = 88;
+        for &(b, t) in &tiles {
+            assert!(pos + b <= 128, "tile ({b},{t}) at {pos} would clamp");
+            pos += t;
+        }
+        assert_eq!(pos, 128);
+        // No bucket fits at all (125 + 8 > 128): the caller must fall
+        // back token-by-token, never risk a clamped cache write.
+        assert!(plan_span_tiles(&buckets, 3, 125, 128).is_none());
+        // No compiled buckets: nothing to plan with.
+        assert!(plan_span_tiles(&[], 4, 0, 128).is_none());
     }
 }

@@ -142,6 +142,13 @@ pub struct SchedConfig {
     /// Per-iteration token budget shared by decode (one token per
     /// sequence, claimed first) and prefill chunks; 0 = unbounded.
     pub step_token_budget: usize,
+    /// Span-artifact granularity (tokens per batched span execution;
+    /// 0 = no span artifacts / alignment off).  Continuation chunks
+    /// (`start > 0` — they execute as span-artifact tiles) that do NOT
+    /// finish the prompt are rounded down to a multiple of this, so every
+    /// interior tile is one full bucket and ragged padding only ever
+    /// happens on a prompt's final chunk.
+    pub span_bucket_tokens: usize,
 }
 
 /// The scheduler.
@@ -265,6 +272,26 @@ impl Scheduler {
             remaining
         } else {
             self.cfg.chunk_tokens.min(remaining)
+        }
+    }
+
+    /// Align a continuation chunk (`start > 0`, executed as span-artifact
+    /// tiles) to the span-bucket granularity: an interior chunk that
+    /// cannot finish the prompt is rounded DOWN to whole buckets, so the
+    /// engine's tiling never pads mid-prompt — the deferred tokens ride
+    /// the next chunk instead of a mostly-empty tile.  Final chunks and
+    /// sub-bucket takes pass through unchanged (padding the prompt's last
+    /// tile is unavoidable and correct).
+    fn align_span_take(&self, start: usize, take: usize, remaining: usize) -> usize {
+        let b = self.cfg.span_bucket_tokens;
+        if b == 0 || start == 0 || take >= remaining {
+            return take;
+        }
+        let aligned = take - take % b;
+        if aligned == 0 {
+            take
+        } else {
+            aligned
         }
     }
 
@@ -393,6 +420,7 @@ impl Scheduler {
             let (info, _) = &self.seqs[&id];
             let remaining = info.prompt.len() - info.prefilled;
             let take = self.chunk_len(remaining).min(budget);
+            let take = self.align_span_take(info.prefilled, take, remaining);
             let last = info.prefilled + take == info.prompt.len();
             // Blocks to extend the cache through this chunk (+1 slot for
             // the first generated token when the chunk completes the
@@ -441,6 +469,9 @@ impl Scheduler {
                 }
                 let remaining = info.prompt.len() - info.prefilled;
                 let take = self.chunk_len(remaining).min(budget);
+                // Prefix-cache hits admit mid-prompt: their first chunk is
+                // already a span continuation, so it aligns too.
+                let take = self.align_span_take(info.prefilled, take, remaining);
                 admit_free -= need;
                 budget -= take;
                 admitted.push(id);
@@ -573,6 +604,7 @@ mod tests {
             max_seq: 64,
             chunk_tokens: 0,
             step_token_budget: 0,
+            span_bucket_tokens: 0,
         })
     }
 
@@ -584,6 +616,7 @@ mod tests {
             max_seq: 128,
             chunk_tokens: chunk,
             step_token_budget: budget,
+            span_bucket_tokens: 0,
         })
     }
 
@@ -795,6 +828,7 @@ mod tests {
             max_seq: 64,
             chunk_tokens: 4,
             step_token_budget: 0,
+            span_bucket_tokens: 0,
         });
         // Pool of 10 four-token blocks.  A needs blocks_for(37) = 10,
         // B needs blocks_for(29) = 8: both fit alone, never together.
@@ -859,6 +893,7 @@ mod tests {
                 max_seq: 64,
                 chunk_tokens: chunk,
                 step_token_budget: budget,
+                span_bucket_tokens: 0,
             });
             let mut b = Budget::new(200);
             let mut next = 0u64;
@@ -962,6 +997,72 @@ mod tests {
         // set_prefilled is a no-op once the sequence is running.
         s.set_prefilled(1, 0);
         assert_eq!(s.info(1).unwrap().prefilled, 12);
+    }
+
+    /// Span-bucket alignment: interior continuation chunks round down to
+    /// whole span buckets (no mid-prompt ragged tiles), the final chunk
+    /// takes whatever remains, and coverage still tiles the prompt
+    /// exactly.  Fresh (`start == 0`) chunks are untouched — they run
+    /// through the batched prefill artifact, not span tiles.
+    #[test]
+    fn continuation_chunks_align_to_span_buckets() {
+        let mut s = Scheduler::new(SchedConfig {
+            max_batch: 8,
+            max_admit: 4,
+            max_prompt: 64,
+            max_seq: 128,
+            chunk_tokens: 14,
+            step_token_budget: 0,
+            span_bucket_tokens: 8,
+        });
+        let b = Budget::new(1000);
+        s.submit(1, vec![1; 40], 4, Priority::Normal).unwrap();
+        let mut seen = Vec::new();
+        while !s.info(1).unwrap().prefill_done() {
+            let p = s.plan(&b);
+            assert_eq!(p.prefill.len(), 1);
+            let c = p.prefill[0];
+            seen.push((c.start, c.len, c.last));
+            s.on_chunk(1, c.len);
+            if c.last {
+                s.on_token(1, false);
+            }
+        }
+        // First chunk (start == 0, prefill artifact): full 14.  Interior
+        // continuations: 14 -> 8 (one whole bucket).  The final chunk
+        // takes its whole remainder (10 <= chunk), unaligned — ragged
+        // padding is allowed there only.
+        assert_eq!(
+            seen,
+            vec![(0, 14, false), (14, 8, false), (22, 8, false), (30, 10, true)]
+        );
+        // A cached-prefix admission (start > 0 from the first chunk)
+        // aligns the same way.
+        s.submit(2, vec![2; 30], 4, Priority::Normal).unwrap();
+        s.set_prefilled(2, 6);
+        let p = s.plan(&b);
+        assert_eq!(
+            p.prefill[0],
+            PrefillChunk { id: 2, start: 6, len: 8, last: false }
+        );
+        // Alignment never zeroes a chunk: a sub-bucket take passes through.
+        let mut s = Scheduler::new(SchedConfig {
+            max_batch: 8,
+            max_admit: 4,
+            max_prompt: 64,
+            max_seq: 128,
+            chunk_tokens: 4,
+            step_token_budget: 0,
+            span_bucket_tokens: 8,
+        });
+        s.submit(1, vec![1; 12], 4, Priority::Normal).unwrap();
+        let p = s.plan(&b);
+        s.on_chunk(1, p.prefill[0].len);
+        let p2 = s.plan(&b);
+        assert_eq!(
+            p2.prefill[0],
+            PrefillChunk { id: 1, start: 4, len: 4, last: false }
+        );
     }
 
     /// `forget` as the cancel primitive: a mid-prefill running sequence

@@ -494,6 +494,21 @@ fn handle_conn(
                     ("kv_d2h_bytes", n(t.cache_d2h_bytes as f64)),
                     ("kv_cache_uploads", n(t.cache_uploads as f64)),
                     ("kv_cache_syncs", n(t.cache_syncs as f64)),
+                    // Batched span execution: device executions per
+                    // continuation span vs token-by-token fallbacks,
+                    // plus the tokens-per-execution median.
+                    (
+                        "span_executions",
+                        n(metrics.span_executions.load(Relaxed) as f64),
+                    ),
+                    (
+                        "span_fallbacks",
+                        n(metrics.span_fallbacks.load(Relaxed) as f64),
+                    ),
+                    (
+                        "span_exec_tokens_p50",
+                        n(metrics.span_exec_tokens.quantile(0.50) as f64),
+                    ),
                     // v2: conversation + cancellation counters.
                     (
                         "requests_cancelled",

@@ -230,6 +230,49 @@ pub fn tenant_workload(
     out
 }
 
+/// Speculative fan-out workload (S12d): `n_groups` base prompts, each
+/// fanned out as `fanout` tagged variants — the shared prompt plus one
+/// variant-specific seed token, tagged `s{group}.{variant}` so a driver
+/// can demultiplex and **cancel the losers when the first variant
+/// finishes** (first-done-wins, the v2 `cancel` shape from the ROADMAP).
+/// Every variant is span-heavy by construction: the shared prompt hits
+/// the prefix cache after the first variant prefills, so siblings admit
+/// mid-prompt and execute as span-artifact suffix fills.  Arrivals are a
+/// deterministic seed-keyed shuffle so groups interleave.
+pub fn speculative_workload(
+    n_groups: usize,
+    fanout: usize,
+    prompt_tokens: usize,
+    max_new: usize,
+    vocab: u32,
+    seed: u64,
+) -> Vec<crate::coordinator::Request> {
+    use crate::coordinator::Request;
+    use crate::scheduler::Priority;
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let tok = |rng: &mut Rng| rng.below(vocab.max(1) as u64) as u32;
+    let mut out = Vec::with_capacity(n_groups * fanout);
+    for g in 0..n_groups {
+        let base: Vec<u32> = (0..prompt_tokens.max(1)).map(|_| tok(&mut rng)).collect();
+        for v in 0..fanout.max(1) {
+            let mut p = base.clone();
+            p.push(tok(&mut rng)); // variant divergence point
+            out.push(
+                Request::from_tokens(p, max_new)
+                    .with_priority(Priority::Interactive)
+                    .with_tag(format!("s{g}.{v}")),
+            );
+        }
+    }
+    // Fisher-Yates with the same deterministic stream.
+    for i in (1..out.len()).rev() {
+        let j = rng.range(0, i + 1);
+        out.swap(i, j);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,6 +336,39 @@ mod tests {
         let w2 = mixed_workload(10, 8, 3, 64, 16, 512, 42);
         assert_eq!(w.len(), w2.len());
         assert!(w.iter().zip(&w2).all(|(a, b)| a.prompt == b.prompt));
+    }
+
+    #[test]
+    fn speculative_workload_fans_out_tagged_variants() {
+        use crate::scheduler::Priority;
+        let w = speculative_workload(3, 4, 20, 16, 512, 11);
+        assert_eq!(w.len(), 12);
+        for g in 0..3 {
+            let variants: Vec<_> = w
+                .iter()
+                .filter(|r| {
+                    r.tag
+                        .as_deref()
+                        .is_some_and(|t| t.starts_with(&format!("s{g}.")))
+                })
+                .collect();
+            assert_eq!(variants.len(), 4, "group {g} fanout");
+            // All variants of a group share the 20-token base prompt and
+            // differ only in the divergence token.
+            let base = variants[0].prompt[..20].to_vec();
+            for r in &variants {
+                assert_eq!(r.prompt.len(), 21);
+                assert_eq!(r.prompt[..20], base[..]);
+                assert_eq!(r.priority, Priority::Interactive);
+            }
+            let tags: std::collections::HashSet<_> =
+                variants.iter().map(|r| r.tag.clone().unwrap()).collect();
+            assert_eq!(tags.len(), 4, "group {g} tags must be distinct");
+        }
+        // Deterministic per seed.
+        let w2 = speculative_workload(3, 4, 20, 16, 512, 11);
+        assert!(w.iter().zip(&w2).all(|(a, b)| a.prompt == b.prompt
+            && a.tag == b.tag));
     }
 
     #[test]

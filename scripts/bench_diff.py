@@ -1,16 +1,54 @@
 #!/usr/bin/env python3
 """Diff two BENCH_engine.json files (scripts/bench_gate.sh output).
 
-Usage: bench_diff.py OLD.json NEW.json
+Usage: bench_diff.py [--gate] OLD.json NEW.json
 
 Matches results by their "bench" name and prints the relative change of
-every shared numeric field.  Purely informational (exit 0 unless the
-files are unreadable): the CI gate surfaces drift, it does not judge it
-— perf gating thresholds belong to a human reading the trajectory.
+every shared numeric field.  With ``--gate``, per-metric regression
+thresholds apply and the script exits 1 on any breach — this is what
+lets scripts/ci_gate.sh fail a run on a perf regression instead of only
+narrating drift.
+
+Threshold model (higher-is-worse metrics; decreases never fail):
+
+* timing fields (``*_us``, ``*_ms``) — noisy on shared CI hosts, so the
+  allowed relative increase is generous (default 50%);
+* deterministic schedule counters (uploads / syncs / execs / executions
+  / transfers / calls / steps per span or per run) — these count device
+  executions and cache movements, which the engine schedules exactly;
+  ANY increase is a real regression (1% tolerance for float formatting);
+* byte counters (``*_bytes*``) — deterministic too, same tight bound.
+
+Fields matching none of the patterns are informational only.  Benches
+that appear or disappear never gate (sections come and go with
+artifacts present/absent).
 """
 
+import fnmatch
 import json
 import sys
+
+# (glob over field name, max allowed relative increase).  First match
+# wins; order matters.  Counters before the generic byte/timing globs.
+THRESHOLDS = [
+    ("*uploads*", 0.01),
+    ("*syncs*", 0.01),
+    ("*execs*", 0.01),
+    ("*executions*", 0.01),
+    ("*transfers*", 0.01),
+    ("*calls*", 0.01),
+    ("*steps*", 0.01),
+    ("*_bytes*", 0.01),
+    ("*_us", 0.50),
+    ("*_ms", 0.50),
+]
+
+
+def threshold_for(field):
+    for pat, t in THRESHOLDS:
+        if fnmatch.fnmatch(field, pat):
+            return t
+    return None
 
 
 def index(path):
@@ -25,14 +63,17 @@ def index(path):
 
 
 def main():
-    if len(sys.argv) != 3:
+    args = [a for a in sys.argv[1:] if a != "--gate"]
+    gate = "--gate" in sys.argv[1:]
+    if len(args) != 2:
         print(__doc__.strip())
         return 2
-    old, new = index(sys.argv[1]), index(sys.argv[2])
+    old, new = index(args[0]), index(args[1])
     names = sorted(set(old) | set(new))
     if not names:
         print("bench-diff: no results on either side")
         return 0
+    breaches = []
     for name in names:
         if name not in old:
             print(f"  {name}: NEW (no previous run)")
@@ -53,10 +94,24 @@ def main():
             ov, nv = float(o[k]), float(n[k])
             if ov == 0.0:
                 change = "0->%+g" % nv if nv else "0"
+                rel = float("inf") if nv > 0 else 0.0
             else:
-                change = "%+.1f%%" % (100.0 * (nv - ov) / ov)
-            deltas.append(f"{k} {change}")
+                rel = (nv - ov) / ov
+                change = "%+.1f%%" % (100.0 * rel)
+            t = threshold_for(k)
+            mark = ""
+            if t is not None and rel > t:
+                mark = " [REGRESSION]"
+                breaches.append((name, k, change, t))
+            deltas.append(f"{k} {change}{mark}")
         print(f"  {name}: " + ("; ".join(deltas) if deltas else "no shared numeric fields"))
+    if breaches:
+        print(f"bench-diff: {len(breaches)} threshold breach(es):")
+        for name, k, change, t in breaches:
+            print(f"  {name}.{k}: {change} (allowed +{t * 100:.0f}%)")
+        if gate:
+            return 1
+        print("bench-diff: (informational run — pass --gate to fail on these)")
     return 0
 
 

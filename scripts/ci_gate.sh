@@ -8,8 +8,12 @@
 #   4. lint gate                         (scripts/lint_gate.sh)
 #   5. bench gate                        (scripts/bench_gate.sh →
 #      BENCH_engine.json at the repo root) — and, when a previous
-#      BENCH_engine.json exists, a per-bench numeric diff so run-over-run
-#      drift is visible in the CI log.
+#      BENCH_engine.json exists, a per-bench numeric diff
+#      (scripts/bench_diff.py --gate) that FAILS the run on a
+#      per-metric threshold breach: deterministic schedule counters
+#      (executions, uploads, syncs, bytes) tolerate no increase, timing
+#      fields get a noise allowance.  Delete BENCH_engine.json to
+#      re-baseline after an intentional perf change.
 #
 # Usage: scripts/ci_gate.sh   (from anywhere inside the repo)
 set -euo pipefail
@@ -36,11 +40,18 @@ fi
 scripts/bench_gate.sh
 
 if [ -n "$prev" ]; then
-  echo "[ci-gate] bench diff vs previous BENCH_engine.json"
+  echo "[ci-gate] bench diff vs previous BENCH_engine.json (gating)"
   if command -v python3 >/dev/null 2>&1; then
-    python3 scripts/bench_diff.py "$prev" BENCH_engine.json || true
+    if ! python3 scripts/bench_diff.py --gate "$prev" BENCH_engine.json; then
+      echo "[ci-gate] FAIL: bench threshold regression (see breaches above)"
+      # Keep the PRE-regression baseline: otherwise a re-run would diff
+      # against the regressed numbers and silently ratchet them in.
+      cp "$prev" BENCH_engine.json
+      rm -f "$prev"
+      exit 1
+    fi
   else
-    echo "[ci-gate] python3 unavailable; raw diff:"
+    echo "[ci-gate] python3 unavailable; raw diff (not gated):"
     diff "$prev" BENCH_engine.json || true
   fi
   rm -f "$prev"
