@@ -15,6 +15,8 @@ Per runnable model this writes:
   <m>/prefill_precomp_b{B}t{T}.hlo.txt
   <m>/span_baseline_t{T}.hlo.txt        batched span: T tokens, one execution
   <m>/span_precomp_t{T}.hlo.txt         (rows for the whole span from rust)
+  <m>/span_baseline_b{B}_t{T}.hlo.txt   multi-sequence span: B lanes × T tokens
+  <m>/span_precomp_b{B}_t{T}.hlo.txt    (per-lane starts + valid lengths)
   <m>/precompute_build.hlo.txt          lets rust (re)build the table itself
   manifest.json              everything the rust side needs to load them
 """
@@ -55,6 +57,17 @@ SPAN_BUCKETS = {
     "tiny-parallel": [8, 32],
     "tiny-moe": [8, 16],
     "tiny-moe-parallel": [8, 16],
+}
+# Multi-sequence span buckets (lanes × tokens per execution): one device
+# execution advances up to B independent sequences through up to T tokens
+# each, with per-lane start positions and valid lengths (Prepacking-style
+# ragged batching).  Unoccupied lanes are inert; a group of N < B
+# same-bucket continuations pads lanes, not executions.
+SPAN_BATCHES = {
+    "tiny-serial": [(4, 8), (4, 32)],
+    "tiny-parallel": [(4, 8), (4, 32)],
+    "tiny-moe": [(2, 8), (2, 16)],
+    "tiny-moe-parallel": [(2, 8), (2, 16)],
 }
 GATHER_ABLATION_BATCH = 4
 BUILD_CHUNK = 256  # vocab rows per precompute_build invocation
@@ -258,6 +271,60 @@ class Emitter:
                 outputs, order, extra=extra,
             )
 
+    def span_batched(self, B: int, T: int, path: str):
+        """Multi-sequence span artifact: up to B sequences × T tokens per
+        execution (`span_*_b{B}_t{T}`), each lane with its own cache row,
+        start position and valid length.  Same five outputs as the B=1
+        span family, batch-extended: the cache pair chains through one
+        B-lane DeviceCacheSession, and `new_k`/`new_v` come back
+        `[B, T, L, KH, hd]` so the selective readback slices per lane.
+        """
+        cfg = self.cfg
+        L, S = cfg.n_layers, cfg.max_seq
+        KH, hd = cfg.n_kv_heads, cfg.head_dim
+        cache = [L, B, S, KH, hd]
+        outputs = [
+            _io("logits", [B, T, cfg.vocab_size]),
+            _io("kcaches", cache),
+            _io("vcaches", cache),
+            _io("new_k", [B, T, L, KH, hd]),
+            _io("new_v", [B, T, L, KH, hd]),
+        ]
+        extra = {"batch": B, "span_tokens": T, "max_seq": S}
+        if path == "baseline":
+            order = model.weight_order_baseline(cfg)
+
+            def fn(tokens, starts, lens, kc, vc, *ws):
+                w = dict(zip(order, ws))
+                return model.decode_span_batched_baseline(
+                    cfg, w, tokens, starts, lens, kc, vc
+                )
+
+            self.emit(
+                f"span_baseline_b{B}_t{T}", "span", fn,
+                [_io("tokens", [B, T], "i32"), _io("starts", [B], "i32"),
+                 _io("lens", [B], "i32"),
+                 _io("kcaches", cache), _io("vcaches", cache)],
+                outputs, order, extra=extra,
+            )
+        else:
+            order = model.weight_order_precomp(cfg)
+            W = cfg.precomp_row_width
+
+            def fn(rows, starts, lens, kc, vc, *ws):
+                w = dict(zip(order, ws))
+                return model.decode_span_batched_precomp(
+                    cfg, w, rows, starts, lens, kc, vc
+                )
+
+            self.emit(
+                f"span_precomp_b{B}_t{T}", "span", fn,
+                [_io("rows", [B, T, W]), _io("starts", [B], "i32"),
+                 _io("lens", [B], "i32"),
+                 _io("kcaches", cache), _io("vcaches", cache)],
+                outputs, order, extra=extra,
+            )
+
     def precompute_build(self):
         """Vocab-chunk table builder, runnable from rust (`firstlayer precompute`)."""
         cfg = self.cfg
@@ -298,6 +365,9 @@ def emit_model(cfg: ModelConfig, out_dir: str) -> dict:
     for T in SPAN_BUCKETS[cfg.name]:
         em.span(T, "baseline")
         em.span(T, "precomp")
+    for B, T in SPAN_BATCHES[cfg.name]:
+        em.span_batched(B, T, "baseline")
+        em.span_batched(B, T, "precomp")
     em.precompute_build()
 
     cfg_d = dataclasses.asdict(cfg)

@@ -13,5 +13,8 @@ from .attention import decode_attention  # noqa: F401
 from .ffn import swiglu as swiglu_kernel, gelu_mlp as gelu_mlp_kernel  # noqa: F401
 from .gather_rows import gather_rows as gather_rows_kernel  # noqa: F401
 from .span_attention import span_attention as span_attention_kernel  # noqa: F401
+from .span_attention import (  # noqa: F401
+    span_attention_batched as span_attention_batched_kernel,
+)
 
 INTERPRET = True  # CPU-PJRT target; see module docstring.

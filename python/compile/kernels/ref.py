@@ -142,6 +142,41 @@ def attention_span(
     return ctx.reshape(T, H, hd)
 
 
+def attention_span_batched(
+    q: jax.Array,  # [B, T, H, hd] — per-row queries at positions starts[b]+t
+    kcache: jax.Array,  # [B, S, KH, hd] — per-row caches, span rows inserted
+    vcache: jax.Array,  # [B, S, KH, hd]
+    starts: jax.Array,  # [B] int32: absolute position of each row's token 0
+    lens: jax.Array,  # [B] int32: valid span tokens per row (0 = inert row)
+) -> jax.Array:
+    """Multi-sequence causal-over-history span attention (oracle for the
+    batched ``kernels/span_attention.span_attention_batched``).  Row ``b``
+    token ``t`` attends cache slots ``s <= starts[b] + t`` iff
+    ``t < lens[b]``; tokens at ``t >= lens[b]`` (ragged-tail padding) and
+    whole rows with ``lens[b] == 0`` (unoccupied batch lanes) are fully
+    masked and their output is zeroed.  ``B == 1`` with ``lens = [T]``
+    degenerates to :func:`attention_span`.  Returns [B, T, H, hd].
+    """
+    B, T, H, hd = q.shape
+    S, KH = kcache.shape[1], kcache.shape[2]
+    g = H // KH
+    qg = q.reshape(B, T, KH, g, hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg, kcache) / jnp.sqrt(
+        jnp.asarray(hd, jnp.float32)
+    )
+    pos = starts[:, None] + jnp.arange(T)[None, :]  # [B, T]
+    causal = jnp.arange(S)[None, None, :] <= pos[:, :, None]  # [B, T, S]
+    alive = jnp.arange(T)[None, :] < lens[:, None]  # [B, T]
+    mask = causal & alive[:, :, None]
+    scores = jnp.where(mask[:, None, None, :, :], scores, -jnp.inf)
+    # Fully-masked rows (padding tokens / inert lanes) softmax to NaN;
+    # zero them like attention_prefill does.
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.nan_to_num(p)
+    ctx = jnp.einsum("bkgts,bskh->btkgh", p, vcache)
+    return ctx.reshape(B, T, H, hd)
+
+
 def attention_prefill(
     q: jax.Array,  # [B, T, H, hd]
     k: jax.Array,  # [B, T, KH, hd]

@@ -72,6 +72,105 @@ def _kernel(q_ref, k_ref, v_ref, start_ref, o_ref, *, block_q, block_k, n_heads)
     o_ref[...] = ctx.reshape(bq, H, hd).astype(o_ref.dtype)
 
 
+def _kernel_batched(
+    q_ref, k_ref, v_ref, start_ref, len_ref, o_ref, *, block_q, block_k, n_heads
+):
+    # q: [1, bq, H, hd]; k/v: [1, S, KH, hd]; start/len: [1] (this row's).
+    qi = pl.program_id(1)
+    q = q_ref[0]  # [bq, H, hd]
+    bq, H, hd = q.shape
+    S = k_ref.shape[1]
+    KH = k_ref.shape[2]
+    g = n_heads // KH
+    qg = q.reshape(bq, KH, g, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    # Span-local token index and absolute position of each query row.
+    t_idx = qi * block_q + jax.lax.iota(jnp.int32, bq)
+    q_pos = start_ref[0] + t_idx
+    # Rows past this lane's valid length (ragged tail, or the whole lane
+    # when len == 0) get every slot masked; the online-softmax guards
+    # below turn an all-masked row into exact zeros instead of NaN.
+    alive = t_idx < len_ref[0]
+
+    n_chunks = S // block_k
+
+    def body(c, carry):
+        m, l, acc = carry  # [bq, KH, g], [bq, KH, g], [bq, KH, g, hd]
+        k = pl.load(
+            k_ref, (pl.ds(0, 1), pl.ds(c * block_k, block_k), slice(None), slice(None))
+        )[0]
+        v = pl.load(
+            v_ref, (pl.ds(0, 1), pl.ds(c * block_k, block_k), slice(None), slice(None))
+        )[0]
+        s = jnp.einsum("qkgh,skh->qkgs", qg, k) * scale  # [bq, KH, g, bk]
+        k_pos = c * block_k + jax.lax.iota(jnp.int32, block_k)
+        valid = (k_pos[None, :] <= q_pos[:, None]) & alive[:, None]
+        s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_new[..., None]), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("qkgs,skh->qkgh", p, v)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq, KH, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bq, KH, g), jnp.float32)
+    acc0 = jnp.zeros((bq, KH, g, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, acc0))
+    ctx = acc / jnp.maximum(l, 1e-37)[..., None]
+    o_ref[...] = ctx.reshape(1, bq, H, hd).astype(o_ref.dtype)
+
+
+def span_attention_batched(
+    q: jax.Array,  # [B, T, H, hd] — per-lane spans, RoPE'd at starts[b]+t
+    kcache: jax.Array,  # [B, S, KH, hd] — per-lane caches, span rows inserted
+    vcache: jax.Array,  # [B, S, KH, hd]
+    starts: jax.Array,  # [B] int32: absolute position of each lane's token 0
+    lens: jax.Array,  # [B] int32: valid tokens per lane (0 = inert lane)
+    *,
+    block_q: int = 32,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Multi-sequence causal-over-history span attention: [B, T, H, hd].
+
+    One device execution advances every lane: lane ``b`` token ``t`` sits
+    at absolute position ``starts[b] + t`` and attends every cache slot up
+    to and including its own, but only while ``t < lens[b]``.  Ragged
+    tails and unoccupied lanes (``lens[b] == 0``) are fully masked and
+    produce exact zeros, so padding lanes are inert regardless of cache
+    contents.  ``B == 1`` with ``lens = [T]`` matches
+    :func:`span_attention` bit-for-bit on the shared block shapes.
+    """
+    B, T, H, hd = q.shape
+    S, KH = kcache.shape[1], kcache.shape[2]
+    bq = min(block_q, T)
+    bk = min(block_k, S)
+    Tq = (T + bq - 1) // bq * bq
+    Sk = (S + bk - 1) // bk * bk
+    qp = jnp.pad(q, ((0, 0), (0, Tq - T), (0, 0), (0, 0)))
+    # Padded KV slots sit at positions >= S > starts[b] + T - 1: always masked.
+    kp = jnp.pad(kcache, ((0, 0), (0, Sk - S), (0, 0), (0, 0)))
+    vp = jnp.pad(vcache, ((0, 0), (0, Sk - S), (0, 0), (0, 0)))
+    starts_arr = jnp.reshape(starts, (B,)).astype(jnp.int32)
+    lens_arr = jnp.reshape(lens, (B,)).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_kernel_batched, block_q=bq, block_k=bk, n_heads=H),
+        grid=(B, Tq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, H, hd), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, Sk, KH, hd), lambda b, i: (b, 0, 0, 0)),
+            pl.BlockSpec((1, Sk, KH, hd), lambda b, i: (b, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda b, i: (b,)),
+            pl.BlockSpec((1,), lambda b, i: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, H, hd), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Tq, H, hd), q.dtype),
+        interpret=interpret,
+    )(qp, kp, vp, starts_arr, lens_arr)
+    return out[:, :T]
+
+
 def span_attention(
     q: jax.Array,  # [T, H, hd] — span queries, already RoPE'd at start+t
     kcache: jax.Array,  # [S, KH, hd] — full cache, span rows inserted

@@ -484,6 +484,205 @@ def decode_span_precomp(
 
 
 # ---------------------------------------------------------------------------
+# Multi-sequence span step: T tokens of EACH of B sequences in one execution
+# ---------------------------------------------------------------------------
+#
+# The [B, T] span artifact (Prepacking, arxiv 2404.09529, applied to
+# continuation spans): B independent sequences advance through up to T
+# tokens each in ONE device execution, amortizing one weight-stream read
+# across every occupied lane.  Each lane carries its own cache row, start
+# position and valid length; lanes with ``lens[b] < T`` have their ragged
+# tail masked per row, and unoccupied lanes (``lens[b] == 0``) are fully
+# inert — their attention output is exactly zero and their (garbage)
+# logits and cache writes are discarded by the rust engine.  ``B == 1``
+# with ``lens = [T]`` reproduces decode_span_* numerics.
+
+
+def _span_attn_core_batched(
+    cfg: ModelConfig,
+    w: Weights,
+    i: int,
+    q: jax.Array,  # [B, T, d]
+    k: jax.Array,  # [B, T, e]
+    v: jax.Array,  # [B, T, e]
+    starts: jax.Array,  # [B] int32: per-lane absolute position of token 0
+    lens: jax.Array,  # [B] int32: per-lane valid span tokens
+    kcache: jax.Array,  # [B, S, KH, hd]
+    vcache: jax.Array,
+    use_pallas: bool,
+):
+    """Batched span attention tail: per-lane RoPE at starts[b]+t, one
+    contiguous cache insert per lane, masked causal-over-history
+    attention, P projection.
+
+    Returns (attn_out [B, T, d], kcache', vcache', k_rows, v_rows) with
+    k_rows/v_rows the fresh post-RoPE rows [B, T, KH, hd].
+    """
+    B, T = q.shape[0], q.shape[1]
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    qh = q.reshape(B * T, H, hd)
+    kh = k.reshape(B * T, KH, hd)
+    vh = v.reshape(B, T, KH, hd)
+    pos = starts[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]  # [B, T]
+    qh, kh = _rope_pair(cfg, qh, kh, pos.reshape(B * T), use_pallas)
+    qh = qh.reshape(B, T, H, hd)
+    kh = kh.reshape(B, T, KH, hd)
+
+    # Each lane's slots are contiguous: one dynamic_update_slice per lane.
+    def ins(c, r, s):
+        return jax.lax.dynamic_update_slice(c, r, (s, jnp.int32(0), jnp.int32(0)))
+
+    kcache = jax.vmap(ins)(kcache, kh, starts)
+    vcache = jax.vmap(ins)(vcache, vh, starts)
+    if use_pallas:
+        ctx = kernels.span_attention_batched_kernel(qh, kcache, vcache, starts, lens)
+    else:
+        ctx = ref.attention_span_batched(qh, kcache, vcache, starts, lens)
+    attn_out = ctx.reshape(B, T, cfg.d) @ w[f"l{i}.wp"]
+    return attn_out, kcache, vcache, kh, vh
+
+
+def block_span_batched(
+    cfg: ModelConfig,
+    w: Weights,
+    i: int,
+    x: jax.Array,  # [B, T, d]
+    starts: jax.Array,
+    lens: jax.Array,
+    kcache: jax.Array,
+    vcache: jax.Array,
+    use_pallas: bool,
+):
+    """Full transformer block over a lane batch of spans (baseline path)."""
+    B, T, d = x.shape
+    q, k, v = _qkv(cfg, w, i, x.reshape(B * T, d), use_pallas)
+    attn_out, kcache, vcache, kr, vr = _span_attn_core_batched(
+        cfg, w, i,
+        q.reshape(B, T, -1), k.reshape(B, T, -1), v.reshape(B, T, -1),
+        starts, lens, kcache, vcache, use_pallas,
+    )
+    if cfg.arch == "parallel":
+        ffn_out = _ffn(
+            cfg, w, i, _norm(cfg, w, f"l{i}.ln2", x).reshape(B * T, d), use_pallas
+        ).reshape(B, T, d)
+        x = x + attn_out + ffn_out
+    else:
+        h = x + attn_out
+        x = h + _ffn(
+            cfg, w, i, _norm(cfg, w, f"l{i}.ln2", h).reshape(B * T, d), use_pallas
+        ).reshape(B, T, d)
+    return x, kcache, vcache, kr, vr
+
+
+def block_span_batched_precomp(
+    cfg: ModelConfig,
+    w: Weights,
+    rows: jax.Array,  # [B, T, 2(d+e)] gathered precomputed rows
+    starts: jax.Array,
+    lens: jax.Array,
+    kcache: jax.Array,
+    vcache: jax.Array,
+    use_pallas: bool,
+):
+    """First batched-span block with precompute: every lane's table rows
+    arrive pre-gathered, so layer 0 is RoPE + attention + P only."""
+    d, e = cfg.d, cfg.e
+    B, T = rows.shape[0], rows.shape[1]
+    q = rows[..., :d]
+    k = rows[..., d : d + e]
+    v = rows[..., d + e : d + 2 * e]
+    r = rows[..., d + 2 * e :]
+    attn_out, kcache, vcache, kr, vr = _span_attn_core_batched(
+        cfg, w, 0, q, k, v, starts, lens, kcache, vcache, use_pallas
+    )
+    if cfg.arch == "parallel":
+        x = r + attn_out  # r = emb + ffn_out (precomputed skip)
+    else:
+        h = r + attn_out  # r = emb
+        x = h + _ffn(
+            cfg, w, 0, _norm(cfg, w, "l0.ln2", h).reshape(B * T, d), use_pallas
+        ).reshape(B, T, d)
+    return x, kcache, vcache, kr, vr
+
+
+def _span_outputs_batched(cfg, w, x, kout, vout, krows, vrows):
+    """Batched span epilogue: logits at every lane position plus the fresh
+    K/V rows in the lane-then-token-major [B, T, L, KH, hd] layout the
+    rust selective readback slices per lane."""
+    logits = _logits(cfg, w, x)  # [B, T, V]
+    new_k = jnp.stack(krows).transpose(1, 2, 0, 3, 4)  # [L,B,T,..] -> [B,T,L,..]
+    new_v = jnp.stack(vrows).transpose(1, 2, 0, 3, 4)
+    return logits, jnp.stack(kout), jnp.stack(vout), new_k, new_v
+
+
+def decode_span_batched_baseline(
+    cfg: ModelConfig,
+    w: Weights,
+    tokens: jax.Array,  # [B, T] int32, per-lane span tokens (padded)
+    starts: jax.Array,  # [B] int32 per-lane absolute position of token 0
+    lens: jax.Array,  # [B] int32 per-lane valid lengths (0 = inert lane)
+    kcaches: jax.Array,  # [L, B, S, KH, hd]
+    vcaches: jax.Array,
+    use_pallas: bool = True,
+):
+    """Advance B sequences through up to T tokens each in ONE execution.
+
+    Returns (logits [B, T, V], kcaches', vcaches', new_k [B, T, L, KH,
+    hd], new_v).  Occupied lanes match decode_span_baseline run per lane;
+    inert and ragged-tail positions produce discardable values without
+    touching any occupied lane's numerics.
+    """
+    B, T = tokens.shape
+    x = w["emb"][tokens]  # [B, T, d]
+    if not cfg.rope:
+        pos = starts[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+        x = x + w["abspe"][pos]
+    kout, vout, krows, vrows = [], [], [], []
+    for i in range(cfg.n_layers):
+        x, kc, vc, kr, vr = block_span_batched(
+            cfg, w, i, x, starts, lens, kcaches[i], vcaches[i], use_pallas
+        )
+        kout.append(kc)
+        vout.append(vc)
+        krows.append(kr)
+        vrows.append(vr)
+    return _span_outputs_batched(cfg, w, x, kout, vout, krows, vrows)
+
+
+def decode_span_batched_precomp(
+    cfg: ModelConfig,
+    w: Weights,
+    rows: jax.Array,  # [B, T, 2(d+e)] rust-gathered precomputed rows
+    starts: jax.Array,  # [B] int32
+    lens: jax.Array,  # [B] int32
+    kcaches: jax.Array,
+    vcaches: jax.Array,
+    use_pallas: bool = True,
+):
+    """Multi-sequence span step with the precomputed first layer: one
+    table gather per lane feeds layer 0, one execution covers all lanes
+    and all layers — the weight stream is read once for the whole group."""
+    assert cfg.rope, "precompute requires RoPE (paper §2)"
+    kout, vout, krows, vrows = [], [], [], []
+    x, kc, vc, kr, vr = block_span_batched_precomp(
+        cfg, w, rows, starts, lens, kcaches[0], vcaches[0], use_pallas
+    )
+    kout.append(kc)
+    vout.append(vc)
+    krows.append(kr)
+    vrows.append(vr)
+    for i in range(1, cfg.n_layers):
+        x, kc, vc, kr, vr = block_span_batched(
+            cfg, w, i, x, starts, lens, kcaches[i], vcaches[i], use_pallas
+        )
+        kout.append(kc)
+        vout.append(vc)
+        krows.append(kr)
+        vrows.append(vr)
+    return _span_outputs_batched(cfg, w, x, kout, vout, krows, vrows)
+
+
+# ---------------------------------------------------------------------------
 # Prefill (batched prompt processing, causal)
 # ---------------------------------------------------------------------------
 

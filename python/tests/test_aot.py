@@ -106,6 +106,49 @@ def test_span_artifact_lowers_with_five_outputs(path):
         assert s in text.replace(" ", ""), f"missing output shape {s}"
 
 
+@pytest.mark.parametrize("path", ["baseline", "precomp"])
+def test_span_batched_artifact_lowers_with_five_outputs(path):
+    """The multi-sequence [B, T] span artifact lowers through the HLO-text
+    pipeline with the batch-extended output quintuple: logits [B, T, V],
+    the B-lane cache pair, and per-lane fresh rows [B, T, L, KH, hd]."""
+    cfg = configs.get("tiny-serial")
+    B, T = 4, 8
+    L, S = cfg.n_layers, cfg.max_seq
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    cache = jax.ShapeDtypeStruct((L, B, S, KH, hd), jnp.float32)
+    lane = jax.ShapeDtypeStruct((B,), jnp.int32)
+    if path == "baseline":
+        order = model.weight_order_baseline(cfg)
+        data = jax.ShapeDtypeStruct((B, T), jnp.int32)
+
+        def fn(tokens, starts, lens, kc, vc, *ws):
+            return model.decode_span_batched_baseline(
+                cfg, dict(zip(order, ws)), tokens, starts, lens, kc, vc, False
+            )
+    else:
+        order = model.weight_order_precomp(cfg)
+        data = jax.ShapeDtypeStruct((B, T, cfg.precomp_row_width), jnp.float32)
+
+        def fn(rows, starts, lens, kc, vc, *ws):
+            return model.decode_span_batched_precomp(
+                cfg, dict(zip(order, ws)), rows, starts, lens, kc, vc, False
+            )
+
+    ws = [
+        jax.ShapeDtypeStruct(params.tensor_shape(cfg, n), jnp.float32)
+        for n in order
+    ]
+    text = aot.to_hlo_text(jax.jit(fn).lower(data, lane, lane, cache, cache, *ws))
+    assert "HloModule" in text and "ENTRY" in text
+    shapes = [
+        f"f32[{B},{T},{cfg.vocab_size}]",  # logits per lane per position
+        f"f32[{L},{B},{S},{KH},{hd}]",  # chained B-lane caches (x2)
+        f"f32[{B},{T},{L},{KH},{hd}]",  # per-lane fresh rows (x2)
+    ]
+    for s in shapes:
+        assert s in text.replace(" ", ""), f"missing output shape {s}"
+
+
 needs_artifacts = pytest.mark.skipif(
     not os.path.exists(os.path.join(ART, "manifest.json")),
     reason="run `make artifacts` first",

@@ -1,0 +1,232 @@
+"""Multi-sequence [B, T] span tests (kernel + model level).
+
+The batched span artifact must be a pure re-schedule of the per-sequence
+span path: every occupied lane's logits, cache rows, and fresh K/V must
+match `decode_span_*` run lane-by-lane, regardless of what the other
+lanes (or the padding) contain.  Degenerate shapes pin the family
+together: B=1 reproduces the PR 5 span artifact, T=1 is batched decode.
+
+Plain pytest only (no hypothesis): the poison sweeps enumerate seeds.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import configs, model, params, precompute
+from compile.kernels import ref
+from compile.kernels.span_attention import span_attention_batched
+
+
+# ---------------------------------------------------------------------------
+# Kernel level: span_attention_batched vs ref.attention_span per row
+# ---------------------------------------------------------------------------
+
+
+def _rand_attn_case(seed, B=3, T=6, S=32, H=4, KH=2, hd=8):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(B, S, KH, hd)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(B, S, KH, hd)), jnp.float32)
+    starts = jnp.asarray(rng.integers(0, S - T, (B,)), jnp.int32)
+    lens = jnp.asarray(rng.integers(0, T + 1, (B,)), jnp.int32)
+    return q, kc, vc, starts, lens
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_batched_span_kernel_matches_per_row_ref(seed):
+    """Row b of the [B, T] kernel == ref.attention_span on that row's
+    slice, for t < lens[b]; rows at t >= lens[b] are exactly zero."""
+    q, kc, vc, starts, lens = _rand_attn_case(seed)
+    out = span_attention_batched(q, kc, vc, starts, lens)
+    B, T = q.shape[0], q.shape[1]
+    for b in range(B):
+        n = int(lens[b])
+        if n > 0:
+            want = ref.attention_span(q[b, :n], kc[b], vc[b], int(starts[b]))
+            assert_allclose(out[b, :n], want, rtol=1e-4, atol=1e-5)
+        # Ragged tail (and n == 0 whole-lane) outputs are exact zeros.
+        assert np.all(np.asarray(out[b, n:]) == 0.0)
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_batched_span_kernel_poison_invariance(seed):
+    """Poisoning slots beyond each row's causal frontier and the queries
+    of dead rows must not change any valid output."""
+    q, kc, vc, starts, lens = _rand_attn_case(seed)
+    clean = span_attention_batched(q, kc, vc, starts, lens)
+    B, T, S = q.shape[0], q.shape[1], kc.shape[1]
+    # Finite poison (NaN would propagate through 0·NaN in any oracle).
+    kc_p, vc_p, q_p = np.asarray(kc).copy(), np.asarray(vc).copy(), np.asarray(q).copy()
+    for b in range(B):
+        frontier = int(starts[b]) + int(lens[b])  # first never-visible slot
+        kc_p[b, frontier:] = 1e6
+        vc_p[b, frontier:] = -1e6
+        q_p[b, int(lens[b]) :] = 1e6  # dead query rows
+    poisoned = span_attention_batched(
+        jnp.asarray(q_p), jnp.asarray(kc_p), jnp.asarray(vc_p), starts, lens
+    )
+    for b in range(B):
+        n = int(lens[b])
+        assert_allclose(poisoned[b, :n], clean[b, :n], rtol=1e-5, atol=1e-6)
+        assert np.all(np.asarray(poisoned[b, n:]) == 0.0)
+
+
+def test_batched_span_kernel_matches_batched_ref():
+    q, kc, vc, starts, lens = _rand_attn_case(7)
+    out = span_attention_batched(q, kc, vc, starts, lens)
+    want = ref.attention_span_batched(q, kc, vc, starts, lens)
+    assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Model level: decode_span_batched_* vs per-lane decode_span_*
+# ---------------------------------------------------------------------------
+
+
+def _lane_histories(name, prefix_lens, seed=13):
+    """Per-lane KV histories built token-by-token from zero caches;
+    returns (cfg, w, kc [L,B,S,KH,hd], vc, rng)."""
+    cfg = configs.get(name)
+    w = params.init_weights(cfg, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    L, S = cfg.n_layers, cfg.max_seq
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    lanes_k, lanes_v = [], []
+    for p in prefix_lens:
+        kc = jnp.zeros((L, 1, S, KH, hd), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        prefix = jnp.asarray(rng.integers(0, cfg.vocab_size, (p,)), jnp.int32)
+        for t in range(p):
+            _, kc, vc = model.decode_baseline(
+                cfg, w, prefix[t : t + 1], jnp.asarray([t], jnp.int32), kc, vc, False
+            )
+        lanes_k.append(kc)
+        lanes_v.append(vc)
+    return (
+        cfg,
+        w,
+        jnp.concatenate(lanes_k, axis=1),
+        jnp.concatenate(lanes_v, axis=1),
+        rng,
+    )
+
+
+@pytest.mark.parametrize("name", ["tiny-serial", "tiny-parallel"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_decode_span_batched_matches_per_lane(name, use_pallas):
+    """Ragged lane batch == decode_span_baseline run lane by lane: logits
+    at every valid position, advanced cache rows, fresh K/V rows."""
+    prefixes, lens_l = [3, 5, 0], [4, 2, 3]  # lane 2 starts from scratch
+    T = 4
+    cfg, w, kc, vc, rng = _lane_histories(name, prefixes)
+    B = len(prefixes)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+    starts = jnp.asarray(prefixes, jnp.int32)
+    lens = jnp.asarray(lens_l, jnp.int32)
+    lg, kb, vb, nk, nv = model.decode_span_batched_baseline(
+        cfg, w, toks, starts, lens, kc, vc, use_pallas
+    )
+    for b in range(B):
+        n = lens_l[b]
+        lg1, k1, v1, nk1, nv1 = model.decode_span_baseline(
+            cfg, w, toks[b, :n], starts[b : b + 1],
+            kc[:, b : b + 1], vc[:, b : b + 1], use_pallas,
+        )
+        assert_allclose(lg[b, :n], lg1, rtol=1e-4, atol=1e-4)
+        end = prefixes[b] + n
+        assert_allclose(kb[:, b, :end], k1[:, 0, :end], rtol=1e-4, atol=1e-4)
+        assert_allclose(vb[:, b, :end], v1[:, 0, :end], rtol=1e-4, atol=1e-4)
+        assert_allclose(nk[b, :n], nk1, rtol=1e-4, atol=1e-4)
+        assert_allclose(nv[b, :n], nv1, rtol=1e-4, atol=1e-4)
+
+
+def test_decode_span_batched_inert_lane_and_poison():
+    """A lens == 0 lane and poisoned tail tokens must leave every live
+    lane bit-compatible with the unpoisoned run."""
+    prefixes, lens_l = [4, 2], [3, 0]
+    T = 3
+    cfg, w, kc, vc, rng = _lane_histories("tiny-serial", prefixes)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, T)), jnp.int32)
+    starts = jnp.asarray(prefixes, jnp.int32)
+    lens = jnp.asarray(lens_l, jnp.int32)
+    lg_a, kb_a, _, nk_a, _ = model.decode_span_batched_baseline(
+        cfg, w, toks, starts, lens, kc, vc, False
+    )
+    # Poison: different dead-lane tokens AND a poisoned dead-lane cache.
+    toks_p = np.asarray(toks).copy()
+    toks_p[1, :] = (toks_p[1, :] + 11) % cfg.vocab_size
+    kc_p = np.asarray(kc).copy()
+    kc_p[:, 1] = 1e3
+    lg_b, kb_b, _, nk_b, _ = model.decode_span_batched_baseline(
+        cfg, w, jnp.asarray(toks_p), starts, lens, jnp.asarray(kc_p), vc, False
+    )
+    assert_allclose(lg_a[0], lg_b[0], rtol=1e-6, atol=1e-6)
+    assert_allclose(nk_a[0], nk_b[0], rtol=1e-6, atol=1e-6)
+    assert_allclose(kb_a[:, 0], kb_b[:, 0], rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_decode_span_batched_degenerate_b1(use_pallas):
+    """B=1 with lens=[T] must reproduce the PR 5 span artifact."""
+    P, T = 5, 6
+    cfg, w, kc, vc, rng = _lane_histories("tiny-serial", [P])
+    span = jnp.asarray(rng.integers(0, cfg.vocab_size, (T,)), jnp.int32)
+    lg1, k1, v1, nk1, nv1 = model.decode_span_baseline(
+        cfg, w, span, jnp.asarray([P], jnp.int32), kc, vc, use_pallas
+    )
+    lgb, kb, vb, nkb, nvb = model.decode_span_batched_baseline(
+        cfg, w, span[None], jnp.asarray([P], jnp.int32),
+        jnp.asarray([T], jnp.int32), kc, vc, use_pallas,
+    )
+    assert_allclose(lgb[0], lg1, rtol=1e-5, atol=1e-5)
+    end = P + T
+    assert_allclose(kb[:, :, :end], k1[:, :, :end], rtol=1e-5, atol=1e-5)
+    assert_allclose(vb[:, :, :end], v1[:, :, :end], rtol=1e-5, atol=1e-5)
+    assert_allclose(nkb[0], nk1, rtol=1e-5, atol=1e-5)
+    assert_allclose(nvb[0], nv1, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_span_batched_t1_is_batched_decode():
+    """T=1 with all lanes live == one batched decode step."""
+    prefixes = [3, 1, 4]
+    cfg, w, kc, vc, rng = _lane_histories("tiny-serial", prefixes)
+    B = len(prefixes)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B,)), jnp.int32)
+    pos = jnp.asarray(prefixes, jnp.int32)
+    lg_d, kd, vd = model.decode_baseline(cfg, w, toks, pos, kc, vc, False)
+    lg_s, ks, vs, _, _ = model.decode_span_batched_baseline(
+        cfg, w, toks[:, None], pos, jnp.ones((B,), jnp.int32), kc, vc, False
+    )
+    assert_allclose(lg_s[:, 0], lg_d, rtol=1e-5, atol=1e-5)
+    for b, p in enumerate(prefixes):
+        assert_allclose(ks[:, b, : p + 1], kd[:, b, : p + 1], rtol=1e-5, atol=1e-5)
+        assert_allclose(vs[:, b, : p + 1], vd[:, b, : p + 1], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["tiny-serial", "tiny-moe"])
+def test_decode_span_batched_precomp_equivalence(name):
+    """Precomputed batched span == baseline batched span (the paper's
+    equivalence, lifted to the multi-sequence artifact)."""
+    prefixes, lens_l = [2, 4], [3, 2]
+    T = 3
+    cfg, w, kc, vc, rng = _lane_histories(name, prefixes)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, T)), jnp.int32)
+    starts = jnp.asarray(prefixes, jnp.int32)
+    lens = jnp.asarray(lens_l, jnp.int32)
+    lb, kb, vb, nkb, nvb = model.decode_span_batched_baseline(
+        cfg, w, toks, starts, lens, kc, vc, False
+    )
+    rows = precompute.build_rows(cfg, w, toks.reshape(-1), use_pallas=False)
+    rows = rows.reshape(2, T, -1)
+    lp, kp, vp, nkp, nvp = model.decode_span_batched_precomp(
+        cfg, w, rows, starts, lens, kc, vc, False
+    )
+    for b in range(2):
+        n = lens_l[b]
+        assert_allclose(lb[b, :n], lp[b, :n], rtol=1e-5, atol=1e-5)
+        end = prefixes[b] + n
+        assert_allclose(kb[:, b, :end], kp[:, b, :end], rtol=1e-5, atol=1e-5)
+        assert_allclose(nkb[b, :n], nkp[b, :n], rtol=1e-5, atol=1e-5)
+        assert_allclose(nvb[b, :n], nvp[b, :n], rtol=1e-5, atol=1e-5)

@@ -7,7 +7,7 @@
 //! ```
 
 use firstlayer::manifest::Manifest;
-use firstlayer::runtime::{CacheBatch, ModelEngine, Runtime, StepPath};
+use firstlayer::runtime::{CacheBatch, ModelEngine, Runtime, SpanLane, StepPath};
 use firstlayer::util::timer::{bench, emit_json, report};
 
 fn main() {
@@ -263,6 +263,105 @@ fn main() {
                 per_token_us[1] / per_token_us[0].max(1e-9),
                 per_token_us[0],
                 per_token_us[1],
+            );
+        }
+    }
+
+    // Multi-sequence span groups: B ragged continuation lanes advance in
+    // ONE `[B, T]` device execution per group tile, vs B serial
+    // per-sequence spans over the same lanes.  The greedy pad-minimal
+    // plan tiles the LONGEST lane, so the acceptance bound per group is
+    // `ceil(max_len / T_largest)` — asserted via the engine's grouped
+    // counter, not eyeballed.
+    println!("\n-- decode_span_group: [B, T] multi-sequence vs serial spans --");
+    match engine.span_batch_for(StepPath::Precompute, 2) {
+        None => println!("  (no span-batch artifacts in this bundle)"),
+        Some((batch, ts)) => {
+            let largest = *ts.last().unwrap();
+            let lens: Vec<usize> = (0..batch)
+                .map(|i| [24usize, 17, 9, 13][i % 4].min(cfg.max_seq.saturating_sub(1)).max(1))
+                .collect();
+            let toks: Vec<Vec<u32>> = lens
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| {
+                    (0..n)
+                        .map(|j| ((i * 131 + j * 7 + 2) % cfg.vocab_size) as u32)
+                        .collect()
+                })
+                .collect();
+            let max_len = *lens.iter().max().unwrap();
+            let total: usize = lens.iter().sum();
+            let (warmup, iters) = (2usize, 10usize);
+            let runs = (warmup + iters) as u64;
+            let gexecs_before = engine.span_batched_executions();
+            let sg = bench(warmup, iters, || {
+                let mut caches = CacheBatch::zeros(
+                    cfg.n_layers,
+                    batch,
+                    cfg.max_seq,
+                    cfg.n_kv_heads,
+                    cfg.head_dim(),
+                );
+                let lanes: Vec<SpanLane> = toks
+                    .iter()
+                    .map(|t| SpanLane { tokens: t, start: 0 })
+                    .collect();
+                engine
+                    .decode_span_group(StepPath::Precompute, &lanes, &mut caches)
+                    .unwrap();
+            });
+            let gexecs =
+                (engine.span_batched_executions() - gexecs_before) as f64 / runs as f64;
+            report(
+                &format!("span group B={batch} max_len={max_len}"),
+                &sg,
+                Some((total as f64 / sg.mean.as_secs_f64(), "tok/s")),
+            );
+            let bound = max_len.div_ceil(largest);
+            println!("  {gexecs:.1} executions/group (bound ceil({max_len}/{largest}) = {bound})");
+            assert!(
+                gexecs <= bound as f64 + 1e-9,
+                "span group must run in <= {bound} executions, measured {gexecs:.1}"
+            );
+            // Serial oracle: the same lanes one sequence at a time.
+            let ss = bench(warmup, iters, || {
+                for t in &toks {
+                    let mut caches = CacheBatch::zeros(
+                        cfg.n_layers,
+                        engine.decode_bucket(1, StepPath::Precompute).unwrap(),
+                        cfg.max_seq,
+                        cfg.n_kv_heads,
+                        cfg.head_dim(),
+                    );
+                    engine
+                        .decode_span(StepPath::Precompute, t, 0, &mut caches)
+                        .unwrap();
+                }
+            });
+            report(
+                &format!("span serial B={batch} max_len={max_len}"),
+                &ss,
+                Some((total as f64 / ss.mean.as_secs_f64(), "tok/s")),
+            );
+            println!(
+                "  group speedup: {:.2}x over serial per-sequence spans",
+                ss.mean.as_secs_f64() / sg.mean.as_secs_f64().max(1e-12),
+            );
+            emit_json(
+                "e2e_span_batched_multi",
+                &[
+                    ("lanes", batch as f64),
+                    ("max_len", max_len as f64),
+                    ("total_tokens", total as f64),
+                    ("execs_per_group", gexecs),
+                    ("group_mean_us", sg.mean.as_micros() as f64),
+                    ("serial_mean_us", ss.mean.as_micros() as f64),
+                    (
+                        "group_speedup",
+                        ss.mean.as_secs_f64() / sg.mean.as_secs_f64().max(1e-12),
+                    ),
+                ],
             );
         }
     }

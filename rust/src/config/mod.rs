@@ -188,6 +188,14 @@ pub struct ServingConfig {
     /// 0 = the largest compiled span bucket; see
     /// `zoo::default_span_bucket` for a per-model starting point.
     pub span_bucket_tokens: usize,
+    /// Multi-sequence span batching (`ModelEngine::decode_span_group`):
+    /// same-bucket continuation chunks from *different* sequences run as
+    /// one `[B, T]` span execution per tile instead of one serial span
+    /// per sequence.  Requires `enable_span_exec`; disabling falls back
+    /// to the per-sequence span path (the equivalence oracle).  The
+    /// engine also falls back by itself — sticky — if a batched span
+    /// execution fails.
+    pub enable_span_batch: bool,
     /// Sampling defaults.
     pub temperature: f64,
     pub top_k: usize,
@@ -214,6 +222,7 @@ impl Default for ServingConfig {
             enable_device_kv: true,
             enable_span_exec: true,
             span_bucket_tokens: 0,
+            enable_span_batch: true,
             temperature: 0.0,
             top_k: 0,
             seed: 0xF17A,

@@ -33,7 +33,9 @@ use crate::kvcache::PagedKvCache;
 use crate::manifest::Manifest;
 use crate::metrics::Metrics;
 use crate::prefixcache::PrefixCache;
-use crate::runtime::{CacheBatch, DeviceCacheSession, ModelEngine, Runtime, StepPath};
+use crate::runtime::{
+    CacheBatch, DeviceCacheSession, ModelEngine, Runtime, SpanLane, StepPath,
+};
 use crate::scheduler::{KvBudget, PrefillChunk, Priority, SchedConfig, Scheduler, State};
 use crate::tokenizer::{Tokenizer, BOS, EOS};
 use crate::util::rng::Rng;
@@ -324,10 +326,19 @@ impl Coordinator {
         // scheduler can plan against the tile granularity it will get.
         engine.set_span_exec(cfg.enable_span_exec);
         engine.set_span_bucket_cap(cfg.span_bucket_tokens);
+        engine.set_span_batch(cfg.enable_span_batch);
         let span_bucket = if cfg.enable_span_exec {
             // Both path families compile the same buckets; the initial
             // path's view is representative across live path switches.
             engine.max_span_bucket(path)
+        } else {
+            0
+        };
+        // Multi-sequence span groups: the scheduler composes same-bucket
+        // continuation chunks up to the widest compiled span batch.  0
+        // (knob off, or a pre-batch AOT bundle) keeps plans group-free.
+        let span_lanes = if cfg.enable_span_exec && cfg.enable_span_batch {
+            engine.max_span_batch(path)
         } else {
             0
         };
@@ -339,6 +350,7 @@ impl Coordinator {
             chunk_tokens: cfg.prefill_chunk_tokens,
             step_token_budget: cfg.step_token_budget,
             span_bucket_tokens: span_bucket,
+            span_group_lanes: span_lanes,
         });
         let kv = PagedKvCache::new(
             cfg.kv_blocks,
@@ -861,8 +873,6 @@ impl Coordinator {
         // the span's table rows gathered in one batched read.
         let fresh: Vec<PrefillChunk> =
             plan.prefill.iter().copied().filter(|c| c.start == 0).collect();
-        let cont: Vec<PrefillChunk> =
-            plan.prefill.iter().copied().filter(|c| c.start > 0).collect();
         if !fresh.is_empty() {
             let max_b = self
                 .engine
@@ -877,9 +887,24 @@ impl Coordinator {
                 self.run_first_chunks(group)?;
             }
         }
-        for c in &cont {
-            touched += 1;
-            self.run_continuation(c)?;
+        // Continuations: span groups first (one [B, T] device execution
+        // per tile advances every lane), then whatever the planner left
+        // ungrouped goes through the per-sequence span path.
+        let mut grouped = vec![false; plan.prefill.len()];
+        for g in &plan.span_groups {
+            let chunks: Vec<PrefillChunk> =
+                g.iter().map(|&i| plan.prefill[i]).collect();
+            for &i in g {
+                grouped[i] = true;
+            }
+            touched += chunks.len();
+            self.run_span_group(&chunks)?;
+        }
+        for (i, c) in plan.prefill.iter().enumerate() {
+            if c.start > 0 && !grouped[i] {
+                touched += 1;
+                self.run_continuation(c)?;
+            }
         }
 
         // -- decode ----------------------------------------------------------
@@ -988,6 +1013,107 @@ impl Coordinator {
         if c.last {
             self.finish_prefill(c.id, &logits)?;
         }
+        Ok(())
+    }
+
+    /// Execute a scheduler-composed span group: B same-step continuation
+    /// chunks from different sequences advance through ONE batched `[B, T]`
+    /// span execution per tile ([`ModelEngine::decode_span_group`]),
+    /// replacing B serial per-sequence spans.  Any capability gap (knob
+    /// off, no compiled batch, plan does not fit the cache) quietly runs
+    /// the lanes per-sequence; a failure AFTER the viability check marks
+    /// the grouped path unhealthy (sticky) and falls back the same way —
+    /// the engine leaves the gathered caches untouched on error, and
+    /// [`Coordinator::run_continuation`] re-gathers per lane anyway.
+    fn run_span_group(&mut self, chunks: &[PrefillChunk]) -> Result<()> {
+        let cfg = self.engine.config().clone();
+        let s = cfg.max_seq;
+        // Each lane's span slice: the chunk's window of the full prompt.
+        let spans: Vec<(Vec<u32>, usize)> = chunks
+            .iter()
+            .map(|c| {
+                let full = self.sched.info(c.id).unwrap().prompt.clone();
+                let end = (c.start + c.len).min(full.len());
+                (full[c.start..end].to_vec(), c.start)
+            })
+            .collect();
+        let lanes: Vec<SpanLane> = spans
+            .iter()
+            .map(|(t, st)| SpanLane { tokens: t, start: *st })
+            .collect();
+        if !self.engine.span_group_viable(self.path, &lanes, s) {
+            // Capability gap, not a failure: per-sequence spans serve the
+            // same chunks and the health bit stays untouched.
+            for c in chunks {
+                self.run_continuation(c)?;
+            }
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let n = chunks.len();
+        let mut caches = CacheBatch::zeros(
+            cfg.n_layers,
+            n,
+            s,
+            cfg.n_kv_heads,
+            cfg.head_dim(),
+        );
+        for (i, c) in chunks.iter().enumerate() {
+            let have = self.kv.gather_into_batch(
+                c.id,
+                s,
+                n,
+                i,
+                &mut caches.k,
+                &mut caches.v,
+            )?;
+            if have != c.start {
+                return Err(Error::KvCache(format!(
+                    "span group lane {i}: start {} != cached len {have} \
+                     for seq {}",
+                    c.start, c.id
+                )));
+            }
+        }
+        let out = match self.engine.decode_span_group(self.path, &lanes, &mut caches) {
+            Ok(out) => out,
+            Err(e) => {
+                // Viability said yes and the artifact still failed: go
+                // per-sequence from here on (sticky), starting with the
+                // lanes in hand.
+                self.engine.mark_span_batch_unhealthy();
+                eprintln!(
+                    "[firstlayer] batched span group failed ({e}); \
+                     per-sequence spans from here on (sticky)"
+                );
+                for c in chunks {
+                    self.run_continuation(c)?;
+                }
+                return Ok(());
+            }
+        };
+        use std::sync::atomic::Ordering::Relaxed;
+        self.metrics
+            .span_executions
+            .fetch_add(out.executions as u64, Relaxed);
+        self.metrics
+            .span_batched_executions
+            .fetch_add(out.executions as u64, Relaxed);
+        for occ in &out.occupancy {
+            self.metrics.span_batch_occupancy.record(*occ as u64);
+        }
+        for (i, c) in chunks.iter().enumerate() {
+            let lane = &out.lanes[i];
+            let executed = spans[i].0.len();
+            self.kv
+                .append_span(c.id, executed, &lane.new_k, &lane.new_v)?;
+            self.sched.on_chunk(c.id, executed);
+            self.metrics.prefill_chunks.fetch_add(1, Relaxed);
+            if c.last {
+                self.finish_prefill(c.id, &lane.logits)?;
+            }
+        }
+        self.metrics.chunk_step.record(t0.elapsed());
         Ok(())
     }
 

@@ -152,6 +152,37 @@ pub fn span_read_reduction(len: u64, bucket: u64) -> f64 {
     len as f64 / span_exec_count(len, bucket) as f64
 }
 
+/// Device executions a step with `n` same-bucket span continuations
+/// costs when composed into `lanes`-lane `[B, T]` span groups:
+/// `ceil(n/lanes)` — vs `n` on the per-sequence span path (one group is
+/// padded with inert lanes, never split into extra executions).
+pub fn span_group_exec_count(n: u64, lanes: u64) -> u64 {
+    n.div_ceil(lanes.max(1))
+}
+
+/// Weight-read reduction of multi-sequence span execution over per-token
+/// per-sequence execution: the single-sequence factor
+/// `len / ceil(len/bucket)` scaled by the group's lane occupancy — one
+/// `[B, T]` execution streams the weights ONCE for every occupied lane,
+/// so `occupancy` sequences amortize the same stream.  Padding lanes
+/// contribute nothing (they scale by occupancy, not by compiled lanes).
+pub fn span_batched_read_reduction(len: u64, bucket: u64, occupancy: u64) -> f64 {
+    occupancy.max(1) as f64 * span_read_reduction(len, bucket)
+}
+
+/// Whole-group weight traffic: `occupancy` sequences each advancing
+/// `len` tokens through shared `[B, T]` tiles stream the weights
+/// `ceil(len/bucket)` times TOTAL — the same bytes `span_weight_reads`
+/// charges ONE sequence, now amortized across the group.
+pub fn span_group_weight_reads(
+    cfg: &ModelConfig,
+    precompute: bool,
+    len: u64,
+    bucket: u64,
+) -> u64 {
+    span_weight_reads(cfg, precompute, len, bucket)
+}
+
 /// Upper bound on whole-model savings from optimizing one layer of `n`:
 /// the paper's "4 layers ⇒ ≤25%, 32 layers ⇒ ≤3%" remark (E7).
 pub fn max_savings_fraction(n_layers: usize) -> f64 {
@@ -410,6 +441,31 @@ mod tests {
                     <= 512 * streamed_weights(&m, pre)
             );
         }
+    }
+
+    #[test]
+    fn batched_span_accounting_scales_with_occupancy() {
+        // A step with N same-bucket continuations and B compiled lanes
+        // executes ceil(N/B) groups — the acceptance-criterion shape.
+        assert_eq!(span_group_exec_count(4, 4), 1);
+        assert_eq!(span_group_exec_count(5, 4), 2);
+        assert_eq!(span_group_exec_count(1, 4), 1); // lone sequence
+        assert_eq!(span_group_exec_count(8, 2), 4);
+        // Occupancy scales the per-sequence weight-stream reduction:
+        // 4 lanes full at the dividing bucket = 4 * bucket.
+        assert!((span_batched_read_reduction(32, 32, 4) - 128.0).abs() < 1e-9);
+        assert!((span_batched_read_reduction(32, 32, 1) - 32.0).abs() < 1e-9);
+        // Ragged span, partial group: still exactly occupancy times the
+        // single-sequence factor.
+        let single = span_read_reduction(40, 32);
+        assert!((span_batched_read_reduction(40, 32, 3) - 3.0 * single).abs() < 1e-9);
+        // Group traffic equals ONE sequence's traffic: the group's total
+        // weight bytes do not grow with occupancy.
+        let m = mistral();
+        assert_eq!(
+            span_group_weight_reads(&m, true, 64, 32),
+            span_weight_reads(&m, true, 64, 32)
+        );
     }
 
     #[test]

@@ -36,6 +36,7 @@ COMMANDS:
                   --no-device-kv (host-path caches: upload/readback per step)
                   --span-tokens N|auto (largest span tile; 0 = largest compiled)
                   --no-span-exec (token-by-token spans: one dispatch per token)
+                  --no-span-batch (serial per-sequence spans: no [B, T] groups)
   generate      one-shot generation from the CLI
                   --prompt \"text\" --max-new 32 --model tiny-serial
                   --path precompute|baseline --temperature 0 --top-k 0
@@ -139,6 +140,9 @@ fn serving_config(flags: &HashMap<String, String>) -> ServingConfig {
     }
     if flags.contains_key("no-span-exec") {
         cfg.enable_span_exec = false;
+    }
+    if flags.contains_key("no-span-batch") {
+        cfg.enable_span_batch = false;
     }
     cfg
 }

@@ -132,6 +132,26 @@ impl ModelEntry {
         v
     }
 
+    /// Multi-sequence span artifacts (`span_*_b{B}_t{T}`) of a path
+    /// family, sorted by (batch, span_tokens).  These carry per-lane
+    /// `starts`/`lens` inputs and a `[L, B, S, KH, hd]` cache pair; the
+    /// B=1 family from [`ModelEntry::span_buckets`] is deliberately
+    /// excluded (its names carry no `_b` segment).
+    pub fn span_batch_buckets(&self, precompute: bool) -> Vec<&ArtifactSpec> {
+        let prefix = if precompute {
+            "span_precomp_b"
+        } else {
+            "span_baseline_b"
+        };
+        let mut v: Vec<_> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.name.starts_with(prefix) && a.kind == ArtifactKind::Span)
+            .collect();
+        v.sort_by_key(|a| (a.batch.unwrap_or(0), a.span_tokens.unwrap_or(0)));
+        v
+    }
+
     /// Prefill artifacts of a family, sorted by (batch, prompt_len).
     pub fn prefill_buckets(&self, precompute: bool) -> Vec<&ArtifactSpec> {
         let prefix = if precompute {
@@ -358,7 +378,29 @@ mod tests {
              "file": "tiny-serial/decode_precomp_b4.hlo.txt",
              "inputs": [{"name": "rows", "shape": [4, 384], "dtype": "f32"}],
              "outputs": [{"name": "logits", "shape": [4, 512], "dtype": "f32"}],
-             "weight_params": ["unemb"], "batch": 4, "max_seq": 128}
+             "weight_params": ["unemb"], "batch": 4, "max_seq": 128},
+            {"name": "span_precomp_t8", "kind": "span",
+             "file": "tiny-serial/span_precomp_t8.hlo.txt",
+             "inputs": [{"name": "rows", "shape": [8, 384], "dtype": "f32"}],
+             "outputs": [{"name": "logits", "shape": [8, 512], "dtype": "f32"}],
+             "weight_params": ["unemb"], "batch": 1, "span_tokens": 8,
+             "max_seq": 128},
+            {"name": "span_precomp_b4_t8", "kind": "span",
+             "file": "tiny-serial/span_precomp_b4_t8.hlo.txt",
+             "inputs": [{"name": "rows", "shape": [4, 8, 384], "dtype": "f32"},
+                        {"name": "starts", "shape": [4], "dtype": "i32"},
+                        {"name": "lens", "shape": [4], "dtype": "i32"}],
+             "outputs": [{"name": "logits", "shape": [4, 8, 512], "dtype": "f32"}],
+             "weight_params": ["unemb"], "batch": 4, "span_tokens": 8,
+             "max_seq": 128},
+            {"name": "span_precomp_b4_t32", "kind": "span",
+             "file": "tiny-serial/span_precomp_b4_t32.hlo.txt",
+             "inputs": [{"name": "rows", "shape": [4, 32, 384], "dtype": "f32"},
+                        {"name": "starts", "shape": [4], "dtype": "i32"},
+                        {"name": "lens", "shape": [4], "dtype": "i32"}],
+             "outputs": [{"name": "logits", "shape": [4, 32, 512], "dtype": "f32"}],
+             "weight_params": ["unemb"], "batch": 4, "span_tokens": 32,
+             "max_seq": 128}
           ]
         }
       }
@@ -378,7 +420,7 @@ mod tests {
         assert_eq!(e.config.d, 128);
         assert_eq!(e.config.e(), 64);
         assert_eq!(e.weights_crc, 0x12345678);
-        assert_eq!(e.artifacts.len(), 2);
+        assert_eq!(e.artifacts.len(), 5);
         let a = e.artifact("decode_precomp_b4").unwrap();
         assert!(a.is_precompute());
         assert_eq!(a.inputs[0].shape, vec![4, 384]);
@@ -394,6 +436,28 @@ mod tests {
         let e = m.model("tiny-serial").unwrap();
         assert_eq!(e.decode_buckets(false).len(), 1);
         assert_eq!(e.decode_buckets(true)[0].batch, Some(4));
+    }
+
+    #[test]
+    fn span_batch_buckets_exclude_b1_family_and_sort() {
+        let dir = std::env::temp_dir().join("fl_manifest_test5");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.model("tiny-serial").unwrap();
+        // The B=1 family sees only span_precomp_t8…
+        let singles = e.span_buckets(true);
+        assert_eq!(singles.len(), 1);
+        assert_eq!(singles[0].name, "span_precomp_t8");
+        // …and the batch family only the _b{B}_t{T} artifacts, sorted by
+        // (batch, span_tokens).
+        let batched = e.span_batch_buckets(true);
+        assert_eq!(batched.len(), 2);
+        assert_eq!(batched[0].name, "span_precomp_b4_t8");
+        assert_eq!(batched[0].batch, Some(4));
+        assert_eq!(batched[0].span_tokens, Some(8));
+        assert_eq!(batched[1].name, "span_precomp_b4_t32");
+        assert!(e.span_batch_buckets(false).is_empty());
     }
 
     #[test]

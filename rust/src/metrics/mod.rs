@@ -269,6 +269,13 @@ pub struct Metrics {
     /// path, 1 on the fallback) — the distribution that shows whether
     /// spans actually batch.
     pub span_exec_tokens: ValueHistogram,
+    /// Multi-sequence span execution: device executions that advanced a
+    /// GROUP of sequences through one `[B, T]` span artifact (a subset of
+    /// `span_executions`), and the occupied-lane count per such group —
+    /// the distribution that shows whether cross-sequence grouping
+    /// actually fills lanes instead of padding them.
+    pub span_batched_executions: AtomicU64,
+    pub span_batch_occupancy: ValueHistogram,
     /// Cached-tokens-per-request distribution (0 recorded on a miss).
     pub cached_tokens: ValueHistogram,
     /// Engine step latencies.
@@ -333,6 +340,14 @@ impl Metrics {
             self.span_exec_tokens.mean(),
             self.span_exec_tokens.quantile(0.50),
             self.span_exec_tokens.quantile(0.95),
+        );
+        let _ = writeln!(
+            s,
+            "span_batch: executions={} occupancy mean={:.1} p50={} p95={}",
+            self.span_batched_executions.load(Ordering::Relaxed),
+            self.span_batch_occupancy.mean(),
+            self.span_batch_occupancy.quantile(0.50),
+            self.span_batch_occupancy.quantile(0.95),
         );
         for (name, h) in [
             ("decode_step", &self.decode_step),
@@ -466,6 +481,17 @@ mod tests {
         let r = m.report();
         assert!(r.contains("span_exec: executions=2 fallbacks=1"));
         assert!((m.span_exec_tokens.mean() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_contains_span_batch_line() {
+        let m = Metrics::new();
+        m.span_batched_executions.fetch_add(3, Ordering::Relaxed);
+        m.span_batch_occupancy.record(4);
+        m.span_batch_occupancy.record(2);
+        let r = m.report();
+        assert!(r.contains("span_batch: executions=3"));
+        assert!((m.span_batch_occupancy.mean() - 3.0).abs() < 1e-9);
     }
 
     #[test]

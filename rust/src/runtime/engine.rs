@@ -205,6 +205,43 @@ pub struct SpanOut {
     pub batched: bool,
 }
 
+/// One lane of a multi-sequence span group
+/// ([`ModelEngine::decode_span_group`]): a sequence's continuation chunk
+/// plus the absolute position its first token lands on.
+#[derive(Debug, Clone)]
+pub struct SpanLane<'a> {
+    pub tokens: &'a [u32],
+    pub start: usize,
+}
+
+/// Per-lane result of a grouped span step — the lane-local view of
+/// [`SpanGroupOut`], same row layout as [`SpanOut`].
+#[derive(Debug, Clone)]
+pub struct SpanLaneOut {
+    /// `[vocab]` logits after the lane's last span token.
+    pub logits: Vec<f32>,
+    /// New K rows for the lane's span: `[n, L, kh*hd]`, token-major.
+    pub new_k: Vec<f32>,
+    /// New V rows, same layout.
+    pub new_v: Vec<f32>,
+}
+
+/// Result of advancing a GROUP of sequences through the batched
+/// `span_*_b{B}_t{T}` artifacts: each tile executes the device ONCE for
+/// the whole group instead of once per sequence.
+#[derive(Debug, Clone)]
+pub struct SpanGroupOut {
+    /// Per-lane logits + fresh rows, in the caller's lane order.
+    pub lanes: Vec<SpanLaneOut>,
+    /// Device executions the group cost (= tiles, NOT lanes · tiles).
+    pub executions: usize,
+    /// Occupied (non-inert) lanes per execution, in order — feeds the
+    /// `span_batch_occupancy` histogram.
+    pub occupancy: Vec<usize>,
+    /// The compiled batch width that served the group.
+    pub batch: usize,
+}
+
 struct Loaded {
     exe: Arc<Executable>,
     /// Device-resident weight buffers in artifact parameter order.
@@ -284,6 +321,20 @@ pub struct ModelEngine {
     /// (the execution counters the acceptance tests assert against).
     span_execs: AtomicU64,
     span_fallback_count: AtomicU64,
+    /// Multi-sequence span groups (`decode_span_group` through the
+    /// `span_*_b{B}_t{T}` artifacts): serving knob
+    /// (`ServingConfig::enable_span_batch` / `--no-span-batch`) and
+    /// sticky runtime health, mirroring the single-sequence span pair
+    /// above.  `span_batch_ok` flips to false the first time a grouped
+    /// execution fails after planning succeeded; later steps then take
+    /// the per-sequence span path directly.  A missing batch bucket or an
+    /// unplannable group is a capability gap, NOT a health event — it
+    /// must not trip this bit.
+    span_batch_enabled: AtomicBool,
+    span_batch_ok: AtomicBool,
+    /// Cumulative grouped-span executions (one per group tile — a subset
+    /// of `span_execs`).
+    span_batched_execs: AtomicU64,
 }
 
 impl ModelEngine {
@@ -312,6 +363,9 @@ impl ModelEngine {
             span_bucket_cap: AtomicUsize::new(0),
             span_execs: AtomicU64::new(0),
             span_fallback_count: AtomicU64::new(0),
+            span_batch_enabled: AtomicBool::new(true),
+            span_batch_ok: AtomicBool::new(true),
+            span_batched_execs: AtomicU64::new(0),
         })
     }
 
@@ -378,6 +432,36 @@ impl ModelEngine {
         self.span_fallback_count.load(Ordering::Relaxed)
     }
 
+    /// Enable/disable multi-sequence span grouping.  Disabling forces
+    /// every continuation through the per-sequence span path — the
+    /// equivalence oracle the batched-serving property test compares
+    /// against.  Grouping also requires span execution itself to be on.
+    pub fn set_span_batch(&self, on: bool) {
+        self.span_batch_enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether grouped span execution is enabled and healthy (and span
+    /// execution itself is).
+    pub fn span_batch_active(&self) -> bool {
+        self.span_exec_active()
+            && self.span_batch_enabled.load(Ordering::Relaxed)
+            && self.span_batch_ok.load(Ordering::Relaxed)
+    }
+
+    /// Mark the grouped span path unhealthy (sticky, like the other two
+    /// health bits): after one grouped-artifact failure every later step
+    /// goes per-sequence directly.  `set_span_batch(true)` does NOT clear
+    /// this — health reflects the runtime's capability, not intent.
+    pub fn mark_span_batch_unhealthy(&self) {
+        self.span_batch_ok.store(false, Ordering::Relaxed);
+    }
+
+    /// Cumulative grouped-span executions (one per group tile; a subset
+    /// of [`ModelEngine::span_executions`]).
+    pub fn span_batched_executions(&self) -> u64 {
+        self.span_batched_execs.load(Ordering::Relaxed)
+    }
+
     /// Compiled span buckets (tokens per execution) usable for `path`,
     /// ascending, after the serving-side cap.  Empty when the bundle has
     /// no span artifacts (pre-span AOT builds keep working).
@@ -411,6 +495,80 @@ impl ModelEngine {
     /// — the granularity the scheduler aligns continuation chunks to.
     pub fn max_span_bucket(&self, path: StepPath) -> usize {
         self.span_buckets_for(path).last().copied().unwrap_or(0)
+    }
+
+    /// Widest compiled span batch for `path` (0 = none compiled) — the
+    /// lane count the scheduler composes continuation groups toward.
+    pub fn max_span_batch(&self, path: StepPath) -> usize {
+        if path == StepPath::PrecomputeGather {
+            return 0;
+        }
+        self.entry
+            .span_batch_buckets(path != StepPath::Baseline)
+            .iter()
+            .filter_map(|a| a.batch)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// The `(B, [T...])` span-batch bucket a group of `n_lanes` sequences
+    /// would serve from: the smallest compiled batch that fits the group,
+    /// with that batch's tile sizes ascending (after the serving-side
+    /// cap, mirroring [`ModelEngine::span_buckets_for`]).  `None` when no
+    /// compiled batch fits — pre-batch AOT bundles keep working on the
+    /// per-sequence path.
+    pub fn span_batch_for(&self, path: StepPath, n_lanes: usize) -> Option<(usize, Vec<usize>)> {
+        if path == StepPath::PrecomputeGather {
+            return None;
+        }
+        let specs = self.entry.span_batch_buckets(path != StepPath::Baseline);
+        let b = specs
+            .iter()
+            .filter_map(|a| a.batch)
+            .filter(|b| *b >= n_lanes)
+            .min()?;
+        let mut ts: Vec<usize> = specs
+            .iter()
+            .filter(|a| a.batch == Some(b))
+            .filter_map(|a| a.span_tokens)
+            .collect();
+        ts.sort_unstable();
+        ts.dedup();
+        let cap = self.span_bucket_cap.load(Ordering::Relaxed);
+        if cap > 0 && !ts.is_empty() {
+            let capped: Vec<usize> = ts.iter().copied().filter(|t| *t <= cap).collect();
+            if !capped.is_empty() {
+                ts = capped;
+            } else {
+                ts.truncate(1);
+            }
+        }
+        if ts.is_empty() {
+            None
+        } else {
+            Some((b, ts))
+        }
+    }
+
+    /// Whether [`ModelEngine::decode_span_group`] could serve these lanes
+    /// against a cache of capacity `s`: grouping enabled and healthy, a
+    /// compiled batch fits the group, and the group plan clears every
+    /// lane's capacity guard.  Callers check this BEFORE gathering the
+    /// group cache; an error after a true answer is a real failure worth
+    /// [`ModelEngine::mark_span_batch_unhealthy`].
+    pub fn span_group_viable(&self, path: StepPath, lanes: &[SpanLane], s: usize) -> bool {
+        if !self.span_batch_active() || lanes.len() < 2 {
+            return false;
+        }
+        let Some((_, ts)) = self.span_batch_for(path, lanes.len()) else {
+            return false;
+        };
+        let max_len = lanes.iter().map(|l| l.tokens.len()).max().unwrap_or(0);
+        let max_start = lanes.iter().map(|l| l.start).max().unwrap_or(0);
+        // Planning from the rightmost lane guards every lane: tile j
+        // writes `bucket` slots from `start_b + done`, and
+        // `start_b <= max_start` for all lanes.
+        max_len > 0 && plan_span_tiles(&ts, max_len, max_start, s).is_some()
     }
 
     /// The runtime's host↔device transfer counters.
@@ -1296,6 +1454,349 @@ impl ModelEngine {
         })
     }
 
+    fn span_batch_artifact_name(&self, path: StepPath, b: usize, t: usize) -> String {
+        match path {
+            StepPath::Baseline => format!("span_baseline_b{b}_t{t}"),
+            _ => format!("span_precomp_b{b}_t{t}"),
+        }
+    }
+
+    /// Advance a GROUP of sequences through one batched span step: every
+    /// tile executes the device once for the whole group, replacing the
+    /// serial per-sequence span loop on the steady-state decode path.
+    ///
+    /// `caches` holds lane `i`'s history in batch row `i`
+    /// (`caches.b == lanes.len()`); the engine widens it to the compiled
+    /// batch (extra lanes zero, `lens == 0`, inert throughout).  The
+    /// group tiles over the LONGEST lane (`ceil(max_len / T)`
+    /// executions); shorter lanes go inert once exhausted — their
+    /// per-tile `lens[b]` hits 0 and the kernel masks every slot, while
+    /// the in-graph insert keeps writing `T` garbage rows at
+    /// `start_b + done`, strictly beyond the lane's valid frontier and
+    /// capacity-guarded by planning from the rightmost lane.  Per lane
+    /// the first layer is served from the precompute table in one
+    /// batched row-gather, exactly like the single-sequence path.
+    ///
+    /// On success `caches` holds the advanced history (only each lane's
+    /// span rows are refreshed — padding-tile garbage never leaves the
+    /// device/local copy) and the per-lane fresh rows + last-token logits
+    /// come back in lane order.  On error `caches` is untouched, so the
+    /// caller can replay each lane through [`ModelEngine::decode_span`].
+    pub fn decode_span_group(
+        &self,
+        path: StepPath,
+        lanes: &[SpanLane],
+        caches: &mut CacheBatch,
+    ) -> Result<SpanGroupOut> {
+        let nl = lanes.len();
+        if nl == 0 || lanes.iter().any(|l| l.tokens.is_empty()) {
+            return Err(Error::Engine("span group: empty group or lane".into()));
+        }
+        if caches.b != nl {
+            return Err(Error::Engine(format!(
+                "span group: {} cache rows for {nl} lanes",
+                caches.b
+            )));
+        }
+        let cfg = self.entry.config.clone();
+        if path != StepPath::Baseline && !cfg.rope {
+            return Err(Error::Engine(
+                "precompute path requires RoPE (paper §2 — abs-PE models \
+                 cannot precompute the first layer)"
+                    .into(),
+            ));
+        }
+        let (batch, ts) = self.span_batch_for(path, nl).ok_or_else(|| {
+            Error::Engine(format!("span group: no compiled batch >= {nl} lanes"))
+        })?;
+        let max_len = lanes.iter().map(|l| l.tokens.len()).max().unwrap_or(0);
+        let max_start = lanes.iter().map(|l| l.start).max().unwrap_or(0);
+        let tiles = plan_span_tiles(&ts, max_len, max_start, caches.s).ok_or_else(|| {
+            Error::Engine("span group: no tile plan fits the cache capacity".into())
+        })?;
+        let rows: Option<Vec<Vec<f32>>> = if path == StepPath::Precompute {
+            let mut v = Vec::with_capacity(nl);
+            for l in lanes {
+                v.push(self.table.gather_vec(l.tokens)?);
+            }
+            Some(v)
+        } else {
+            None
+        };
+        let total: u64 = lanes.iter().map(|l| l.tokens.len() as u64).sum();
+        self.traffic.record_prefill(&cfg, path, total);
+        // Widen to the compiled batch width.  Real lanes copy in; the
+        // padding lanes stay zero with len 0 every tile (inert).
+        let mut work = CacheBatch::zeros(caches.l, batch, caches.s, caches.kh, caches.hd);
+        let srow = caches.s * caches.kh * caches.hd;
+        for l in 0..caches.l {
+            for i in 0..nl {
+                let src = caches.offset(l, i, 0);
+                let dst = work.offset(l, i, 0);
+                work.k[dst..dst + srow].copy_from_slice(&caches.k[src..src + srow]);
+                work.v[dst..dst + srow].copy_from_slice(&caches.v[src..src + srow]);
+            }
+        }
+        let out = if self.device_kv_active() {
+            self.span_group_tiles_device(path, lanes, rows.as_deref(), &tiles, batch, &work)?
+        } else {
+            self.span_group_tiles_host(path, lanes, rows.as_deref(), &tiles, batch, &mut work)?
+        };
+        // Refresh ONLY each lane's span rows in the caller's mirror (the
+        // per-sequence scatter, per lane).
+        let row = caches.kh * caches.hd;
+        for (i, lane) in lanes.iter().enumerate() {
+            let lo = &out.lanes[i];
+            for j in 0..lane.tokens.len() {
+                for l in 0..caches.l {
+                    let o = caches.offset(l, i, lane.start + j);
+                    let src = (j * caches.l + l) * row;
+                    caches.k[o..o + row].copy_from_slice(&lo.new_k[src..src + row]);
+                    caches.v[o..o + row].copy_from_slice(&lo.new_v[src..src + row]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Per-tile data inputs for a span group: the `[B, T]` token grid
+    /// (baseline) or `[B, T, W]` pre-gathered rows (precompute) — each
+    /// lane's live slice, zero-padded — then per-lane `starts` (always
+    /// `start_b + done`, advancing even for inert lanes so garbage lands
+    /// beyond the frontier) and per-lane valid `lens`.  Returns the
+    /// buffers plus the tile's occupancy (lanes with `lens > 0`).
+    #[allow(clippy::too_many_arguments)]
+    fn span_group_data_bufs(
+        &self,
+        path: StepPath,
+        lanes: &[SpanLane],
+        rows: Option<&[Vec<f32>]>,
+        b: usize,
+        t: usize,
+        done: usize,
+    ) -> Result<(Vec<xla::PjRtBuffer>, usize)> {
+        let mut starts = vec![0i32; b];
+        let mut lens = vec![0i32; b];
+        let mut occ = 0usize;
+        for (i, lane) in lanes.iter().enumerate() {
+            starts[i] = (lane.start + done) as i32;
+            let take = lane.tokens.len().saturating_sub(done).min(t);
+            lens[i] = take as i32;
+            if take > 0 {
+                occ += 1;
+            }
+        }
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::new();
+        match path {
+            StepPath::Baseline => {
+                let mut toks = vec![0i32; b * t];
+                for (i, lane) in lanes.iter().enumerate() {
+                    let take = lane.tokens.len().saturating_sub(done).min(t);
+                    for (j, tok) in lane.tokens[done..done + take].iter().enumerate() {
+                        toks[i * t + j] = *tok as i32;
+                    }
+                }
+                bufs.push(self.rt.upload_i32(&toks, &[b, t])?);
+            }
+            _ => {
+                let w = self.table.row_width();
+                let rs = rows.ok_or_else(|| {
+                    Error::Engine("span group tile: missing pregathered rows".into())
+                })?;
+                let mut padded = vec![0f32; b * t * w];
+                for (i, r) in rs.iter().enumerate() {
+                    let take = (r.len() / w).saturating_sub(done).min(t);
+                    padded[i * t * w..(i * t + take) * w]
+                        .copy_from_slice(&r[done * w..(done + take) * w]);
+                }
+                bufs.push(self.rt.upload_f32(&padded, &[b, t, w])?);
+            }
+        }
+        bufs.push(self.rt.upload_i32(&starts, &[b])?);
+        bufs.push(self.rt.upload_i32(&lens, &[b])?);
+        Ok((bufs, occ))
+    }
+
+    /// Device-resident group tiles: ONE cache-pair upload for the whole
+    /// group (every lane rides the same session), each tile
+    /// buffer-chained, per-execution readback of the fresh rows and —
+    /// only on tiles where some lane finishes — the logits grid.
+    fn span_group_tiles_device(
+        &self,
+        path: StepPath,
+        lanes: &[SpanLane],
+        rows: Option<&[Vec<f32>]>,
+        tiles: &[(usize, usize)],
+        batch: usize,
+        work: &CacheBatch,
+    ) -> Result<SpanGroupOut> {
+        let cfg = &self.entry.config;
+        let vocab = cfg.vocab_size;
+        let lrow = work.l * work.kh * work.hd;
+        let mut sess = self.begin_cache_session(work)?;
+        let mut outs: Vec<SpanLaneOut> = lanes
+            .iter()
+            .map(|l| SpanLaneOut {
+                logits: Vec::new(),
+                new_k: vec![0f32; l.tokens.len() * lrow],
+                new_v: vec![0f32; l.tokens.len() * lrow],
+            })
+            .collect();
+        let mut occupancy = Vec::with_capacity(tiles.len());
+        let mut done = 0usize;
+        for &(t, take) in tiles {
+            let name = self.span_batch_artifact_name(path, batch, t);
+            let loaded = self.load_artifact(&name)?;
+            let (data, occ) = self.span_group_data_bufs(path, lanes, rows, batch, t, done)?;
+            let mut args: Vec<&xla::PjRtBuffer> = data.iter().collect();
+            let (kb, vb) = sess.cache_args();
+            args.push(kb);
+            args.push(vb);
+            for wb in &loaded.weight_bufs {
+                args.push(wb);
+            }
+            let t_exec = std::time::Instant::now();
+            let mut out = loaded.exe.execute_buffers(&args)?;
+            if out.len() != 5 || loaded.exe.spec.outputs.len() != 5 {
+                return Err(Error::Engine(format!(
+                    "{name}: {} output buffers for {} declared outputs — span \
+                     chaining needs untupled [logits, k, v, new_k, new_v]",
+                    out.len(),
+                    loaded.exe.spec.outputs.len()
+                )));
+            }
+            let vr_buf = out.pop().expect("five outputs");
+            let kr_buf = out.pop().expect("five outputs");
+            let v_buf = out.pop().expect("five outputs");
+            let k_buf = out.pop().expect("five outputs");
+            let logits_buf = out.pop().expect("five outputs");
+            // Fresh rows come back as [B, T, L, KH, hd]: each lane's tile
+            // rows are one contiguous run.
+            let kr = loaded.exe.read_output(&kr_buf, 3)?;
+            let kr = kr.as_f32()?;
+            let vr = loaded.exe.read_output(&vr_buf, 4)?;
+            let vr = vr.as_f32()?;
+            let mut finishing = false;
+            for (i, lane) in lanes.iter().enumerate() {
+                let lt = lane.tokens.len().saturating_sub(done).min(t);
+                if lt == 0 {
+                    continue;
+                }
+                let src = i * t * lrow;
+                outs[i].new_k[done * lrow..(done + lt) * lrow]
+                    .copy_from_slice(&kr[src..src + lt * lrow]);
+                outs[i].new_v[done * lrow..(done + lt) * lrow]
+                    .copy_from_slice(&vr[src..src + lt * lrow]);
+                if done + lt == lane.tokens.len() {
+                    finishing = true;
+                }
+            }
+            if finishing {
+                let la = loaded.exe.read_output(&logits_buf, 0)?;
+                let la = la.as_f32()?;
+                for (i, lane) in lanes.iter().enumerate() {
+                    let lt = lane.tokens.len().saturating_sub(done).min(t);
+                    if lt > 0 && done + lt == lane.tokens.len() {
+                        let o = (i * t + lt - 1) * vocab;
+                        outs[i].logits = la[o..o + vocab].to_vec();
+                    }
+                }
+            }
+            sess.advance(k_buf, v_buf);
+            self.span_execs.fetch_add(1, Ordering::Relaxed);
+            self.span_batched_execs.fetch_add(1, Ordering::Relaxed);
+            occupancy.push(occ);
+            done += take;
+            if trace_enabled() {
+                eprintln!(
+                    "[trace] span-group {} B={batch} T={t} occ={occ} (device): {:?}",
+                    path.label(),
+                    t_exec.elapsed()
+                );
+            }
+        }
+        Ok(SpanGroupOut {
+            lanes: outs,
+            executions: tiles.len(),
+            occupancy,
+            batch,
+        })
+    }
+
+    /// Host group tiles: the fallback when buffer chaining is
+    /// unavailable — each tile uploads the widened pair and reads the
+    /// updated pair back, but still ONE execution per tile for the whole
+    /// group.
+    fn span_group_tiles_host(
+        &self,
+        path: StepPath,
+        lanes: &[SpanLane],
+        rows: Option<&[Vec<f32>]>,
+        tiles: &[(usize, usize)],
+        batch: usize,
+        work: &mut CacheBatch,
+    ) -> Result<SpanGroupOut> {
+        let cfg = &self.entry.config;
+        let vocab = cfg.vocab_size;
+        let lrow = work.l * work.kh * work.hd;
+        let pair_bytes = (work.k.len() + work.v.len()) as u64 * 4;
+        let mut outs: Vec<SpanLaneOut> = lanes
+            .iter()
+            .map(|l| SpanLaneOut {
+                logits: Vec::new(),
+                new_k: vec![0f32; l.tokens.len() * lrow],
+                new_v: vec![0f32; l.tokens.len() * lrow],
+            })
+            .collect();
+        let mut occupancy = Vec::with_capacity(tiles.len());
+        let mut done = 0usize;
+        for &(t, take) in tiles {
+            let name = self.span_batch_artifact_name(path, batch, t);
+            let loaded = self.load_artifact(&name)?;
+            let (mut data, occ) =
+                self.span_group_data_bufs(path, lanes, rows, batch, t, done)?;
+            data.push(self.rt.upload_f32(&work.k, &work.dims().to_vec())?);
+            data.push(self.rt.upload_f32(&work.v, &work.dims().to_vec())?);
+            self.rt.transfers().record_cache_upload(pair_bytes);
+            let mut args: Vec<&xla::PjRtBuffer> = data.iter().collect();
+            for wb in &loaded.weight_bufs {
+                args.push(wb);
+            }
+            let out = loaded.exe.execute_host(&args)?;
+            work.k.copy_from_slice(out[1].as_f32()?);
+            work.v.copy_from_slice(out[2].as_f32()?);
+            self.rt.transfers().record_cache_sync(pair_bytes);
+            let kr = out[3].as_f32()?;
+            let vr = out[4].as_f32()?;
+            let la = out[0].as_f32()?;
+            for (i, lane) in lanes.iter().enumerate() {
+                let lt = lane.tokens.len().saturating_sub(done).min(t);
+                if lt == 0 {
+                    continue;
+                }
+                let src = i * t * lrow;
+                outs[i].new_k[done * lrow..(done + lt) * lrow]
+                    .copy_from_slice(&kr[src..src + lt * lrow]);
+                outs[i].new_v[done * lrow..(done + lt) * lrow]
+                    .copy_from_slice(&vr[src..src + lt * lrow]);
+                if done + lt == lane.tokens.len() {
+                    let o = (i * t + lt - 1) * vocab;
+                    outs[i].logits = la[o..o + vocab].to_vec();
+                }
+            }
+            self.span_execs.fetch_add(1, Ordering::Relaxed);
+            self.span_batched_execs.fetch_add(1, Ordering::Relaxed);
+            occupancy.push(occ);
+            done += take;
+        }
+        Ok(SpanGroupOut {
+            lanes: outs,
+            executions: tiles.len(),
+            occupancy,
+            batch,
+        })
+    }
+
     /// Prefill `n` prompts (ragged, padded to the bucket's `[B, T]`).
     pub fn prefill(
         &self,
@@ -1477,5 +1978,35 @@ mod tests {
         assert!(plan_span_tiles(&buckets, 3, 125, 128).is_none());
         // No compiled buckets: nothing to plan with.
         assert!(plan_span_tiles(&[], 4, 0, 128).is_none());
+    }
+
+    #[test]
+    fn span_group_plan_from_rightmost_lane_guards_every_lane() {
+        // A group plans over the LONGEST lane from the RIGHTMOST start;
+        // every lane's per-tile write (bucket slots from start_b + done,
+        // advancing even while inert) must then stay inside the cache.
+        let buckets = [8usize, 32];
+        let s = 128;
+        let starts = [10usize, 30, 88];
+        let lens = [40usize, 17, 8];
+        let max_len = *lens.iter().max().unwrap();
+        let max_start = *starts.iter().max().unwrap();
+        let tiles = plan_span_tiles(&buckets, max_len, max_start, s).unwrap();
+        let total: usize = tiles.iter().map(|(_, t)| t).sum();
+        assert_eq!(total, max_len);
+        let mut done = 0usize;
+        for &(b, take) in &tiles {
+            for &st in &starts {
+                assert!(
+                    st + done + b <= s,
+                    "lane at {st} tile ({b},{take}) offset {done} would clamp"
+                );
+            }
+            done += take;
+        }
+        // Ragged lanes go inert mid-group: lane 2 (len 8) is exhausted
+        // after tile 0 regardless of the tile split.
+        let first_take = tiles[0].1;
+        assert!(first_take >= 8);
     }
 }

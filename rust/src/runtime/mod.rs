@@ -10,7 +10,10 @@
 mod engine;
 mod session;
 
-pub use engine::{CacheBatch, DecodeOut, ModelEngine, PrefillOut, SpanOut, StepPath};
+pub use engine::{
+    CacheBatch, DecodeOut, ModelEngine, PrefillOut, SpanGroupOut, SpanLane, SpanLaneOut,
+    SpanOut, StepPath,
+};
 pub use session::DeviceCacheSession;
 
 use std::collections::HashMap;

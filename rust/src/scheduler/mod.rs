@@ -103,6 +103,12 @@ pub struct StepPlan {
     /// Prefill chunks to execute (fresh admissions have `start == 0`;
     /// continuations of in-flight chunked prefills have `start > 0`).
     pub prefill: Vec<PrefillChunk>,
+    /// Multi-sequence span step-groups: each entry lists indices into
+    /// `prefill` whose continuation chunks one batched `[B, T]` span
+    /// execution advances together (disjoint, >= 2 lanes each; chunks in
+    /// no group run per-sequence).  Composed only when
+    /// `span_group_lanes >= 2`.
+    pub span_groups: Vec<Vec<usize>>,
     /// Sequences to decode one token for, ids (fully prefilled running
     /// sequences; a sequence whose final chunk runs this iteration decodes
     /// from the next one).
@@ -149,6 +155,14 @@ pub struct SchedConfig {
     /// interior tile is one full bucket and ragged padding only ever
     /// happens on a prompt's final chunk.
     pub span_bucket_tokens: usize,
+    /// Widest multi-sequence span batch the engine compiled (lanes per
+    /// `span_*_b{B}_t{T}` execution); < 2 = no grouping, every
+    /// continuation chunk runs per-sequence.  When >= 2, `plan()`
+    /// composes same-bucket continuation chunks from different sequences
+    /// into [`StepPlan::span_groups`] after the budget is spent — the
+    /// decode-first budget and priority/arrival fairness are unchanged,
+    /// grouping only batches the work already planned.
+    pub span_group_lanes: usize,
 }
 
 /// The scheduler.
@@ -490,7 +504,64 @@ impl Scheduler {
             *st = State::Running;
             self.running.push(*id);
         }
+
+        // 5. Compose continuation chunks from different sequences into
+        //    span step-groups: one batched [B, T] execution per group
+        //    tile instead of one serial span per sequence.
+        self.compose_span_groups(&mut plan);
         plan
+    }
+
+    /// Group the plan's continuation chunks (`start > 0` — they execute
+    /// as span tiles; fresh chunks ride the batched prefill artifact)
+    /// into step-groups of at most `span_group_lanes` lanes.
+    ///
+    /// Occupancy before padding: chunks with IDENTICAL span lengths are
+    /// grouped first — equal lanes share one tile plan, so every group
+    /// execution runs fully occupied.  Only then are the leftover
+    /// singletons merged into ragged groups (shorter lanes go inert on
+    /// later tiles), which still beats executing them serially.  Within
+    /// a class, plan order is kept, preserving the priority/arrival
+    /// fairness steps 3–4 established; the budget was already spent, so
+    /// grouping never changes WHAT runs, only how many dispatches it
+    /// takes.
+    fn compose_span_groups(&self, plan: &mut StepPlan) {
+        let lanes = self.cfg.span_group_lanes;
+        if lanes < 2 {
+            return;
+        }
+        let eligible: Vec<usize> = plan
+            .prefill
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.start > 0)
+            .map(|(i, _)| i)
+            .collect();
+        // Same-length classes in first-seen (= plan) order.
+        let mut by_len: Vec<(usize, Vec<usize>)> = Vec::new();
+        for &i in &eligible {
+            let len = plan.prefill[i].len;
+            match by_len.iter_mut().find(|(l, _)| *l == len) {
+                Some((_, v)) => v.push(i),
+                None => by_len.push((len, vec![i])),
+            }
+        }
+        let mut leftovers: Vec<usize> = Vec::new();
+        for (_, idxs) in by_len {
+            for g in idxs.chunks(lanes) {
+                if g.len() >= 2 {
+                    plan.span_groups.push(g.to_vec());
+                } else {
+                    leftovers.extend_from_slice(g);
+                }
+            }
+        }
+        leftovers.sort_unstable(); // back to plan order across classes
+        for g in leftovers.chunks(lanes) {
+            if g.len() >= 2 {
+                plan.span_groups.push(g.to_vec());
+            }
+        }
     }
 
     /// Report an executed prefill chunk: `n` more prompt tokens of `id`
@@ -605,6 +676,7 @@ mod tests {
             chunk_tokens: 0,
             step_token_budget: 0,
             span_bucket_tokens: 0,
+            span_group_lanes: 0,
         })
     }
 
@@ -617,6 +689,7 @@ mod tests {
             chunk_tokens: chunk,
             step_token_budget: budget,
             span_bucket_tokens: 0,
+            span_group_lanes: 0,
         })
     }
 
@@ -829,6 +902,7 @@ mod tests {
             chunk_tokens: 4,
             step_token_budget: 0,
             span_bucket_tokens: 0,
+            span_group_lanes: 0,
         });
         // Pool of 10 four-token blocks.  A needs blocks_for(37) = 10,
         // B needs blocks_for(29) = 8: both fit alone, never together.
@@ -894,6 +968,7 @@ mod tests {
                 chunk_tokens: chunk,
                 step_token_budget: budget,
                 span_bucket_tokens: 0,
+            span_group_lanes: 0,
             });
             let mut b = Budget::new(200);
             let mut next = 0u64;
@@ -1014,6 +1089,7 @@ mod tests {
             chunk_tokens: 14,
             step_token_budget: 0,
             span_bucket_tokens: 8,
+            span_group_lanes: 0,
         });
         let b = Budget::new(1000);
         s.submit(1, vec![1; 40], 4, Priority::Normal).unwrap();
@@ -1054,6 +1130,7 @@ mod tests {
             chunk_tokens: 4,
             step_token_budget: 0,
             span_bucket_tokens: 8,
+            span_group_lanes: 0,
         });
         s.submit(1, vec![1; 12], 4, Priority::Normal).unwrap();
         let p = s.plan(&b);
@@ -1062,6 +1139,147 @@ mod tests {
         assert_eq!(
             p2.prefill[0],
             PrefillChunk { id: 1, start: 4, len: 4, last: false }
+        );
+    }
+
+    /// Cross-sequence span composition: same-bucket continuation chunks
+    /// from different sequences land in ONE step-group (one batched
+    /// device execution), fresh admissions never do (they ride the
+    /// prefill artifact), and grouping changes nothing about WHAT was
+    /// planned — chunks, order, budget are identical with lanes off.
+    #[test]
+    fn span_groups_compose_same_bucket_continuations() {
+        let cfg = SchedConfig {
+            max_batch: 8,
+            max_admit: 4,
+            max_prompt: 64,
+            max_seq: 128,
+            chunk_tokens: 8,
+            step_token_budget: 0,
+            span_bucket_tokens: 8,
+            span_group_lanes: 4,
+        };
+        let mut s = Scheduler::new(cfg.clone());
+        let b = Budget::new(1000);
+        for id in 1..=3 {
+            s.submit(id, vec![1; 24], 4, Priority::Normal).unwrap();
+        }
+        // Step 1: three fresh chunks (start == 0) — no grouping.
+        let p = s.plan(&b);
+        assert_eq!(p.prefill.len(), 3);
+        assert!(p.span_groups.is_empty(), "fresh chunks must not group");
+        for c in &p.prefill {
+            s.on_chunk(c.id, c.len);
+        }
+        // A fourth sequence arrives: its first chunk is fresh while the
+        // three continuations (equal 8-token spans) form one group.
+        s.submit(4, vec![1; 24], 4, Priority::Normal).unwrap();
+        let p2 = s.plan(&b);
+        assert_eq!(p2.prefill.len(), 4);
+        assert_eq!(p2.span_groups, vec![vec![0, 1, 2]]);
+        let fresh = &p2.prefill[3];
+        assert_eq!((fresh.id, fresh.start), (4, 0));
+        // Same workload with grouping off: identical chunks, no groups —
+        // composition batches the plan, it never changes it.
+        let mut s2 = Scheduler::new(SchedConfig {
+            span_group_lanes: 0,
+            ..cfg
+        });
+        for id in 1..=3 {
+            s2.submit(id, vec![1; 24], 4, Priority::Normal).unwrap();
+        }
+        let q = s2.plan(&b);
+        for c in &q.prefill {
+            s2.on_chunk(c.id, c.len);
+        }
+        s2.submit(4, vec![1; 24], 4, Priority::Normal).unwrap();
+        let q2 = s2.plan(&b);
+        assert_eq!(q2.prefill, p2.prefill);
+        assert!(q2.span_groups.is_empty());
+    }
+
+    /// Occupancy before padding: equal-length chunks pair up first (every
+    /// group tile fully occupied), even when the plan interleaves them
+    /// with other lengths; only the leftover singletons merge into a
+    /// ragged group.
+    #[test]
+    fn span_groups_prefer_occupancy_before_padding() {
+        let mk = |lanes: usize| {
+            Scheduler::new(SchedConfig {
+                max_batch: 8,
+                max_admit: 8,
+                max_prompt: 64,
+                max_seq: 128,
+                chunk_tokens: 8,
+                step_token_budget: 0,
+                span_bucket_tokens: 8,
+                span_group_lanes: lanes,
+            })
+        };
+        let b = Budget::new(1000);
+        // Arrival order A(16) C(13) B(16) D(13): continuations come out
+        // len 8, 5, 8, 5.  With 2 lanes the same-length pairs group —
+        // [A, B] and [C, D] — NOT the adjacent-but-ragged [A, C].
+        let mut s = mk(2);
+        s.submit(1, vec![1; 16], 4, Priority::Normal).unwrap();
+        s.submit(2, vec![1; 13], 4, Priority::Normal).unwrap();
+        s.submit(3, vec![1; 16], 4, Priority::Normal).unwrap();
+        s.submit(4, vec![1; 13], 4, Priority::Normal).unwrap();
+        let p = s.plan(&b);
+        for c in &p.prefill {
+            s.on_chunk(c.id, c.len);
+        }
+        let p2 = s.plan(&b);
+        let lens: Vec<usize> = p2.prefill.iter().map(|c| c.len).collect();
+        assert_eq!(lens, vec![8, 5, 8, 5]);
+        assert_eq!(p2.span_groups, vec![vec![0, 2], vec![1, 3]]);
+
+        // Leftover singletons (one 8, one 5) still merge: a ragged group
+        // (the short lane goes inert) beats two serial executions.
+        let mut s = mk(2);
+        s.submit(1, vec![1; 16], 4, Priority::Normal).unwrap();
+        s.submit(2, vec![1; 13], 4, Priority::Normal).unwrap();
+        let p = s.plan(&b);
+        for c in &p.prefill {
+            s.on_chunk(c.id, c.len);
+        }
+        let p2 = s.plan(&b);
+        assert_eq!(p2.span_groups, vec![vec![0, 1]]);
+    }
+
+    /// A lone mid-prefill sequence gets no group (nothing to batch with)
+    /// but its interior chunks still round down to whole span buckets —
+    /// grouping layers on top of the PR 5 alignment, it does not replace
+    /// it.
+    #[test]
+    fn lone_sequence_still_aligns_interior_chunks() {
+        let mut s = Scheduler::new(SchedConfig {
+            max_batch: 8,
+            max_admit: 4,
+            max_prompt: 64,
+            max_seq: 128,
+            chunk_tokens: 14,
+            step_token_budget: 0,
+            span_bucket_tokens: 8,
+            span_group_lanes: 4,
+        });
+        let b = Budget::new(1000);
+        s.submit(1, vec![1; 40], 4, Priority::Normal).unwrap();
+        let mut seen = Vec::new();
+        while !s.info(1).unwrap().prefill_done() {
+            let p = s.plan(&b);
+            assert!(p.span_groups.is_empty(), "singleton must not group");
+            assert_eq!(p.prefill.len(), 1);
+            let c = p.prefill[0];
+            seen.push((c.start, c.len, c.last));
+            s.on_chunk(1, c.len);
+            if c.last {
+                s.on_token(1, false);
+            }
+        }
+        assert_eq!(
+            seen,
+            vec![(0, 14, false), (14, 8, false), (22, 8, false), (30, 10, true)]
         );
     }
 

@@ -509,6 +509,21 @@ fn handle_conn(
                         "span_exec_tokens_p50",
                         n(metrics.span_exec_tokens.quantile(0.50) as f64),
                     ),
+                    // Multi-sequence span grouping: group tiles executed
+                    // (a subset of span_executions — each advanced B
+                    // lanes at once) and the occupied-lane distribution.
+                    (
+                        "span_batched_executions",
+                        n(metrics.span_batched_executions.load(Relaxed) as f64),
+                    ),
+                    (
+                        "span_batch_occupancy_mean",
+                        n(metrics.span_batch_occupancy.mean()),
+                    ),
+                    (
+                        "span_batch_occupancy_p50",
+                        n(metrics.span_batch_occupancy.quantile(0.50) as f64),
+                    ),
                     // v2: conversation + cancellation counters.
                     (
                         "requests_cancelled",

@@ -17,7 +17,10 @@ Threshold model (higher-is-worse metrics; decreases never fail):
   / transfers / calls / steps per span or per run) — these count device
   executions and cache movements, which the engine schedules exactly;
   ANY increase is a real regression (1% tolerance for float formatting);
-* byte counters (``*_bytes*``) — deterministic too, same tight bound.
+* byte counters (``*_bytes*``) — deterministic too, same tight bound;
+* higher-is-BETTER ratios (``*_speedup``) gate on the opposite side: a
+  relative DECREASE beyond the allowance fails (timing-derived, so the
+  allowance is the generous one).
 
 Fields matching none of the patterns are informational only.  Benches
 that appear or disappear never gate (sections come and go with
@@ -43,11 +46,22 @@ THRESHOLDS = [
     ("*_ms", 0.50),
 ]
 
+# Higher-is-better fields: (glob, max allowed relative DECREASE).  The
+# span-group speedup is a ratio of two timings, so it inherits the
+# timing noise allowance.
+GAIN_THRESHOLDS = [
+    ("*_speedup", 0.50),
+]
+
 
 def threshold_for(field):
+    """(max relative increase, max relative decrease) — None = no gate."""
     for pat, t in THRESHOLDS:
         if fnmatch.fnmatch(field, pat):
-            return t
+            return (t, None)
+    for pat, t in GAIN_THRESHOLDS:
+        if fnmatch.fnmatch(field, pat):
+            return (None, t)
     return None
 
 
@@ -100,15 +114,20 @@ def main():
                 change = "%+.1f%%" % (100.0 * rel)
             t = threshold_for(k)
             mark = ""
-            if t is not None and rel > t:
-                mark = " [REGRESSION]"
-                breaches.append((name, k, change, t))
+            if t is not None:
+                up, down = t
+                if up is not None and rel > up:
+                    mark = " [REGRESSION]"
+                    breaches.append((name, k, change, "+%.0f%%" % (up * 100)))
+                elif down is not None and rel < -down:
+                    mark = " [REGRESSION]"
+                    breaches.append((name, k, change, "-%.0f%%" % (down * 100)))
             deltas.append(f"{k} {change}{mark}")
         print(f"  {name}: " + ("; ".join(deltas) if deltas else "no shared numeric fields"))
     if breaches:
         print(f"bench-diff: {len(breaches)} threshold breach(es):")
-        for name, k, change, t in breaches:
-            print(f"  {name}.{k}: {change} (allowed +{t * 100:.0f}%)")
+        for name, k, change, allowed in breaches:
+            print(f"  {name}.{k}: {change} (allowed {allowed})")
         if gate:
             return 1
         print("bench-diff: (informational run — pass --gate to fail on these)")

@@ -15,6 +15,11 @@
 #      fields get a noise allowance.  Delete BENCH_engine.json to
 #      re-baseline after an intentional perf change.
 #
+# Every PASSING run also appends its BENCH_engine.json to
+# bench_history/ (timestamped, pruned to the newest 50) so the perf
+# trajectory across CI runs survives re-baselining and can be plotted
+# or bisected after the fact.
+#
 # Usage: scripts/ci_gate.sh   (from anywhere inside the repo)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -57,6 +62,16 @@ if [ -n "$prev" ]; then
   rm -f "$prev"
 else
   echo "[ci-gate] no previous BENCH_engine.json — baseline recorded"
+fi
+
+# Bench trajectory: persist the passing run's numbers.  Only gated-OK
+# results land here, so the history is a clean series even across
+# intentional re-baselines (which only delete BENCH_engine.json).
+if [ -f BENCH_engine.json ]; then
+  mkdir -p bench_history
+  cp BENCH_engine.json "bench_history/BENCH_engine.$(date -u +%Y%m%dT%H%M%SZ).json"
+  ls -1t bench_history/BENCH_engine.*.json 2>/dev/null | tail -n +51 | xargs -r rm -f
+  echo "[ci-gate] bench trajectory: $(ls -1 bench_history/BENCH_engine.*.json | wc -l | tr -d ' ') run(s) in bench_history/"
 fi
 
 echo "[ci-gate] OK"
