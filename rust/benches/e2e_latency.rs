@@ -365,4 +365,67 @@ fn main() {
             );
         }
     }
+
+    // Serving-path tail latency: drive the full coordinator with the
+    // simtraffic mixed workload and report request-level quantiles (queue
+    // wait, TTFT, e2e) from the serving metrics — p99 included so
+    // `scripts/bench_diff.py` gates tail latency, not just the middle of
+    // the distribution.
+    println!("\n-- serving: coordinator-driven mixed workload tail latency --");
+    {
+        use firstlayer::config::ServingConfig;
+        use firstlayer::coordinator::Coordinator;
+        use firstlayer::simtraffic::mixed_workload;
+        let scfg = ServingConfig {
+            artifacts_dir: dir.to_string_lossy().into_owned(),
+            model: model.to_string(),
+            max_new_tokens: 8,
+            prefill_chunk_tokens: 16,
+            ..Default::default()
+        };
+        match Coordinator::from_config(&scfg) {
+            Err(e) => println!("  (coordinator unavailable: {e})"),
+            Ok(mut c) => {
+                let reqs = mixed_workload(12, 24, 2, 48, 8, cfg.vocab_size as u32, 0xBE7C);
+                let n_reqs = reqs.len();
+                for r in reqs {
+                    let _ = c.submit(r);
+                }
+                c.run_to_completion(10_000).unwrap();
+                let m = &c.metrics;
+                let us = |h: &firstlayer::metrics::Histogram, p: f64| {
+                    h.quantile(p).as_micros() as f64
+                };
+                println!(
+                    "  {} requests: queue_wait p50/p95/p99 {:.0}/{:.0}/{:.0} us, \
+                     ttft {:.0}/{:.0}/{:.0} us, e2e {:.0}/{:.0}/{:.0} us",
+                    n_reqs,
+                    us(&m.queue_wait, 0.50),
+                    us(&m.queue_wait, 0.95),
+                    us(&m.queue_wait, 0.99),
+                    us(&m.ttft, 0.50),
+                    us(&m.ttft, 0.95),
+                    us(&m.ttft, 0.99),
+                    us(&m.e2e, 0.50),
+                    us(&m.e2e, 0.95),
+                    us(&m.e2e, 0.99),
+                );
+                emit_json(
+                    "e2e_serving_tail",
+                    &[
+                        ("requests", n_reqs as f64),
+                        ("queue_wait_p50_us", us(&m.queue_wait, 0.50)),
+                        ("queue_wait_p95_us", us(&m.queue_wait, 0.95)),
+                        ("queue_wait_p99_us", us(&m.queue_wait, 0.99)),
+                        ("ttft_p50_us", us(&m.ttft, 0.50)),
+                        ("ttft_p95_us", us(&m.ttft, 0.95)),
+                        ("ttft_p99_us", us(&m.ttft, 0.99)),
+                        ("e2e_p50_us", us(&m.e2e, 0.50)),
+                        ("e2e_p95_us", us(&m.e2e, 0.95)),
+                        ("e2e_p99_us", us(&m.e2e, 0.99)),
+                    ],
+                );
+            }
+        }
+    }
 }

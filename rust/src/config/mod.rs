@@ -196,6 +196,17 @@ pub struct ServingConfig {
     /// engine also falls back by itself — sticky — if a batched span
     /// execution fails.
     pub enable_span_batch: bool,
+    /// Request-lifecycle tracing (`rust/src/trace/`): record every
+    /// request's span tree (queue, prefill chunks, span/group tiles,
+    /// decode steps, syncs) with per-phase engine timings, exported via
+    /// the `trace.dump` server op as Chrome trace-event JSON.  Off by
+    /// default; when off, every instrumentation point is a single
+    /// relaxed atomic load (tracing is a pure observer — streams, plans,
+    /// and schedule counters are identical either way).
+    pub enable_trace: bool,
+    /// Completed-request ring capacity for the tracer (last N finished
+    /// requests retained; older ones dropped and counted).
+    pub trace_ring: usize,
     /// Sampling defaults.
     pub temperature: f64,
     pub top_k: usize,
@@ -223,6 +234,8 @@ impl Default for ServingConfig {
             enable_span_exec: true,
             span_bucket_tokens: 0,
             enable_span_batch: true,
+            enable_trace: false,
+            trace_ring: 256,
             temperature: 0.0,
             top_k: 0,
             seed: 0xF17A,

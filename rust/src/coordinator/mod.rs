@@ -38,6 +38,7 @@ use crate::runtime::{
 };
 use crate::scheduler::{KvBudget, PrefillChunk, Priority, SchedConfig, Scheduler, State};
 use crate::tokenizer::{Tokenizer, BOS, EOS};
+use crate::trace::{SpanKind, Tracer};
 use crate::util::rng::Rng;
 
 use sampling::{sample, SamplingParams};
@@ -53,6 +54,17 @@ pub enum FinishReason {
     Stop,
     /// Aborted by [`Coordinator::cancel`] before a natural finish.
     Cancelled,
+}
+
+/// Stable wire/trace label for a [`FinishReason`].
+pub fn reason_label(r: FinishReason) -> &'static str {
+    match r {
+        FinishReason::Eos => "eos",
+        FinishReason::MaxTokens => "max_tokens",
+        FinishReason::ContextFull => "context_full",
+        FinishReason::Stop => "stop",
+        FinishReason::Cancelled => "cancelled",
+    }
 }
 
 /// Streaming event surfaced to the server / examples.
@@ -152,6 +164,9 @@ impl Request {
 struct ReqState {
     generated: Vec<u32>,
     submit_t: Option<Instant>,
+    /// When the request's first prefill chunk was scheduled (queue-wait
+    /// end: `queue_wait = first_sched_t - submit_t`).
+    first_sched_t: Option<Instant>,
     first_token_t: Option<Instant>,
     done: Option<FinishReason>,
     /// Detokenized tail of the output, kept only while the request has
@@ -282,6 +297,10 @@ pub struct Coordinator {
     conv_ctr: u64,
     /// Cap on simultaneously open conversations (0 = unbounded).
     max_convs: usize,
+    /// Lifecycle tracer (shared with the engine's runtime; enabled from
+    /// `ServingConfig::enable_trace`, otherwise every call is one
+    /// relaxed atomic load).
+    tracer: Arc<Tracer>,
 }
 
 impl Coordinator {
@@ -378,6 +397,8 @@ impl Coordinator {
             None
         };
         engine.set_device_kv(cfg.enable_device_kv);
+        let tracer = engine.tracer();
+        tracer.configure(cfg.enable_trace, cfg.trace_ring);
         Ok(Coordinator {
             engine,
             kv,
@@ -399,7 +420,14 @@ impl Coordinator {
             conv_keys: std::collections::hash_map::RandomState::new(),
             conv_ctr: 0,
             max_convs: cfg.max_conversations,
+            tracer,
         })
+    }
+
+    /// The lifecycle tracer (served by the `trace.dump` op; see
+    /// [`crate::trace`]).
+    pub fn tracer(&self) -> Arc<Tracer> {
+        self.tracer.clone()
     }
 
     pub fn engine(&self) -> &ModelEngine {
@@ -515,6 +543,7 @@ impl Coordinator {
             .map(|pc| pc.match_prefix(&prompt))
             .filter(|m| m.tokens > 0);
         let pending = conv.map(|_| prompt.clone());
+        let prompt_len = prompt.len();
         match self.sched.submit(id, prompt, max_new_tokens, priority) {
             Ok(()) => {
                 self.next_id += 1;
@@ -528,6 +557,7 @@ impl Coordinator {
                         ..Default::default()
                     },
                 );
+                self.tracer.req_submit(id, prompt_len);
                 self.params.insert(id, params);
                 if let Some(m) = hit {
                     // Sharing moves only refcounts, so this cannot fail
@@ -535,6 +565,7 @@ impl Coordinator {
                     if self.kv.create_shared(id, &m.blocks, m.tokens).is_ok() {
                         self.sched.set_prefilled(id, m.tokens);
                         self.record_prefix_hit(m.tokens);
+                        self.tracer.req_mark(id, "prefix_hit", m.tokens as u64);
                         // Chat reuse counts only the span served out of
                         // THIS conversation's own transcript — a first
                         // turn hitting another request's cached prompt
@@ -611,6 +642,8 @@ impl Coordinator {
         self.metrics
             .requests_cancelled
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tracer
+            .req_finish(id, "cancelled", st.generated.len());
         self.events.push(Event::Finished {
             id,
             reason: FinishReason::Cancelled,
@@ -718,6 +751,22 @@ impl Coordinator {
         self.metrics.cached_tokens.record(tokens as u64);
     }
 
+    /// First time a request's work is scheduled onto the engine: close
+    /// the queue-wait window (`submit → first scheduled chunk`) and the
+    /// trace's queue span.  Idempotent per request.
+    fn mark_sched(&mut self, id: u64) {
+        if let Some(st) = self.reqs.get_mut(&id) {
+            if st.first_sched_t.is_none() {
+                let now = Instant::now();
+                st.first_sched_t = Some(now);
+                if let Some(t) = st.submit_t {
+                    self.metrics.queue_wait.record(now.duration_since(t));
+                }
+                self.tracer.req_first_sched(id);
+            }
+        }
+    }
+
     fn record_prefix_miss(&self) {
         use std::sync::atomic::Ordering::Relaxed;
         self.metrics.prefix_misses.fetch_add(1, Relaxed);
@@ -798,6 +847,7 @@ impl Coordinator {
             self.metrics
                 .preemptions
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.tracer.req_mark(*id, "preempt", gen.len() as u64);
         }
 
         // -- demand-driven prefix-cache eviction -----------------------------
@@ -835,6 +885,9 @@ impl Coordinator {
                 self.metrics
                     .prefix_evictions
                     .fetch_add(evicted as u64, std::sync::atomic::Ordering::Relaxed);
+                if evicted > 0 {
+                    self.tracer.global_mark("prefix_evict", evicted as u64);
+                }
             }
         }
 
@@ -936,6 +989,11 @@ impl Coordinator {
     /// prompt) prefills the head and continues the excess as a span.
     fn run_first_chunks(&mut self, chunks: &[PrefillChunk]) -> Result<()> {
         let t0 = Instant::now();
+        for c in chunks {
+            self.mark_sched(c.id);
+        }
+        self.tracer
+            .set_context(&chunks.iter().map(|c| c.id).collect::<Vec<_>>());
         let fulls: Vec<Vec<u32>> = chunks
             .iter()
             .map(|c| self.sched.info(c.id).unwrap().prompt.clone())
@@ -1002,6 +1060,8 @@ impl Coordinator {
     /// Execute a continuation chunk (`start > 0`) as a decode-kernel span.
     fn run_continuation(&mut self, c: &PrefillChunk) -> Result<()> {
         let t0 = Instant::now();
+        self.mark_sched(c.id);
+        self.tracer.set_context(&[c.id]);
         let full = self.sched.info(c.id).unwrap().prompt.clone();
         let end = (c.start + c.len).min(full.len());
         let logits = self.run_span(c.id, &full[c.start..end], c.start)?;
@@ -1050,6 +1110,11 @@ impl Coordinator {
             return Ok(());
         }
         let t0 = Instant::now();
+        for c in chunks {
+            self.mark_sched(c.id);
+        }
+        self.tracer
+            .set_context(&chunks.iter().map(|c| c.id).collect::<Vec<_>>());
         let n = chunks.len();
         let mut caches = CacheBatch::zeros(
             cfg.n_layers,
@@ -1126,6 +1191,7 @@ impl Coordinator {
                 if let Some(s0) = r.submit_t {
                     self.metrics.ttft.record(s0.elapsed());
                 }
+                self.tracer.req_first_token(id);
             }
         }
         Ok(())
@@ -1136,6 +1202,7 @@ impl Coordinator {
     /// over-bucket replays); appends the span's K/V to the paged store and
     /// returns the logits after the last token.
     fn run_span(&mut self, id: u64, tokens: &[u32], start: usize) -> Result<Vec<f32>> {
+        self.tracer.set_context(&[id]);
         let cfg = self.engine.config().clone();
         let s = cfg.max_seq;
         let bucket = self.engine.decode_bucket(1, self.path)?;
@@ -1265,6 +1332,7 @@ impl Coordinator {
                 pos.push((d.base[i] + d.pending[i]) as u32);
             }
         }
+        self.tracer.set_context(ids);
         let d = self.dsess.as_mut().expect("session just ensured");
         let logits_all =
             match engine.decode_on_session(path, &tokens, &pos, &mut d.sess, None, true, true) {
@@ -1417,9 +1485,12 @@ impl Coordinator {
                     .fetch_add(evicted as u64, std::sync::atomic::Ordering::Relaxed);
             }
         }
+        self.tracer.set_context(&d.ids);
+        self.tracer.exec_begin(SpanKind::Sync, 0, d.ids.len());
         let (kc, vc) = match d.sess.read_cache_pair() {
             Ok(pair) => pair,
             Err(e) => {
+                self.tracer.exec_end(0);
                 self.dsess = Some(d); // untouched: retry next sync point
                 return Err(e);
             }
@@ -1429,6 +1500,7 @@ impl Coordinator {
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let dims = d.sess.dims();
         debug_assert!(d.ids.len() <= dims[1], "session ids exceed the bucket");
+        let mut written = 0usize;
         for i in 0..d.ids.len() {
             let (id, p, base) = (d.ids[i], d.pending[i], d.base[i]);
             if p == 0 || skip.contains(&id) {
@@ -1449,12 +1521,15 @@ impl Coordinator {
                 let landed = self.kv.seq_len(id).unwrap_or(base) - base;
                 d.base[i] = base + landed;
                 d.pending[i] = p - landed;
+                self.tracer.exec_end(written + landed);
                 self.dsess = Some(d);
                 return Err(e);
             }
             d.base[i] += p;
             d.pending[i] = 0;
+            written += p;
         }
+        self.tracer.exec_end(written);
         Ok(())
     }
 
@@ -1497,6 +1572,7 @@ impl Coordinator {
             self.kv
                 .gather_into_batch(*id, s, bucket, i, &mut caches.k, &mut caches.v)?;
         }
+        self.tracer.set_context(ids);
         let out = self.engine.decode(self.path, &tokens, &pos, &caches)?;
         self.metrics.decode_step.record(t0.elapsed());
         let lrow = caches.l * row;
@@ -1575,6 +1651,8 @@ impl Coordinator {
             self.metrics
                 .requests_done
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.tracer
+                .req_finish(id, reason_label(reason), self.reqs[&id].generated.len());
             self.events.push(Event::Finished { id, reason });
             // Insert-on-finish: lease the sequence's full blocks into
             // the prefix cache before it releases them.  Granules

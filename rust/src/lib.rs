@@ -36,6 +36,7 @@ pub mod scheduler;
 pub mod server;
 pub mod simtraffic;
 pub mod tokenizer;
+pub mod trace;
 pub mod util;
 pub mod weights;
 

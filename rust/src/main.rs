@@ -37,6 +37,8 @@ COMMANDS:
                   --span-tokens N|auto (largest span tile; 0 = largest compiled)
                   --no-span-exec (token-by-token spans: one dispatch per token)
                   --no-span-batch (serial per-sequence spans: no [B, T] groups)
+                  --trace (record request lifecycles; export via trace.dump)
+                  --trace-ring N (completed requests the tracer retains)
   generate      one-shot generation from the CLI
                   --prompt \"text\" --max-new 32 --model tiny-serial
                   --path precompute|baseline --temperature 0 --top-k 0
@@ -48,6 +50,9 @@ COMMANDS:
                   --model mistral-7b --batches 1,16,256,1024
   selfcheck     verify artifacts: manifest, weights, table CRC, engine smoke
                   [--model tiny-serial]
+  trace-smoke   run a simtraffic burst with tracing on and dump the Chrome
+                trace-event JSON (load in Perfetto / chrome://tracing)
+                  --out trace.json [--model tiny-serial] [--requests N]
 ";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -144,6 +149,12 @@ fn serving_config(flags: &HashMap<String, String>) -> ServingConfig {
     if flags.contains_key("no-span-batch") {
         cfg.enable_span_batch = false;
     }
+    if flags.contains_key("trace") {
+        cfg.enable_trace = true;
+    }
+    if let Some(r) = flags.get("trace-ring") {
+        cfg.trace_ring = r.parse().unwrap_or(cfg.trace_ring);
+    }
     cfg
 }
 
@@ -158,6 +169,7 @@ fn main() {
         "paper-tables" => cmd_paper_tables(),
         "sweep" => cmd_sweep(&flags),
         "selfcheck" => cmd_selfcheck(&flags),
+        "trace-smoke" => cmd_trace_smoke(&flags),
         _ => {
             eprint!("{USAGE}");
             std::process::exit(2);
@@ -330,5 +342,44 @@ fn cmd_selfcheck(flags: &HashMap<String, String>) -> Result<()> {
         }
     }
     println!("[selfcheck] all OK");
+    Ok(())
+}
+
+/// Drive a simtraffic mixed workload through the coordinator with tracing
+/// on and write the Chrome trace-event dump — the one-command way to get
+/// a Perfetto-loadable timeline out of the stack (and what
+/// `scripts/trace_gate.sh` validates in CI).
+fn cmd_trace_smoke(flags: &HashMap<String, String>) -> Result<()> {
+    let mut cfg = serving_config(flags);
+    cfg.enable_trace = true;
+    if cfg.prefill_chunk_tokens == 0 {
+        cfg.prefill_chunk_tokens = 16;
+    }
+    let out = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "trace.json".to_string());
+    let n_short: usize = flags
+        .get("requests")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let mut c = Coordinator::from_config(&cfg)?;
+    let vocab = c.engine().config().vocab_size as u32;
+    let reqs = firstlayer::simtraffic::mixed_workload(n_short, 24, 2, 48, 8, vocab, 0x7AC3);
+    let n_reqs = reqs.len();
+    for r in reqs {
+        c.submit(r)?;
+    }
+    c.run_to_completion(10_000)?;
+    let tracer = c.tracer();
+    let dump = tracer.dump_chrome();
+    std::fs::write(&out, firstlayer::util::json::to_string(&dump))?;
+    println!(
+        "[trace-smoke] {n_reqs} requests traced ({} completed in ring, {} engine steps); \
+         wrote {out}",
+        tracer.completed_count(),
+        tracer.steps_count(),
+    );
+    println!("--- metrics ---\n{}", c.metrics.report());
     Ok(())
 }

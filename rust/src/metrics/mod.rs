@@ -66,6 +66,12 @@ impl Histogram {
     pub fn quantile(&self, q: f64) -> Duration {
         Duration::from_micros(self.inner.quantile(q))
     }
+
+    /// Sum of all recorded durations, in microseconds (Prometheus
+    /// summary `_sum`).
+    pub fn sum_us(&self) -> u64 {
+        self.inner.sum()
+    }
 }
 
 /// Log-bucketed histogram over unitless `u64` values (token counts and
@@ -109,6 +115,11 @@ impl ValueHistogram {
             return 0.0;
         }
         self.sum.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Sum of all recorded values (Prometheus summary `_sum`).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
     }
 
     /// Upper bound of the bucket containing the q-quantile.
@@ -286,6 +297,9 @@ pub struct Metrics {
     /// Request end-to-end latency and time-to-first-token.
     pub e2e: Histogram,
     pub ttft: Histogram,
+    /// Queue wait: submit → first scheduled prefill chunk (admission plus
+    /// head-of-line delay — the scheduler's contribution to TTFT).
+    pub queue_wait: Histogram,
 }
 
 impl Metrics {
@@ -353,6 +367,7 @@ impl Metrics {
             ("decode_step", &self.decode_step),
             ("prefill_step", &self.prefill_step),
             ("chunk_step", &self.chunk_step),
+            ("queue_wait", &self.queue_wait),
             ("ttft", &self.ttft),
             ("e2e", &self.e2e),
         ] {
@@ -368,6 +383,124 @@ impl Metrics {
         }
         s
     }
+
+    /// Prometheus text exposition (format v0.0.4) of every counter and
+    /// latency summary, for the v2 `metrics.prom` op.  Latency summaries
+    /// carry a `_us` suffix (microseconds); `transfers` is the runtime's
+    /// transfer snapshot so bus traffic lands alongside serving counters.
+    /// All metric names are prefixed `firstlayer_`.
+    pub fn prometheus(&self, transfers: &TransferSnapshot) -> String {
+        let mut s = String::new();
+        for (name, v) in [
+            ("requests_in", self.requests_in.load(Ordering::Relaxed)),
+            ("requests_done", self.requests_done.load(Ordering::Relaxed)),
+            (
+                "requests_rejected",
+                self.requests_rejected.load(Ordering::Relaxed),
+            ),
+            (
+                "requests_cancelled",
+                self.requests_cancelled.load(Ordering::Relaxed),
+            ),
+            ("tokens_out", self.tokens_out.load(Ordering::Relaxed)),
+            ("preemptions", self.preemptions.load(Ordering::Relaxed)),
+            ("prefill_chunks", self.prefill_chunks.load(Ordering::Relaxed)),
+            ("chat_turns", self.chat_turns.load(Ordering::Relaxed)),
+            (
+                "chat_reused_tokens",
+                self.chat_reused_tokens.load(Ordering::Relaxed),
+            ),
+            ("prefix_hits", self.prefix_hits.load(Ordering::Relaxed)),
+            ("prefix_misses", self.prefix_misses.load(Ordering::Relaxed)),
+            (
+                "prefix_evictions",
+                self.prefix_evictions.load(Ordering::Relaxed),
+            ),
+            (
+                "prefix_cached_tokens",
+                self.prefix_cached_tokens.load(Ordering::Relaxed),
+            ),
+            ("kv_sessions", self.kv_sessions.load(Ordering::Relaxed)),
+            (
+                "kv_session_steps",
+                self.kv_session_steps.load(Ordering::Relaxed),
+            ),
+            (
+                "kv_session_syncs",
+                self.kv_session_syncs.load(Ordering::Relaxed),
+            ),
+            ("span_executions", self.span_executions.load(Ordering::Relaxed)),
+            ("span_fallbacks", self.span_fallbacks.load(Ordering::Relaxed)),
+            (
+                "span_batched_executions",
+                self.span_batched_executions.load(Ordering::Relaxed),
+            ),
+            ("h2d_bytes", transfers.h2d_bytes),
+            ("d2h_bytes", transfers.d2h_bytes),
+            ("h2d_transfers", transfers.h2d_transfers),
+            ("d2h_transfers", transfers.d2h_transfers),
+            ("cache_h2d_bytes", transfers.cache_h2d_bytes),
+            ("cache_d2h_bytes", transfers.cache_d2h_bytes),
+            ("cache_uploads", transfers.cache_uploads),
+            ("cache_syncs", transfers.cache_syncs),
+        ] {
+            prom_counter(&mut s, name, v);
+        }
+        for (name, h) in [
+            ("decode_step_us", &self.decode_step),
+            ("prefill_step_us", &self.prefill_step),
+            ("chunk_step_us", &self.chunk_step),
+            ("queue_wait_us", &self.queue_wait),
+            ("ttft_us", &self.ttft),
+            ("e2e_us", &self.e2e),
+        ] {
+            prom_summary(
+                &mut s,
+                name,
+                h.count(),
+                h.sum_us(),
+                [
+                    (0.5, h.quantile(0.50).as_micros() as u64),
+                    (0.95, h.quantile(0.95).as_micros() as u64),
+                    (0.99, h.quantile(0.99).as_micros() as u64),
+                ],
+            );
+        }
+        for (name, h) in [
+            ("span_exec_tokens", &self.span_exec_tokens),
+            ("span_batch_occupancy", &self.span_batch_occupancy),
+            ("cached_tokens", &self.cached_tokens),
+        ] {
+            prom_summary(
+                &mut s,
+                name,
+                h.count(),
+                h.sum(),
+                [
+                    (0.5, h.quantile(0.50)),
+                    (0.95, h.quantile(0.95)),
+                    (0.99, h.quantile(0.99)),
+                ],
+            );
+        }
+        s
+    }
+}
+
+fn prom_counter(out: &mut String, name: &str, v: u64) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# TYPE firstlayer_{name} counter");
+    let _ = writeln!(out, "firstlayer_{name} {v}");
+}
+
+fn prom_summary(out: &mut String, name: &str, count: u64, sum: u64, quantiles: [(f64, u64); 3]) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# TYPE firstlayer_{name} summary");
+    for (q, v) in quantiles {
+        let _ = writeln!(out, "firstlayer_{name}{{quantile=\"{q}\"}} {v}");
+    }
+    let _ = writeln!(out, "firstlayer_{name}_sum {sum}");
+    let _ = writeln!(out, "firstlayer_{name}_count {count}");
 }
 
 #[cfg(test)]
@@ -506,6 +639,78 @@ mod tests {
     fn bucket_upper_covers_bucket_of() {
         for v in [1u64, 7, 63, 999, 123_456] {
             assert!(vbucket_upper(vbucket_of(v)) >= v);
+        }
+    }
+
+    #[test]
+    fn value_histogram_quantile_empty() {
+        let h = ValueHistogram::new();
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.quantile(1.0), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.sum(), 0);
+    }
+
+    #[test]
+    fn value_histogram_quantile_single_sample() {
+        let h = ValueHistogram::new();
+        h.record(100);
+        // With one sample, every quantile resolves to the one occupied
+        // bucket's upper bound, which must cover the sample.
+        let upper = h.quantile(0.5);
+        assert!(upper >= 100);
+        assert_eq!(h.quantile(0.01), upper);
+        assert_eq!(h.quantile(1.0), upper);
+        assert_eq!(h.sum(), 100);
+    }
+
+    #[test]
+    fn value_histogram_quantile_bucket_boundary() {
+        // Powers of two and the √2 midpoints are bucket edges: a value on
+        // an edge must land in a bucket whose upper bound covers it, and
+        // neighbors across an edge must land in different buckets.
+        for v in [1u64, 2, 3, 4, 6, 8, 1 << 20] {
+            let h = ValueHistogram::new();
+            h.record(v);
+            assert!(h.quantile(1.0) >= v, "v={v}");
+        }
+        assert_ne!(vbucket_of(2), vbucket_of(3));
+        assert_ne!(vbucket_of(3), vbucket_of(4));
+        // Top bucket clamps instead of overflowing.
+        assert_eq!(vbucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn report_contains_queue_wait() {
+        let m = Metrics::new();
+        m.queue_wait.record(Duration::from_micros(500));
+        assert!(m.report().contains("queue_wait"));
+    }
+
+    #[test]
+    fn prometheus_exposition_well_formed() {
+        let m = Metrics::new();
+        m.requests_in.fetch_add(2, Ordering::Relaxed);
+        m.ttft.record(Duration::from_millis(5));
+        m.queue_wait.record(Duration::from_micros(100));
+        let t = TransferStats::new();
+        t.record_h2d(100, 1);
+        let p = m.prometheus(&t.snapshot());
+        assert!(p.contains("firstlayer_requests_in 2"));
+        assert!(p.contains("# TYPE firstlayer_ttft_us summary"));
+        assert!(p.contains("firstlayer_ttft_us{quantile=\"0.99\"}"));
+        assert!(p.contains("firstlayer_ttft_us_count 1"));
+        assert!(p.contains("firstlayer_queue_wait_us_count 1"));
+        assert!(p.contains("firstlayer_h2d_bytes 100"));
+        // Every non-comment line is `name[{labels}] value` with a numeric
+        // value — the exposition-format contract scrapers rely on.
+        for line in p.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let val = line.rsplit(' ').next().unwrap();
+            assert!(val.parse::<f64>().is_ok(), "bad line: {line}");
         }
     }
 }

@@ -29,6 +29,7 @@ use crate::manifest::{ArtifactKind, Manifest, ModelEntry};
 use crate::metrics::TransferStats;
 use crate::precompute::{validate_table, Table};
 use crate::simtraffic::Recorder;
+use crate::trace::{Phase, SpanKind, Tracer};
 use crate::weights::WeightsFile;
 
 use super::{trace_enabled, DeviceCacheSession, Executable, HostTensor, Runtime};
@@ -576,6 +577,11 @@ impl ModelEngine {
         self.rt.transfers()
     }
 
+    /// The runtime's lifecycle tracer (see [`crate::trace`]).
+    pub fn tracer(&self) -> Arc<Tracer> {
+        self.rt.tracer()
+    }
+
     pub fn entry(&self) -> &ModelEntry {
         &self.entry
     }
@@ -746,6 +752,8 @@ impl ModelEngine {
         };
         let loaded = self.load_artifact(&name)?;
 
+        let tracer = self.rt.tracer();
+        tracer.exec_begin(SpanKind::DecodeStep, bucket, n);
         let mut data_bufs = self.decode_data_bufs(path, tokens, pos, bucket, pregathered)?;
         let t_up = std::time::Instant::now();
         data_bufs.push(self.rt.upload_f32(&caches.k, &caches.dims().to_vec())?);
@@ -771,6 +779,7 @@ impl ModelEngine {
         }
         let t_unpack = std::time::Instant::now();
         let res = self.unpack_decode(out, n, bucket, pos, caches);
+        tracer.exec_end(n);
         if trace_enabled() {
             eprintln!(
                 "[trace] decode {} B={n}/{bucket}: upload={up:?} exec+readback={exec:?} unpack={:?}",
@@ -816,7 +825,11 @@ impl ModelEngine {
                             n * w
                         )))
                     }
-                    None => self.table.gather(tokens, &mut rows[..n * w])?,
+                    None => {
+                        let t0 = self.rt.tracer().now();
+                        self.table.gather(tokens, &mut rows[..n * w])?;
+                        self.rt.tracer().phase_since(Phase::Gather, t0);
+                    }
                 }
                 data_bufs.push(self.rt.upload_f32(&rows, &[bucket, w])?);
             }
@@ -878,6 +891,8 @@ impl ModelEngine {
             StepPath::PrecomputeGather => format!("decode_precomp_gather_b{bucket}"),
         };
         let loaded = self.load_artifact(&name)?;
+        let tracer = self.rt.tracer();
+        tracer.exec_begin(SpanKind::DecodeStep, bucket, n);
         let data_bufs = self.decode_data_bufs(path, tokens, pos, bucket, pregathered)?;
         let mut args: Vec<&xla::PjRtBuffer> = data_bufs.iter().collect();
         let (kb, vb) = sess.cache_args();
@@ -914,6 +929,7 @@ impl ModelEngine {
             self.traffic.record_decode(cfg, path, n as u64);
         }
         sess.advance(k_buf, v_buf);
+        tracer.exec_end(n);
         if trace_enabled() {
             eprintln!(
                 "[trace] decode {} B={n}/{bucket} (session step {}): exec+logits={:?}",
@@ -1015,7 +1031,10 @@ impl ModelEngine {
             ));
         }
         let rows = if path == StepPath::Precompute {
-            Some(self.table.gather_vec(tokens)?)
+            let t0 = self.rt.tracer().now();
+            let r = self.table.gather_vec(tokens)?;
+            self.rt.tracer().phase_since(Phase::Gather, t0);
+            Some(r)
         } else {
             None
         };
@@ -1192,10 +1211,12 @@ impl ModelEngine {
         let mut logits = Vec::new();
         let mut exec_tokens = Vec::with_capacity(tiles.len());
         let mut done = 0usize;
+        let tracer = self.rt.tracer();
         for (ti, &(bucket, take)) in tiles.iter().enumerate() {
             let last = ti + 1 == tiles.len();
             let name = self.span_artifact_name(path, bucket);
             let loaded = self.load_artifact(&name)?;
+            tracer.exec_begin(SpanKind::SpanTile, bucket, 1);
             let tile_rows = rows.map(|r| &r[done * w..(done + take) * w]);
             let data = self.span_data_bufs(
                 path,
@@ -1242,6 +1263,7 @@ impl ModelEngine {
             }
             sess.advance(k_buf, v_buf);
             self.span_execs.fetch_add(1, Ordering::Relaxed);
+            tracer.exec_end(take);
             exec_tokens.push(take);
             done += take;
             if trace_enabled() {
@@ -1307,10 +1329,12 @@ impl ModelEngine {
         let mut logits = Vec::new();
         let mut exec_tokens = Vec::with_capacity(tiles.len());
         let mut done = 0usize;
+        let tracer = self.rt.tracer();
         for (ti, &(bucket, take)) in tiles.iter().enumerate() {
             let last = ti + 1 == tiles.len();
             let name = self.span_artifact_name(path, bucket);
             let loaded = self.load_artifact(&name)?;
+            tracer.exec_begin(SpanKind::SpanTile, bucket, 1);
             let tile_rows = rows.map(|r| &r[done * w..(done + take) * w]);
             let mut data = self.span_data_bufs(
                 path,
@@ -1343,6 +1367,7 @@ impl ModelEngine {
                 logits = la[(take - 1) * cfg.vocab_size..take * cfg.vocab_size].to_vec();
             }
             self.span_execs.fetch_add(1, Ordering::Relaxed);
+            tracer.exec_end(take);
             exec_tokens.push(take);
             done += take;
         }
@@ -1515,10 +1540,12 @@ impl ModelEngine {
             Error::Engine("span group: no tile plan fits the cache capacity".into())
         })?;
         let rows: Option<Vec<Vec<f32>>> = if path == StepPath::Precompute {
+            let t0 = self.rt.tracer().now();
             let mut v = Vec::with_capacity(nl);
             for l in lanes {
                 v.push(self.table.gather_vec(l.tokens)?);
             }
+            self.rt.tracer().phase_since(Phase::Gather, t0);
             Some(v)
         } else {
             None
@@ -1644,10 +1671,12 @@ impl ModelEngine {
             .collect();
         let mut occupancy = Vec::with_capacity(tiles.len());
         let mut done = 0usize;
+        let tracer = self.rt.tracer();
         for &(t, take) in tiles {
             let name = self.span_batch_artifact_name(path, batch, t);
             let loaded = self.load_artifact(&name)?;
             let (data, occ) = self.span_group_data_bufs(path, lanes, rows, batch, t, done)?;
+            tracer.exec_begin(SpanKind::GroupTile, t, occ);
             let mut args: Vec<&xla::PjRtBuffer> = data.iter().collect();
             let (kb, vb) = sess.cache_args();
             args.push(kb);
@@ -1705,6 +1734,11 @@ impl ModelEngine {
             sess.advance(k_buf, v_buf);
             self.span_execs.fetch_add(1, Ordering::Relaxed);
             self.span_batched_execs.fetch_add(1, Ordering::Relaxed);
+            let tile_tokens: usize = lanes
+                .iter()
+                .map(|l| l.tokens.len().saturating_sub(done).min(t))
+                .sum();
+            tracer.exec_end(tile_tokens);
             occupancy.push(occ);
             done += take;
             if trace_enabled() {
@@ -1750,11 +1784,13 @@ impl ModelEngine {
             .collect();
         let mut occupancy = Vec::with_capacity(tiles.len());
         let mut done = 0usize;
+        let tracer = self.rt.tracer();
         for &(t, take) in tiles {
             let name = self.span_batch_artifact_name(path, batch, t);
             let loaded = self.load_artifact(&name)?;
             let (mut data, occ) =
                 self.span_group_data_bufs(path, lanes, rows, batch, t, done)?;
+            tracer.exec_begin(SpanKind::GroupTile, t, occ);
             data.push(self.rt.upload_f32(&work.k, &work.dims().to_vec())?);
             data.push(self.rt.upload_f32(&work.v, &work.dims().to_vec())?);
             self.rt.transfers().record_cache_upload(pair_bytes);
@@ -1786,6 +1822,11 @@ impl ModelEngine {
             }
             self.span_execs.fetch_add(1, Ordering::Relaxed);
             self.span_batched_execs.fetch_add(1, Ordering::Relaxed);
+            let tile_tokens: usize = lanes
+                .iter()
+                .map(|l| l.tokens.len().saturating_sub(done).min(t))
+                .sum();
+            tracer.exec_end(tile_tokens);
             occupancy.push(occ);
             done += take;
         }
@@ -1822,6 +1863,8 @@ impl ModelEngine {
         };
         let loaded = self.load_artifact(&name)?;
         let spec = &loaded.exe.spec;
+        let tracer = self.rt.tracer();
+        tracer.exec_begin(SpanKind::PrefillChunk, t, n);
 
         let mut lens: Vec<i32> = prompts.iter().map(|p| p.len() as i32).collect();
         // Padding sequences must still have len >= 1 to keep the masked
@@ -1843,10 +1886,12 @@ impl ModelEngine {
             _ => {
                 let w = self.table.row_width();
                 let mut rows = vec![0f32; b * t * w];
+                let tg = tracer.now();
                 for (i, p) in prompts.iter().enumerate() {
                     self.table
                         .gather(p, &mut rows[i * t * w..(i * t + p.len()) * w])?;
                 }
+                tracer.phase_since(Phase::Gather, tg);
                 data_bufs.push(self.rt.upload_f32(&rows, &[b, t, w])?);
             }
         }
@@ -1857,6 +1902,7 @@ impl ModelEngine {
         }
         let out = loaded.exe.execute_host(&args)?;
         let total_tokens: u64 = prompts.iter().map(|p| p.len() as u64).sum();
+        tracer.exec_end(total_tokens as usize);
         self.traffic.record_prefill(cfg, path, total_tokens);
 
         let s = spec

@@ -23,6 +23,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::error::{Error, Result};
 use crate::manifest::{ArtifactSpec, DType, IoSpec};
 use crate::metrics::TransferStats;
+use crate::trace::{Phase, Tracer};
 
 /// Cached `FIRSTLAYER_TRACE` lookup — the env var cannot change mid-run,
 /// so it is read once per process instead of once per decode step /
@@ -41,6 +42,8 @@ pub struct Runtime {
     /// Host↔device transfer accounting (uploads here, readbacks in
     /// [`Executable`] and [`DeviceCacheSession`]).
     transfers: Arc<TransferStats>,
+    /// Lifecycle/phase tracer (disabled by default; see [`crate::trace`]).
+    tracer: Arc<Tracer>,
 }
 
 impl Runtime {
@@ -49,6 +52,7 @@ impl Runtime {
             client: Arc::new(xla::PjRtClient::cpu()?),
             cache: Arc::new(Mutex::new(HashMap::new())),
             transfers: Arc::new(TransferStats::new()),
+            tracer: Arc::new(Tracer::new()),
         })
     }
 
@@ -63,6 +67,11 @@ impl Runtime {
     /// The runtime's transfer counters (shared with every clone).
     pub fn transfers(&self) -> Arc<TransferStats> {
         self.transfers.clone()
+    }
+
+    /// The runtime's lifecycle tracer (shared with every clone).
+    pub fn tracer(&self) -> Arc<Tracer> {
+        self.tracer.clone()
     }
 
     /// Load + compile an HLO text artifact (cached by path).
@@ -81,6 +90,7 @@ impl Runtime {
             exe,
             spec,
             stats: self.transfers.clone(),
+            tracer: self.tracer.clone(),
         });
         self.cache
             .lock()
@@ -92,13 +102,19 @@ impl Runtime {
     /// Upload a host f32 tensor to the device.
     pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
         self.transfers.record_h2d(data.len() as u64 * 4, 1);
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+        let t0 = self.tracer.now();
+        let buf = self.client.buffer_from_host_buffer(data, dims, None)?;
+        self.tracer.phase_since(Phase::H2d, t0);
+        Ok(buf)
     }
 
     /// Upload a host i32 tensor to the device.
     pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
         self.transfers.record_h2d(data.len() as u64 * 4, 1);
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+        let t0 = self.tracer.now();
+        let buf = self.client.buffer_from_host_buffer(data, dims, None)?;
+        self.tracer.phase_since(Phase::H2d, t0);
+        Ok(buf)
     }
 }
 
@@ -138,6 +154,7 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     pub spec: ArtifactSpec,
     stats: Arc<TransferStats>,
+    tracer: Arc<Tracer>,
 }
 
 impl Executable {
@@ -147,7 +164,9 @@ impl Executable {
         &self,
         args: &[&xla::PjRtBuffer],
     ) -> Result<Vec<xla::PjRtBuffer>> {
+        let t0 = self.tracer.now();
         let out = self.exe.execute_b(args)?;
+        self.tracer.phase_since(Phase::Exec, t0);
         let row = out
             .into_iter()
             .next()
@@ -185,13 +204,16 @@ impl Executable {
             .outputs
             .get(idx)
             .ok_or_else(|| Error::Engine(format!("{}: no output {idx}", self.spec.name)))?;
+        let t0 = self.tracer.now();
         let lit = buf.to_literal_sync()?;
         let out = host_tensor(&lit, io)?;
+        self.tracer.phase_since(Phase::Readback, t0);
         self.stats.record_d2h(out.len() as u64 * 4, 1);
         Ok(out)
     }
 
     fn read_back(&self, bufs: Vec<xla::PjRtBuffer>) -> Result<Vec<HostTensor>> {
+        let tr0 = self.tracer.now();
         let n_out = self.spec.outputs.len();
         let tupled = bufs.len() == 1
             && bufs[0]
@@ -229,6 +251,7 @@ impl Executable {
             .collect::<Result<_>>()?;
         let bytes: u64 = out.iter().map(|t| t.len() as u64 * 4).sum();
         self.stats.record_d2h(bytes, out.len() as u64);
+        self.tracer.phase_since(Phase::Readback, tr0);
         Ok(out)
     }
 }

@@ -29,6 +29,7 @@ use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::metrics::TransferStats;
+use crate::trace::{Phase, Tracer};
 
 use super::{CacheBatch, Runtime};
 
@@ -42,6 +43,7 @@ pub struct DeviceCacheSession {
     /// Chained steps executed since `begin` (diagnostics).
     steps: u64,
     stats: Arc<TransferStats>,
+    tracer: Arc<Tracer>,
 }
 
 impl DeviceCacheSession {
@@ -60,6 +62,7 @@ impl DeviceCacheSession {
             dims,
             steps: 0,
             stats,
+            tracer: rt.tracer(),
         })
     }
 
@@ -111,8 +114,10 @@ impl DeviceCacheSession {
             }
             Ok(v)
         };
+        let t0 = self.tracer.now();
         let kc = read(&self.k)?;
         let vc = read(&self.v)?;
+        self.tracer.phase_since(Phase::Sync, t0);
         let bytes = 2 * elems as u64 * 4;
         self.stats.record_d2h(bytes, 2);
         self.stats.record_cache_sync(bytes);

@@ -30,8 +30,19 @@
 //! → {"op":"chat.close","conv":1}     ← {"event":"chat.closed","conv":1}
 //!
 //! → {"op":"metrics"}   ← {"event":"metrics","report":"…", …structured
-//!                         prefix_*/kv_*/chat_*/requests_cancelled fields}
+//!                         prefix_*/kv_*/chat_*/requests_cancelled fields
+//!                         plus ttft/e2e/queue_wait p50/p95/p99 in µs}
 //! → {"op":"traffic"}   ← {"event":"traffic", …counters…}
+//! → {"op":"trace.dump"}   ← {"event":"trace","enabled":true,
+//!                            "trace":{…Chrome trace-event JSON…}}
+//! → {"op":"metrics.prom"} ← {"event":"prom","text":"…Prometheus text…"}
+//! → {"op":"metrics.stream","tag":"m","interval_ms":500}
+//!                      ← {"event":"ok","op":"metrics.stream","tag":"m"},
+//!                        then periodic {"event":"metrics.delta","tag":"m",
+//!                        "seq":0,"d_tokens_out":…,"ttft_p99_us":…} until
+//! → {"op":"metrics.stream","stop":true,"tag":"m"}
+//!                      ← {"event":"ok",…} then terminal
+//!                        {"event":"metrics.end","tag":"m","pushes":N}
 //! → {"op":"path","value":"baseline"|"precompute"}  ← {"event":"ok"}
 //! → {"op":"ping"}      ← {"event":"pong"}
 //! ```
@@ -53,7 +64,7 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -116,6 +127,7 @@ struct EngineHandles {
     traffic: Arc<crate::simtraffic::Recorder>,
     tokenizer: Arc<crate::tokenizer::Tokenizer>,
     transfers: Arc<crate::metrics::TransferStats>,
+    tracer: Arc<crate::trace::Tracer>,
 }
 
 impl Server {
@@ -142,6 +154,7 @@ impl Server {
                         traffic: c.engine().traffic.clone(),
                         tokenizer: c.tokenizer.clone(),
                         transfers: c.engine().transfers(),
+                        tracer: c.tracer(),
                     }));
                     c
                 }
@@ -163,10 +176,12 @@ impl Server {
             let traffic = handles.traffic.clone();
             let tokenizer = handles.tokenizer.clone();
             let transfers = handles.transfers.clone();
+            let tracer = handles.tracer.clone();
             let conn = conn_ids.fetch_add(1, Ordering::Relaxed);
             std::thread::spawn(move || {
-                let _ =
-                    handle_conn(stream, tx, metrics, traffic, tokenizer, transfers, conn);
+                let _ = handle_conn(
+                    stream, tx, metrics, traffic, tokenizer, transfers, tracer, conn,
+                );
             });
         }
         Ok(())
@@ -430,10 +445,15 @@ fn handle_conn(
     traffic: Arc<crate::simtraffic::Recorder>,
     tokenizer: Arc<crate::tokenizer::Tokenizer>,
     transfers: Arc<crate::metrics::TransferStats>,
+    tracer: Arc<crate::trace::Tracer>,
     conn: u64,
 ) -> Result<()> {
     let reader = BufReader::new(stream.try_clone()?);
     let out = Arc::new(Mutex::new(stream));
+    // Live `metrics.stream` subscriptions on this connection: tag ->
+    // stop flag (stores are the only cross-thread signal the pusher
+    // threads need).
+    let mut streams: HashMap<String, Arc<AtomicBool>> = HashMap::new();
     // The multiplexed path: tagged requests stream through this channel
     // and the writer thread, so the reader below can keep accepting ops.
     let (atx, arx) = channel::<TaggedEvent>();
@@ -534,8 +554,136 @@ fn handle_conn(
                         "chat_reused_tokens",
                         n(metrics.chat_reused_tokens.load(Relaxed) as f64),
                     ),
+                    // Request-level latency quantiles in µs — p99
+                    // included so dashboards gate the tail, not just
+                    // the middle of the distribution.
+                    (
+                        "ttft_p50_us",
+                        n(metrics.ttft.quantile(0.50).as_micros() as f64),
+                    ),
+                    (
+                        "ttft_p95_us",
+                        n(metrics.ttft.quantile(0.95).as_micros() as f64),
+                    ),
+                    (
+                        "ttft_p99_us",
+                        n(metrics.ttft.quantile(0.99).as_micros() as f64),
+                    ),
+                    (
+                        "e2e_p50_us",
+                        n(metrics.e2e.quantile(0.50).as_micros() as f64),
+                    ),
+                    (
+                        "e2e_p95_us",
+                        n(metrics.e2e.quantile(0.95).as_micros() as f64),
+                    ),
+                    (
+                        "e2e_p99_us",
+                        n(metrics.e2e.quantile(0.99).as_micros() as f64),
+                    ),
+                    (
+                        "queue_wait_p50_us",
+                        n(metrics.queue_wait.quantile(0.50).as_micros() as f64),
+                    ),
+                    (
+                        "queue_wait_p95_us",
+                        n(metrics.queue_wait.quantile(0.95).as_micros() as f64),
+                    ),
+                    (
+                        "queue_wait_p99_us",
+                        n(metrics.queue_wait.quantile(0.99).as_micros() as f64),
+                    ),
                 ];
                 push_tag(&mut fields, &tag);
+                send(&out, &obj(fields))?;
+            }
+            Some("trace.dump") => {
+                // The tracer holds its lock only while cloning the span
+                // trees; serialization happens here, off the engine
+                // thread.
+                let mut fields = vec![
+                    ("event", s("trace")),
+                    ("enabled", Value::Bool(tracer.enabled())),
+                    ("trace", tracer.dump_chrome()),
+                ];
+                push_tag(&mut fields, &tag);
+                send(&out, &obj(fields))?;
+            }
+            Some("metrics.prom") => {
+                let mut fields = vec![
+                    ("event", s("prom")),
+                    ("text", s(metrics.prometheus(&transfers.snapshot()))),
+                ];
+                push_tag(&mut fields, &tag);
+                send(&out, &obj(fields))?;
+            }
+            Some("metrics.stream") => {
+                let Some(t) = tag.clone() else {
+                    send(
+                        &out,
+                        &err_line(
+                            Some("metrics.stream"),
+                            &None,
+                            "metrics.stream needs a tag".into(),
+                        ),
+                    )?;
+                    continue;
+                };
+                if req.get_opt("stop").and_then(|v| v.as_bool()).unwrap_or(false) {
+                    match streams.remove(&t) {
+                        Some(flag) => {
+                            flag.store(true, Ordering::Relaxed);
+                            let fields = vec![
+                                ("event", s("ok")),
+                                ("op", s("metrics.stream")),
+                                ("tag", s(t)),
+                            ];
+                            send(&out, &obj(fields))?;
+                        }
+                        None => send(
+                            &out,
+                            &err_line(
+                                Some("metrics.stream"),
+                                &tag,
+                                format!("no metric stream tagged `{t}`"),
+                            ),
+                        )?,
+                    }
+                    continue;
+                }
+                if streams.contains_key(&t) {
+                    send(
+                        &out,
+                        &err_line(
+                            Some("metrics.stream"),
+                            &tag,
+                            format!("metric stream `{t}` already running"),
+                        ),
+                    )?;
+                    continue;
+                }
+                let interval = Duration::from_millis(
+                    req.get_opt("interval_ms")
+                        .and_then(|v| v.as_u64())
+                        .unwrap_or(1000)
+                        .clamp(20, 60_000),
+                );
+                let flag = Arc::new(AtomicBool::new(false));
+                streams.insert(t.clone(), flag.clone());
+                {
+                    let out = Arc::clone(&out);
+                    let metrics = Arc::clone(&metrics);
+                    let transfers = Arc::clone(&transfers);
+                    let t = t.clone();
+                    std::thread::spawn(move || {
+                        metrics_pusher(out, metrics, transfers, t, interval, flag)
+                    });
+                }
+                let fields = vec![
+                    ("event", s("ok")),
+                    ("op", s("metrics.stream")),
+                    ("tag", s(t)),
+                ];
                 send(&out, &obj(fields))?;
             }
             Some("traffic") => {
@@ -678,7 +826,119 @@ fn handle_conn(
             }
         }
     }
+    // Reader gone (client hung up): stop any live metric streams so
+    // their pusher threads exit instead of spinning on a dead socket.
+    for flag in streams.values() {
+        flag.store(true, Ordering::Relaxed);
+    }
     Ok(())
+}
+
+/// Cumulative counter base for `metrics.stream` deltas.
+struct DeltaBase {
+    requests_done: u64,
+    tokens_out: u64,
+    span_executions: u64,
+    span_fallbacks: u64,
+    prefix_evictions: u64,
+    preemptions: u64,
+    transfers: crate::metrics::TransferSnapshot,
+}
+
+fn delta_base(m: &crate::metrics::Metrics, t: &crate::metrics::TransferStats) -> DeltaBase {
+    use std::sync::atomic::Ordering::Relaxed;
+    DeltaBase {
+        requests_done: m.requests_done.load(Relaxed),
+        tokens_out: m.tokens_out.load(Relaxed),
+        span_executions: m.span_executions.load(Relaxed),
+        span_fallbacks: m.span_fallbacks.load(Relaxed),
+        prefix_evictions: m.prefix_evictions.load(Relaxed),
+        preemptions: m.preemptions.load(Relaxed),
+        transfers: t.snapshot(),
+    }
+}
+
+/// One `metrics.stream` subscription: pushes a tagged `metrics.delta`
+/// event every `interval` until the stop flag is set (explicit
+/// `{"op":"metrics.stream","stop":true,…}` or connection teardown) or
+/// the client hangs up.  Counter fields are deltas since the previous
+/// push (`d_` prefix); latency quantiles are cumulative — the
+/// log-bucketed histograms cannot be differenced.
+fn metrics_pusher(
+    out: Arc<Mutex<TcpStream>>,
+    metrics: Arc<crate::metrics::Metrics>,
+    transfers: Arc<crate::metrics::TransferStats>,
+    tag: String,
+    interval: Duration,
+    stop: Arc<AtomicBool>,
+) {
+    let mut prev = delta_base(&metrics, &transfers);
+    let mut seq = 0u64;
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(interval);
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let curr = delta_base(&metrics, &transfers);
+        let dt = curr.transfers.since(&prev.transfers);
+        let us = |h: &crate::metrics::Histogram, q: f64| n(h.quantile(q).as_micros() as f64);
+        let fields = vec![
+            ("event", s("metrics.delta")),
+            ("tag", s(tag.clone())),
+            ("seq", n(seq as f64)),
+            (
+                "d_requests_done",
+                n((curr.requests_done - prev.requests_done) as f64),
+            ),
+            ("d_tokens_out", n((curr.tokens_out - prev.tokens_out) as f64)),
+            (
+                "d_span_executions",
+                n((curr.span_executions - prev.span_executions) as f64),
+            ),
+            (
+                "d_span_fallbacks",
+                n((curr.span_fallbacks - prev.span_fallbacks) as f64),
+            ),
+            (
+                "d_prefix_evictions",
+                n((curr.prefix_evictions - prev.prefix_evictions) as f64),
+            ),
+            (
+                "d_preemptions",
+                n((curr.preemptions - prev.preemptions) as f64),
+            ),
+            ("d_h2d_bytes", n(dt.h2d_bytes as f64)),
+            ("d_d2h_bytes", n(dt.d2h_bytes as f64)),
+            ("d_kv_h2d_bytes", n(dt.cache_h2d_bytes as f64)),
+            ("d_kv_d2h_bytes", n(dt.cache_d2h_bytes as f64)),
+            ("ttft_p50_us", us(&metrics.ttft, 0.50)),
+            ("ttft_p95_us", us(&metrics.ttft, 0.95)),
+            ("ttft_p99_us", us(&metrics.ttft, 0.99)),
+            ("e2e_p50_us", us(&metrics.e2e, 0.50)),
+            ("e2e_p95_us", us(&metrics.e2e, 0.95)),
+            ("e2e_p99_us", us(&metrics.e2e, 0.99)),
+            ("queue_wait_p50_us", us(&metrics.queue_wait, 0.50)),
+            ("queue_wait_p95_us", us(&metrics.queue_wait, 0.95)),
+            ("queue_wait_p99_us", us(&metrics.queue_wait, 0.99)),
+            (
+                "span_batch_occupancy_mean",
+                n(metrics.span_batch_occupancy.mean()),
+            ),
+        ];
+        if send(&out, &obj(fields)).is_err() {
+            return; // client gone; no terminal event possible
+        }
+        prev = curr;
+        seq += 1;
+    }
+    let _ = send(
+        &out,
+        &obj(vec![
+            ("event", s("metrics.end")),
+            ("tag", s(tag)),
+            ("pushes", n(seq as f64)),
+        ]),
+    );
 }
 
 /// Route a typed request.  Admission is resolved synchronously (the

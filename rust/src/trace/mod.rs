@@ -1,0 +1,826 @@
+//! Request-lifecycle tracing: per-request span trees and per-engine-step
+//! timelines with per-phase timings, exported as Chrome trace-event JSON.
+//!
+//! The tracer is a **pure observer**: every recording method early-returns
+//! on a single relaxed atomic load when tracing is disabled, so the serving
+//! paths pay one branch and nothing else (`ServingConfig::enable_trace`
+//! defaults to off). A temp-0 on/off property test in
+//! `rust/tests/integration.rs` holds this to account: token streams, step
+//! plans, and schedule counters are identical either way.
+//!
+//! # Model
+//!
+//! Two views of the same executions:
+//!
+//! - **Request view** (`RequestTrace`): submit → queue → first scheduled
+//!   chunk → each execution span the request participated in (prefill
+//!   chunk, span tile, group tile, decode step, session sync) → first
+//!   token → finish/cancel. Completed requests live in a bounded ring
+//!   (`trace_ring` newest, older entries dropped and counted).
+//! - **Engine view** (`EngineStep`): one record per device-side execution
+//!   window on the engine thread, with the participating request ids,
+//!   compile bucket, lane occupancy, and a [`Phases`] breakdown (table
+//!   row-gather, H2D upload, execute, logits readback, pair sync).
+//!
+//! # Attribution
+//!
+//! The engine does not know request ids; the coordinator calls
+//! [`Tracer::set_context`] with the participating ids before every engine
+//! call, and the engine opens/closes execution windows with
+//! [`Tracer::exec_begin`] / [`Tracer::exec_end`]. Phase timings recorded
+//! while no window is open (e.g. the table row-gather that precedes the
+//! first span tile) accumulate as *pending* and are absorbed into the next
+//! window, which is backdated by their total so the invariant
+//! `sum(phases) <= span duration` holds for every emitted span.
+//!
+//! All writers run on the engine thread; server connection threads only
+//! take the mutex briefly to snapshot for `trace.dump`, keeping the
+//! buffer lock-light.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::{n, obj, s, Value};
+
+/// What kind of execution window a span records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One chunked-prefill execution (possibly batched across requests).
+    PrefillChunk,
+    /// One single-sequence span-artifact tile.
+    SpanTile,
+    /// One multi-sequence `[B, T]` span-group tile.
+    GroupTile,
+    /// One dense per-token decode execution.
+    DecodeStep,
+    /// A session KV readback/recompute window (pair sync).
+    Sync,
+}
+
+impl SpanKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::PrefillChunk => "prefill_chunk",
+            SpanKind::SpanTile => "span_tile",
+            SpanKind::GroupTile => "group_tile",
+            SpanKind::DecodeStep => "decode_step",
+            SpanKind::Sync => "sync",
+        }
+    }
+}
+
+/// Engine phase a timing sample belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Precompute-table row gather on the host.
+    Gather,
+    /// Host-to-device uploads (inputs, cache pairs).
+    H2d,
+    /// Device execution (PJRT execute).
+    Exec,
+    /// Device-to-host readback (logits, fresh rows).
+    Readback,
+    /// Full cache-pair sync readback.
+    Sync,
+}
+
+/// Per-phase microsecond totals inside one execution window.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Phases {
+    pub gather_us: u64,
+    pub h2d_us: u64,
+    pub exec_us: u64,
+    pub readback_us: u64,
+    pub sync_us: u64,
+}
+
+impl Phases {
+    fn add(&mut self, p: Phase, us: u64) {
+        match p {
+            Phase::Gather => self.gather_us += us,
+            Phase::H2d => self.h2d_us += us,
+            Phase::Exec => self.exec_us += us,
+            Phase::Readback => self.readback_us += us,
+            Phase::Sync => self.sync_us += us,
+        }
+    }
+
+    pub fn total_us(&self) -> u64 {
+        self.gather_us + self.h2d_us + self.exec_us + self.readback_us + self.sync_us
+    }
+
+    fn is_zero(&self) -> bool {
+        self.total_us() == 0
+    }
+
+    fn args(&self, out: &mut Vec<(&'static str, Value)>) {
+        out.push(("gather_us", n(self.gather_us as f64)));
+        out.push(("h2d_us", n(self.h2d_us as f64)));
+        out.push(("exec_us", n(self.exec_us as f64)));
+        out.push(("readback_us", n(self.readback_us as f64)));
+        out.push(("sync_us", n(self.sync_us as f64)));
+    }
+}
+
+/// One execution window as seen from a single request's span tree.
+#[derive(Debug, Clone)]
+pub struct ExecSpan {
+    pub kind: SpanKind,
+    /// Microseconds since the tracer epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Tokens this execution advanced (across all participants).
+    pub tokens: u64,
+    /// Compile bucket (span length T, or 0 where not applicable).
+    pub bucket: u64,
+    /// Active lanes for group tiles (0 where not applicable).
+    pub occupancy: u64,
+    pub phases: Phases,
+}
+
+/// A point event on a request's timeline (preempt, prefix hit, …).
+#[derive(Debug, Clone)]
+pub struct MarkRec {
+    pub name: &'static str,
+    pub at_us: u64,
+    pub value: u64,
+}
+
+/// The full recorded lifecycle of one request.
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    pub id: u64,
+    pub submit_us: u64,
+    /// Set when the request's first prefill chunk is scheduled.
+    pub first_sched_us: Option<u64>,
+    pub first_token_us: Option<u64>,
+    pub finish_us: Option<u64>,
+    pub finish_reason: Option<&'static str>,
+    pub prompt_tokens: u64,
+    pub generated: u64,
+    pub spans: Vec<ExecSpan>,
+    pub marks: Vec<MarkRec>,
+}
+
+/// One execution window as seen from the engine timeline.
+#[derive(Debug, Clone)]
+pub struct EngineStep {
+    pub kind: SpanKind,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Participating request ids (empty for warmup/untracked work).
+    pub ids: Vec<u64>,
+    pub bucket: u64,
+    pub occupancy: u64,
+    pub tokens: u64,
+    pub phases: Phases,
+}
+
+struct CurExec {
+    kind: SpanKind,
+    start_us: u64,
+    bucket: u64,
+    occupancy: u64,
+    ids: Vec<u64>,
+    phases: Phases,
+}
+
+#[derive(Default)]
+struct Inner {
+    live: HashMap<u64, RequestTrace>,
+    done: VecDeque<RequestTrace>,
+    steps: VecDeque<EngineStep>,
+    globals: VecDeque<MarkRec>,
+    /// Request ids participating in the next engine execution.
+    ctx: Vec<u64>,
+    cur: Option<CurExec>,
+    /// Phase time recorded outside any execution window; absorbed (and
+    /// the window backdated) by the next `exec_begin`.
+    pending: Phases,
+}
+
+/// How many engine steps / global marks to retain per ring slot.
+const STEPS_PER_SLOT: usize = 16;
+const GLOBALS_PER_SLOT: usize = 4;
+
+/// Lock-light lifecycle tracer. One instance per [`crate::runtime::Runtime`],
+/// shared by engine, coordinator, and server handles.
+pub struct Tracer {
+    enabled: AtomicBool,
+    ring: AtomicUsize,
+    epoch: Instant,
+    dropped: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Tracer {
+            enabled: AtomicBool::new(false),
+            ring: AtomicUsize::new(256),
+            epoch: Instant::now(),
+            dropped: AtomicU64::new(0),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Turn tracing on/off and set the completed-request ring capacity.
+    pub fn configure(&self, enabled: bool, ring: usize) {
+        self.ring.store(ring.max(1), Ordering::Relaxed);
+        self.enabled.store(enabled, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Completed-request ring entries evicted so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Start a phase timer: `Some(Instant)` when tracing, `None` (free)
+    /// otherwise. Pair with [`Tracer::phase_since`].
+    #[inline]
+    pub fn now(&self) -> Option<Instant> {
+        if self.enabled() {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Record elapsed time since `t0` under phase `p`. No-op off-trace.
+    #[inline]
+    pub fn phase_since(&self, p: Phase, t0: Option<Instant>) {
+        if let Some(t) = t0 {
+            self.phase(p, t.elapsed());
+        }
+    }
+
+    /// Record a phase duration into the open execution window, or into
+    /// the pending pool if none is open.
+    pub fn phase(&self, p: Phase, d: Duration) {
+        if !self.enabled() {
+            return;
+        }
+        let us = d.as_micros() as u64;
+        let mut g = self.inner.lock().unwrap();
+        match g.cur.as_mut() {
+            Some(cur) => cur.phases.add(p, us),
+            None => g.pending.add(p, us),
+        }
+    }
+
+    // ---- request lifecycle (coordinator side) --------------------------
+
+    pub fn req_submit(&self, id: u64, prompt_tokens: usize) {
+        if !self.enabled() {
+            return;
+        }
+        let at = self.now_us();
+        let mut g = self.inner.lock().unwrap();
+        g.live.insert(
+            id,
+            RequestTrace {
+                id,
+                submit_us: at,
+                first_sched_us: None,
+                first_token_us: None,
+                finish_us: None,
+                finish_reason: None,
+                prompt_tokens: prompt_tokens as u64,
+                generated: 0,
+                spans: Vec::new(),
+                marks: Vec::new(),
+            },
+        );
+    }
+
+    pub fn req_first_sched(&self, id: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let at = self.now_us();
+        let mut g = self.inner.lock().unwrap();
+        if let Some(r) = g.live.get_mut(&id) {
+            if r.first_sched_us.is_none() {
+                r.first_sched_us = Some(at);
+            }
+        }
+    }
+
+    pub fn req_first_token(&self, id: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let at = self.now_us();
+        let mut g = self.inner.lock().unwrap();
+        if let Some(r) = g.live.get_mut(&id) {
+            if r.first_token_us.is_none() {
+                r.first_token_us = Some(at);
+            }
+        }
+    }
+
+    /// Point event on one request's track (`preempt`, `prefix_hit`, …).
+    pub fn req_mark(&self, id: u64, name: &'static str, value: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let at = self.now_us();
+        let mut g = self.inner.lock().unwrap();
+        if let Some(r) = g.live.get_mut(&id) {
+            r.marks.push(MarkRec { name, at_us: at, value });
+        }
+    }
+
+    /// Point event on the engine track (`prefix_evict`, …).
+    pub fn global_mark(&self, name: &'static str, value: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let at = self.now_us();
+        let mut g = self.inner.lock().unwrap();
+        let cap = self.ring.load(Ordering::Relaxed) * GLOBALS_PER_SLOT;
+        g.globals.push_back(MarkRec { name, at_us: at, value });
+        while g.globals.len() > cap {
+            g.globals.pop_front();
+        }
+    }
+
+    /// Move a request from the live map into the completed ring.
+    pub fn req_finish(&self, id: u64, reason: &'static str, generated: usize) {
+        if !self.enabled() {
+            return;
+        }
+        let at = self.now_us();
+        let mut g = self.inner.lock().unwrap();
+        let Some(mut r) = g.live.remove(&id) else {
+            return;
+        };
+        r.finish_us = Some(at);
+        r.finish_reason = Some(reason);
+        r.generated = generated as u64;
+        let cap = self.ring.load(Ordering::Relaxed);
+        g.done.push_back(r);
+        while g.done.len() > cap {
+            g.done.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    // ---- execution windows (engine side) -------------------------------
+
+    /// Set the request ids participating in subsequent engine executions.
+    pub fn set_context(&self, ids: &[u64]) {
+        if !self.enabled() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.ctx.clear();
+        g.ctx.extend_from_slice(ids);
+    }
+
+    /// Open an execution window. Pending phase time recorded since the
+    /// last window is absorbed and the start backdated by its total.
+    pub fn exec_begin(&self, kind: SpanKind, bucket: usize, occupancy: usize) {
+        if !self.enabled() {
+            return;
+        }
+        let at = self.now_us();
+        let mut g = self.inner.lock().unwrap();
+        if g.cur.is_some() {
+            // Defensive: a window left open (error path) — close it empty.
+            Self::finish_exec(&mut g, &self.ring, 0, self.now_us());
+        }
+        let pending = std::mem::take(&mut g.pending);
+        let ids = g.ctx.clone();
+        g.cur = Some(CurExec {
+            kind,
+            start_us: at.saturating_sub(pending.total_us()),
+            bucket: bucket as u64,
+            occupancy: occupancy as u64,
+            ids,
+            phases: pending,
+        });
+    }
+
+    /// Close the open execution window, crediting `tokens` advanced.
+    pub fn exec_end(&self, tokens: usize) {
+        if !self.enabled() {
+            return;
+        }
+        let end_us = self.now_us();
+        let mut g = self.inner.lock().unwrap();
+        Self::finish_exec(&mut g, &self.ring, tokens as u64, end_us);
+    }
+
+    fn finish_exec(g: &mut Inner, ring: &AtomicUsize, tokens: u64, end_us: u64) {
+        let Some(cur) = g.cur.take() else {
+            return;
+        };
+        let dur_us = end_us.saturating_sub(cur.start_us).max(1);
+        let span = ExecSpan {
+            kind: cur.kind,
+            start_us: cur.start_us,
+            dur_us,
+            tokens,
+            bucket: cur.bucket,
+            occupancy: cur.occupancy,
+            phases: cur.phases,
+        };
+        for id in &cur.ids {
+            if let Some(r) = g.live.get_mut(id) {
+                r.spans.push(span.clone());
+            }
+        }
+        let cap = ring.load(Ordering::Relaxed) * STEPS_PER_SLOT;
+        g.steps.push_back(EngineStep {
+            kind: cur.kind,
+            start_us: cur.start_us,
+            dur_us,
+            ids: cur.ids,
+            bucket: cur.bucket,
+            occupancy: cur.occupancy,
+            tokens,
+            phases: cur.phases,
+        });
+        while g.steps.len() > cap {
+            g.steps.pop_front();
+        }
+        // Phase time that belonged to this window but was recorded after
+        // the execute returned is already in; anything later is pending.
+    }
+
+    // ---- snapshots -----------------------------------------------------
+
+    /// Clone of the completed-request ring (oldest first). Test/validator
+    /// surface; `trace.dump` uses [`Tracer::dump_chrome`].
+    pub fn completed(&self) -> Vec<RequestTrace> {
+        let g = self.inner.lock().unwrap();
+        g.done.iter().cloned().collect()
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.inner.lock().unwrap().live.len()
+    }
+
+    pub fn completed_count(&self) -> usize {
+        self.inner.lock().unwrap().done.len()
+    }
+
+    pub fn steps_count(&self) -> usize {
+        self.inner.lock().unwrap().steps.len()
+    }
+
+    /// Build a Chrome trace-event JSON document (Perfetto-loadable).
+    ///
+    /// Track layout: `pid 1` = requests (one `tid` per request id, request
+    /// + queue + execution spans and instant marks), `pid 2` = engine
+    /// (`tid 1`, one complete span per execution window, args carrying
+    /// ids/bucket/occupancy and the phase breakdown).
+    pub fn dump_chrome(&self) -> Value {
+        let g = self.inner.lock().unwrap();
+        let now = self.now_us();
+        let mut ev: Vec<Value> = Vec::new();
+        ev.push(meta_event(1, "requests"));
+        ev.push(meta_event(2, "engine"));
+        for r in g.done.iter().chain(g.live.values()) {
+            request_events(r, now, &mut ev);
+        }
+        for st in &g.steps {
+            let mut args: Vec<(&'static str, Value)> = vec![
+                (
+                    "ids",
+                    s(&st
+                        .ids
+                        .iter()
+                        .map(|i| i.to_string())
+                        .collect::<Vec<_>>()
+                        .join(",")),
+                ),
+                ("bucket", n(st.bucket as f64)),
+                ("occupancy", n(st.occupancy as f64)),
+                ("tokens", n(st.tokens as f64)),
+            ];
+            st.phases.args(&mut args);
+            ev.push(complete_event(st.kind.label(), st.start_us, st.dur_us, 2, 1, args));
+        }
+        for m in &g.globals {
+            ev.push(instant_event(m.name, m.at_us, 2, 1, m.value));
+        }
+        obj(vec![
+            ("traceEvents", Value::Arr(ev)),
+            ("displayTimeUnit", s("ms")),
+            ("dropped_requests", n(self.dropped() as f64)),
+        ])
+    }
+}
+
+fn meta_event(pid: u64, name: &str) -> Value {
+    obj(vec![
+        ("name", s("process_name")),
+        ("ph", s("M")),
+        ("pid", n(pid as f64)),
+        ("tid", n(0.0)),
+        ("args", obj(vec![("name", s(name))])),
+    ])
+}
+
+fn complete_event(
+    name: &str,
+    ts_us: u64,
+    dur_us: u64,
+    pid: u64,
+    tid: u64,
+    args: Vec<(&'static str, Value)>,
+) -> Value {
+    obj(vec![
+        ("name", s(name)),
+        ("cat", s("firstlayer")),
+        ("ph", s("X")),
+        ("ts", n(ts_us as f64)),
+        ("dur", n(dur_us as f64)),
+        ("pid", n(pid as f64)),
+        ("tid", n(tid as f64)),
+        ("args", obj(args)),
+    ])
+}
+
+fn instant_event(name: &str, ts_us: u64, pid: u64, tid: u64, value: u64) -> Value {
+    obj(vec![
+        ("name", s(name)),
+        ("cat", s("firstlayer")),
+        ("ph", s("i")),
+        ("s", s("t")),
+        ("ts", n(ts_us as f64)),
+        ("pid", n(pid as f64)),
+        ("tid", n(tid as f64)),
+        ("args", obj(vec![("value", n(value as f64))])),
+    ])
+}
+
+fn request_events(r: &RequestTrace, now_us: u64, ev: &mut Vec<Value>) {
+    let end = r.finish_us.unwrap_or(now_us).max(r.submit_us + 1);
+    ev.push(complete_event(
+        "request",
+        r.submit_us,
+        end - r.submit_us,
+        1,
+        r.id,
+        vec![
+            ("id", n(r.id as f64)),
+            ("prompt_tokens", n(r.prompt_tokens as f64)),
+            ("generated", n(r.generated as f64)),
+            ("reason", s(r.finish_reason.unwrap_or("live"))),
+        ],
+    ));
+    if let Some(fs) = r.first_sched_us {
+        ev.push(complete_event(
+            "queue",
+            r.submit_us,
+            fs.saturating_sub(r.submit_us).max(1),
+            1,
+            r.id,
+            vec![],
+        ));
+    }
+    for sp in &r.spans {
+        let mut args: Vec<(&'static str, Value)> = vec![
+            ("tokens", n(sp.tokens as f64)),
+            ("bucket", n(sp.bucket as f64)),
+            ("occupancy", n(sp.occupancy as f64)),
+        ];
+        sp.phases.args(&mut args);
+        ev.push(complete_event(sp.kind.label(), sp.start_us, sp.dur_us, 1, r.id, args));
+    }
+    if let Some(ft) = r.first_token_us {
+        ev.push(instant_event("first_token", ft, 1, r.id, 0));
+    }
+    for m in &r.marks {
+        ev.push(instant_event(m.name, m.at_us, 1, r.id, m.value));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn on() -> Tracer {
+        let t = Tracer::new();
+        t.configure(true, 8);
+        t
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new(); // disabled by default
+        assert!(t.now().is_none());
+        t.req_submit(1, 10);
+        t.set_context(&[1]);
+        t.exec_begin(SpanKind::DecodeStep, 0, 0);
+        t.phase(Phase::Exec, Duration::from_millis(1));
+        t.exec_end(1);
+        t.req_finish(1, "eos", 1);
+        assert_eq!(t.completed_count(), 0);
+        assert_eq!(t.live_count(), 0);
+        assert_eq!(t.steps_count(), 0);
+    }
+
+    #[test]
+    fn span_tree_assembly_interleaved_requests() {
+        // Two requests interleave: a grouped execution advances both,
+        // then each takes a solo decode step. Every span must land on
+        // the right request(s) with attribution from set_context.
+        let t = on();
+        t.req_submit(7, 16);
+        t.req_submit(9, 32);
+
+        t.set_context(&[7, 9]);
+        t.req_first_sched(7);
+        t.req_first_sched(9);
+        t.exec_begin(SpanKind::GroupTile, 8, 2);
+        t.phase(Phase::H2d, Duration::from_micros(100));
+        t.phase(Phase::Exec, Duration::from_micros(200));
+        t.exec_end(16);
+
+        t.set_context(&[7]);
+        t.exec_begin(SpanKind::DecodeStep, 0, 0);
+        t.phase(Phase::Exec, Duration::from_micros(50));
+        t.exec_end(1);
+        t.req_first_token(7);
+
+        t.set_context(&[9]);
+        t.exec_begin(SpanKind::DecodeStep, 0, 0);
+        t.exec_end(1);
+        t.req_first_token(9);
+
+        t.req_finish(7, "eos", 3);
+        t.req_finish(9, "max_tokens", 5);
+
+        let done = t.completed();
+        assert_eq!(done.len(), 2);
+        let r7 = done.iter().find(|r| r.id == 7).unwrap();
+        let r9 = done.iter().find(|r| r.id == 9).unwrap();
+
+        // Both saw the group tile; each saw exactly one solo decode.
+        assert_eq!(r7.spans.len(), 2);
+        assert_eq!(r9.spans.len(), 2);
+        assert_eq!(r7.spans[0].kind, SpanKind::GroupTile);
+        assert_eq!(r7.spans[0].occupancy, 2);
+        assert_eq!(r7.spans[0].bucket, 8);
+        assert_eq!(r7.spans[0].tokens, 16);
+        assert_eq!(r7.spans[1].kind, SpanKind::DecodeStep);
+        assert_eq!(r9.spans[1].kind, SpanKind::DecodeStep);
+        // The group tile is the same window on both trees.
+        assert_eq!(r7.spans[0].start_us, r9.spans[0].start_us);
+        // Lifecycle ordering: submit <= first_sched <= first_token <= finish.
+        for r in [r7, r9] {
+            let fs = r.first_sched_us.unwrap();
+            let ft = r.first_token_us.unwrap();
+            let fin = r.finish_us.unwrap();
+            assert!(r.submit_us <= fs && fs <= ft && ft <= fin);
+            assert!(r.finish_reason.is_some());
+        }
+        assert_eq!(r7.generated, 3);
+        assert_eq!(r9.finish_reason, Some("max_tokens"));
+        // Engine timeline saw all three windows.
+        assert_eq!(t.steps_count(), 3);
+    }
+
+    #[test]
+    fn pending_phases_absorbed_and_sum_bounded() {
+        // A gather recorded before any window opens must be absorbed by
+        // the next exec span, with sum(phases) <= dur.
+        let t = on();
+        t.req_submit(1, 4);
+        t.set_context(&[1]);
+        t.phase(Phase::Gather, Duration::from_micros(500));
+        t.exec_begin(SpanKind::SpanTile, 16, 0);
+        t.phase(Phase::Exec, Duration::from_micros(40));
+        t.exec_end(16);
+        t.req_finish(1, "eos", 1);
+
+        let done = t.completed();
+        let sp = &done[0].spans[0];
+        assert_eq!(sp.phases.gather_us, 500);
+        assert_eq!(sp.phases.exec_us, 40);
+        assert!(
+            sp.phases.total_us() <= sp.dur_us,
+            "phases {} > dur {}",
+            sp.phases.total_us(),
+            sp.dur_us
+        );
+        // A second exec must not inherit the already-absorbed gather.
+        assert!(!sp.phases.is_zero());
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let t = Tracer::new();
+        t.configure(true, 3);
+        for id in 0..5u64 {
+            t.req_submit(id, 1);
+            t.req_finish(id, "eos", 0);
+        }
+        assert_eq!(t.completed_count(), 3);
+        assert_eq!(t.dropped(), 2);
+        let ids: Vec<u64> = t.completed().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn chrome_dump_roundtrips_and_has_complete_chains() {
+        let t = on();
+        t.req_submit(3, 8);
+        t.set_context(&[3]);
+        t.req_first_sched(3);
+        t.exec_begin(SpanKind::PrefillChunk, 0, 0);
+        t.phase(Phase::Exec, Duration::from_micros(10));
+        t.exec_end(8);
+        t.req_first_token(3);
+        t.req_mark(3, "prefix_hit", 4);
+        t.exec_begin(SpanKind::DecodeStep, 0, 0);
+        t.exec_end(1);
+        t.req_finish(3, "eos", 2);
+        t.global_mark("prefix_evict", 2);
+
+        let dump = t.dump_chrome();
+        // Round-trip through the serializer/parser.
+        let text = json::to_string(&dump);
+        let back = json::parse(&text).unwrap();
+        let evs = back.get_opt("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        // Two process_name metas + request + queue + 2 request-side spans
+        // + first_token + mark + 2 engine steps + 1 global mark.
+        assert!(evs.len() >= 10, "got {} events", evs.len());
+        let names: Vec<&str> = evs.iter().filter_map(|e| e.str_field("name").ok()).collect();
+        for want in [
+            "process_name",
+            "request",
+            "queue",
+            "prefill_chunk",
+            "decode_step",
+            "first_token",
+            "prefix_hit",
+            "prefix_evict",
+        ] {
+            assert!(names.contains(&want), "missing event {want}");
+        }
+        // Every complete event nests inside its request span and phases
+        // sum within the duration.
+        let req = evs
+            .iter()
+            .find(|e| e.str_field("name").ok() == Some("request"))
+            .unwrap();
+        let rts = req.get_opt("ts").and_then(|v| v.as_u64()).unwrap();
+        let rdur = req.get_opt("dur").and_then(|v| v.as_u64()).unwrap();
+        for e in evs {
+            if e.str_field("ph").ok() != Some("X")
+                || e.str_field("name").ok() == Some("request")
+            {
+                continue;
+            }
+            let pid = e.get_opt("pid").and_then(|v| v.as_u64()).unwrap();
+            if pid != 1 {
+                continue;
+            }
+            let ts = e.get_opt("ts").and_then(|v| v.as_u64()).unwrap();
+            let dur = e.get_opt("dur").and_then(|v| v.as_u64()).unwrap();
+            assert!(ts >= rts && ts + dur <= rts + rdur, "span outside request window");
+            if let Some(args) = e.get_opt("args") {
+                let phase_sum: u64 = ["gather_us", "h2d_us", "exec_us", "readback_us", "sync_us"]
+                    .iter()
+                    .filter_map(|k| args.get_opt(k).and_then(|v| v.as_u64()))
+                    .sum();
+                assert!(phase_sum <= dur, "phases {phase_sum} > dur {dur}");
+            }
+        }
+    }
+
+    #[test]
+    fn exec_without_context_hits_engine_track_only() {
+        let t = on();
+        t.req_submit(1, 4);
+        t.set_context(&[]);
+        t.exec_begin(SpanKind::DecodeStep, 0, 0);
+        t.exec_end(1);
+        t.req_finish(1, "eos", 0);
+        assert_eq!(t.completed()[0].spans.len(), 0);
+        assert_eq!(t.steps_count(), 1);
+    }
+}

@@ -11,6 +11,7 @@ pub struct Stats {
     pub mean: Duration,
     pub p50: Duration,
     pub p95: Duration,
+    pub p99: Duration,
     pub min: Duration,
     pub max: Duration,
 }
@@ -26,6 +27,7 @@ impl Stats {
             mean: total / n as u32,
             p50: samples[n / 2],
             p95: samples[(n * 95 / 100).min(n - 1)],
+            p99: samples[(n * 99 / 100).min(n - 1)],
             min: samples[0],
             max: samples[n - 1],
         }
@@ -79,8 +81,8 @@ pub fn report(name: &str, stats: &Stats, throughput: Option<(f64, &str)>) {
         .map(|(v, unit)| format!("  {v:>12.1} {unit}"))
         .unwrap_or_default();
     println!(
-        "{name:<44} mean {:>9.1?}  p50 {:>9.1?}  p95 {:>9.1?}  (n={}){tp}",
-        stats.mean, stats.p50, stats.p95, stats.n
+        "{name:<44} mean {:>9.1?}  p50 {:>9.1?}  p95 {:>9.1?}  p99 {:>9.1?}  (n={}){tp}",
+        stats.mean, stats.p50, stats.p95, stats.p99, stats.n
     );
 }
 
@@ -98,6 +100,8 @@ mod tests {
         assert_eq!(s.min, Duration::from_micros(10));
         assert_eq!(s.max, Duration::from_micros(30));
         assert_eq!(s.p50, Duration::from_micros(20));
+        assert_eq!(s.p99, Duration::from_micros(30));
+        assert!(s.p99 >= s.p95 && s.p95 >= s.p50);
         assert_eq!(s.n, 3);
     }
 

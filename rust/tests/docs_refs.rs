@@ -90,6 +90,10 @@ fn protocol_doc_covers_server_events() {
         "error",
         "chat.opened",
         "chat.closed",
+        "trace",
+        "prom",
+        "metrics.delta",
+        "metrics.end",
     ] {
         let lit = format!("\"event\":\"{ev}\"");
         let emitted = format!("s(\"{ev}\")");

@@ -1726,3 +1726,74 @@ fn chat_open_capped() {
     c.chat_close(a).unwrap();
     assert!(c.chat_open().is_ok(), "closing must free a slot");
 }
+
+/// Tracing is a pure observer: the same temp-0 workload run with
+/// `enable_trace` off and on produces identical per-request token
+/// streams, finish reasons, and deterministic schedule counters — and
+/// the disabled tracer records nothing at all.
+#[test]
+fn trace_on_off_pure_observer() {
+    let dir = require_artifacts!();
+    let run = |trace: bool| {
+        let mut cfg = serving(&dir, "tiny-serial", true);
+        cfg.enable_trace = trace;
+        cfg.prefill_chunk_tokens = 16;
+        let mut c = Coordinator::from_config(&cfg).unwrap();
+        let vocab = c.engine().config().vocab_size as u32;
+        let reqs = firstlayer::simtraffic::mixed_workload(8, 20, 2, 40, 6, vocab, 0xCAFE);
+        let ids: Vec<u64> = reqs.into_iter().map(|r| c.submit(r).unwrap()).collect();
+        c.run_to_completion(10_000).unwrap();
+        let streams: Vec<(Vec<u32>, FinishReason)> = ids
+            .iter()
+            .map(|id| (c.generated(*id).unwrap().to_vec(), c.finished(*id).unwrap()))
+            .collect();
+        use std::sync::atomic::Ordering::Relaxed;
+        let m = &c.metrics;
+        let counters = [
+            m.requests_done.load(Relaxed),
+            m.tokens_out.load(Relaxed),
+            m.prefill_chunks.load(Relaxed),
+            m.span_executions.load(Relaxed),
+            m.span_batched_executions.load(Relaxed),
+            m.span_fallbacks.load(Relaxed),
+            m.preemptions.load(Relaxed),
+        ];
+        let tracer = c.tracer();
+        let dump = tracer.dump_chrome();
+        (
+            streams,
+            counters,
+            tracer.completed_count(),
+            tracer.steps_count(),
+            dump,
+        )
+    };
+    let (s_off, c_off, done_off, steps_off, dump_off) = run(false);
+    let (s_on, c_on, done_on, steps_on, dump_on) = run(true);
+    assert_eq!(s_off, s_on, "token streams must be identical with tracing on");
+    assert_eq!(c_off, c_on, "schedule counters must be identical with tracing on");
+    // Off: the tracer is inert — no requests, no engine steps, no events.
+    assert_eq!(done_off, 0, "disabled tracer must retain no requests");
+    assert_eq!(steps_off, 0, "disabled tracer must retain no engine steps");
+    assert!(dump_off
+        .get("traceEvents")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .is_empty());
+    // On: every finished request landed in the ring with engine windows.
+    assert_eq!(done_on, s_on.len(), "every finished request must be retained");
+    assert!(steps_on > 0, "engine windows must be recorded when tracing");
+    let events = dump_on.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "trace dump must carry events");
+    // Every retained request contributes a complete request span (ph "X"
+    // on the requests track) — the Perfetto lifecycle reconstruction.
+    let request_spans = events
+        .iter()
+        .filter(|e| {
+            e.get_opt("name").and_then(|n| n.as_str()) == Some("request")
+                && e.get_opt("ph").and_then(|p| p.as_str()) == Some("X")
+        })
+        .count();
+    assert_eq!(request_spans, s_on.len());
+}

@@ -6,7 +6,11 @@
 #   2. tier-1 tests                      (cargo test -q)
 #   3. docs gate                         (scripts/docs_gate.sh)
 #   4. lint gate                         (scripts/lint_gate.sh)
-#   5. bench gate                        (scripts/bench_gate.sh →
+#   5. trace gate                        (scripts/trace_gate.sh — a
+#      simtraffic burst with lifecycle tracing on, whose Chrome-trace
+#      dump must validate: complete submit→finish span chain per
+#      finished request, phase sums bounded by their parent span)
+#   6. bench gate                        (scripts/bench_gate.sh →
 #      BENCH_engine.json at the repo root) — and, when a previous
 #      BENCH_engine.json exists, a per-bench numeric diff
 #      (scripts/bench_diff.py --gate) that FAILS the run on a
@@ -24,19 +28,22 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "[ci-gate] 1/5 cargo build --release"
+echo "[ci-gate] 1/6 cargo build --release"
 (cd rust && cargo build --release)
 
-echo "[ci-gate] 2/5 tier-1 tests (cargo test -q)"
+echo "[ci-gate] 2/6 tier-1 tests (cargo test -q)"
 (cd rust && cargo test -q)
 
-echo "[ci-gate] 3/5 docs gate"
+echo "[ci-gate] 3/6 docs gate"
 scripts/docs_gate.sh
 
-echo "[ci-gate] 4/5 lint gate"
+echo "[ci-gate] 4/6 lint gate"
 scripts/lint_gate.sh
 
-echo "[ci-gate] 5/5 bench gate"
+echo "[ci-gate] 5/6 trace gate"
+scripts/trace_gate.sh
+
+echo "[ci-gate] 6/6 bench gate"
 prev=""
 if [ -f BENCH_engine.json ]; then
   prev="$(mktemp)"

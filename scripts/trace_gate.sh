@@ -1,0 +1,110 @@
+#!/usr/bin/env bash
+# Trace gate (CI-runnable): drive a simtraffic burst through the engine
+# with lifecycle tracing ON (`firstlayer trace-smoke`) and validate the
+# dumped Chrome trace-event JSON:
+#
+#   1. the dump is well-formed JSON with a `traceEvents` array;
+#   2. every finished request has a complete submit→finish span chain —
+#      a `request` complete span (ph "X") with a terminal finish reason,
+#      a `queue` span, and at least one execution child span, all nested
+#      inside the request window;
+#   3. per-phase engine timings never exceed their parent span
+#      (`gather_us + h2d_us + exec_us + readback_us + sync_us <= dur`) —
+#      the tracer's pending-absorption invariant.
+#
+# Needs the AOT artifact bundle (`rust/artifacts/manifest.json`); skips
+# cleanly when it is missing so the gate works on a fresh checkout, same
+# as the artifact-dependent benches and integration tests.
+#
+# Usage: scripts/trace_gate.sh   (from anywhere inside the repo)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ ! -f rust/artifacts/manifest.json ]; then
+  echo "[trace-gate] skipping: run \`make artifacts\` first"
+  exit 0
+fi
+
+bin=rust/target/release/firstlayer
+if [ ! -x "$bin" ]; then
+  echo "[trace-gate] building release binary"
+  (cd rust && cargo build --release --quiet)
+fi
+
+out="$(mktemp -d)"
+trap 'rm -rf "$out"' EXIT
+
+echo "[trace-gate] trace-smoke burst (tracing on)"
+"$bin" trace-smoke --artifacts rust/artifacts --out "$out/trace.json" --requests 10
+
+echo "[trace-gate] validating $out/trace.json"
+python3 - "$out/trace.json" <<'PY'
+import json
+import sys
+
+with open(sys.argv[1]) as f:
+    dump = json.load(f)  # (1) must parse
+
+events = dump["traceEvents"]
+assert isinstance(events, list) and events, "empty traceEvents"
+assert "dropped_requests" in dump, "missing dropped_requests"
+
+PHASES = ("gather_us", "h2d_us", "exec_us", "readback_us", "sync_us")
+EXEC_KINDS = {"prefill_chunk", "span_tile", "group_tile", "decode_step", "sync"}
+
+# Index the pid-1 (requests) track by tid = request id.
+by_req = {}
+for e in events:
+    if e.get("ph") in ("X", "i") and e.get("pid") == 1:
+        by_req.setdefault(e["tid"], []).append(e)
+
+finished = 0
+for tid, evs in sorted(by_req.items()):
+    req = [e for e in evs if e.get("name") == "request" and e["ph"] == "X"]
+    assert len(req) == 1, f"request {tid}: {len(req)} request spans"
+    req = req[0]
+    reason = req["args"]["reason"]
+    if reason == "live":
+        continue  # still in flight at dump time: chain legitimately open
+    finished += 1
+    # (2) complete submit→finish chain.
+    r0, r1 = req["ts"], req["ts"] + req["dur"]
+    names = {e["name"] for e in evs}
+    assert "queue" in names, f"request {tid}: no queue span"
+    execs = [e for e in evs if e["ph"] == "X" and e["name"] in EXEC_KINDS]
+    assert execs, f"request {tid}: finished with no execution spans"
+    for e in evs:
+        if e["ph"] != "X" or e is req:
+            continue
+        ts, dur = e["ts"], e.get("dur", 0)
+        assert r0 <= ts and ts + dur <= r1, (
+            f"request {tid}: span {e['name']} [{ts},{ts+dur}] "
+            f"outside request window [{r0},{r1}]"
+        )
+        # (3) phase-sum invariant.
+        args = e.get("args", {})
+        phase_sum = sum(args.get(k, 0) for k in PHASES)
+        assert phase_sum <= dur, (
+            f"request {tid}: span {e['name']} phases {phase_sum}us > dur {dur}us"
+        )
+
+assert finished > 0, "no finished requests in the dump"
+
+# The pid-2 engine track must carry execution steps with the phase-sum
+# invariant too.
+steps = [e for e in events if e.get("pid") == 2 and e.get("ph") == "X"]
+assert steps, "no engine-track steps"
+for e in steps:
+    args = e.get("args", {})
+    phase_sum = sum(args.get(k, 0) for k in PHASES)
+    assert phase_sum <= e.get("dur", 0), (
+        f"engine step {e['name']} phases {phase_sum}us > dur {e.get('dur')}us"
+    )
+
+print(
+    f"[trace-gate] {finished} finished request chain(s), "
+    f"{len(steps)} engine step(s), {len(events)} events: OK"
+)
+PY
+
+echo "[trace-gate] OK"
