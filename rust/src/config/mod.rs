@@ -207,6 +207,36 @@ pub struct ServingConfig {
     /// Completed-request ring capacity for the tracer (last N finished
     /// requests retained; older ones dropped and counted).
     pub trace_ring: usize,
+    /// Fault-injection plan (`rust/src/faults/`): `;`-separated rules,
+    /// each `<point>:<transient|fatal>[:after=N][:every=N][:count=N]
+    /// [:delay_us=N]` with point one of h2d|exec|readback|sync|gather.
+    /// Empty = plane disarmed (one relaxed atomic load per boundary
+    /// crossing, a pure observer).  Counter-based, so a seeded workload
+    /// replays the identical fault sequence every run.
+    pub fault_spec: String,
+    /// Max retries of a TRANSIENT engine error inside one step before
+    /// the affected requests finish with `reason:"error"`.  0 = no
+    /// retries (first transient fault is terminal for its requests).
+    pub retry_max: usize,
+    /// Base backoff before the first retry, doubling per attempt
+    /// (capped at 100ms).  0 = retry immediately.
+    pub retry_backoff_us: u64,
+    /// Engine steps a demoted serving path (device KV / span exec /
+    /// span batch) stays down before the health registry re-promotes it
+    /// for a recovery probe.  0 = demotion is sticky for the process
+    /// lifetime (the pre-ladder behavior).
+    pub health_cooldown_steps: u64,
+    /// Idle conversation TTL in milliseconds: a conversation with no
+    /// submit/finish activity for this long is closed by the sweeper
+    /// (active turn cancelled, transcript and KV released).  0 = never
+    /// expire (the pre-TTL behavior).
+    pub conversation_ttl_ms: u64,
+    /// Per-stream writer-queue bound (events): when one client reads
+    /// its stream slower than the engine produces, the request is
+    /// paused at the scheduler once this many events are queued, and
+    /// resumed when the reader drains below half.  Only that stream
+    /// stalls — peers and the engine never block.  0 = unbounded.
+    pub stream_queue_events: usize,
     /// Sampling defaults.
     pub temperature: f64,
     pub top_k: usize,
@@ -236,6 +266,12 @@ impl Default for ServingConfig {
             enable_span_batch: true,
             enable_trace: false,
             trace_ring: 256,
+            fault_spec: String::new(),
+            retry_max: 2,
+            retry_backoff_us: 200,
+            health_cooldown_steps: 256,
+            conversation_ttl_ms: 0,
+            stream_queue_events: 1024,
             temperature: 0.0,
             top_k: 0,
             seed: 0xF17A,

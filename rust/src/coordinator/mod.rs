@@ -25,7 +25,7 @@ pub mod sampling;
 
 use std::collections::HashMap;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::ServingConfig;
 use crate::error::{Error, Result};
@@ -54,6 +54,10 @@ pub enum FinishReason {
     Stop,
     /// Aborted by [`Coordinator::cancel`] before a natural finish.
     Cancelled,
+    /// Terminal engine failure: a fatal error, or a transient one that
+    /// exhausted its retries ([`ServingConfig::retry_max`]).  Every
+    /// resource the request held is released; survivors are untouched.
+    Error,
 }
 
 /// Stable wire/trace label for a [`FinishReason`].
@@ -64,6 +68,43 @@ pub fn reason_label(r: FinishReason) -> &'static str {
         FinishReason::ContextFull => "context_full",
         FinishReason::Stop => "stop",
         FinishReason::Cancelled => "cancelled",
+        FinishReason::Error => "error",
+    }
+}
+
+/// Run an engine operation, retrying transient failures (injected
+/// transients and PJRT hiccups — [`Error::is_transient`]) with capped
+/// exponential backoff: `backoff_us << attempt`, never above 100ms.
+/// Fatal errors and exhausted retries propagate to the caller, which
+/// converts them into per-request terminal `Error` finishes.
+fn retry_transient<T>(
+    metrics: &Metrics,
+    retry_max: usize,
+    backoff_us: u64,
+    what: &str,
+    mut f: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    let mut attempt = 0usize;
+    loop {
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) if e.is_transient() && attempt < retry_max => {
+                attempt += 1;
+                metrics
+                    .fault_retries
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                eprintln!(
+                    "[firstlayer] transient {what} error \
+                     (retry {attempt}/{retry_max}): {e}"
+                );
+                if backoff_us > 0 {
+                    let shift = (attempt - 1).min(16) as u32;
+                    let us = backoff_us.saturating_mul(1 << shift).min(100_000);
+                    std::thread::sleep(std::time::Duration::from_micros(us));
+                }
+            }
+            Err(e) => return Err(e),
+        }
     }
 }
 
@@ -190,6 +231,9 @@ struct ConvState {
     /// The prompt the active turn submitted (transcript + user delta);
     /// becomes the new transcript prefix on finish.
     pending_prompt: Vec<u32>,
+    /// Last protocol-level activity (open, turn submit, turn finish) —
+    /// the idle clock [`Coordinator::sweep_conversations`] expires on.
+    last_activity: Option<Instant>,
 }
 
 /// A live device-resident decode session and the batch composition it
@@ -297,6 +341,13 @@ pub struct Coordinator {
     conv_ctr: u64,
     /// Cap on simultaneously open conversations (0 = unbounded).
     max_convs: usize,
+    /// Idle-conversation TTL (None = never expire); swept every step
+    /// and from the server's idle loop.
+    conv_ttl: Option<Duration>,
+    /// Transient-error retry budget per engine operation, and the base
+    /// backoff (doubling, capped at 100ms) between attempts.
+    retry_max: usize,
+    retry_backoff_us: u64,
     /// Lifecycle tracer (shared with the engine's runtime; enabled from
     /// `ServingConfig::enable_trace`, otherwise every call is one
     /// relaxed atomic load).
@@ -397,6 +448,16 @@ impl Coordinator {
             None
         };
         engine.set_device_kv(cfg.enable_device_kv);
+        // Fault plane + degradation ladder: the plane is shared with the
+        // runtime (the injection points live at the engine/device
+        // boundaries), and the health registry's cooldown clock advances
+        // once per `step()` — engine-only users never tick it, so their
+        // demotions stay sticky exactly as before the ladder.
+        if !cfg.fault_spec.is_empty() {
+            let n = engine.faults().install(&cfg.fault_spec)?;
+            eprintln!("[firstlayer] fault plane armed: {n} rule(s)");
+        }
+        engine.health().set_cooldown(cfg.health_cooldown_steps);
         let tracer = engine.tracer();
         tracer.configure(cfg.enable_trace, cfg.trace_ring);
         Ok(Coordinator {
@@ -420,6 +481,10 @@ impl Coordinator {
             conv_keys: std::collections::hash_map::RandomState::new(),
             conv_ctr: 0,
             max_convs: cfg.max_conversations,
+            conv_ttl: (cfg.conversation_ttl_ms > 0)
+                .then(|| Duration::from_millis(cfg.conversation_ttl_ms)),
+            retry_max: cfg.retry_max,
+            retry_backoff_us: cfg.retry_backoff_us,
             tracer,
         })
     }
@@ -584,10 +649,12 @@ impl Coordinator {
                     self.record_prefix_miss();
                 }
                 if let (Some((cv, _)), Some(p)) = (conv, pending) {
-                    let cs = self.convs.get_mut(&cv).expect("conv checked above");
-                    cs.active = Some(id);
-                    cs.pending_prompt = p;
-                    self.conv_of.insert(id, cv);
+                    if let Some(cs) = self.convs.get_mut(&cv) {
+                        cs.active = Some(id);
+                        cs.pending_prompt = p;
+                        cs.last_activity = Some(Instant::now());
+                        self.conv_of.insert(id, cv);
+                    }
                 }
                 Ok(id)
             }
@@ -634,20 +701,76 @@ impl Coordinator {
         }
         self.sched.forget(id);
         self.finish_conv_turn(id, FinishReason::Cancelled);
-        let st = self.reqs.get_mut(&id).expect("checked above");
-        st.done = Some(FinishReason::Cancelled);
-        if let Some(t) = st.submit_t {
-            self.metrics.e2e.record(t.elapsed());
+        if let Some(st) = self.reqs.get_mut(&id) {
+            st.done = Some(FinishReason::Cancelled);
+            if let Some(t) = st.submit_t {
+                self.metrics.e2e.record(t.elapsed());
+            }
         }
         self.metrics
             .requests_cancelled
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.tracer
-            .req_finish(id, "cancelled", st.generated.len());
+        let gen = self.reqs.get(&id).map_or(0, |r| r.generated.len());
+        self.tracer.req_finish(id, "cancelled", gen);
         self.events.push(Event::Finished {
             id,
             reason: FinishReason::Cancelled,
         });
+        Ok(())
+    }
+
+    /// Terminal failure of one request after its retries are exhausted
+    /// (or on a fatal engine error): release every resource it holds —
+    /// device-session rows, KV blocks, prefix leases (refcounts drop
+    /// with the blocks), scheduler state, conversation turn — and emit
+    /// a terminal [`FinishReason::Error`] event.  Survivors are never
+    /// perturbed: this is [`Coordinator::cancel`]'s teardown driven by
+    /// the engine instead of the client.  Idempotent on unknown or
+    /// already-finished ids.
+    fn fail_request(&mut self, id: u64, err: &Error) -> Result<()> {
+        match self.reqs.get(&id) {
+            None => return Ok(()),
+            Some(st) if st.done.is_some() => return Ok(()),
+            Some(_) => {}
+        }
+        eprintln!("[firstlayer] request {id} failed terminally: {err}");
+        if self
+            .dsess
+            .as_ref()
+            .is_some_and(|d| d.ids.contains(&id))
+        {
+            // Write the OTHER rows back; drop this id's device-ahead
+            // rows (the preemption/cancel ordering — a recycled slot
+            // can never alias a stale device row).
+            self.sync_or_recompute(&[id])?;
+        }
+        if self.kv.seq_len(id).is_some() {
+            self.kv.remove(id)?;
+        }
+        self.sched.forget(id);
+        self.finish_conv_turn(id, FinishReason::Error);
+        if let Some(st) = self.reqs.get_mut(&id) {
+            st.done = Some(FinishReason::Error);
+            if let Some(t) = st.submit_t {
+                self.metrics.e2e.record(t.elapsed());
+            }
+        }
+        self.metrics
+            .requests_errored
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let gen = self.reqs.get(&id).map_or(0, |r| r.generated.len());
+        self.tracer.req_finish(id, "error", gen);
+        self.events.push(Event::Finished {
+            id,
+            reason: FinishReason::Error,
+        });
+        Ok(())
+    }
+
+    fn fail_requests(&mut self, ids: &[u64], err: &Error) -> Result<()> {
+        for id in ids {
+            self.fail_request(*id, err)?;
+        }
         Ok(())
     }
 
@@ -683,8 +806,56 @@ impl Coordinator {
                 break c;
             }
         };
-        self.convs.insert(cv, ConvState::default());
+        self.convs.insert(
+            cv,
+            ConvState {
+                last_activity: Some(Instant::now()),
+                ..ConvState::default()
+            },
+        );
         Ok(cv)
+    }
+
+    /// Close every conversation idle past [`ServingConfig::conversation_ttl_ms`]
+    /// (no open/submit/finish activity): the active turn, if any, is
+    /// cancelled, the transcript is dropped, and all KV is released.
+    /// Returns how many expired.  No-op when the TTL is off; called
+    /// once per engine step and from the server's idle loop.
+    pub fn sweep_conversations(&mut self) -> Result<usize> {
+        let Some(ttl) = self.conv_ttl else {
+            return Ok(0);
+        };
+        let expired: Vec<u64> = self
+            .convs
+            .iter()
+            .filter(|(_, cs)| cs.last_activity.map_or(true, |t| t.elapsed() >= ttl))
+            .map(|(cv, _)| *cv)
+            .collect();
+        let n = expired.len();
+        for cv in expired {
+            self.chat_close(cv)?;
+            self.metrics
+                .conversations_expired
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.tracer.global_mark("conv_expire", cv);
+        }
+        Ok(n)
+    }
+
+    /// Stream flow control: pause/resume one request's scheduling (the
+    /// server calls this when a slow reader's per-tag writer queue hits
+    /// its bound).  Pausing is planner-only — state, KV, and generated
+    /// tokens are untouched, peers and the engine never block — and the
+    /// changed decode composition triggers the ordinary device-session
+    /// recomposition sync.  Counts stall *transitions* in
+    /// `stream_stalls`.
+    pub fn set_stalled(&mut self, id: u64, stalled: bool) {
+        if self.sched.set_paused(id, stalled) && stalled {
+            self.metrics
+                .stream_stalls
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.tracer.req_mark(id, "stream_stall", 1);
+        }
     }
 
     /// Close a conversation, cancelling its in-flight turn if any.
@@ -731,7 +902,8 @@ impl Coordinator {
         }
         cs.transcript = t;
         cs.active = None;
-        if reason != FinishReason::Cancelled {
+        cs.last_activity = Some(Instant::now());
+        if !matches!(reason, FinishReason::Cancelled | FinishReason::Error) {
             self.metrics
                 .chat_turns
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -798,8 +970,47 @@ impl Coordinator {
         self.reqs.get(&id).and_then(|r| r.done)
     }
 
+    /// Advance the degradation ladder's cooldown clock one step and
+    /// surface transitions: re-promotions are announced (trace instant +
+    /// stderr), and the metrics mirrors of the registry totals are
+    /// refreshed so `metrics` / `metrics.prom` always show the ladder's
+    /// current counts.
+    fn tick_health(&mut self) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let health = self.engine.health();
+        for p in health.tick() {
+            eprintln!(
+                "[firstlayer] health: {} re-promoted after cooldown \
+                 (next use is the recovery probe)",
+                p.label()
+            );
+            self.tracer.global_mark("health_promote", p.index() as u64);
+        }
+        let dem = health.total_demotions();
+        if dem > self.metrics.health_demotions.swap(dem, Relaxed) {
+            self.tracer.global_mark("health_demote", dem);
+        }
+        self.metrics
+            .health_promotions
+            .store(health.total_promotions(), Relaxed);
+        self.metrics
+            .fault_injected
+            .store(self.engine.faults().fired_total(), Relaxed);
+    }
+
     /// Run one engine iteration. Returns the number of sequences touched.
+    ///
+    /// Failure containment: every engine-facing sub-operation is retried
+    /// on transient errors ([`retry_transient`]) and, if it still fails,
+    /// terminates ONLY the requests it was serving via
+    /// [`Coordinator::fail_request`] — the step itself keeps going, so a
+    /// poisoned request (or an injected fault burst) can never wedge the
+    /// loop or perturb surviving streams.  Errors that escape this
+    /// method are host-side invariant violations (paged-store
+    /// corruption), not request failures.
     pub fn step(&mut self) -> Result<usize> {
+        self.tick_health();
+        self.sweep_conversations()?;
         // The planner sees reclaimable prefix-cache blocks (lease-only
         // refcounts) as free; the shortfall is evicted below, after the
         // plan's actual block demand is known.  Blocks the live decode
@@ -880,13 +1091,14 @@ impl Coordinator {
                 }
             }
             if self.kv.free_blocks() < demand {
-                let pc = self.prefix.as_mut().unwrap();
-                let evicted = pc.evict_for(&mut self.kv, demand);
-                self.metrics
-                    .prefix_evictions
-                    .fetch_add(evicted as u64, std::sync::atomic::Ordering::Relaxed);
-                if evicted > 0 {
-                    self.tracer.global_mark("prefix_evict", evicted as u64);
+                if let Some(pc) = self.prefix.as_mut() {
+                    let evicted = pc.evict_for(&mut self.kv, demand);
+                    self.metrics
+                        .prefix_evictions
+                        .fetch_add(evicted as u64, std::sync::atomic::Ordering::Relaxed);
+                    if evicted > 0 {
+                        self.tracer.global_mark("prefix_evict", evicted as u64);
+                    }
                 }
             }
         }
@@ -937,7 +1149,10 @@ impl Coordinator {
                 .unwrap_or(1);
             for group in fresh.chunks(max_b) {
                 touched += group.len();
-                self.run_first_chunks(group)?;
+                if let Err(e) = self.run_first_chunks(group) {
+                    let ids: Vec<u64> = group.iter().map(|c| c.id).collect();
+                    self.fail_requests(&ids, &e)?;
+                }
             }
         }
         // Continuations: span groups first (one [B, T] device execution
@@ -951,19 +1166,30 @@ impl Coordinator {
                 grouped[i] = true;
             }
             touched += chunks.len();
-            self.run_span_group(&chunks)?;
+            if let Err(e) = self.run_span_group(&chunks) {
+                let ids: Vec<u64> = chunks.iter().map(|c| c.id).collect();
+                self.fail_requests(&ids, &e)?;
+            }
         }
         for (i, c) in plan.prefill.iter().enumerate() {
             if c.start > 0 && !grouped[i] {
                 touched += 1;
-                self.run_continuation(c)?;
+                if let Err(e) = self.run_continuation(c) {
+                    self.fail_request(c.id, &e)?;
+                }
             }
         }
 
         // -- decode ----------------------------------------------------------
         if !plan.decode.is_empty() {
             touched += plan.decode.len();
-            self.run_decode(&plan.decode)?;
+            if let Err(e) = self.run_decode(&plan.decode) {
+                // A decode failure after retries poisons the whole
+                // batched operation: every id it was advancing finishes
+                // with `error` (waiting requests are untouched and
+                // admit next step).
+                self.fail_requests(&plan.decode, &e)?;
+            }
         }
         Ok(touched)
     }
@@ -996,8 +1222,15 @@ impl Coordinator {
             .set_context(&chunks.iter().map(|c| c.id).collect::<Vec<_>>());
         let fulls: Vec<Vec<u32>> = chunks
             .iter()
-            .map(|c| self.sched.info(c.id).unwrap().prompt.clone())
-            .collect();
+            .map(|c| {
+                self.sched
+                    .info(c.id)
+                    .map(|i| i.prompt.clone())
+                    .ok_or_else(|| {
+                        Error::Scheduler(format!("no sched record for {}", c.id))
+                    })
+            })
+            .collect::<Result<_>>()?;
         let t_cap = self
             .engine
             .entry()
@@ -1011,7 +1244,13 @@ impl Coordinator {
             .zip(&fulls)
             .map(|(c, f)| f[..c.len.min(t_cap)].to_vec())
             .collect();
-        let out = self.engine.prefill(self.path, &prompts)?;
+        let out = retry_transient(
+            &self.metrics,
+            self.retry_max,
+            self.retry_backoff_us,
+            "prefill",
+            || self.engine.prefill(self.path, &prompts),
+        )?;
         self.metrics.prefill_step.record(t0.elapsed());
         let s = out.caches.s;
         let row = out.caches.kh * out.caches.hd;
@@ -1062,7 +1301,11 @@ impl Coordinator {
         let t0 = Instant::now();
         self.mark_sched(c.id);
         self.tracer.set_context(&[c.id]);
-        let full = self.sched.info(c.id).unwrap().prompt.clone();
+        let full = self
+            .sched
+            .info(c.id)
+            .map(|i| i.prompt.clone())
+            .ok_or_else(|| Error::Scheduler(format!("no sched record for {}", c.id)))?;
         let end = (c.start + c.len).min(full.len());
         let logits = self.run_span(c.id, &full[c.start..end], c.start)?;
         self.sched.on_chunk(c.id, end - c.start);
@@ -1081,8 +1324,9 @@ impl Coordinator {
     /// span execution per tile ([`ModelEngine::decode_span_group`]),
     /// replacing B serial per-sequence spans.  Any capability gap (knob
     /// off, no compiled batch, plan does not fit the cache) quietly runs
-    /// the lanes per-sequence; a failure AFTER the viability check marks
-    /// the grouped path unhealthy (sticky) and falls back the same way —
+    /// the lanes per-sequence; a failure AFTER the viability check (and
+    /// past the transient-retry budget) demotes the grouped path in the
+    /// health registry and falls back the same way —
     /// the engine leaves the gathered caches untouched on error, and
     /// [`Coordinator::run_continuation`] re-gathers per lane anyway.
     fn run_span_group(&mut self, chunks: &[PrefillChunk]) -> Result<()> {
@@ -1092,11 +1336,17 @@ impl Coordinator {
         let spans: Vec<(Vec<u32>, usize)> = chunks
             .iter()
             .map(|c| {
-                let full = self.sched.info(c.id).unwrap().prompt.clone();
+                let full = self
+                    .sched
+                    .info(c.id)
+                    .map(|i| i.prompt.clone())
+                    .ok_or_else(|| {
+                        Error::Scheduler(format!("no sched record for {}", c.id))
+                    })?;
                 let end = (c.start + c.len).min(full.len());
-                (full[c.start..end].to_vec(), c.start)
+                Ok((full[c.start..end].to_vec(), c.start))
             })
-            .collect();
+            .collect::<Result<_>>()?;
         let lanes: Vec<SpanLane> = spans
             .iter()
             .map(|(t, st)| SpanLane { tokens: t, start: *st })
@@ -1140,16 +1390,23 @@ impl Coordinator {
                 )));
             }
         }
-        let out = match self.engine.decode_span_group(self.path, &lanes, &mut caches) {
+        let out = match retry_transient(
+            &self.metrics,
+            self.retry_max,
+            self.retry_backoff_us,
+            "span group",
+            || self.engine.decode_span_group(self.path, &lanes, &mut caches),
+        ) {
             Ok(out) => out,
             Err(e) => {
-                // Viability said yes and the artifact still failed: go
-                // per-sequence from here on (sticky), starting with the
-                // lanes in hand.
+                // Viability said yes and the artifact still failed (past
+                // the transient-retry budget): demote the grouped path and
+                // go per-sequence, starting with the lanes in hand.  The
+                // health registry re-probes it after the cooldown.
                 self.engine.mark_span_batch_unhealthy();
                 eprintln!(
                     "[firstlayer] batched span group failed ({e}); \
-                     per-sequence spans from here on (sticky)"
+                     per-sequence spans until the cooldown re-probe"
                 );
                 for c in chunks {
                     self.run_continuation(c)?;
@@ -1221,7 +1478,16 @@ impl Coordinator {
                 "span start {start} != cached len {have} for seq {id}"
             )));
         }
-        let out = self.engine.decode_span(self.path, tokens, start, &mut caches)?;
+        // Retry-safe: a failed attempt may have scattered some K/V rows
+        // into `caches` at slots >= start, but a retry overwrites exactly
+        // those slots and attention masks everything past `pos` anyway.
+        let out = retry_transient(
+            &self.metrics,
+            self.retry_max,
+            self.retry_backoff_us,
+            "span",
+            || self.engine.decode_span(self.path, tokens, start, &mut caches),
+        )?;
         // Span-execution accounting: how many device executions the span
         // cost (batched tiles vs one per token) and the tokens-per-
         // execution distribution — the observable the batched span
@@ -1290,7 +1556,13 @@ impl Coordinator {
                     &mut caches.v,
                 )?;
             }
-            match engine.begin_cache_session(&caches) {
+            match retry_transient(
+                &self.metrics,
+                self.retry_max,
+                self.retry_backoff_us,
+                "session begin",
+                || engine.begin_cache_session(&caches),
+            ) {
                 Ok(sess) => {
                     self.metrics
                         .kv_sessions
@@ -1307,7 +1579,7 @@ impl Coordinator {
                     engine.mark_device_kv_unhealthy();
                     eprintln!(
                         "[firstlayer] device decode session unavailable ({e}); \
-                         host path from here on (sticky)"
+                         host path until the cooldown re-probe"
                     );
                     return self.run_decode_host(ids, t0);
                 }
@@ -1333,24 +1605,35 @@ impl Coordinator {
             }
         }
         self.tracer.set_context(ids);
+        // `dsess.as_mut()` holds a mutable borrow of self, so the retry
+        // helper gets its own Arc + copied knobs instead of `&self.*`.
+        let metrics = Arc::clone(&self.metrics);
+        let (retry_max, retry_backoff_us) = (self.retry_max, self.retry_backoff_us);
         let d = self.dsess.as_mut().expect("session just ensured");
-        let logits_all =
-            match engine.decode_on_session(path, &tokens, &pos, &mut d.sess, None, true, true) {
-                Ok(l) => l,
-                Err(e) => {
-                    // The session is untouched on error: write back what
-                    // already succeeded and serve host-side from here on
-                    // (sticky — rebuilding a session per step would pay
-                    // for a failed device attempt AND the host step).
-                    engine.mark_device_kv_unhealthy();
-                    eprintln!(
-                        "[firstlayer] device decode step failed ({e}); \
-                         syncing session, host path from here on (sticky)"
-                    );
-                    self.sync_or_recompute(&[])?;
-                    return self.run_decode_host(ids, t0);
-                }
-            };
+        let logits_all = match retry_transient(
+            &metrics,
+            retry_max,
+            retry_backoff_us,
+            "device decode",
+            || engine.decode_on_session(path, &tokens, &pos, &mut d.sess, None, true, true),
+        ) {
+            Ok(l) => l,
+            Err(e) => {
+                // The session is untouched on error (PJRT buffers are
+                // immutable; a failed execution chains nothing): write
+                // back what already succeeded and serve host-side until
+                // the cooldown re-probe — rebuilding a session per step
+                // would pay for a failed device attempt AND the host
+                // step.
+                engine.mark_device_kv_unhealthy();
+                eprintln!(
+                    "[firstlayer] device decode step failed ({e}); \
+                     syncing session, host path until the cooldown re-probe"
+                );
+                self.sync_or_recompute(&[])?;
+                return self.run_decode_host(ids, t0);
+            }
+        };
         let d = self.dsess.as_mut().expect("session survives a step");
         for p in d.pending.iter_mut() {
             *p += 1;
@@ -1417,7 +1700,14 @@ impl Coordinator {
                 continue; // defensive: history shorter than the session
             }
             let toks = gen[gen.len() - p - 1..gen.len() - 1].to_vec();
-            self.run_span(id, &toks, base)?;
+            // A row recompute that fails terminally fails THAT request —
+            // the remaining rows still belong to healthy survivors and
+            // must be rebuilt.  (fail_request cannot recurse back here:
+            // the session was already taken above, so its sync path is a
+            // no-op.)
+            if let Err(e) = self.run_span(id, &toks, base) {
+                self.fail_request(id, &e)?;
+            }
         }
         Ok(())
     }
@@ -1487,7 +1777,15 @@ impl Coordinator {
         }
         self.tracer.set_context(&d.ids);
         self.tracer.exec_begin(SpanKind::Sync, 0, d.ids.len());
-        let (kc, vc) = match d.sess.read_cache_pair() {
+        // The readback is side-effect free on the session, so transient
+        // failures retry in place before the recompute fallback fires.
+        let (kc, vc) = match retry_transient(
+            &self.metrics,
+            self.retry_max,
+            self.retry_backoff_us,
+            "session sync",
+            || d.sess.read_cache_pair(),
+        ) {
             Ok(pair) => pair,
             Err(e) => {
                 self.tracer.exec_end(0);
@@ -1573,7 +1871,15 @@ impl Coordinator {
                 .gather_into_batch(*id, s, bucket, i, &mut caches.k, &mut caches.v)?;
         }
         self.tracer.set_context(ids);
-        let out = self.engine.decode(self.path, &tokens, &pos, &caches)?;
+        // Trivially retry-safe: the gathered caches are read-only here and
+        // nothing lands in the paged store until the call succeeds.
+        let out = retry_transient(
+            &self.metrics,
+            self.retry_max,
+            self.retry_backoff_us,
+            "decode",
+            || self.engine.decode(self.path, &tokens, &pos, &caches),
+        )?;
         self.metrics.decode_step.record(t0.elapsed());
         let lrow = caches.l * row;
         for (i, id) in ids.iter().enumerate() {
@@ -1604,7 +1910,9 @@ impl Coordinator {
         };
         let eos = tok == EOS;
         let has_stop = self.params.get(&id).is_some_and(|p| !p.stop.is_empty());
-        let st = self.reqs.get_mut(&id).unwrap();
+        let Some(st) = self.reqs.get_mut(&id) else {
+            return Err(Error::Engine(format!("token for unknown request {id}")));
+        };
         st.generated.push(tok);
         // Stop sequences: byte-level match over the detokenized tail, so
         // a pattern split across token boundaries still matches.  The
@@ -1634,7 +1942,10 @@ impl Coordinator {
         self.events.push(Event::Token { id, token: tok });
         self.sched.on_token(id, eos || stop_hit);
         if self.sched.state(id) == Some(State::Finished) {
-            let info = self.sched.info(id).unwrap();
+            let info = self
+                .sched
+                .info(id)
+                .ok_or_else(|| Error::Scheduler(format!("no sched record for {id}")))?;
             let reason = if eos {
                 FinishReason::Eos
             } else if stop_hit {
@@ -1644,15 +1955,17 @@ impl Coordinator {
             } else {
                 FinishReason::ContextFull
             };
-            self.reqs.get_mut(&id).unwrap().done = Some(reason);
-            if let Some(t) = self.reqs[&id].submit_t {
-                self.metrics.e2e.record(t.elapsed());
+            if let Some(r) = self.reqs.get_mut(&id) {
+                r.done = Some(reason);
+                if let Some(t) = r.submit_t {
+                    self.metrics.e2e.record(t.elapsed());
+                }
             }
             self.metrics
                 .requests_done
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            self.tracer
-                .req_finish(id, reason_label(reason), self.reqs[&id].generated.len());
+            let gen = self.reqs.get(&id).map_or(0, |r| r.generated.len());
+            self.tracer.req_finish(id, reason_label(reason), gen);
             self.events.push(Event::Finished { id, reason });
             // Insert-on-finish: lease the sequence's full blocks into
             // the prefix cache before it releases them.  Granules

@@ -49,6 +49,15 @@ pub enum Error {
     #[error("cancel error: {0}")]
     Cancel(String),
 
+    /// A fault fired by the injection plane (`crate::faults`).  Carries
+    /// its transience class so the retry/degradation ladder can be
+    /// exercised deterministically.
+    #[error("injected fault at {point} (transient={transient})")]
+    Injected {
+        point: &'static str,
+        transient: bool,
+    },
+
     #[error("{0}")]
     Other(String),
 }
@@ -64,5 +73,18 @@ pub type Result<T> = std::result::Result<T, Error>;
 impl Error {
     pub fn other(msg: impl Into<String>) -> Self {
         Error::Other(msg.into())
+    }
+
+    /// Transient errors are worth retrying with backoff; fatal ones fail
+    /// the request (or path) immediately.  Device/runtime (`Xla`) errors
+    /// are classified transient — a PJRT hiccup is exactly the case the
+    /// retry ladder exists for — everything host-side (config, format,
+    /// protocol) is deterministic and therefore fatal.
+    pub fn is_transient(&self) -> bool {
+        match self {
+            Error::Injected { transient, .. } => *transient,
+            Error::Xla(_) => true,
+            _ => false,
+        }
     }
 }

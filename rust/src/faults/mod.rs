@@ -1,0 +1,578 @@
+//! Deterministic fault-injection plane and the unified path-health
+//! registry (the self-healing degradation ladder).
+//!
+//! Mirrors the tracer's cost discipline (`rust/src/trace/mod.rs`): the
+//! plane is constructed unconditionally and threaded through the
+//! runtime, the engine, and the cache sessions, but every injection
+//! point is a single relaxed `AtomicBool` load until a `--fault-spec`
+//! plan is installed — serving pays nothing for the capability to be
+//! broken on purpose.
+//!
+//! # Injection points
+//!
+//! One [`InjectPoint`] per engine/device boundary:
+//!
+//! | point      | fires inside                                             |
+//! |------------|----------------------------------------------------------|
+//! | `h2d`      | host→device upload (`Runtime::upload_f32`/`upload_i32`)  |
+//! | `exec`     | artifact execution (`Executable::execute_buffers`)       |
+//! | `readback` | logits/pair readback (`Executable::read_output`/host)    |
+//! | `sync`     | session cache-pair sync (`DeviceCacheSession`)           |
+//! | `gather`   | precompute-table row gather (`ModelEngine`)              |
+//!
+//! # Fault plans
+//!
+//! A plan is a `;`-separated list of rules, each
+//! `<point>:<transient|fatal>[:after=N][:every=N][:count=N][:delay_us=N]`:
+//!
+//! * `after=N`  — let the first N crossings of the point pass (warmup);
+//! * `every=N`  — past the warmup, fire on every N-th crossing (default
+//!   1: every crossing);
+//! * `count=N`  — stop after N fires (default 0: unbounded);
+//! * `delay_us` — sleep that long before returning the error (a latency
+//!   spike riding on the fault).
+//!
+//! Example: `exec:transient:after=6:every=5:count=4;sync:fatal:after=40`.
+//! Rules are evaluated in plan order; the first that decides to fire
+//! wins the crossing.  Everything is counter-based — no clocks, no
+//! randomness — so a seeded workload replays the exact same fault
+//! sequence every run, which is what lets the chaos gate compare
+//! faulted streams against a fault-free oracle.
+//!
+//! # Health registry
+//!
+//! [`HealthRegistry`] replaces the three ad-hoc sticky booleans the
+//! engine grew across PRs 3/5/6 (`device_kv_ok`, `span_ok`,
+//! `span_batch_ok`) with one ladder: a path failure *demotes* the path
+//! (serving degrades exactly as before), but after
+//! `health_cooldown_steps` coordinator steps the path is *re-promoted*
+//! and the next use doubles as the recovery probe — if the fault has
+//! cleared the path stays fast, if not it re-demotes and the cooldown
+//! restarts.  `cooldown = 0` restores the old demote-forever behavior.
+//! Mere capability gaps (no compiled bucket, unplannable group) never
+//! touch the registry — that rule is inherited unchanged.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::OnceLock;
+
+use crate::error::{Error, Result};
+
+/// Engine/device boundaries a fault can be injected at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InjectPoint {
+    /// Host→device tensor upload.
+    H2d,
+    /// Device artifact execution.
+    Exec,
+    /// Device→host output readback.
+    Readback,
+    /// Device cache-pair sync to host.
+    Sync,
+    /// Precompute-table row gather.
+    Gather,
+}
+
+impl InjectPoint {
+    pub const ALL: [InjectPoint; 5] = [
+        InjectPoint::H2d,
+        InjectPoint::Exec,
+        InjectPoint::Readback,
+        InjectPoint::Sync,
+        InjectPoint::Gather,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            InjectPoint::H2d => "h2d",
+            InjectPoint::Exec => "exec",
+            InjectPoint::Readback => "readback",
+            InjectPoint::Sync => "sync",
+            InjectPoint::Gather => "gather",
+        }
+    }
+
+    fn parse(s: &str) -> Option<InjectPoint> {
+        InjectPoint::ALL.into_iter().find(|p| p.label() == s)
+    }
+}
+
+/// One parsed fault rule (see the module doc for the grammar).
+#[derive(Debug)]
+struct Rule {
+    point: InjectPoint,
+    transient: bool,
+    after: u64,
+    every: u64,
+    count: u64,
+    delay_us: u64,
+    crossings: AtomicU64,
+    fired: AtomicU64,
+}
+
+fn parse_rule(s: &str) -> Result<Rule> {
+    let mut parts = s.split(':');
+    let point = parts
+        .next()
+        .and_then(InjectPoint::parse)
+        .ok_or_else(|| Error::Config(format!("fault-spec `{s}`: unknown injection point")))?;
+    let transient = match parts.next() {
+        Some("transient") => true,
+        Some("fatal") => false,
+        other => {
+            return Err(Error::Config(format!(
+                "fault-spec `{s}`: expected transient|fatal, got {other:?}"
+            )))
+        }
+    };
+    let (mut after, mut every, mut count, mut delay_us) = (0u64, 1u64, 0u64, 0u64);
+    for kv in parts {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| Error::Config(format!("fault-spec `{s}`: bad field `{kv}`")))?;
+        let n: u64 = v
+            .parse()
+            .map_err(|_| Error::Config(format!("fault-spec `{s}`: bad number `{v}`")))?;
+        match k {
+            "after" => after = n,
+            "every" => every = n.max(1),
+            "count" => count = n,
+            "delay_us" => delay_us = n,
+            _ => {
+                return Err(Error::Config(format!(
+                    "fault-spec `{s}`: unknown field `{k}`"
+                )))
+            }
+        }
+    }
+    Ok(Rule {
+        point,
+        transient,
+        after,
+        every,
+        count,
+        delay_us,
+        crossings: AtomicU64::new(0),
+        fired: AtomicU64::new(0),
+    })
+}
+
+fn parse_spec(spec: &str) -> Result<Vec<Rule>> {
+    spec.split(';')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(parse_rule)
+        .collect()
+}
+
+/// The fault-injection plane: disarmed by default (one relaxed atomic
+/// load per crossing), armed once by [`FaultPlane::install`].
+#[derive(Debug, Default)]
+pub struct FaultPlane {
+    armed: AtomicBool,
+    rules: OnceLock<Vec<Rule>>,
+    fired_total: AtomicU64,
+}
+
+impl FaultPlane {
+    pub fn new() -> FaultPlane {
+        FaultPlane::default()
+    }
+
+    /// Install a fault plan (once per process lifetime of this plane).
+    /// An empty spec leaves the plane disarmed.  Returns the rule count.
+    pub fn install(&self, spec: &str) -> Result<usize> {
+        let rules = parse_spec(spec)?;
+        let n = rules.len();
+        if n == 0 {
+            return Ok(0);
+        }
+        self.rules
+            .set(rules)
+            .map_err(|_| Error::Config("fault plane already armed".into()))?;
+        self.armed.store(true, Relaxed);
+        Ok(n)
+    }
+
+    /// Whether any rule is installed.
+    pub fn armed(&self) -> bool {
+        self.armed.load(Relaxed)
+    }
+
+    /// Total faults fired across all rules.
+    pub fn fired_total(&self) -> u64 {
+        self.fired_total.load(Relaxed)
+    }
+
+    /// The gate every boundary calls.  Disarmed: one relaxed load, `Ok`.
+    #[inline]
+    pub fn check(&self, point: InjectPoint) -> Result<()> {
+        if !self.armed.load(Relaxed) {
+            return Ok(());
+        }
+        self.check_armed(point)
+    }
+
+    fn check_armed(&self, point: InjectPoint) -> Result<()> {
+        let Some(rules) = self.rules.get() else {
+            return Ok(());
+        };
+        for r in rules {
+            if r.point != point {
+                continue;
+            }
+            let n = r.crossings.fetch_add(1, Relaxed) + 1;
+            if n <= r.after {
+                continue;
+            }
+            if (n - r.after - 1) % r.every != 0 {
+                continue;
+            }
+            if r.count > 0 && r.fired.fetch_add(1, Relaxed) >= r.count {
+                continue;
+            }
+            if r.count == 0 {
+                r.fired.fetch_add(1, Relaxed);
+            }
+            self.fired_total.fetch_add(1, Relaxed);
+            if r.delay_us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(r.delay_us));
+            }
+            return Err(Error::Injected {
+                point: point.label(),
+                transient: r.transient,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// The serving paths whose health the ladder tracks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathId {
+    /// Device-resident KV (buffer-chained cache sessions).
+    DeviceKv,
+    /// Batched span execution (span artifacts vs token-by-token).
+    SpanExec,
+    /// Multi-sequence `[B, T]` span groups (vs per-sequence spans).
+    SpanBatch,
+}
+
+impl PathId {
+    pub const ALL: [PathId; 3] = [PathId::DeviceKv, PathId::SpanExec, PathId::SpanBatch];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PathId::DeviceKv => "device_kv",
+            PathId::SpanExec => "span_exec",
+            PathId::SpanBatch => "span_batch",
+        }
+    }
+
+    /// Stable small integer for trace-instant payloads and metrics
+    /// labels (also the path's slot in the registry).
+    pub fn index(self) -> usize {
+        match self {
+            PathId::DeviceKv => 0,
+            PathId::SpanExec => 1,
+            PathId::SpanBatch => 2,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct PathState {
+    /// Config gate (`--no-device-kv` etc.); never changed by faults.
+    enabled: AtomicBool,
+    /// Demoted (false) after a failure, re-promoted by the cooldown.
+    healthy: AtomicBool,
+    /// Step number (registry ticks) at the last demotion.
+    demoted_at: AtomicU64,
+    failures: AtomicU64,
+    demotions: AtomicU64,
+    promotions: AtomicU64,
+}
+
+impl Default for PathState {
+    fn default() -> PathState {
+        PathState {
+            enabled: AtomicBool::new(true),
+            healthy: AtomicBool::new(true),
+            demoted_at: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            demotions: AtomicU64::new(0),
+            promotions: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Per-path failure counters, demotion state, and cooldown-driven
+/// recovery probes — the unified replacement for the engine's sticky
+/// health booleans.  All methods are lock-free; the registry is shared
+/// (`Arc`) between the engine (which records failures and answers
+/// `active`) and the coordinator (which ticks it once per step and
+/// surfaces transitions in metrics and trace instants).
+#[derive(Debug)]
+pub struct HealthRegistry {
+    paths: [PathState; 3],
+    /// Steps a demoted path waits before the re-promotion probe
+    /// (0 = demote forever, the pre-ladder behavior).
+    cooldown: AtomicU64,
+    step: AtomicU64,
+}
+
+impl HealthRegistry {
+    pub fn new(cooldown_steps: u64) -> HealthRegistry {
+        HealthRegistry {
+            paths: Default::default(),
+            cooldown: AtomicU64::new(cooldown_steps),
+            step: AtomicU64::new(0),
+        }
+    }
+
+    pub fn set_cooldown(&self, steps: u64) {
+        self.cooldown.store(steps, Relaxed);
+    }
+
+    pub fn cooldown(&self) -> u64 {
+        self.cooldown.load(Relaxed)
+    }
+
+    /// The config gate: enable/disable a path outright.  Does not touch
+    /// health — a disabled path keeps its demotion state for when it is
+    /// re-enabled.
+    pub fn set_enabled(&self, p: PathId, on: bool) {
+        self.paths[p.index()].enabled.store(on, Relaxed);
+    }
+
+    pub fn enabled(&self, p: PathId) -> bool {
+        self.paths[p.index()].enabled.load(Relaxed)
+    }
+
+    pub fn healthy(&self, p: PathId) -> bool {
+        self.paths[p.index()].healthy.load(Relaxed)
+    }
+
+    /// Enabled AND currently healthy — the serving-time switch.
+    pub fn active(&self, p: PathId) -> bool {
+        let s = &self.paths[p.index()];
+        s.enabled.load(Relaxed) && s.healthy.load(Relaxed)
+    }
+
+    /// Record a path failure; demotes on the healthy→unhealthy
+    /// transition and returns whether this call was that transition.
+    pub fn record_failure(&self, p: PathId) -> bool {
+        let s = &self.paths[p.index()];
+        s.failures.fetch_add(1, Relaxed);
+        let was_healthy = s.healthy.swap(false, Relaxed);
+        if was_healthy {
+            s.demotions.fetch_add(1, Relaxed);
+            s.demoted_at.store(self.step.load(Relaxed), Relaxed);
+        }
+        was_healthy
+    }
+
+    /// Advance the registry clock one step and re-promote every demoted
+    /// path whose cooldown has elapsed.  The next use of a promoted
+    /// path IS the recovery probe: success keeps it fast, failure
+    /// re-demotes it and restarts the cooldown.  Returns the promoted
+    /// paths so the caller can surface the transitions.
+    pub fn tick(&self) -> Vec<PathId> {
+        let now = self.step.fetch_add(1, Relaxed) + 1;
+        let cd = self.cooldown.load(Relaxed);
+        let mut promoted = Vec::new();
+        if cd == 0 {
+            return promoted;
+        }
+        for p in PathId::ALL {
+            let s = &self.paths[p.index()];
+            if s.enabled.load(Relaxed)
+                && !s.healthy.load(Relaxed)
+                && now.saturating_sub(s.demoted_at.load(Relaxed)) >= cd
+            {
+                s.healthy.store(true, Relaxed);
+                s.promotions.fetch_add(1, Relaxed);
+                promoted.push(p);
+            }
+        }
+        promoted
+    }
+
+    pub fn failures(&self, p: PathId) -> u64 {
+        self.paths[p.index()].failures.load(Relaxed)
+    }
+
+    pub fn demotions(&self, p: PathId) -> u64 {
+        self.paths[p.index()].demotions.load(Relaxed)
+    }
+
+    pub fn promotions(&self, p: PathId) -> u64 {
+        self.paths[p.index()].promotions.load(Relaxed)
+    }
+
+    pub fn total_demotions(&self) -> u64 {
+        PathId::ALL.iter().map(|p| self.demotions(*p)).sum()
+    }
+
+    pub fn total_promotions(&self) -> u64 {
+        PathId::ALL.iter().map(|p| self.promotions(*p)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_plane_never_fires() {
+        let p = FaultPlane::new();
+        assert!(!p.armed());
+        for pt in InjectPoint::ALL {
+            for _ in 0..100 {
+                p.check(pt).unwrap();
+            }
+        }
+        assert_eq!(p.fired_total(), 0);
+    }
+
+    #[test]
+    fn empty_spec_stays_disarmed() {
+        let p = FaultPlane::new();
+        assert_eq!(p.install("").unwrap(), 0);
+        assert_eq!(p.install("  ;  ").unwrap(), 0);
+        assert!(!p.armed());
+    }
+
+    #[test]
+    fn spec_parse_errors() {
+        for bad in [
+            "bogus:transient",
+            "exec",
+            "exec:sometimes",
+            "exec:transient:after",
+            "exec:transient:after=x",
+            "exec:transient:zorp=3",
+        ] {
+            assert!(
+                FaultPlane::new().install(bad).is_err(),
+                "spec `{bad}` should not parse"
+            );
+        }
+    }
+
+    #[test]
+    fn after_every_count_semantics() {
+        let p = FaultPlane::new();
+        assert_eq!(p.install("exec:transient:after=3:every=2:count=2").unwrap(), 1);
+        // Crossings 1..=3 pass (warmup); 4 fires, 5 passes, 6 fires,
+        // then the count budget is spent and everything passes.
+        let fires: Vec<bool> = (1..=10)
+            .map(|_| p.check(InjectPoint::Exec).is_err())
+            .collect();
+        assert_eq!(
+            fires,
+            [false, false, false, true, false, true, false, false, false, false]
+        );
+        assert_eq!(p.fired_total(), 2);
+        // Other points are untouched by an exec-only rule.
+        p.check(InjectPoint::Sync).unwrap();
+        p.check(InjectPoint::Gather).unwrap();
+    }
+
+    #[test]
+    fn deterministic_across_planes() {
+        let spec = "h2d:transient:after=2:every=3:count=5;exec:fatal:after=7";
+        let run = || -> Vec<(bool, bool)> {
+            let p = FaultPlane::new();
+            p.install(spec).unwrap();
+            (0..20)
+                .map(|_| {
+                    (
+                        p.check(InjectPoint::H2d).is_err(),
+                        p.check(InjectPoint::Exec).is_err(),
+                    )
+                })
+                .collect()
+        };
+        assert_eq!(run(), run(), "same spec must fire the same sequence");
+    }
+
+    #[test]
+    fn transient_vs_fatal_classification() {
+        let p = FaultPlane::new();
+        p.install("sync:transient;gather:fatal").unwrap();
+        let t = p.check(InjectPoint::Sync).unwrap_err();
+        assert!(t.is_transient(), "transient rule must classify transient");
+        let f = p.check(InjectPoint::Gather).unwrap_err();
+        assert!(!f.is_transient(), "fatal rule must classify fatal");
+        assert!(t.to_string().contains("sync"));
+        assert!(f.to_string().contains("gather"));
+    }
+
+    #[test]
+    fn unbounded_rule_fires_every_crossing() {
+        let p = FaultPlane::new();
+        p.install("readback:transient").unwrap();
+        for _ in 0..5 {
+            assert!(p.check(InjectPoint::Readback).is_err());
+        }
+        assert_eq!(p.fired_total(), 5);
+    }
+
+    #[test]
+    fn health_demote_then_cooldown_promotes() {
+        let h = HealthRegistry::new(3);
+        assert!(h.active(PathId::DeviceKv));
+        // Step a bit, then fail: demotes on the first failure only.
+        h.tick();
+        assert!(h.record_failure(PathId::DeviceKv));
+        assert!(!h.record_failure(PathId::DeviceKv), "already demoted");
+        assert!(!h.active(PathId::DeviceKv));
+        assert_eq!(h.failures(PathId::DeviceKv), 2);
+        assert_eq!(h.demotions(PathId::DeviceKv), 1);
+        // Two more ticks: still cooling down.
+        assert!(h.tick().is_empty());
+        assert!(h.tick().is_empty());
+        assert!(!h.active(PathId::DeviceKv));
+        // Third tick past the demotion: promoted.
+        assert_eq!(h.tick(), vec![PathId::DeviceKv]);
+        assert!(h.active(PathId::DeviceKv));
+        assert_eq!(h.promotions(PathId::DeviceKv), 1);
+        // A failed probe re-demotes and the cooldown restarts.
+        assert!(h.record_failure(PathId::DeviceKv));
+        assert!(h.tick().is_empty());
+    }
+
+    #[test]
+    fn zero_cooldown_is_sticky() {
+        let h = HealthRegistry::new(0);
+        h.record_failure(PathId::SpanExec);
+        for _ in 0..100 {
+            assert!(h.tick().is_empty());
+        }
+        assert!(!h.active(PathId::SpanExec));
+    }
+
+    #[test]
+    fn disabled_paths_never_promote() {
+        let h = HealthRegistry::new(1);
+        h.record_failure(PathId::SpanBatch);
+        h.set_enabled(PathId::SpanBatch, false);
+        assert!(h.tick().is_empty(), "disabled path must not probe");
+        assert!(!h.active(PathId::SpanBatch));
+        // Re-enabling makes it eligible again on the next tick.
+        h.set_enabled(PathId::SpanBatch, true);
+        assert_eq!(h.tick(), vec![PathId::SpanBatch]);
+        assert!(h.active(PathId::SpanBatch));
+    }
+
+    #[test]
+    fn enable_gate_independent_of_health() {
+        let h = HealthRegistry::new(5);
+        h.set_enabled(PathId::DeviceKv, false);
+        assert!(!h.active(PathId::DeviceKv));
+        assert!(h.healthy(PathId::DeviceKv), "disabling is not a demotion");
+        h.set_enabled(PathId::DeviceKv, true);
+        assert!(h.active(PathId::DeviceKv));
+        assert_eq!(h.total_demotions(), 0);
+    }
+}

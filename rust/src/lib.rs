@@ -26,6 +26,7 @@ pub mod config;
 pub mod coordinator;
 pub mod costmodel;
 pub mod error;
+pub mod faults;
 pub mod kvcache;
 pub mod manifest;
 pub mod metrics;

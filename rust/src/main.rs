@@ -39,6 +39,15 @@ COMMANDS:
                   --no-span-batch (serial per-sequence spans: no [B, T] groups)
                   --trace (record request lifecycles; export via trace.dump)
                   --trace-ring N (completed requests the tracer retains)
+                  --fault-spec SPEC (deterministic fault plan, e.g.
+                    exec:transient:after=6:every=5;sync:fatal:after=40)
+                  --retry-max N --retry-backoff-us N (transient-error
+                    retries inside the step; backoff doubles per attempt)
+                  --health-cooldown N (steps before a demoted path is
+                    re-probed; 0 = demote forever)
+                  --conversation-ttl MS (expire idle chats; 0 = never)
+                  --stream-queue-events N (per-stream writer bound before
+                    a slow reader's sequence is paused)
   generate      one-shot generation from the CLI
                   --prompt \"text\" --max-new 32 --model tiny-serial
                   --path precompute|baseline --temperature 0 --top-k 0
@@ -53,6 +62,14 @@ COMMANDS:
   trace-smoke   run a simtraffic burst with tracing on and dump the Chrome
                 trace-event JSON (load in Perfetto / chrome://tracing)
                   --out trace.json [--model tiny-serial] [--requests N]
+  chaos         fault-injection gate: run a seeded burst fault-free (the
+                oracle), re-run it with the fault plane armed, and assert
+                every request reaches a terminal event, surviving greedy
+                streams match the oracle byte-for-byte, no KV block or
+                prefix lease leaks, and demoted paths re-promote after the
+                cooldown; finishes with a mass-cancel storm
+                  [--model tiny-serial] [--requests N] [--seed N]
+                  [--fault-spec SPEC] [--health-cooldown N]
 ";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -155,6 +172,24 @@ fn serving_config(flags: &HashMap<String, String>) -> ServingConfig {
     if let Some(r) = flags.get("trace-ring") {
         cfg.trace_ring = r.parse().unwrap_or(cfg.trace_ring);
     }
+    if let Some(f) = flags.get("fault-spec") {
+        cfg.fault_spec = f.clone();
+    }
+    if let Some(r) = flags.get("retry-max") {
+        cfg.retry_max = r.parse().unwrap_or(cfg.retry_max);
+    }
+    if let Some(b) = flags.get("retry-backoff-us") {
+        cfg.retry_backoff_us = b.parse().unwrap_or(cfg.retry_backoff_us);
+    }
+    if let Some(c) = flags.get("health-cooldown") {
+        cfg.health_cooldown_steps = c.parse().unwrap_or(cfg.health_cooldown_steps);
+    }
+    if let Some(t) = flags.get("conversation-ttl") {
+        cfg.conversation_ttl_ms = t.parse().unwrap_or(cfg.conversation_ttl_ms);
+    }
+    if let Some(q) = flags.get("stream-queue-events") {
+        cfg.stream_queue_events = q.parse().unwrap_or(cfg.stream_queue_events);
+    }
     cfg
 }
 
@@ -170,6 +205,7 @@ fn main() {
         "sweep" => cmd_sweep(&flags),
         "selfcheck" => cmd_selfcheck(&flags),
         "trace-smoke" => cmd_trace_smoke(&flags),
+        "chaos" => cmd_chaos(&flags),
         _ => {
             eprint!("{USAGE}");
             std::process::exit(2);
@@ -188,7 +224,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         .cloned()
         .unwrap_or_else(|| "127.0.0.1:7411".to_string());
     eprintln!("[firstlayer] model={} starting…", cfg.model);
-    Server::new(addr).run(move || {
+    let queue = cfg.stream_queue_events;
+    Server::new(addr).with_stream_queue(queue).run(move || {
         let c = Coordinator::from_config(&cfg)?;
         eprintln!(
             "[firstlayer] path={} (warming up artifacts…)",
@@ -381,5 +418,198 @@ fn cmd_trace_smoke(flags: &HashMap<String, String>) -> Result<()> {
         tracer.steps_count(),
     );
     println!("--- metrics ---\n{}", c.metrics.report());
+    Ok(())
+}
+
+/// The chaos gate (`scripts/chaos_gate.sh`): prove the serving loop's
+/// fault containment end to end, against a live engine.
+///
+/// Phase 1 runs a seeded greedy burst fault-free and records each tag's
+/// token stream — the oracle.  Phase 2 replays the identical burst with
+/// the deterministic fault plane armed and then asserts the robustness
+/// contract: every request reaches a terminal event; requests that only
+/// retried transients reproduce the oracle stream exactly; terminal
+/// failures are `error`-reasoned, bounded in number by the plan, and
+/// leak nothing (free blocks + prefix leases add back up to the pool,
+/// and the kvcache invariant audit passes).  Phase 3 drives a
+/// mass-cancel storm through the SAME coordinator, which both exercises
+/// cancellation under a degraded ladder and generates the steps the
+/// cooldown needs — the gate then requires every demoted path to have
+/// re-promoted.  Any violation is an `Err`, so the script fails on exit
+/// code alone.
+fn cmd_chaos(flags: &HashMap<String, String>) -> Result<()> {
+    use firstlayer::coordinator::FinishReason;
+    let mut cfg = serving_config(flags);
+    if cfg.prefill_chunk_tokens == 0 {
+        cfg.prefill_chunk_tokens = 16;
+    }
+    if !flags.contains_key("health-cooldown") {
+        // Short enough that phase 3's steps cover the re-probe.
+        cfg.health_cooldown_steps = 8;
+    }
+    if cfg.fault_spec.is_empty() {
+        // Bounded bursts at three boundary classes: transient exec and
+        // readback noise the in-step retries must absorb, plus one
+        // fatal sync hit that forces the recompute-from-host path and a
+        // device-KV demotion.  Every rule is count-bounded, so phase 3
+        // runs fault-free and the recovery probes succeed.
+        cfg.fault_spec = "exec:transient:after=12:every=9:count=3;\
+                          readback:transient:after=8:every=11:count=2;\
+                          sync:fatal:after=2:count=1"
+            .to_string();
+    }
+    let n: usize = flags
+        .get("requests")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12);
+    let seed: u64 = flags
+        .get("seed")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xFA17);
+
+    // Phase 1: the fault-free oracle.
+    let mut oracle_cfg = cfg.clone();
+    oracle_cfg.fault_spec = String::new();
+    let mut c = Coordinator::from_config(&oracle_cfg)?;
+    let vocab = c.engine().config().vocab_size as u32;
+    let burst = firstlayer::simtraffic::fault_burst_workload(n, 16, 8, vocab, seed);
+    let mut oracle: HashMap<String, Vec<u32>> = HashMap::new();
+    let mut ids = Vec::new();
+    for r in burst.clone() {
+        let tag = r.tag.clone().unwrap_or_default();
+        ids.push((tag, c.submit(r)?));
+    }
+    c.run_to_completion(10_000)?;
+    for (tag, id) in &ids {
+        match c.finished(*id) {
+            Some(FinishReason::Error) | None => {
+                return Err(firstlayer::Error::Engine(format!(
+                    "[chaos] oracle run must be clean, but `{tag}` did not finish"
+                )))
+            }
+            Some(_) => {
+                oracle.insert(tag.clone(), c.generated(*id).unwrap_or(&[]).to_vec());
+            }
+        }
+    }
+    println!("[chaos] oracle: {n} requests finished clean");
+
+    // Phase 2: identical burst, fault plane armed.
+    let mut c = Coordinator::from_config(&cfg)?;
+    println!("[chaos] armed: {}", cfg.fault_spec);
+    let mut ids = Vec::new();
+    for r in burst {
+        let tag = r.tag.clone().unwrap_or_default();
+        ids.push((tag, c.submit(r)?));
+    }
+    c.run_to_completion(10_000)?;
+    let mut errored = 0usize;
+    for (tag, id) in &ids {
+        match c.finished(*id) {
+            None => {
+                return Err(firstlayer::Error::Engine(format!(
+                    "[chaos] `{tag}` reached no terminal event under faults"
+                )))
+            }
+            Some(FinishReason::Error) => errored += 1,
+            Some(_) => {
+                let got = c.generated(*id).unwrap_or(&[]);
+                let want = oracle.get(tag).map_or(&[][..], |v| v);
+                if got != want {
+                    return Err(firstlayer::Error::Engine(format!(
+                        "[chaos] survivor `{tag}` diverged from the oracle \
+                         ({got:?} vs {want:?}) — a retry or a peer failure \
+                         perturbed its stream"
+                    )));
+                }
+            }
+        }
+    }
+    use std::sync::atomic::Ordering::Relaxed;
+    let injected = c.metrics.fault_injected.load(Relaxed);
+    let retries = c.metrics.fault_retries.load(Relaxed);
+    if injected == 0 {
+        return Err(firstlayer::Error::Engine(
+            "[chaos] the plan never fired — the gate proved nothing; \
+             lower after=/raise count= so faults land inside the burst"
+                .into(),
+        ));
+    }
+    if retries > injected.saturating_mul(cfg.retry_max as u64) {
+        return Err(firstlayer::Error::Engine(format!(
+            "[chaos] unbounded retry: {retries} retries for {injected} injected faults"
+        )));
+    }
+    chaos_leak_check(&c, &cfg, "post-burst")?;
+    println!(
+        "[chaos] faulted: {errored}/{n} errored terminally, {} survivors \
+         oracle-identical ({injected} faults injected, {retries} retried)",
+        n - errored
+    );
+
+    // Phase 3: mass-cancel storm on the same (possibly demoted) engine;
+    // its steps also drive the health cooldown to the re-promotion.
+    let storm = firstlayer::simtraffic::fault_burst_workload(n, 16, 24, vocab, seed ^ 0x5707);
+    let mut ids = Vec::new();
+    for r in storm {
+        ids.push(c.submit(r)?);
+    }
+    for _ in 0..3 {
+        if c.busy() {
+            c.step()?;
+        }
+    }
+    for id in ids.iter().step_by(2) {
+        let _ = c.cancel(*id);
+    }
+    c.run_to_completion(10_000)?;
+    for id in &ids {
+        if c.finished(*id).is_none() {
+            return Err(firstlayer::Error::Engine(format!(
+                "[chaos] storm request {id} reached no terminal event"
+            )));
+        }
+    }
+    chaos_leak_check(&c, &cfg, "post-storm")?;
+    let health = c.engine().health();
+    for p in firstlayer::faults::PathId::ALL {
+        if health.demotions(p) > health.promotions(p) {
+            return Err(firstlayer::Error::Engine(format!(
+                "[chaos] path {} was demoted and never re-promoted \
+                 (cooldown {} steps)",
+                p.label(),
+                health.cooldown()
+            )));
+        }
+    }
+    println!(
+        "[chaos] storm: {} requests terminal after mass-cancel; \
+         demotions={} promotions={}",
+        ids.len(),
+        health.total_demotions(),
+        health.total_promotions()
+    );
+    println!("[chaos] OK");
+    Ok(())
+}
+
+/// Leak audit shared by the chaos phases: with every request terminal,
+/// the pool must be exactly (free blocks) + (prefix-cache leases), and
+/// the kvcache's internal refcount/lease audit must pass.
+fn chaos_leak_check(
+    c: &Coordinator,
+    cfg: &ServingConfig,
+    when: &str,
+) -> Result<()> {
+    c.check_kv_invariants()?;
+    let free = c.kv_free_blocks();
+    let leased = c.prefix_cache_blocks_held();
+    if free + leased != cfg.kv_blocks {
+        return Err(firstlayer::Error::Engine(format!(
+            "[chaos] {when}: block leak — free {free} + prefix leases {leased} \
+             != pool {}",
+            cfg.kv_blocks
+        )));
+    }
     Ok(())
 }

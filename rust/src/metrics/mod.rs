@@ -244,6 +244,26 @@ pub struct Metrics {
     pub requests_done: AtomicU64,
     pub requests_rejected: AtomicU64,
     pub requests_cancelled: AtomicU64,
+    /// Requests that exhausted transient retries (or hit a fatal engine
+    /// error) and finished with `reason:"error"` — terminal, all KV and
+    /// scheduler state released.
+    pub requests_errored: AtomicU64,
+    /// Fault plane (`rust/src/faults/`): injected faults fired so far,
+    /// and engine operations re-run after a transient error (each retry
+    /// attempt counts once, successful or not).
+    pub fault_injected: AtomicU64,
+    pub fault_retries: AtomicU64,
+    /// Degradation ladder: serving-path demotions (failure marked a path
+    /// unhealthy) and cooldown re-promotions (recovery probes re-armed
+    /// the path).  Mirrors the engine's `HealthRegistry` totals.
+    pub health_demotions: AtomicU64,
+    pub health_promotions: AtomicU64,
+    /// Slow-reader flow control: transitions of a stream into the
+    /// stalled state (its per-tag writer queue hit the bound and the
+    /// request was paused at the scheduler until the reader drained).
+    pub stream_stalls: AtomicU64,
+    /// Idle conversations closed by the TTL sweeper.
+    pub conversations_expired: AtomicU64,
     /// Multi-turn chat: completed turns across all conversations, and
     /// prompt tokens a turn reused from the prefix cache instead of
     /// re-prefilling (the prior transcript served from generated-span
@@ -312,14 +332,26 @@ impl Metrics {
         use std::fmt::Write;
         let _ = writeln!(
             s,
-            "requests: in={} done={} rejected={} cancelled={}  tokens_out={}  preemptions={}  prefill_chunks={}",
+            "requests: in={} done={} rejected={} cancelled={} errored={}  tokens_out={}  preemptions={}  prefill_chunks={}",
             self.requests_in.load(Ordering::Relaxed),
             self.requests_done.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
             self.requests_cancelled.load(Ordering::Relaxed),
+            self.requests_errored.load(Ordering::Relaxed),
             self.tokens_out.load(Ordering::Relaxed),
             self.preemptions.load(Ordering::Relaxed),
             self.prefill_chunks.load(Ordering::Relaxed),
+        );
+        let _ = writeln!(
+            s,
+            "faults: injected={} retries={}  health: demotions={} promotions={}  \
+             stream_stalls={} conversations_expired={}",
+            self.fault_injected.load(Ordering::Relaxed),
+            self.fault_retries.load(Ordering::Relaxed),
+            self.health_demotions.load(Ordering::Relaxed),
+            self.health_promotions.load(Ordering::Relaxed),
+            self.stream_stalls.load(Ordering::Relaxed),
+            self.conversations_expired.load(Ordering::Relaxed),
         );
         let _ = writeln!(
             s,
@@ -401,6 +433,25 @@ impl Metrics {
             (
                 "requests_cancelled",
                 self.requests_cancelled.load(Ordering::Relaxed),
+            ),
+            (
+                "requests_errored",
+                self.requests_errored.load(Ordering::Relaxed),
+            ),
+            ("fault_injected", self.fault_injected.load(Ordering::Relaxed)),
+            ("fault_retries", self.fault_retries.load(Ordering::Relaxed)),
+            (
+                "health_demotions",
+                self.health_demotions.load(Ordering::Relaxed),
+            ),
+            (
+                "health_promotions",
+                self.health_promotions.load(Ordering::Relaxed),
+            ),
+            ("stream_stalls", self.stream_stalls.load(Ordering::Relaxed)),
+            (
+                "conversations_expired",
+                self.conversations_expired.load(Ordering::Relaxed),
             ),
             ("tokens_out", self.tokens_out.load(Ordering::Relaxed)),
             ("preemptions", self.preemptions.load(Ordering::Relaxed)),
@@ -679,6 +730,31 @@ mod tests {
         assert_ne!(vbucket_of(3), vbucket_of(4));
         // Top bucket clamps instead of overflowing.
         assert_eq!(vbucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn report_and_prom_contain_fault_counters() {
+        let m = Metrics::new();
+        m.requests_errored.fetch_add(1, Ordering::Relaxed);
+        m.fault_injected.fetch_add(4, Ordering::Relaxed);
+        m.fault_retries.fetch_add(2, Ordering::Relaxed);
+        m.health_demotions.fetch_add(1, Ordering::Relaxed);
+        m.health_promotions.fetch_add(1, Ordering::Relaxed);
+        m.stream_stalls.fetch_add(3, Ordering::Relaxed);
+        m.conversations_expired.fetch_add(5, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("errored=1"));
+        assert!(r.contains("faults: injected=4 retries=2"));
+        assert!(r.contains("health: demotions=1 promotions=1"));
+        assert!(r.contains("stream_stalls=3 conversations_expired=5"));
+        let p = m.prometheus(&TransferStats::new().snapshot());
+        assert!(p.contains("firstlayer_requests_errored 1"));
+        assert!(p.contains("firstlayer_fault_injected 4"));
+        assert!(p.contains("firstlayer_fault_retries 2"));
+        assert!(p.contains("firstlayer_health_demotions 1"));
+        assert!(p.contains("firstlayer_health_promotions 1"));
+        assert!(p.contains("firstlayer_stream_stalls 3"));
+        assert!(p.contains("firstlayer_conversations_expired 5"));
     }
 
     #[test]

@@ -20,11 +20,12 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
+use crate::faults::{FaultPlane, HealthRegistry, InjectPoint, PathId};
 use crate::manifest::{ArtifactKind, Manifest, ModelEntry};
 use crate::metrics::TransferStats;
 use crate::precompute::{validate_table, Table};
@@ -299,22 +300,18 @@ pub struct ModelEngine {
     buf_by_name: Mutex<HashMap<String, Arc<xla::PjRtBuffer>>>,
     loaded: Mutex<HashMap<String, Arc<Loaded>>>,
     pub traffic: Arc<Recorder>,
-    /// Device-resident KV: serving knob (`ServingConfig::enable_device_kv`
-    /// / `--no-device-kv`) and sticky runtime health.  `device_kv_ok`
-    /// flips to false the first time buffer chaining fails (e.g. a PJRT
-    /// wrapper that returns tupled outputs, which cannot be fed back as
-    /// inputs); every later span/session then takes the legacy host path
-    /// directly instead of failing the same way per step.
-    device_kv_enabled: AtomicBool,
-    device_kv_ok: AtomicBool,
-    /// Batched span execution (`decode_span` tiling through the compiled
-    /// span artifacts): serving knob (`ServingConfig::enable_span_exec` /
-    /// `--no-span-exec`) and sticky runtime health, mirroring the
-    /// device-KV pair above.  `span_ok` flips to false the first time a
-    /// span-artifact execution fails; every later span then takes the
-    /// token-by-token oracle directly.
-    span_enabled: AtomicBool,
-    span_ok: AtomicBool,
+    /// Unified path-health ladder (see [`crate::faults::HealthRegistry`]):
+    /// per-path config gate + failure-demoted health + cooldown-driven
+    /// re-promotion, replacing the three sticky booleans the engine
+    /// carried before.  The engine records failures and answers
+    /// `*_active()`; the coordinator ticks the cooldown clock once per
+    /// step and surfaces demotions/promotions in metrics and trace
+    /// instants.  A missing bucket or an unplannable group is a
+    /// capability gap, NOT a health event — it must never demote a path.
+    health: Arc<HealthRegistry>,
+    /// Fault-injection plane shared with the runtime (table row-gathers
+    /// are the engine-owned injection point; the runtime owns the rest).
+    faults: Arc<FaultPlane>,
     /// Largest span tile serving may use (`ServingConfig::
     /// span_bucket_tokens`; 0 = the largest compiled bucket).
     span_bucket_cap: AtomicUsize,
@@ -322,17 +319,6 @@ pub struct ModelEngine {
     /// (the execution counters the acceptance tests assert against).
     span_execs: AtomicU64,
     span_fallback_count: AtomicU64,
-    /// Multi-sequence span groups (`decode_span_group` through the
-    /// `span_*_b{B}_t{T}` artifacts): serving knob
-    /// (`ServingConfig::enable_span_batch` / `--no-span-batch`) and
-    /// sticky runtime health, mirroring the single-sequence span pair
-    /// above.  `span_batch_ok` flips to false the first time a grouped
-    /// execution fails after planning succeeded; later steps then take
-    /// the per-sequence span path directly.  A missing batch bucket or an
-    /// unplannable group is a capability gap, NOT a health event — it
-    /// must not trip this bit.
-    span_batch_enabled: AtomicBool,
-    span_batch_ok: AtomicBool,
     /// Cumulative grouped-span executions (one per group tile — a subset
     /// of `span_execs`).
     span_batched_execs: AtomicU64,
@@ -357,15 +343,15 @@ impl ModelEngine {
             buf_by_name: Mutex::new(HashMap::new()),
             loaded: Mutex::new(HashMap::new()),
             traffic: Arc::new(Recorder::new()),
-            device_kv_enabled: AtomicBool::new(true),
-            device_kv_ok: AtomicBool::new(true),
-            span_enabled: AtomicBool::new(true),
-            span_ok: AtomicBool::new(true),
+            // Default cooldown matches `ServingConfig::health_cooldown_steps`;
+            // the coordinator overrides it from config.  Engine-only users
+            // never tick the registry, so demotions stay sticky for them
+            // exactly as before.
+            health: Arc::new(HealthRegistry::new(256)),
+            faults: rt.faults(),
             span_bucket_cap: AtomicUsize::new(0),
             span_execs: AtomicU64::new(0),
             span_fallback_count: AtomicU64::new(0),
-            span_batch_enabled: AtomicBool::new(true),
-            span_batch_ok: AtomicBool::new(true),
             span_batched_execs: AtomicU64::new(0),
         })
     }
@@ -374,47 +360,58 @@ impl ModelEngine {
         &self.entry.config
     }
 
+    /// The engine's path-health ladder (shared with the coordinator,
+    /// which ticks its cooldown clock and surfaces transitions).
+    pub fn health(&self) -> Arc<HealthRegistry> {
+        self.health.clone()
+    }
+
+    /// The fault-injection plane (shared with the runtime; see
+    /// [`crate::faults`]).
+    pub fn faults(&self) -> Arc<FaultPlane> {
+        self.faults.clone()
+    }
+
     /// Enable/disable the device-resident KV path (spans and decode
     /// sessions).  Disabling forces the legacy host path — the
     /// equivalence oracle the integration tests compare against.
     pub fn set_device_kv(&self, on: bool) {
-        self.device_kv_enabled.store(on, Ordering::Relaxed);
+        self.health.set_enabled(PathId::DeviceKv, on);
     }
 
     /// Whether device-resident execution is both enabled and healthy.
     pub fn device_kv_active(&self) -> bool {
-        self.device_kv_enabled.load(Ordering::Relaxed)
-            && self.device_kv_ok.load(Ordering::Relaxed)
+        self.health.active(PathId::DeviceKv)
     }
 
-    /// Mark the device-resident path unhealthy (sticky): after a
-    /// chaining failure every later span/session takes the host path
-    /// directly instead of rebuilding a session, failing the same way,
-    /// and paying for both.  `set_device_kv(true)` does NOT clear this —
-    /// the health bit reflects the wrapper's capability, not intent.
+    /// Record a device-resident-path failure: the path demotes and every
+    /// later span/session takes the host path directly instead of
+    /// rebuilding a session, failing the same way, and paying for both.
+    /// After the registry's cooldown the path is re-promoted and the next
+    /// session doubles as the recovery probe.  `set_device_kv(true)` does
+    /// NOT clear a demotion — health reflects the runtime's observed
+    /// capability, not intent.
     pub fn mark_device_kv_unhealthy(&self) {
-        self.device_kv_ok.store(false, Ordering::Relaxed);
+        self.health.record_failure(PathId::DeviceKv);
     }
 
     /// Enable/disable batched span execution.  Disabling forces every
     /// span through the token-by-token oracle — the equivalence baseline
     /// the integration tests and benches compare against.
     pub fn set_span_exec(&self, on: bool) {
-        self.span_enabled.store(on, Ordering::Relaxed);
+        self.health.set_enabled(PathId::SpanExec, on);
     }
 
     /// Whether batched span execution is both enabled and healthy.
     pub fn span_exec_active(&self) -> bool {
-        self.span_enabled.load(Ordering::Relaxed) && self.span_ok.load(Ordering::Relaxed)
+        self.health.active(PathId::SpanExec)
     }
 
-    /// Mark the batched span path unhealthy (sticky, like the device-KV
-    /// bit): after one span-artifact failure every later span goes
-    /// token-by-token directly instead of failing the same way per chunk.
-    /// `set_span_exec(true)` does NOT clear this — health reflects the
-    /// runtime's capability, not intent.
+    /// Record a batched-span failure (demotes like the device-KV path):
+    /// later spans go token-by-token directly instead of failing the same
+    /// way per chunk, until the cooldown re-promotes the path.
     pub fn mark_span_exec_unhealthy(&self) {
-        self.span_ok.store(false, Ordering::Relaxed);
+        self.health.record_failure(PathId::SpanExec);
     }
 
     /// Cap the largest span tile serving may use
@@ -438,23 +435,20 @@ impl ModelEngine {
     /// equivalence oracle the batched-serving property test compares
     /// against.  Grouping also requires span execution itself to be on.
     pub fn set_span_batch(&self, on: bool) {
-        self.span_batch_enabled.store(on, Ordering::Relaxed);
+        self.health.set_enabled(PathId::SpanBatch, on);
     }
 
     /// Whether grouped span execution is enabled and healthy (and span
     /// execution itself is).
     pub fn span_batch_active(&self) -> bool {
-        self.span_exec_active()
-            && self.span_batch_enabled.load(Ordering::Relaxed)
-            && self.span_batch_ok.load(Ordering::Relaxed)
+        self.span_exec_active() && self.health.active(PathId::SpanBatch)
     }
 
-    /// Mark the grouped span path unhealthy (sticky, like the other two
-    /// health bits): after one grouped-artifact failure every later step
-    /// goes per-sequence directly.  `set_span_batch(true)` does NOT clear
-    /// this — health reflects the runtime's capability, not intent.
+    /// Record a grouped-span failure (demotes like the other two paths):
+    /// later steps go per-sequence directly until the cooldown
+    /// re-promotes the group path.
     pub fn mark_span_batch_unhealthy(&self) {
-        self.span_batch_ok.store(false, Ordering::Relaxed);
+        self.health.record_failure(PathId::SpanBatch);
     }
 
     /// Cumulative grouped-span executions (one per group tile; a subset
@@ -826,6 +820,7 @@ impl ModelEngine {
                         )))
                     }
                     None => {
+                        self.faults.check(InjectPoint::Gather)?;
                         let t0 = self.rt.tracer().now();
                         self.table.gather(tokens, &mut rows[..n * w])?;
                         self.rt.tracer().phase_since(Phase::Gather, t0);
@@ -1031,6 +1026,7 @@ impl ModelEngine {
             ));
         }
         let rows = if path == StepPath::Precompute {
+            self.faults.check(InjectPoint::Gather)?;
             let t0 = self.rt.tracer().now();
             let r = self.table.gather_vec(tokens)?;
             self.rt.tracer().phase_since(Phase::Gather, t0);
@@ -1058,7 +1054,8 @@ impl ModelEngine {
                         self.mark_span_exec_unhealthy();
                         eprintln!(
                             "[firstlayer] batched span execution failed ({e}); \
-                             token-by-token path from here on (sticky)"
+                             demoted to the token-by-token path until the \
+                             health cooldown re-probes it"
                         );
                     }
                 }
@@ -1075,7 +1072,8 @@ impl ModelEngine {
                     self.mark_device_kv_unhealthy();
                     eprintln!(
                         "[firstlayer] device-resident span failed ({e}); \
-                         falling back to the host cache path (sticky)"
+                         demoted to the host cache path until the health \
+                         cooldown re-probes it"
                     );
                 }
             }
@@ -1540,6 +1538,7 @@ impl ModelEngine {
             Error::Engine("span group: no tile plan fits the cache capacity".into())
         })?;
         let rows: Option<Vec<Vec<f32>>> = if path == StepPath::Precompute {
+            self.faults.check(InjectPoint::Gather)?;
             let t0 = self.rt.tracer().now();
             let mut v = Vec::with_capacity(nl);
             for l in lanes {
@@ -1884,6 +1883,7 @@ impl ModelEngine {
                 data_bufs.push(self.rt.upload_i32(&toks, &[b, t])?);
             }
             _ => {
+                self.faults.check(InjectPoint::Gather)?;
                 let w = self.table.row_width();
                 let mut rows = vec![0f32; b * t * w];
                 let tg = tracer.now();

@@ -21,6 +21,7 @@ use std::path::Path;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::error::{Error, Result};
+use crate::faults::{FaultPlane, InjectPoint};
 use crate::manifest::{ArtifactSpec, DType, IoSpec};
 use crate::metrics::TransferStats;
 use crate::trace::{Phase, Tracer};
@@ -44,6 +45,8 @@ pub struct Runtime {
     transfers: Arc<TransferStats>,
     /// Lifecycle/phase tracer (disabled by default; see [`crate::trace`]).
     tracer: Arc<Tracer>,
+    /// Fault-injection plane (disarmed by default; see [`crate::faults`]).
+    faults: Arc<FaultPlane>,
 }
 
 impl Runtime {
@@ -53,6 +56,7 @@ impl Runtime {
             cache: Arc::new(Mutex::new(HashMap::new())),
             transfers: Arc::new(TransferStats::new()),
             tracer: Arc::new(Tracer::new()),
+            faults: Arc::new(FaultPlane::new()),
         })
     }
 
@@ -74,6 +78,12 @@ impl Runtime {
         self.tracer.clone()
     }
 
+    /// The runtime's fault-injection plane (shared with every clone and
+    /// every [`Executable`]/[`DeviceCacheSession`] it creates).
+    pub fn faults(&self) -> Arc<FaultPlane> {
+        self.faults.clone()
+    }
+
     /// Load + compile an HLO text artifact (cached by path).
     pub fn load(&self, path: &Path, spec: ArtifactSpec) -> Result<Arc<Executable>> {
         let key = path.to_string_lossy().to_string();
@@ -91,6 +101,7 @@ impl Runtime {
             spec,
             stats: self.transfers.clone(),
             tracer: self.tracer.clone(),
+            faults: self.faults.clone(),
         });
         self.cache
             .lock()
@@ -101,6 +112,7 @@ impl Runtime {
 
     /// Upload a host f32 tensor to the device.
     pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.faults.check(InjectPoint::H2d)?;
         self.transfers.record_h2d(data.len() as u64 * 4, 1);
         let t0 = self.tracer.now();
         let buf = self.client.buffer_from_host_buffer(data, dims, None)?;
@@ -110,6 +122,7 @@ impl Runtime {
 
     /// Upload a host i32 tensor to the device.
     pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.faults.check(InjectPoint::H2d)?;
         self.transfers.record_h2d(data.len() as u64 * 4, 1);
         let t0 = self.tracer.now();
         let buf = self.client.buffer_from_host_buffer(data, dims, None)?;
@@ -155,6 +168,7 @@ pub struct Executable {
     pub spec: ArtifactSpec,
     stats: Arc<TransferStats>,
     tracer: Arc<Tracer>,
+    faults: Arc<FaultPlane>,
 }
 
 impl Executable {
@@ -164,6 +178,7 @@ impl Executable {
         &self,
         args: &[&xla::PjRtBuffer],
     ) -> Result<Vec<xla::PjRtBuffer>> {
+        self.faults.check(InjectPoint::Exec)?;
         let t0 = self.tracer.now();
         let out = self.exe.execute_b(args)?;
         self.tracer.phase_since(Phase::Exec, t0);
@@ -199,6 +214,7 @@ impl Executable {
     /// pass a buffer from an *untupled* [`Executable::execute_buffers`]
     /// result.
     pub fn read_output(&self, buf: &xla::PjRtBuffer, idx: usize) -> Result<HostTensor> {
+        self.faults.check(InjectPoint::Readback)?;
         let io = self
             .spec
             .outputs
@@ -213,6 +229,7 @@ impl Executable {
     }
 
     fn read_back(&self, bufs: Vec<xla::PjRtBuffer>) -> Result<Vec<HostTensor>> {
+        self.faults.check(InjectPoint::Readback)?;
         let tr0 = self.tracer.now();
         let n_out = self.spec.outputs.len();
         let tupled = bufs.len() == 1

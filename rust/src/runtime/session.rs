@@ -28,6 +28,7 @@
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
+use crate::faults::{FaultPlane, InjectPoint};
 use crate::metrics::TransferStats;
 use crate::trace::{Phase, Tracer};
 
@@ -44,6 +45,7 @@ pub struct DeviceCacheSession {
     steps: u64,
     stats: Arc<TransferStats>,
     tracer: Arc<Tracer>,
+    faults: Arc<FaultPlane>,
 }
 
 impl DeviceCacheSession {
@@ -63,6 +65,7 @@ impl DeviceCacheSession {
             steps: 0,
             stats,
             tracer: rt.tracer(),
+            faults: rt.faults(),
         })
     }
 
@@ -102,6 +105,7 @@ impl DeviceCacheSession {
     /// freshly written rows out of the returned dense pair; the buffers
     /// stay resident, so the session remains usable afterwards.
     pub fn read_cache_pair(&self) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.faults.check(InjectPoint::Sync)?;
         let elems: usize = self.dims.iter().product();
         let read = |buf: &xla::PjRtBuffer| -> Result<Vec<f32>> {
             let lit = buf.to_literal_sync()?;

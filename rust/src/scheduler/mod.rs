@@ -177,6 +177,12 @@ pub struct Scheduler {
     running: Vec<u64>,
     seqs: std::collections::HashMap<u64, (SeqInfo, State)>,
     arrivals: u64,
+    /// Flow-control pause set (slow stream readers): a paused id keeps
+    /// its state, KV blocks, and batch slot but is never planned — no
+    /// decode token, no prefill chunk, no admission — until unpaused.
+    /// It remains a preemption *victim* candidate, so a stalled reader
+    /// cannot pin blocks against KV pressure.
+    paused: std::collections::HashSet<u64>,
 }
 
 fn class_of(p: Priority) -> usize {
@@ -191,7 +197,24 @@ impl Scheduler {
             running: Vec::new(),
             seqs: std::collections::HashMap::new(),
             arrivals: 0,
+            paused: std::collections::HashSet::new(),
         }
+    }
+
+    /// Pause/resume planning for one sequence (stream flow control).
+    /// Returns true when the flag actually changed.  Pausing is
+    /// planner-only: state, KV, and progress counters are untouched, so
+    /// resuming continues exactly where the sequence stopped.
+    pub fn set_paused(&mut self, id: u64, paused: bool) -> bool {
+        if paused {
+            self.paused.insert(id)
+        } else {
+            self.paused.remove(&id)
+        }
+    }
+
+    pub fn is_paused(&self, id: u64) -> bool {
+        self.paused.contains(&id)
     }
 
     pub fn config(&self) -> &SchedConfig {
@@ -328,7 +351,9 @@ impl Scheduler {
                 .running
                 .iter()
                 .filter(|id| {
-                    self.seqs[*id].0.prefill_done() && kv.growth_needs_block(**id)
+                    self.seqs[*id].0.prefill_done()
+                        && !self.paused.contains(*id)
+                        && kv.growth_needs_block(**id)
                 })
                 .count();
             if demand <= kv.free_blocks() + freed_blocks {
@@ -369,7 +394,7 @@ impl Scheduler {
             .running
             .iter()
             .copied()
-            .filter(|id| self.seqs[id].0.prefill_done())
+            .filter(|id| self.seqs[id].0.prefill_done() && !self.paused.contains(id))
             .collect();
         plan.decode.truncate(self.cfg.max_batch);
         let budget_total = if self.cfg.step_token_budget == 0 {
@@ -385,7 +410,9 @@ impl Scheduler {
             .running
             .iter()
             .filter(|id| {
-                self.seqs[*id].0.prefill_done() && kv.growth_needs_block(**id)
+                self.seqs[*id].0.prefill_done()
+                    && !self.paused.contains(*id)
+                    && kv.growth_needs_block(**id)
             })
             .count();
         let mut free = kv.free_blocks().saturating_sub(growth_reserve);
@@ -421,7 +448,7 @@ impl Scheduler {
             .running
             .iter()
             .copied()
-            .filter(|id| !self.seqs[id].0.prefill_done())
+            .filter(|id| !self.seqs[id].0.prefill_done() && !self.paused.contains(id))
             .collect();
         midway.sort_by_key(|id| {
             let (info, _) = &self.seqs[id];
@@ -467,6 +494,11 @@ impl Scheduler {
                 }
                 if self.running.len() + admitted.len() >= self.cfg.max_batch {
                     break 'classes;
+                }
+                // A paused waiting sequence cannot make progress: skip it
+                // without tripping the FCFS head-of-line stop below.
+                if self.paused.contains(&id) {
+                    continue;
                 }
                 let (info, _) = &self.seqs[&id];
                 // A prefix-cache hit arrives already holding its cached
@@ -604,6 +636,7 @@ impl Scheduler {
             q.retain(|&x| x != id);
         }
         self.running.retain(|&x| x != id);
+        self.paused.remove(&id);
     }
 }
 
@@ -1313,6 +1346,51 @@ mod tests {
         assert_eq!(s.state(3), None);
         let p3 = s.plan(&b);
         assert!(p3.prefill.iter().all(|c| c.id != 3));
+    }
+
+    /// Flow-control pause: a paused decoding sequence drops out of every
+    /// plan but keeps its state; peers are unaffected; resuming picks up
+    /// exactly where it stopped.  Paused waiting sequences don't block
+    /// FCFS admission behind them.
+    #[test]
+    fn paused_sequence_skipped_then_resumes() {
+        let mut s = sched_chunked(4, 0);
+        let b = Budget::new(100);
+        s.submit(1, vec![7; 10], 8, Priority::Normal).unwrap();
+        s.submit(2, vec![5; 4], 8, Priority::Normal).unwrap();
+        let p = s.plan(&b);
+        for c in &p.prefill {
+            s.on_chunk(c.id, c.len);
+            if c.last {
+                s.on_token(c.id, false);
+            }
+        }
+        // Seq 1 is mid-prefill (4/10); pause it: no chunk is planned, the
+        // peer keeps decoding.
+        assert!(s.set_paused(1, true));
+        assert!(!s.set_paused(1, true), "second pause is a no-op");
+        assert!(s.is_paused(1));
+        let p2 = s.plan(&b);
+        assert!(p2.prefill.is_empty(), "paused id got a chunk");
+        assert_eq!(p2.decode, vec![2]);
+        s.on_token(2, false);
+        // Resume: the prefill continues from where it stopped.
+        assert!(s.set_paused(1, false));
+        let p3 = s.plan(&b);
+        assert_eq!(
+            p3.prefill[0],
+            PrefillChunk { id: 1, start: 4, len: 4, last: false }
+        );
+        // A paused WAITING sequence doesn't head-of-line-block admission.
+        s.submit(3, vec![9; 4], 4, Priority::Normal).unwrap();
+        s.submit(4, vec![9; 4], 4, Priority::Normal).unwrap();
+        s.set_paused(3, true);
+        let p4 = s.plan(&b);
+        assert!(p4.prefill.iter().any(|c| c.id == 4));
+        assert!(p4.prefill.iter().all(|c| c.id != 3));
+        // forget clears the pause flag with the rest of the record.
+        s.forget(3);
+        assert!(!s.is_paused(3));
     }
 
     #[test]

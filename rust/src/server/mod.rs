@@ -52,6 +52,15 @@
 //! `op` and the request's `tag` echoed when they could be parsed — and
 //! the connection stays open.
 //!
+//! A request whose engine work fails terminally (a device fault that
+//! survives the transient-retry budget) still gets its terminal event:
+//! `{"event":"done",…,"reason":"error"}`.  Slow readers are flow
+//! controlled per stream: when a request's writer queue exceeds the
+//! configured bound its sequence is paused in the scheduler (counted in
+//! `stream_stalls`) and resumed once the reader drains — the engine and
+//! every other stream keep running.  Idle conversations are expired by
+//! the `--conversation-ttl` sweep as if `chat.close` had been sent.
+//!
 //! Threading: a single engine loop owns the coordinator (PJRT calls are
 //! not assumed thread-safe); connection threads only enqueue requests.
 //! Each connection runs one reader thread (parses ops, serves v1
@@ -77,8 +86,19 @@ use crate::scheduler::Priority;
 use crate::tokenizer::Tokenizer;
 use crate::util::json::{self, n, obj, s, Value};
 
-/// A streamed event plus the tag it must be echoed with.
-type TaggedEvent = (Option<String>, Event);
+/// A streamed event plus its routing metadata: the tag it must be
+/// echoed with and the request's writer-queue depth counter, which the
+/// writing side decrements once the event has reached the socket.  The
+/// counter is the flow-control signal: the engine loop stalls a request
+/// (scheduler pause — see [`Coordinator::set_stalled`]) when its queue
+/// depth crosses the configured bound, and resumes it when the slow
+/// reader drains back below half the bound.  Only that request stalls;
+/// the engine loop and every other stream keep running.
+struct StreamItem {
+    tag: Option<String>,
+    ev: Event,
+    depth: Arc<AtomicU64>,
+}
 
 /// Commands from connection threads to the engine loop.
 enum Cmd {
@@ -92,7 +112,7 @@ enum Cmd {
         conn: u64,
         req: Request,
         admit: Sender<std::result::Result<u64, String>>,
-        reply: Sender<TaggedEvent>,
+        reply: Sender<StreamItem>,
     },
     /// Cancel the in-flight request `tag` on connection `conn`.
     /// `reply` gets `None` on success, `Some(msg)` when nothing matched.
@@ -117,6 +137,10 @@ enum Cmd {
 /// Server handle.
 pub struct Server {
     addr: String,
+    /// Per-request writer-queue bound before the stream is stalled
+    /// (slow-reader flow control); see [`ServingConfig::stream_queue_events`]
+    /// [`crate::config::ServingConfig`].
+    stream_queue_events: usize,
 }
 
 /// Shared handles the engine thread exports once the coordinator is built.
@@ -132,7 +156,18 @@ struct EngineHandles {
 
 impl Server {
     pub fn new(addr: impl Into<String>) -> Server {
-        Server { addr: addr.into() }
+        Server {
+            addr: addr.into(),
+            stream_queue_events: 1024,
+        }
+    }
+
+    /// Override the per-request writer-queue bound (events buffered for a
+    /// slow reader before its stream stalls).  Clamped to >= 2 so the
+    /// unstall watermark (half the bound) stays meaningful.
+    pub fn with_stream_queue(mut self, events: usize) -> Server {
+        self.stream_queue_events = events.max(2);
+        self
     }
 
     /// Run forever (blocking).  `make` builds the coordinator inside the
@@ -146,6 +181,7 @@ impl Server {
         eprintln!("[firstlayer] serving on {}", self.addr);
         let (tx, rx) = channel::<Cmd>();
         let (htx, hrx) = channel::<Result<EngineHandles>>();
+        let queue_limit = self.stream_queue_events;
         std::thread::spawn(move || {
             let c = match make() {
                 Ok(c) => {
@@ -163,7 +199,7 @@ impl Server {
                     return;
                 }
             };
-            engine_loop(c, rx);
+            engine_loop(c, rx, queue_limit);
         });
         let handles = hrx
             .recv()
@@ -190,16 +226,29 @@ impl Server {
 
 /// Per-request event routing state the engine loop keeps.
 struct Sink {
-    tx: Sender<TaggedEvent>,
+    tx: Sender<StreamItem>,
     tag: Option<String>,
     conn: u64,
+    /// Events enqueued for the connection's writer but not yet written
+    /// to the socket (the writing side decrements).
+    depth: Arc<AtomicU64>,
+    /// Stalled by flow control: the request is paused in the scheduler
+    /// until the reader drains below the unstall watermark.
+    stalled: bool,
 }
 
 /// The engine loop: owns the coordinator, interleaves request intake with
 /// `step()`, and fans events back out to the requesting connections.
 /// Tags are attached here (the coordinator speaks ids only); the
 /// `(conn, tag) -> id` index is what `cancel` resolves against.
-fn engine_loop(mut c: Coordinator, rx: Receiver<Cmd>) {
+///
+/// Flow control: `queue_limit` bounds each request's writer queue.  A
+/// stream whose reader cannot keep up is stalled in the scheduler
+/// (pause, not cancel — its KV and batch slot survive) and resumed once
+/// the queue drains below half the bound; the engine loop itself never
+/// blocks on a slow socket.  A send to a torn-down connection cancels
+/// the request instead — nobody is left to read the stream.
+fn engine_loop(mut c: Coordinator, rx: Receiver<Cmd>, queue_limit: usize) {
     let mut sinks: HashMap<u64, Sink> = HashMap::new();
     let mut by_tag: HashMap<(u64, String), u64> = HashMap::new();
     loop {
@@ -211,8 +260,24 @@ fn engine_loop(mut c: Coordinator, rx: Receiver<Cmd>) {
         } else {
             match rx.recv_timeout(Duration::from_millis(200)) {
                 Ok(cmd) => apply(&mut c, cmd, &mut sinks, &mut by_tag),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    // Idle tick: busy loops sweep inside step(), but an
+                    // idle engine must still expire stale conversations.
+                    if let Err(e) = c.sweep_conversations() {
+                        eprintln!("[firstlayer] conversation sweep: {e}");
+                    }
+                    continue;
+                }
                 Err(_) => return, // all senders dropped: shut down
+            }
+        }
+        // Resume streams whose slow reader caught up (below half the
+        // bound, so a reader hovering at the edge does not flap).
+        for (id, sink) in sinks.iter_mut() {
+            if sink.stalled && (sink.depth.load(Ordering::Relaxed) as usize) <= queue_limit / 2
+            {
+                sink.stalled = false;
+                c.set_stalled(*id, false);
             }
         }
         if c.busy() {
@@ -225,10 +290,34 @@ fn engine_loop(mut c: Coordinator, rx: Receiver<Cmd>) {
                 Event::Token { id, .. } | Event::Finished { id, .. } => *id,
             };
             let done = matches!(ev, Event::Finished { .. });
-            if let Some(sink) = sinks.get(&id) {
-                let _ = sink.tx.send((sink.tag.clone(), ev));
+            let mut drop_sink = done;
+            if let Some(sink) = sinks.get_mut(&id) {
+                sink.depth.fetch_add(1, Ordering::Relaxed);
+                if sink
+                    .tx
+                    .send(StreamItem {
+                        tag: sink.tag.clone(),
+                        ev,
+                        depth: Arc::clone(&sink.depth),
+                    })
+                    .is_err()
+                {
+                    // Connection torn down: stop paying for a stream
+                    // nobody reads (the Cancelled event that follows
+                    // finds no sink and is dropped).
+                    drop_sink = true;
+                    if !done {
+                        let _ = c.cancel(id);
+                    }
+                } else if !done
+                    && !sink.stalled
+                    && sink.depth.load(Ordering::Relaxed) as usize >= queue_limit
+                {
+                    sink.stalled = true;
+                    c.set_stalled(id, true);
+                }
             }
-            if done {
+            if drop_sink {
                 if let Some(sink) = sinks.remove(&id) {
                     if let Some(t) = sink.tag {
                         by_tag.remove(&(sink.conn, t));
@@ -272,7 +361,16 @@ fn apply(
                     if let Some(t) = &tag {
                         by_tag.insert((conn, t.clone()), id);
                     }
-                    sinks.insert(id, Sink { tx: reply, tag, conn });
+                    sinks.insert(
+                        id,
+                        Sink {
+                            tx: reply,
+                            tag,
+                            conn,
+                            depth: Arc::new(AtomicU64::new(0)),
+                            stalled: false,
+                        },
+                    );
                     let _ = admit.send(Ok(id));
                 }
                 Err(e) => {
@@ -314,6 +412,7 @@ fn reason_str(r: FinishReason) -> &'static str {
         FinishReason::ContextFull => "context_full",
         FinishReason::Stop => "stop",
         FinishReason::Cancelled => "cancelled",
+        FinishReason::Error => "error",
     }
 }
 
@@ -375,20 +474,25 @@ fn event_line(
 /// the full decoded output.  Exits when the last sender (reader thread +
 /// engine-side sinks) is gone, or on a write error (client hung up).
 fn conn_writer(
-    rx: Receiver<TaggedEvent>,
+    rx: Receiver<StreamItem>,
     out: Arc<Mutex<TcpStream>>,
     tokenizer: Arc<Tokenizer>,
 ) {
     let mut acc: HashMap<String, Vec<u32>> = HashMap::new();
-    for (tag, ev) in rx {
-        let key = tag.clone().unwrap_or_default();
+    for item in rx {
+        let key = item.tag.clone().unwrap_or_default();
         let tokens = acc.entry(key.clone()).or_default();
-        let (line, terminal) = event_line(&tag, &ev, tokens, &tokenizer);
+        let (line, terminal) = event_line(&item.tag, &item.ev, tokens, &tokenizer);
         if terminal {
             acc.remove(&key);
         }
-        if send(&out, &line).is_err() {
-            return; // client gone; in-flight requests drain server-side
+        let wrote = send(&out, &line);
+        // The depth decrement is the flow-control ack: it happens after
+        // the (possibly blocking) socket write, so a slow reader keeps
+        // its queue deep and stays stalled engine-side.
+        item.depth.fetch_sub(1, Ordering::Relaxed);
+        if wrote.is_err() {
+            return; // client gone; the engine cancels on next send
         }
     }
 }
@@ -456,7 +560,7 @@ fn handle_conn(
     let mut streams: HashMap<String, Arc<AtomicBool>> = HashMap::new();
     // The multiplexed path: tagged requests stream through this channel
     // and the writer thread, so the reader below can keep accepting ops.
-    let (atx, arx) = channel::<TaggedEvent>();
+    let (atx, arx) = channel::<StreamItem>();
     {
         let out = Arc::clone(&out);
         let tokenizer = Arc::clone(&tokenizer);
@@ -553,6 +657,36 @@ fn handle_conn(
                     (
                         "chat_reused_tokens",
                         n(metrics.chat_reused_tokens.load(Relaxed) as f64),
+                    ),
+                    // Fault plane + degradation ladder + flow control
+                    // (see docs/protocol.md §metrics).
+                    (
+                        "requests_errored",
+                        n(metrics.requests_errored.load(Relaxed) as f64),
+                    ),
+                    (
+                        "fault_injected",
+                        n(metrics.fault_injected.load(Relaxed) as f64),
+                    ),
+                    (
+                        "fault_retries",
+                        n(metrics.fault_retries.load(Relaxed) as f64),
+                    ),
+                    (
+                        "health_demotions",
+                        n(metrics.health_demotions.load(Relaxed) as f64),
+                    ),
+                    (
+                        "health_promotions",
+                        n(metrics.health_promotions.load(Relaxed) as f64),
+                    ),
+                    (
+                        "stream_stalls",
+                        n(metrics.stream_stalls.load(Relaxed) as f64),
+                    ),
+                    (
+                        "conversations_expired",
+                        n(metrics.conversations_expired.load(Relaxed) as f64),
                     ),
                     // Request-level latency quantiles in µs — p99
                     // included so dashboards gate the tail, not just
@@ -952,7 +1086,7 @@ fn metrics_pusher(
 fn submit_request(
     out: &Arc<Mutex<TcpStream>>,
     tx: &Sender<Cmd>,
-    atx: &Sender<TaggedEvent>,
+    atx: &Sender<StreamItem>,
     tokenizer: &Tokenizer,
     conn: u64,
     req: Request,
@@ -987,9 +1121,11 @@ fn submit_request(
         return Ok(());
     }
     let mut tokens: Vec<u32> = Vec::new();
-    for (tag, ev) in erx {
-        let (line, terminal) = event_line(&tag, &ev, &mut tokens, tokenizer);
-        send(out, &line)?;
+    for item in erx {
+        let (line, terminal) = event_line(&item.tag, &item.ev, &mut tokens, tokenizer);
+        let wrote = send(out, &line);
+        item.depth.fetch_sub(1, Ordering::Relaxed);
+        wrote?;
         if terminal {
             break;
         }
@@ -1000,9 +1136,12 @@ fn submit_request(
 fn send(out: &Arc<Mutex<TcpStream>>, v: &Value) -> Result<()> {
     let mut line = json::to_string(v);
     line.push('\n');
-    out.lock()
-        .unwrap()
-        .write_all(line.as_bytes())
+    // A poisoned socket mutex (a writer panicked mid-line) tears down
+    // this connection only — never the process.
+    let mut sock = out
+        .lock()
+        .map_err(|_| Error::Server("socket lock poisoned".into()))?;
+    sock.write_all(line.as_bytes())
         .map_err(|e| Error::Server(e.to_string()))
 }
 
@@ -1020,6 +1159,7 @@ mod tests {
         assert_eq!(reason_str(FinishReason::ContextFull), "context_full");
         assert_eq!(reason_str(FinishReason::Stop), "stop");
         assert_eq!(reason_str(FinishReason::Cancelled), "cancelled");
+        assert_eq!(reason_str(FinishReason::Error), "error");
     }
 
     #[test]

@@ -273,6 +273,53 @@ pub fn speculative_workload(
     out
 }
 
+/// Fault-burst adversary workload (S12e): `n` tagged greedy requests
+/// (`f{i}`, default sampling params: temperature 0 → argmax) built for
+/// the chaos gate —
+/// run once fault-free as the oracle, then again with `--fault-spec`
+/// armed, and compare per-tag outputs.  Greedy decoding makes the
+/// comparison exact: a request that only *retried* transient faults
+/// must produce the oracle's token stream verbatim, and a request that
+/// failed terminally must end in `reason:"error"` while its neighbors
+/// stay byte-identical.  Prompt lengths vary 1..=`prompt_tokens` and a
+/// third of the requests arrive `Interactive` so chunked prefill,
+/// decode batching, and priority admission all participate; arrivals
+/// are the usual deterministic seed-keyed shuffle.
+pub fn fault_burst_workload(
+    n: usize,
+    prompt_tokens: usize,
+    max_new: usize,
+    vocab: u32,
+    seed: u64,
+) -> Vec<crate::coordinator::Request> {
+    use crate::coordinator::Request;
+    use crate::scheduler::Priority;
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let tok = |rng: &mut Rng| rng.below(vocab.max(1) as u64) as u32;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let plen = rng.range(1, prompt_tokens.max(2));
+        let prompt: Vec<u32> = (0..plen).map(|_| tok(&mut rng)).collect();
+        let prio = if i % 3 == 0 {
+            Priority::Interactive
+        } else {
+            Priority::Normal
+        };
+        out.push(
+            Request::from_tokens(prompt, max_new)
+                .with_priority(prio)
+                .with_tag(format!("f{i}")),
+        );
+    }
+    // Fisher-Yates with the same deterministic stream.
+    for i in (1..out.len()).rev() {
+        let j = rng.range(0, i + 1);
+        out.swap(i, j);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -369,6 +416,40 @@ mod tests {
         let w2 = speculative_workload(3, 4, 20, 16, 512, 11);
         assert!(w.iter().zip(&w2).all(|(a, b)| a.prompt == b.prompt
             && a.tag == b.tag));
+    }
+
+    #[test]
+    fn fault_burst_workload_is_deterministic_and_greedy() {
+        use crate::scheduler::Priority;
+        let w = fault_burst_workload(9, 16, 8, 512, 77);
+        assert_eq!(w.len(), 9);
+        // Tags f0..f8, each exactly once (the oracle comparison keys
+        // streams by tag, so duplicates would be un-matchable).
+        let tags: std::collections::HashSet<_> =
+            w.iter().map(|r| r.tag.clone().unwrap()).collect();
+        assert_eq!(tags.len(), 9);
+        for i in 0..9 {
+            assert!(tags.contains(&format!("f{i}")));
+        }
+        let interactive = w
+            .iter()
+            .filter(|r| r.priority == Priority::Interactive)
+            .count();
+        assert_eq!(interactive, 3, "every third request is interactive");
+        for r in &w {
+            // Greedy: temperature 0 argmaxes, which is what makes the
+            // chaos-gate oracle comparison exact.
+            assert_eq!(r.params.temperature, 0.0);
+            assert!(r.params.stop.is_empty());
+            assert!(!r.prompt.is_empty() && r.prompt.len() <= 16);
+            assert!(r.prompt.iter().all(|&t| t < 512));
+        }
+        // Deterministic per seed; a different seed reshuffles.
+        let w2 = fault_burst_workload(9, 16, 8, 512, 77);
+        assert!(w
+            .iter()
+            .zip(&w2)
+            .all(|(a, b)| a.prompt == b.prompt && a.tag == b.tag));
     }
 
     #[test]

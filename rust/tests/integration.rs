@@ -1797,3 +1797,186 @@ fn trace_on_off_pure_observer() {
         .count();
     assert_eq!(request_spans, s_on.len());
 }
+
+/// The fault plane mirrors the tracer's observer discipline: compiled
+/// in and even ARMED (with a plan whose warmup is never reached), it
+/// must not perturb anything — identical token streams, finish
+/// reasons, and schedule counters vs the disarmed run, and every
+/// fault/health counter pinned at zero.
+#[test]
+fn fault_plane_off_is_pure_observer() {
+    let dir = require_artifacts!();
+    let run = |spec: &str| {
+        let mut cfg = serving(&dir, "tiny-serial", true);
+        cfg.prefill_chunk_tokens = 16;
+        cfg.fault_spec = spec.to_string();
+        let mut c = Coordinator::from_config(&cfg).unwrap();
+        let vocab = c.engine().config().vocab_size as u32;
+        let reqs =
+            firstlayer::simtraffic::fault_burst_workload(8, 16, 6, vocab, 0xFA17);
+        let ids: Vec<u64> = reqs.into_iter().map(|r| c.submit(r).unwrap()).collect();
+        c.run_to_completion(10_000).unwrap();
+        let streams: Vec<(Vec<u32>, FinishReason)> = ids
+            .iter()
+            .map(|id| (c.generated(*id).unwrap().to_vec(), c.finished(*id).unwrap()))
+            .collect();
+        use std::sync::atomic::Ordering::Relaxed;
+        let m = &c.metrics;
+        let counters = [
+            m.requests_done.load(Relaxed),
+            m.tokens_out.load(Relaxed),
+            m.prefill_chunks.load(Relaxed),
+            m.span_executions.load(Relaxed),
+            m.span_batched_executions.load(Relaxed),
+            m.preemptions.load(Relaxed),
+        ];
+        let faults = [
+            m.requests_errored.load(Relaxed),
+            m.fault_injected.load(Relaxed),
+            m.fault_retries.load(Relaxed),
+            m.health_demotions.load(Relaxed),
+            m.health_promotions.load(Relaxed),
+        ];
+        let armed = c.engine().faults().armed();
+        (streams, counters, faults, armed)
+    };
+    let (s_off, c_off, f_off, armed_off) = run("");
+    // Warmup of a billion crossings: armed, never fires.
+    let (s_on, c_on, f_on, armed_on) = run("exec:transient:after=1000000000");
+    assert!(!armed_off && armed_on, "arming state must reflect the spec");
+    assert_eq!(s_off, s_on, "streams must be identical with the plane armed");
+    assert_eq!(c_off, c_on, "schedule counters must be identical");
+    assert_eq!(f_off, [0; 5], "disarmed plane must count nothing");
+    assert_eq!(f_on, [0; 5], "a never-firing plan must count nothing");
+}
+
+/// Property-style fault audit: across a spread of deterministic fault
+/// plans (transient and fatal, at every boundary class), every request
+/// reaches a terminal event, kvcache lease/refcount invariants hold,
+/// the block pool adds back up (free + prefix leases = pool — nothing
+/// leaked by mid-flight failure paths), and surviving greedy streams
+/// are identical to the fault-free oracle.
+#[test]
+fn injected_faults_preserve_kv_invariants() {
+    let dir = require_artifacts!();
+    let run = |spec: &str| {
+        let mut cfg = serving(&dir, "tiny-serial", true);
+        cfg.prefill_chunk_tokens = 16;
+        cfg.fault_spec = spec.to_string();
+        cfg.health_cooldown_steps = 4;
+        let mut c = Coordinator::from_config(&cfg).unwrap();
+        let vocab = c.engine().config().vocab_size as u32;
+        let reqs =
+            firstlayer::simtraffic::fault_burst_workload(8, 16, 6, vocab, 0xFA17);
+        let tagged: Vec<(String, u64)> = reqs
+            .into_iter()
+            .map(|r| {
+                let tag = r.tag.clone().unwrap();
+                (tag, c.submit(r).unwrap())
+            })
+            .collect();
+        c.run_to_completion(10_000).unwrap();
+        let streams: Vec<(String, Vec<u32>, Option<FinishReason>)> = tagged
+            .iter()
+            .map(|(t, id)| {
+                (
+                    t.clone(),
+                    c.generated(*id).unwrap_or(&[]).to_vec(),
+                    c.finished(*id),
+                )
+            })
+            .collect();
+        (c, streams)
+    };
+    let (_, oracle) = run("");
+    let oracle: std::collections::HashMap<String, Vec<u32>> = oracle
+        .into_iter()
+        .map(|(t, toks, reason)| {
+            assert!(matches!(reason, Some(r) if r != FinishReason::Error));
+            (t, toks)
+        })
+        .collect();
+    for spec in [
+        "exec:transient:after=10:every=7:count=4",
+        "readback:transient:after=4:every=9:count=3",
+        "h2d:transient:after=6:every=5:count=4",
+        "sync:fatal:after=1:count=1",
+        "exec:fatal:after=25:count=1",
+        "gather:fatal:after=12:count=2",
+        "exec:transient:after=8:every=6:count=3;sync:fatal:after=2:count=1",
+    ] {
+        let (c, streams) = run(spec);
+        let mut errored = 0;
+        for (tag, toks, reason) in &streams {
+            let r = reason.unwrap_or_else(|| {
+                panic!("[{spec}] `{tag}` reached no terminal event")
+            });
+            if r == FinishReason::Error {
+                errored += 1;
+            } else {
+                assert_eq!(
+                    toks, &oracle[tag],
+                    "[{spec}] survivor `{tag}` diverged from the oracle"
+                );
+            }
+        }
+        // Terminal failures must release everything they held.
+        c.check_kv_invariants()
+            .unwrap_or_else(|e| panic!("[{spec}] kv invariants: {e}"));
+        let free = c.kv_free_blocks();
+        let leased = c.prefix_cache_blocks_held();
+        let pool = ServingConfig::default().kv_blocks;
+        assert_eq!(
+            free + leased,
+            pool,
+            "[{spec}] block leak with {errored} errored requests"
+        );
+        use std::sync::atomic::Ordering::Relaxed;
+        let injected = c.metrics.fault_injected.load(Relaxed);
+        assert!(injected > 0, "[{spec}] plan never fired — vacuous case");
+        assert_eq!(c.metrics.requests_errored.load(Relaxed), errored as u64);
+    }
+}
+
+/// `--conversation-ttl`: the sweep closes idle conversations (freeing
+/// their transcript and cap slot), cancels a mid-flight turn exactly
+/// like `chat.close`, and leaks nothing.
+#[test]
+fn conversation_ttl_expires_idle_chats() {
+    let dir = require_artifacts!();
+    let mut cfg = serving(&dir, "tiny-serial", true);
+    // Wide enough that a turn on the tiny model can't expire mid-run
+    // (step() sweeps too), narrow enough to test quickly.
+    cfg.conversation_ttl_ms = 150;
+    let mut c = Coordinator::from_config(&cfg).unwrap();
+    // An idle conversation with a finished turn expires...
+    let conv = c.chat_open().unwrap();
+    c.submit(Request::turn(conv, "hello", 4)).unwrap();
+    c.run_to_completion(10_000).unwrap();
+    assert_eq!(c.chat_count(), 1);
+    // ...but not before its TTL.
+    assert_eq!(c.sweep_conversations().unwrap(), 0, "fresh chat must survive");
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    assert_eq!(c.sweep_conversations().unwrap(), 1);
+    assert_eq!(c.chat_count(), 0);
+    assert!(
+        c.chat_transcript(conv).is_none(),
+        "expiry must drop the transcript"
+    );
+    // A conversation with an in-flight turn: the sweep cancels the turn.
+    let conv2 = c.chat_open().unwrap();
+    let id = c.submit(Request::turn(conv2, "a much longer turn", 64)).unwrap();
+    c.step().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    assert_eq!(c.sweep_conversations().unwrap(), 1);
+    c.run_to_completion(10_000).unwrap();
+    assert_eq!(c.finished(id), Some(FinishReason::Cancelled));
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(c.metrics.conversations_expired.load(Relaxed), 2);
+    c.check_kv_invariants().unwrap();
+    assert_eq!(
+        c.kv_free_blocks() + c.prefix_cache_blocks_held(),
+        ServingConfig::default().kv_blocks,
+        "expiry leaked KV blocks"
+    );
+}

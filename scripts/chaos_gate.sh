@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# Chaos gate (CI-runnable): drive the three-phase fault-recovery audit
+# (`firstlayer chaos`) through the real engine:
+#
+#   1. oracle   — a fault-free fault_burst_workload records every
+#      stream's expected tokens;
+#   2. faulted  — the same burst under a deterministic transient+fatal
+#      fault plan (`--fault-spec`): every request must reach a terminal
+#      event, surviving streams must be byte-identical to the oracle,
+#      retries must stay within the per-fault bound, and the KV pool
+#      must add back up (free + prefix leases = kv_blocks — no leak on
+#      any failure path);
+#   3. storm    — a mass-cancel burst on the SAME engine after the plan
+#      exhausts: recovery must leak nothing and every path the ladder
+#      demoted must have re-promoted (cooldown probes ran).
+#
+# The binary exits non-zero on any violation, so this gate is just
+# build + invoke.  Needs the AOT artifact bundle
+# (`rust/artifacts/manifest.json`); skips cleanly when it is missing so
+# the gate works on a fresh checkout, same as the trace gate.
+#
+# Usage: scripts/chaos_gate.sh   (from anywhere inside the repo)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ ! -f rust/artifacts/manifest.json ]; then
+  echo "[chaos-gate] skipping: run \`make artifacts\` first"
+  exit 0
+fi
+
+bin=rust/target/release/firstlayer
+if [ ! -x "$bin" ]; then
+  echo "[chaos-gate] building release binary"
+  (cd rust && cargo build --release --quiet)
+fi
+
+echo "[chaos-gate] fault-injection + recovery audit"
+"$bin" chaos --artifacts rust/artifacts
+
+echo "[chaos-gate] OK"

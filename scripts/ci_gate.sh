@@ -10,7 +10,13 @@
 #      simtraffic burst with lifecycle tracing on, whose Chrome-trace
 #      dump must validate: complete submit→finish span chain per
 #      finished request, phase sums bounded by their parent span)
-#   6. bench gate                        (scripts/bench_gate.sh →
+#   6. chaos gate                        (scripts/chaos_gate.sh — the
+#      deterministic fault-injection audit: a fault-free oracle burst,
+#      the same burst under a transient+fatal fault plan — every
+#      request terminal, survivors oracle-identical, no KV leak — then
+#      a mass-cancel storm with the ladder re-promoting every demoted
+#      path)
+#   7. bench gate                        (scripts/bench_gate.sh →
 #      BENCH_engine.json at the repo root) — and, when a previous
 #      BENCH_engine.json exists, a per-bench numeric diff
 #      (scripts/bench_diff.py --gate) that FAILS the run on a
@@ -28,22 +34,25 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "[ci-gate] 1/6 cargo build --release"
+echo "[ci-gate] 1/7 cargo build --release"
 (cd rust && cargo build --release)
 
-echo "[ci-gate] 2/6 tier-1 tests (cargo test -q)"
+echo "[ci-gate] 2/7 tier-1 tests (cargo test -q)"
 (cd rust && cargo test -q)
 
-echo "[ci-gate] 3/6 docs gate"
+echo "[ci-gate] 3/7 docs gate"
 scripts/docs_gate.sh
 
-echo "[ci-gate] 4/6 lint gate"
+echo "[ci-gate] 4/7 lint gate"
 scripts/lint_gate.sh
 
-echo "[ci-gate] 5/6 trace gate"
+echo "[ci-gate] 5/7 trace gate"
 scripts/trace_gate.sh
 
-echo "[ci-gate] 6/6 bench gate"
+echo "[ci-gate] 6/7 chaos gate"
+scripts/chaos_gate.sh
+
+echo "[ci-gate] 7/7 bench gate"
 prev=""
 if [ -f BENCH_engine.json ]; then
   prev="$(mktemp)"
