@@ -428,4 +428,62 @@ fn main() {
             }
         }
     }
+
+    // Speculative decoding payoff: the coordinator path again, on the
+    // drafter-friendly repetitive workload with server-side speculation
+    // on.  `spec_accept_rate` (accepted / drafted) is the gated
+    // higher-is-better metric — both counters are deterministic at
+    // temperature 0 on a seeded workload, so a drop means the drafter or
+    // the verify/rollback loop regressed, not host noise.
+    println!("\n-- serving: speculative decoding accept rate --");
+    {
+        use firstlayer::config::ServingConfig;
+        use firstlayer::coordinator::Coordinator;
+        use firstlayer::simtraffic::spec_workload;
+        use std::sync::atomic::Ordering::Relaxed;
+        let scfg = ServingConfig {
+            artifacts_dir: dir.to_string_lossy().into_owned(),
+            model: model.to_string(),
+            enable_spec_decode: true,
+            ..Default::default()
+        };
+        match Coordinator::from_config(&scfg) {
+            Err(e) => println!("  (coordinator unavailable: {e})"),
+            Ok(mut c) => {
+                let t0 = std::time::Instant::now();
+                for r in spec_workload(8, 3, 24, 48, cfg.vocab_size as u32, 0x5BEC) {
+                    let _ = c.submit(r);
+                }
+                c.run_to_completion(10_000).unwrap();
+                let run_us = t0.elapsed().as_micros() as f64;
+                let m = &c.metrics;
+                let execs = m.spec_executions.load(Relaxed);
+                let drafted = m.spec_drafted_tokens.load(Relaxed);
+                let accepted = m.spec_accepted_tokens.load(Relaxed);
+                let rollbacks = m.spec_rollbacks.load(Relaxed);
+                if execs == 0 {
+                    // Benches that emit nothing never gate, so a bundle
+                    // without span artifacts skips cleanly.
+                    println!("  (no verify executions — span artifacts absent)");
+                } else {
+                    let rate = accepted as f64 / drafted.max(1) as f64;
+                    println!(
+                        "  {execs} verifies: drafted {drafted}, accepted {accepted} \
+                         (rate {rate:.2}), rollbacks {rollbacks}, accept_len mean {:.2}",
+                        m.spec_accept_len.mean(),
+                    );
+                    emit_json(
+                        "e2e_spec",
+                        &[
+                            ("spec_executions", execs as f64),
+                            ("spec_accept_rate", rate),
+                            ("accept_len_mean", m.spec_accept_len.mean()),
+                            ("rollbacks", rollbacks as f64),
+                            ("run_us", run_us),
+                        ],
+                    );
+                }
+            }
+        }
+    }
 }

@@ -58,6 +58,8 @@ fn mk(n_waiting: usize, n_running: usize) -> Scheduler {
         chunk_tokens: 0,
         step_token_budget: 0,
         span_bucket_tokens: 0,
+        span_group_lanes: 0,
+        spec_tokens: 0,
     });
     let mut id = 0u64;
     // Fill running first (via admission on an infinite budget).
@@ -107,6 +109,8 @@ fn main() {
                 chunk_tokens: 0,
                 step_token_budget: 0,
                 span_bucket_tokens: 0,
+                span_group_lanes: 0,
+                spec_tokens: 0,
             });
             for id in 0..256u64 {
                 s.submit(id, vec![1; 16], 32, Priority::Normal).unwrap();
@@ -163,6 +167,8 @@ fn main() {
             chunk_tokens: 64,
             step_token_budget: 128,
             span_bucket_tokens: 0,
+            span_group_lanes: 0,
+            spec_tokens: 0,
         });
         let mut id = 0u64;
         for r in mixed_workload(12, 32, 4, 1024, 32, 1000, 7) {
@@ -229,6 +235,8 @@ fn kv_movement_section() {
         chunk_tokens: 64,
         step_token_budget: 128,
         span_bucket_tokens: 0,
+        span_group_lanes: 0,
+        spec_tokens: 0,
     });
     let mut id = 0u64;
     for r in mixed_workload(12, 32, 4, 1024, 32, 1000, 7) {
@@ -341,6 +349,8 @@ fn prefix_reuse_section() {
         chunk_tokens: 32,
         step_token_budget: 0,
         span_bucket_tokens: 0,
+        span_group_lanes: 0,
+        spec_tokens: 0,
     });
     // 2 tenants x 3 requests, 96-token system prompts, short suffixes.
     let reqs = tenant_workload(2, 3, 96, 16, 4, 1000, 11);
@@ -443,6 +453,8 @@ fn drive_mixed(chunk: usize, budget: usize) -> (usize, usize, usize) {
         chunk_tokens: chunk,
         step_token_budget: budget,
         span_bucket_tokens: 0,
+        span_group_lanes: 0,
+        spec_tokens: 0,
     });
     let mut id = 0u64;
     for r in mixed_workload(12, 32, 4, 1024, 32, 1000, 7) {

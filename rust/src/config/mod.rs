@@ -196,6 +196,21 @@ pub struct ServingConfig {
     /// engine also falls back by itself — sticky — if a batched span
     /// execution fails.
     pub enable_span_batch: bool,
+    /// Server-side speculative decoding (`rust/src/specdec/`): draft up
+    /// to a span bucket of tokens from the request's own transcript
+    /// (n-gram / prompt-lookup) and verify them in ONE span execution —
+    /// the `[T, V]` logits output scores every drafted position.  Only
+    /// greedy (temperature 0, no stop sequences) steady-state decoders
+    /// are eligible; everything else stays on plain decode, which
+    /// remains the always-available oracle.  The health registry
+    /// (`PathId::SpecDec`) demotes the path on verify faults or
+    /// sustained low acceptance.
+    pub enable_spec_decode: bool,
+    /// Longest draft the drafter may propose per spec chunk.  The
+    /// coordinator additionally caps drafts at one less than the span
+    /// bucket so draft + the re-fed last token fill exactly one tile
+    /// (spec chunks never pad).
+    pub spec_draft_max: usize,
     /// Request-lifecycle tracing (`rust/src/trace/`): record every
     /// request's span tree (queue, prefill chunks, span/group tiles,
     /// decode steps, syncs) with per-phase engine timings, exported via
@@ -264,6 +279,8 @@ impl Default for ServingConfig {
             enable_span_exec: true,
             span_bucket_tokens: 0,
             enable_span_batch: true,
+            enable_spec_decode: false,
+            spec_draft_max: 16,
             enable_trace: false,
             trace_ring: 256,
             fault_spec: String::new(),

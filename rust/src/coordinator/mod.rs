@@ -10,7 +10,11 @@
 //!    continuation chunks (`start > 0`) advance through decode-kernel
 //!    spans whose first layer is one batched precompute-table gather.  The
 //!    chunk that completes a prompt samples the first token (TTFT);
-//! 4. assemble the decode batch from the paged store, run one decode step,
+//! 4. run speculative verifies for eligible steady-state decoders
+//!    ([`crate::specdec`]): one scored span execution checks a
+//!    self-drafted chunk, the accepted prefix (plus one bonus token) is
+//!    emitted, rejected rows never reach the paged store;
+//! 5. assemble the decode batch from the paged store, run one decode step,
 //!    scatter the new K/V rows back, sample, detect stops.
 //!
 //! Prefill chunks and the decode batch share the iteration (the scheduler
@@ -36,7 +40,12 @@ use crate::prefixcache::PrefixCache;
 use crate::runtime::{
     CacheBatch, DeviceCacheSession, ModelEngine, Runtime, SpanLane, StepPath,
 };
-use crate::scheduler::{KvBudget, PrefillChunk, Priority, SchedConfig, Scheduler, State};
+use crate::scheduler::{
+    GroupLane, KvBudget, PrefillChunk, Priority, SchedConfig, Scheduler, State, StepPlan,
+};
+use crate::specdec::{
+    accepted_prefix, AcceptanceWindow, Drafter, NGramDrafter, SpecStats, DEMOTE_MEAN_X100,
+};
 use crate::tokenizer::{Tokenizer, BOS, EOS};
 use crate::trace::{SpanKind, Tracer};
 use crate::util::rng::Rng;
@@ -256,6 +265,14 @@ struct DecodeSessionState {
     sess: DeviceCacheSession,
 }
 
+/// A resolved speculative-decode job: request `id` verifies `draft`
+/// through one scored span execution this step
+/// ([`Coordinator::run_spec_chunk`]).
+struct SpecJob {
+    id: u64,
+    draft: Vec<u32>,
+}
+
 struct KvView<'a> {
     kv: &'a PagedKvCache,
     /// Prefix-cache blocks reclaimable on demand (refcount == 1: lease
@@ -352,6 +369,15 @@ pub struct Coordinator {
     /// `ServingConfig::enable_trace`, otherwise every call is one
     /// relaxed atomic load).
     tracer: Arc<Tracer>,
+    /// Server-side speculative decoding: the self-drafting source (v1
+    /// n-gram prompt lookup over each request's own transcript).
+    drafter: NGramDrafter,
+    /// Per-request draft/accept bookkeeping (kept after finish, like
+    /// `reqs` — diagnostics and tests read it post-hoc).
+    spec_stats: HashMap<u64, SpecStats>,
+    /// Sliding window over verify outcomes; a full window below the
+    /// floor demotes `PathId::SpecDec` until the cooldown re-probe.
+    accept_win: AcceptanceWindow,
 }
 
 impl Coordinator {
@@ -412,6 +438,18 @@ impl Coordinator {
         } else {
             0
         };
+        // Speculative decoding rides the scored span kernel: the draft
+        // cap is one below the largest span bucket so a verify span
+        // (re-fed last token + draft) fills exactly one tile — a drafted
+        // chunk never pads and never spills into a second execution.
+        // Without span tiles of >= 2 tokens there is no batched verify,
+        // so speculation stays off regardless of the knob.
+        let spec_tokens = if cfg.enable_spec_decode && span_bucket >= 2 {
+            cfg.spec_draft_max.min(span_bucket - 1)
+        } else {
+            0
+        };
+        engine.set_spec_decode(spec_tokens > 0);
         let sched = Scheduler::new(SchedConfig {
             max_batch,
             max_admit: cfg.max_admit_per_step,
@@ -421,6 +459,7 @@ impl Coordinator {
             step_token_budget: cfg.step_token_budget,
             span_bucket_tokens: span_bucket,
             span_group_lanes: span_lanes,
+            spec_tokens,
         });
         let kv = PagedKvCache::new(
             cfg.kv_blocks,
@@ -486,6 +525,9 @@ impl Coordinator {
             retry_max: cfg.retry_max,
             retry_backoff_us: cfg.retry_backoff_us,
             tracer,
+            drafter: NGramDrafter::default(),
+            spec_stats: HashMap::new(),
+            accept_win: AcceptanceWindow::new(),
         })
     }
 
@@ -501,6 +543,14 @@ impl Coordinator {
 
     pub fn path(&self) -> StepPath {
         self.path
+    }
+
+    /// Per-request speculative-decoding statistics (drafts proposed,
+    /// tokens accepted, rollbacks).  Kept after the request finishes,
+    /// like the transcript itself; `None` when the request never hit a
+    /// draft attempt (spec off, ineligible, or unknown id).
+    pub fn spec_stats(&self, id: u64) -> Option<SpecStats> {
+        self.spec_stats.get(&id).copied()
     }
 
     /// Largest compiled decode bucket for the active path.
@@ -1030,6 +1080,22 @@ impl Coordinator {
         });
         let mut touched = 0;
 
+        // -- speculative-decode resolution -----------------------------------
+        // Draft and gate the plan's `SpecChunk`s BEFORE the session-reuse
+        // check: a spec'd id leaves the plain-decode batch for this step,
+        // so the live device session must match the REMAINDER (forcing a
+        // sync whenever a session member starts verifying — the paged
+        // store catches up to its virtual length first).  Decode ids the
+        // planner moved onto spare span-group lanes already left
+        // `plan.decode`, so they force the same sync for free.
+        let spec_jobs = self.resolve_spec_intents(&plan);
+        let rest: Vec<u64> = plan
+            .decode
+            .iter()
+            .copied()
+            .filter(|id| !spec_jobs.iter().any(|j| j.id == *id))
+            .collect();
+
         // -- device-session sync on recomposition ---------------------------
         // The session survives only while this plan decodes exactly its
         // ids on its path.  Otherwise write the device-ahead rows back
@@ -1041,7 +1107,7 @@ impl Coordinator {
         let reuse = self
             .dsess
             .as_ref()
-            .is_some_and(|d| d.path == self.path && d.ids == plan.decode);
+            .is_some_and(|d| d.path == self.path && d.ids == rest);
         if !reuse {
             self.sync_or_recompute(&plan.preempt)?;
         }
@@ -1084,10 +1150,30 @@ impl Coordinator {
             // this step (rows accumulate on-device; their blocks are
             // reserved in the planner's view and claimed at sync time).
             if !reuse {
-                for id in &plan.decode {
+                for id in &rest {
                     if self.kv.growth_needs_block(*id) {
                         demand += 1;
                     }
+                }
+            }
+            // Group-riding decode lanes and speculative verifies append
+            // host-side this step regardless of session reuse: a lane
+            // adds one row, a verify up to draft + 1 accepted rows.
+            for g in &plan.span_groups {
+                for lane in g {
+                    if let GroupLane::Decode(id) = lane {
+                        if self.kv.growth_needs_block(*id) {
+                            demand += 1;
+                        }
+                    }
+                }
+            }
+            for j in &spec_jobs {
+                if let Some(len) = self.kv.seq_len(j.id) {
+                    demand += self
+                        .kv
+                        .blocks_for(len + j.draft.len() + 1)
+                        .saturating_sub(self.kv.blocks_held(j.id));
                 }
             }
             if self.kv.free_blocks() < demand {
@@ -1156,18 +1242,30 @@ impl Coordinator {
             }
         }
         // Continuations: span groups first (one [B, T] device execution
-        // per tile advances every lane), then whatever the planner left
-        // ungrouped goes through the per-sequence span path.
+        // per tile advances every lane — spare lanes may carry T=1
+        // decode steps the planner pulled out of the decode batch), then
+        // whatever the planner left ungrouped goes through the
+        // per-sequence span path.
         let mut grouped = vec![false; plan.prefill.len()];
         for g in &plan.span_groups {
-            let chunks: Vec<PrefillChunk> =
-                g.iter().map(|&i| plan.prefill[i]).collect();
-            for &i in g {
-                grouped[i] = true;
+            let mut chunks: Vec<PrefillChunk> = Vec::new();
+            let mut dec_ids: Vec<u64> = Vec::new();
+            for lane in g {
+                match *lane {
+                    GroupLane::Chunk(i) => {
+                        chunks.push(plan.prefill[i]);
+                        grouped[i] = true;
+                    }
+                    GroupLane::Decode(id) => dec_ids.push(id),
+                }
             }
-            touched += chunks.len();
-            if let Err(e) = self.run_span_group(&chunks) {
-                let ids: Vec<u64> = chunks.iter().map(|c| c.id).collect();
+            touched += chunks.len() + dec_ids.len();
+            if let Err(e) = self.run_span_group(&chunks, &dec_ids) {
+                let ids: Vec<u64> = chunks
+                    .iter()
+                    .map(|c| c.id)
+                    .chain(dec_ids.iter().copied())
+                    .collect();
                 self.fail_requests(&ids, &e)?;
             }
         }
@@ -1180,15 +1278,30 @@ impl Coordinator {
             }
         }
 
+        // -- speculative verify ----------------------------------------------
+        // One scored span execution per job re-feeds the last generated
+        // token plus the draft; the longest argmax-confirmed prefix (and
+        // one bonus token) is emitted and the rejected suffix rows never
+        // reach the paged store.  A verify that fails past its retries
+        // demotes the path and serves the step through plain host decode
+        // instead — speculation is an optimization, never a new failure
+        // source for the request.
+        for j in &spec_jobs {
+            touched += 1;
+            if let Err(e) = self.run_spec_chunk(j.id, &j.draft) {
+                self.fail_request(j.id, &e)?;
+            }
+        }
+
         // -- decode ----------------------------------------------------------
-        if !plan.decode.is_empty() {
-            touched += plan.decode.len();
-            if let Err(e) = self.run_decode(&plan.decode) {
+        if !rest.is_empty() {
+            touched += rest.len();
+            if let Err(e) = self.run_decode(&rest) {
                 // A decode failure after retries poisons the whole
                 // batched operation: every id it was advancing finishes
                 // with `error` (waiting requests are untouched and
                 // admit next step).
-                self.fail_requests(&plan.decode, &e)?;
+                self.fail_requests(&rest, &e)?;
             }
         }
         Ok(touched)
@@ -1322,18 +1435,23 @@ impl Coordinator {
     /// Execute a scheduler-composed span group: B same-step continuation
     /// chunks from different sequences advance through ONE batched `[B, T]`
     /// span execution per tile ([`ModelEngine::decode_span_group`]),
-    /// replacing B serial per-sequence spans.  Any capability gap (knob
-    /// off, no compiled batch, plan does not fit the cache) quietly runs
-    /// the lanes per-sequence; a failure AFTER the viability check (and
-    /// past the transient-retry budget) demotes the grouped path in the
-    /// health registry and falls back the same way —
-    /// the engine leaves the gathered caches untouched on error, and
-    /// [`Coordinator::run_continuation`] re-gathers per lane anyway.
-    fn run_span_group(&mut self, chunks: &[PrefillChunk]) -> Result<()> {
+    /// replacing B serial per-sequence spans.  Spare lanes may carry
+    /// `dec_ids`: steady-state decoders the planner pulled out of the
+    /// plain decode batch, each riding the group as a T=1 span (pure
+    /// overlay — decode-only groups never form).  Any capability gap
+    /// (knob off, no compiled batch, plan does not fit the cache)
+    /// quietly runs chunk lanes per-sequence and decode lanes through
+    /// the host decode; a failure AFTER the viability check (and past
+    /// the transient-retry budget) demotes the grouped path in the
+    /// health registry and falls back the same way — the engine leaves
+    /// the gathered caches untouched on error, and both fallbacks
+    /// re-gather per lane anyway.
+    fn run_span_group(&mut self, chunks: &[PrefillChunk], dec_ids: &[u64]) -> Result<()> {
         let cfg = self.engine.config().clone();
         let s = cfg.max_seq;
-        // Each lane's span slice: the chunk's window of the full prompt.
-        let spans: Vec<(Vec<u32>, usize)> = chunks
+        // Each lane's span slice: the chunk's window of the full prompt,
+        // then one re-fed last-generated token per decode rider.
+        let mut spans: Vec<(Vec<u32>, usize)> = chunks
             .iter()
             .map(|c| {
                 let full = self
@@ -1347,15 +1465,32 @@ impl Coordinator {
                 Ok((full[c.start..end].to_vec(), c.start))
             })
             .collect::<Result<_>>()?;
+        for id in dec_ids {
+            let tok = self
+                .reqs
+                .get(id)
+                .and_then(|r| r.generated.last().copied())
+                .ok_or_else(|| {
+                    Error::Scheduler(format!("decode lane before first token of {id}"))
+                })?;
+            let start = self.kv.seq_len(*id).ok_or_else(|| {
+                Error::KvCache(format!("no cache for decode lane {id}"))
+            })?;
+            spans.push((vec![tok], start));
+        }
         let lanes: Vec<SpanLane> = spans
             .iter()
             .map(|(t, st)| SpanLane { tokens: t, start: *st })
             .collect();
         if !self.engine.span_group_viable(self.path, &lanes, s) {
-            // Capability gap, not a failure: per-sequence spans serve the
-            // same chunks and the health bit stays untouched.
+            // Capability gap, not a failure: per-sequence spans / host
+            // decode serve the same lanes and the health bit stays
+            // untouched.
             for c in chunks {
                 self.run_continuation(c)?;
+            }
+            if !dec_ids.is_empty() {
+                self.run_decode_host(dec_ids, Instant::now())?;
             }
             return Ok(());
         }
@@ -1363,9 +1498,14 @@ impl Coordinator {
         for c in chunks {
             self.mark_sched(c.id);
         }
-        self.tracer
-            .set_context(&chunks.iter().map(|c| c.id).collect::<Vec<_>>());
-        let n = chunks.len();
+        self.tracer.set_context(
+            &chunks
+                .iter()
+                .map(|c| c.id)
+                .chain(dec_ids.iter().copied())
+                .collect::<Vec<_>>(),
+        );
+        let n = chunks.len() + dec_ids.len();
         let mut caches = CacheBatch::zeros(
             cfg.n_layers,
             n,
@@ -1373,20 +1513,25 @@ impl Coordinator {
             cfg.n_kv_heads,
             cfg.head_dim(),
         );
-        for (i, c) in chunks.iter().enumerate() {
+        let lane_ids: Vec<u64> = chunks
+            .iter()
+            .map(|c| c.id)
+            .chain(dec_ids.iter().copied())
+            .collect();
+        for (i, id) in lane_ids.iter().enumerate() {
             let have = self.kv.gather_into_batch(
-                c.id,
+                *id,
                 s,
                 n,
                 i,
                 &mut caches.k,
                 &mut caches.v,
             )?;
-            if have != c.start {
+            if have != spans[i].1 {
                 return Err(Error::KvCache(format!(
                     "span group lane {i}: start {} != cached len {have} \
-                     for seq {}",
-                    c.start, c.id
+                     for seq {id}",
+                    spans[i].1
                 )));
             }
         }
@@ -1411,6 +1556,9 @@ impl Coordinator {
                 for c in chunks {
                     self.run_continuation(c)?;
                 }
+                if !dec_ids.is_empty() {
+                    self.run_decode_host(dec_ids, Instant::now())?;
+                }
                 return Ok(());
             }
         };
@@ -1434,6 +1582,13 @@ impl Coordinator {
             if c.last {
                 self.finish_prefill(c.id, &lane.logits)?;
             }
+        }
+        // Decode riders: one appended row, one emitted token — exactly
+        // what a plain decode step would have done for the id.
+        for (j, id) in dec_ids.iter().enumerate() {
+            let lane = &out.lanes[chunks.len() + j];
+            self.kv.append_span(*id, 1, &lane.new_k, &lane.new_v)?;
+            self.emit_token(*id, &lane.logits)?;
         }
         self.metrics.chunk_step.record(t0.elapsed());
         Ok(())
@@ -1505,6 +1660,260 @@ impl Coordinator {
         self.kv
             .append_span(id, tokens.len(), &out.new_k, &out.new_v)?;
         Ok(out.logits)
+    }
+
+    /// Resolve the plan's [`crate::scheduler::SpecChunk`]s into runnable
+    /// jobs: draft from each request's own token history and apply the
+    /// eligibility gates.  Every gate is a capability gap, never a
+    /// health event — a request that fails one simply stays on plain
+    /// decode this step:
+    ///
+    /// * the spec path must be enabled and healthy, with a span bucket
+    ///   of >= 2 compiled (the verify kernel);
+    /// * greedy only (`temperature == 0`): acceptance compares drafted
+    ///   tokens against the argmax, which IS the plain-decode sample —
+    ///   temp > 0 would change the output distribution;
+    /// * no stop sequences: stop matching is byte-level over the
+    ///   detokenized tail and cannot be pre-scanned before the KV rows
+    ///   commit (see [`Coordinator::run_spec_chunk`]'s ordering);
+    /// * at least one token generated (the verify span re-feeds it) and
+    ///   a non-empty draft;
+    /// * the paged store — or the live device session's virtual length,
+    ///   when the id still rides one — must sit exactly one token
+    ///   behind the emitted stream (the steady-state decode invariant);
+    /// * the worst-case accepted rows must fit the free block pool.
+    fn resolve_spec_intents(&mut self, plan: &StepPlan) -> Vec<SpecJob> {
+        if plan.spec.is_empty() || !self.engine.spec_decode_active() {
+            return Vec::new();
+        }
+        let bucket = self.engine.max_span_bucket(self.path);
+        if bucket < 2 {
+            return Vec::new();
+        }
+        let mut jobs = Vec::new();
+        for sc in &plan.spec {
+            let id = sc.id;
+            let greedy_plain = self
+                .params
+                .get(&id)
+                .is_some_and(|p| p.temperature <= 0.0 && p.stop.is_empty());
+            if !greedy_plain {
+                continue;
+            }
+            let Some(info) = self.sched.info(id) else { continue };
+            let Some(st) = self.reqs.get(&id) else { continue };
+            if st.generated.is_empty() {
+                continue;
+            }
+            // Token history = prompt + the post-replay generated tail.
+            // After a preemption the replayed prompt already CONTAINS
+            // the earlier generations (`extend_prompt`), while
+            // `reqs.generated` keeps them all — `len` tracks prompt +
+            // live generations exactly, so the tail length falls out.
+            let tail = info.len.saturating_sub(info.prompt.len());
+            if tail > st.generated.len() {
+                continue; // defensive: inconsistent history
+            }
+            let mut history = info.prompt.clone();
+            history.extend_from_slice(&st.generated[st.generated.len() - tail..]);
+            let cap = sc.max_draft.min(bucket - 1);
+            if cap == 0 {
+                continue;
+            }
+            let draft = self.drafter.draft(&history, cap);
+            self.spec_stats.entry(id).or_default().on_draft(draft.len());
+            if draft.is_empty() {
+                continue;
+            }
+            // Steady-state invariant, on the VIRTUAL length while the id
+            // rides the live device session: carving it out of the
+            // session's decode batch forces the recomposition sync, so
+            // the paged store is caught up before the verify gathers.
+            let vlen = match self.dsess.as_ref().and_then(|d| {
+                d.ids
+                    .iter()
+                    .position(|x| *x == id)
+                    .map(|i| d.base[i] + d.pending[i])
+            }) {
+                Some(v) => Some(v),
+                None => self.kv.seq_len(id),
+            };
+            if vlen != Some(info.len - 1) {
+                continue;
+            }
+            // Worst-case block demand (every drafted token accepted,
+            // plus the bonus) against the current free pool; the
+            // demand-driven prefix eviction in `step()` covers committed
+            // jobs against same-step chunk allocations.
+            let need = self
+                .kv
+                .blocks_for(info.len + draft.len())
+                .saturating_sub(self.kv.blocks_held(id));
+            if need > self.kv.free_blocks() {
+                continue;
+            }
+            jobs.push(SpecJob { id, draft });
+        }
+        jobs
+    }
+
+    /// Execute one speculative verify: ONE scored span execution feeds
+    /// `[last_generated, d_1..d_k]` at the cached length, so position
+    /// `i`'s logits predict the token after span token `i`; the longest
+    /// prefix where the temp-0 argmax equals the draft is accepted, plus
+    /// one bonus token from the first divergent position — a fully
+    /// rejected draft still nets exactly the token plain decode would
+    /// have produced, byte-identically.
+    ///
+    /// Ordering is the correctness crux.  The emission count `e` is
+    /// pre-scanned against the finish conditions (EOS / token budget /
+    /// context limit) FIRST, mirroring [`Coordinator::emit_token`]
+    /// exactly; then precisely `e` K/V rows are appended (the rejected
+    /// suffix never reaches the paged store — rollback is "do not
+    /// append"); only then are the `e` tokens emitted.  At most the
+    /// final emission can finish the request, so the prefix-cache
+    /// insert-on-finish sees a store whose rows match the emitted
+    /// stream with no surplus, and no token is ever emitted after a
+    /// finish.
+    fn run_spec_chunk(&mut self, id: u64, draft: &[u32]) -> Result<()> {
+        let t0 = Instant::now();
+        self.tracer.set_context(&[id]);
+        let cfg = self.engine.config().clone();
+        let last = self
+            .reqs
+            .get(&id)
+            .and_then(|r| r.generated.last().copied())
+            .ok_or_else(|| {
+                Error::Scheduler(format!("spec verify before first token of {id}"))
+            })?;
+        let mut span = Vec::with_capacity(draft.len() + 1);
+        span.push(last);
+        span.extend_from_slice(draft);
+        let s = cfg.max_seq;
+        let bucket = self.engine.decode_bucket(1, self.path)?;
+        let mut caches = CacheBatch::zeros(
+            cfg.n_layers,
+            bucket,
+            s,
+            cfg.n_kv_heads,
+            cfg.head_dim(),
+        );
+        let start = self
+            .kv
+            .gather_into_batch(id, s, bucket, 0, &mut caches.k, &mut caches.v)?;
+        let expect = self
+            .sched
+            .info(id)
+            .map(|i| (i.len.saturating_sub(1), i.budget_left(), i.len))
+            .ok_or_else(|| Error::Scheduler(format!("no sched record for {id}")))?;
+        let (want_start, budget_left, len0) = expect;
+        if start != want_start {
+            return Err(Error::KvCache(format!(
+                "spec verify start {start} != expected {want_start} for seq {id}"
+            )));
+        }
+        let out = match retry_transient(
+            &self.metrics,
+            self.retry_max,
+            self.retry_backoff_us,
+            "spec verify",
+            || self.engine.decode_span_scored(self.path, &span, start, &mut caches),
+        ) {
+            Ok(out) => out,
+            Err(e) => {
+                // Past the transient-retry budget: demote the spec path
+                // (the cooldown re-probe recovers it) and serve this
+                // step through the plain host decode — the request
+                // survives, it just stops speculating.  Nothing was
+                // appended or emitted, so the host step starts clean.
+                self.engine.mark_spec_decode_unhealthy();
+                eprintln!(
+                    "[firstlayer] spec verify failed ({e}); plain decode \
+                     until the cooldown re-probe"
+                );
+                return self.run_decode_host(&[id], t0);
+            }
+        };
+        use std::sync::atomic::Ordering::Relaxed;
+        let vocab = cfg.vocab_size;
+        let n = span.len();
+        if out.pos_logits.len() != n * vocab {
+            return Err(Error::Engine(format!(
+                "scored span returned {} logit rows for a {n}-token span",
+                out.pos_logits.len() / vocab.max(1)
+            )));
+        }
+        let sampled: Vec<u32> = (0..n)
+            .map(|i| sampling::argmax(&out.pos_logits[i * vocab..(i + 1) * vocab]))
+            .collect();
+        let accepted = accepted_prefix(draft, &sampled);
+        // Pre-scan the emission count: walk the accepted prefix + bonus
+        // and stop at the first finish condition.  `emit_token` finishes
+        // on EOS, on the token budget reaching zero, and on the context
+        // limit — the same three tests, in the same order.
+        let mut emit = 0usize;
+        for &tok in sampled.iter().take(accepted + 1) {
+            emit += 1;
+            if tok == EOS || emit >= budget_left || len0 + emit >= cfg.max_seq {
+                break;
+            }
+        }
+        // Block-headroom trim: prefill chunks this same step may have
+        // consumed blocks the resolve-time check saw as free.  Every
+        // accepted token is individually valid, so shrink the emission
+        // instead of failing the request; the single-row floor is
+        // covered by the scheduler's per-decoder growth reserve.
+        while emit > 1
+            && self
+                .kv
+                .blocks_for(start + emit)
+                .saturating_sub(self.kv.blocks_held(id))
+                > self.kv.free_blocks()
+        {
+            emit -= 1;
+        }
+        // Append exactly the emitted rows (token-major [n, L, KH*hd]
+        // slabs truncate cleanly), THEN emit: a mid-accept finish
+        // removes the cache after the rows are already in place.
+        let tok_w = cfg.n_layers * cfg.n_kv_heads * cfg.head_dim();
+        self.kv.append_span(
+            id,
+            emit,
+            &out.new_k[..emit * tok_w],
+            &out.new_v[..emit * tok_w],
+        )?;
+        self.metrics.spec_executions.fetch_add(1, Relaxed);
+        self.metrics
+            .spec_drafted_tokens
+            .fetch_add(draft.len() as u64, Relaxed);
+        self.metrics
+            .spec_accepted_tokens
+            .fetch_add(accepted as u64, Relaxed);
+        if accepted < draft.len() {
+            self.metrics.spec_rollbacks.fetch_add(1, Relaxed);
+        }
+        self.metrics.spec_accept_len.record(emit as u64);
+        if let Some(stats) = self.spec_stats.get_mut(&id) {
+            stats.on_verify(draft.len(), accepted);
+        }
+        self.tracer.req_mark(id, "spec_accept", emit as u64);
+        // Sustained bonus-only acceptance is waste, not progress: a full
+        // window below the floor demotes the path; the cooldown
+        // re-promotion is the probe that brings it back.
+        if self.accept_win.record(emit as u64) {
+            self.engine.mark_spec_decode_unhealthy();
+            eprintln!(
+                "[firstlayer] spec decode demoted: acceptance window mean \
+                 below {}.{:02} tokens/verify",
+                DEMOTE_MEAN_X100 / 100,
+                DEMOTE_MEAN_X100 % 100,
+            );
+        }
+        for i in 0..emit {
+            self.emit_token(id, &out.pos_logits[i * vocab..(i + 1) * vocab])?;
+        }
+        self.metrics.decode_step.record(t0.elapsed());
+        Ok(())
     }
 
     /// One decode step for `ids`.  On the device-resident path the

@@ -255,16 +255,26 @@ pub enum PathId {
     SpanExec,
     /// Multi-sequence `[B, T]` span groups (vs per-sequence spans).
     SpanBatch,
+    /// Server-side speculative decoding (draft + span-verify vs plain
+    /// per-token decode).  Demoted on verify faults and on sustained
+    /// low acceptance; plain decode is the always-available fallback.
+    SpecDec,
 }
 
 impl PathId {
-    pub const ALL: [PathId; 3] = [PathId::DeviceKv, PathId::SpanExec, PathId::SpanBatch];
+    pub const ALL: [PathId; 4] = [
+        PathId::DeviceKv,
+        PathId::SpanExec,
+        PathId::SpanBatch,
+        PathId::SpecDec,
+    ];
 
     pub fn label(self) -> &'static str {
         match self {
             PathId::DeviceKv => "device_kv",
             PathId::SpanExec => "span_exec",
             PathId::SpanBatch => "span_batch",
+            PathId::SpecDec => "spec_decode",
         }
     }
 
@@ -275,6 +285,7 @@ impl PathId {
             PathId::DeviceKv => 0,
             PathId::SpanExec => 1,
             PathId::SpanBatch => 2,
+            PathId::SpecDec => 3,
         }
     }
 }
@@ -313,7 +324,7 @@ impl Default for PathState {
 /// surfaces transitions in metrics and trace instants).
 #[derive(Debug)]
 pub struct HealthRegistry {
-    paths: [PathState; 3],
+    paths: [PathState; 4],
     /// Steps a demoted path waits before the re-promotion probe
     /// (0 = demote forever, the pre-ladder behavior).
     cooldown: AtomicU64,

@@ -36,6 +36,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod server;
 pub mod simtraffic;
+pub mod specdec;
 pub mod tokenizer;
 pub mod trace;
 pub mod util;

@@ -34,9 +34,15 @@ COMMANDS:
                   --prefix-cache-blocks N (0 = per-model zoo default)
                   --no-prefix-cache (disable cross-request KV reuse)
                   --no-device-kv (host-path caches: upload/readback per step)
-                  --span-tokens N|auto (largest span tile; 0 = largest compiled)
+                  --span-tokens N|auto (largest span tile; 0 = largest compiled;
+                    auto with --spec caps the tile at draft+1 so verify
+                    spans never pad)
                   --no-span-exec (token-by-token spans: one dispatch per token)
                   --no-span-batch (serial per-sequence spans: no [B, T] groups)
+                  --spec (server-side speculative decoding: n-gram
+                    self-drafts verified through scored span executions)
+                  --spec-draft N (max drafted tokens per verify; default 16,
+                    always clamped to span tile - 1)
                   --trace (record request lifecycles; export via trace.dump)
                   --trace-ring N (completed requests the tracer retains)
                   --fault-spec SPEC (deterministic fault plan, e.g.
@@ -70,6 +76,14 @@ COMMANDS:
                 cooldown; finishes with a mass-cancel storm
                   [--model tiny-serial] [--requests N] [--seed N]
                   [--fault-spec SPEC] [--health-cooldown N]
+  spec-smoke    speculative-decoding gate: run a repetitive greedy burst
+                with speculation OFF (the oracle), re-run it with --spec
+                on, and assert every stream is byte-identical, verifies
+                actually ran, and the mean emitted tokens per verify
+                execution clears the floor (speculation must pay for
+                itself, not just not break anything)
+                  [--model tiny-serial] [--requests N] [--seed N]
+                  [--min-accept X (floor, default 1.5)] [--spec-draft N]
 ";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -143,9 +157,15 @@ fn serving_config(flags: &HashMap<String, String>) -> ServingConfig {
     if flags.contains_key("no-device-kv") {
         cfg.enable_device_kv = false;
     }
+    if flags.contains_key("spec") {
+        cfg.enable_spec_decode = true;
+    }
+    if let Some(d) = flags.get("spec-draft") {
+        cfg.spec_draft_max = d.parse().unwrap_or(cfg.spec_draft_max);
+    }
     if let Some(t) = flags.get("span-tokens") {
         cfg.span_bucket_tokens = if t == "auto" {
-            match zoo_get(&cfg.model) {
+            let zoo = match zoo_get(&cfg.model) {
                 Some(m) => firstlayer::config::default_span_bucket(&m),
                 None => {
                     eprintln!(
@@ -155,6 +175,20 @@ fn serving_config(flags: &HashMap<String, String>) -> ServingConfig {
                     );
                     0
                 }
+            };
+            // With speculation on, cap the tile at draft + 1: the engine
+            // picks the largest compiled bucket <= the cap, so a full
+            // verify span (re-fed token + draft) fills exactly one tile
+            // and spec chunks never pad.
+            if cfg.enable_spec_decode && cfg.spec_draft_max > 0 {
+                let cap = cfg.spec_draft_max + 1;
+                if zoo == 0 {
+                    cap
+                } else {
+                    zoo.min(cap)
+                }
+            } else {
+                zoo
             }
         } else {
             t.parse().unwrap_or(cfg.span_bucket_tokens)
@@ -206,6 +240,7 @@ fn main() {
         "selfcheck" => cmd_selfcheck(&flags),
         "trace-smoke" => cmd_trace_smoke(&flags),
         "chaos" => cmd_chaos(&flags),
+        "spec-smoke" => cmd_spec_smoke(&flags),
         _ => {
             eprint!("{USAGE}");
             std::process::exit(2);
@@ -590,6 +625,144 @@ fn cmd_chaos(flags: &HashMap<String, String>) -> Result<()> {
         health.total_promotions()
     );
     println!("[chaos] OK");
+    Ok(())
+}
+
+/// The speculative-decoding gate (`scripts/spec_gate.sh`): prove
+/// server-side speculation is both *correct* and *worth it*, against a
+/// live engine.
+///
+/// Phase 1 runs a repetitive greedy burst (`simtraffic::spec_workload`)
+/// with
+/// speculation OFF and records each tag's token stream — the oracle.
+/// Phase 2 replays the identical burst with `--spec` on and asserts:
+/// every stream is byte-identical to the oracle (the verify-accept-
+/// rollback loop must be invisible in output space); verifies actually
+/// executed (a gate that silently never speculated proves nothing); and
+/// the mean emitted tokens per verify execution clears `--min-accept`
+/// (default 1.5) — each scored span execution must replace more than
+/// 1.5 plain decode steps on this drafter-friendly traffic, or the
+/// machinery is overhead.  Any violation is an `Err`, so the script
+/// fails on exit code alone.
+fn cmd_spec_smoke(flags: &HashMap<String, String>) -> Result<()> {
+    use firstlayer::coordinator::FinishReason;
+    use std::sync::atomic::Ordering::Relaxed;
+    let mut cfg = serving_config(flags);
+    cfg.enable_spec_decode = true;
+    if cfg.prefill_chunk_tokens == 0 {
+        cfg.prefill_chunk_tokens = 16;
+    }
+    let n: usize = flags
+        .get("requests")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let seed: u64 = flags
+        .get("seed")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5bec);
+    let min_accept: f64 = flags
+        .get("min-accept")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.5);
+
+    // Phase 1: speculation off — the oracle streams.
+    let mut oracle_cfg = cfg.clone();
+    oracle_cfg.enable_spec_decode = false;
+    let mut c = Coordinator::from_config(&oracle_cfg)?;
+    let vocab = c.engine().config().vocab_size as u32;
+    let burst = firstlayer::simtraffic::spec_workload(n, 3, 24, 64, vocab, seed);
+    let mut oracle: HashMap<String, Vec<u32>> = HashMap::new();
+    let mut ids = Vec::new();
+    for r in burst.clone() {
+        let tag = r.tag.clone().unwrap_or_default();
+        ids.push((tag, c.submit(r)?));
+    }
+    c.run_to_completion(10_000)?;
+    for (tag, id) in &ids {
+        match c.finished(*id) {
+            Some(FinishReason::Error) | None => {
+                return Err(firstlayer::Error::Engine(format!(
+                    "[spec-smoke] oracle run must be clean, but `{tag}` did not finish"
+                )))
+            }
+            Some(_) => {
+                oracle.insert(tag.clone(), c.generated(*id).unwrap_or(&[]).to_vec());
+            }
+        }
+    }
+    if c.metrics.spec_executions.load(Relaxed) != 0 {
+        return Err(firstlayer::Error::Engine(
+            "[spec-smoke] oracle run executed verifies with the knob off".into(),
+        ));
+    }
+    println!("[spec-smoke] oracle: {n} requests finished clean, spec off");
+
+    // Phase 2: identical burst, speculation on.
+    let mut c = Coordinator::from_config(&cfg)?;
+    let mut ids = Vec::new();
+    for r in burst {
+        let tag = r.tag.clone().unwrap_or_default();
+        ids.push((tag, c.submit(r)?));
+    }
+    c.run_to_completion(10_000)?;
+    for (tag, id) in &ids {
+        match c.finished(*id) {
+            Some(FinishReason::Error) | None => {
+                return Err(firstlayer::Error::Engine(format!(
+                    "[spec-smoke] `{tag}` did not finish clean with spec on"
+                )))
+            }
+            Some(_) => {
+                let got = c.generated(*id).unwrap_or(&[]);
+                let want = oracle.get(tag).map_or(&[][..], |v| v);
+                if got != want {
+                    return Err(firstlayer::Error::Engine(format!(
+                        "[spec-smoke] `{tag}` diverged from the oracle \
+                         ({got:?} vs {want:?}) — accept/rollback changed \
+                         the output stream"
+                    )));
+                }
+            }
+        }
+    }
+    let execs = c.metrics.spec_executions.load(Relaxed);
+    let drafted = c.metrics.spec_drafted_tokens.load(Relaxed);
+    let accepted = c.metrics.spec_accepted_tokens.load(Relaxed);
+    let rollbacks = c.metrics.spec_rollbacks.load(Relaxed);
+    if execs == 0 {
+        return Err(firstlayer::Error::Engine(
+            "[spec-smoke] no verify ever executed — the gate proved nothing; \
+             is the span bucket >= 2 and the workload repetitive?"
+                .into(),
+        ));
+    }
+    let per_exec = c.metrics.spec_accept_len.mean();
+    for (tag, id) in &ids {
+        if let Some(s) = c.spec_stats(*id) {
+            println!(
+                "[spec-smoke] {tag}: {} proposals, {} drafted, {} accepted \
+                 ({:.0}% accept), {} rollbacks",
+                s.proposals,
+                s.drafted,
+                s.accepted,
+                s.accept_rate() * 100.0,
+                s.rollbacks
+            );
+        }
+    }
+    println!(
+        "[spec-smoke] {execs} verifies: {drafted} drafted, {accepted} accepted, \
+         {rollbacks} rollbacks; {per_exec:.2} emitted tokens/execution"
+    );
+    println!("--- metrics ---\n{}", c.metrics.report());
+    if per_exec <= min_accept {
+        return Err(firstlayer::Error::Engine(format!(
+            "[spec-smoke] {per_exec:.2} emitted tokens per verify execution \
+             <= floor {min_accept:.2} — speculation is not paying for itself \
+             on drafter-friendly traffic"
+        )));
+    }
+    println!("[spec-smoke] OK ({per_exec:.2} > {min_accept:.2})");
     Ok(())
 }
 

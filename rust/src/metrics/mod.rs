@@ -307,6 +307,21 @@ pub struct Metrics {
     /// actually fills lanes instead of padding them.
     pub span_batched_executions: AtomicU64,
     pub span_batch_occupancy: ValueHistogram,
+    /// Server-side speculative decoding (`rust/src/specdec/`): verify
+    /// executions (device executions spent scoring a drafted span),
+    /// tokens drafted across all verifies, tokens the verify emitted
+    /// (accepted draft prefix + the bonus token — this over
+    /// `spec_executions` is the accepted-tokens-per-execution ratio the
+    /// spec gate asserts on), and verifies that rejected at least one
+    /// drafted token (the rolled-back suffix rows never reach the host
+    /// store).
+    pub spec_executions: AtomicU64,
+    pub spec_drafted_tokens: AtomicU64,
+    pub spec_accepted_tokens: AtomicU64,
+    pub spec_rollbacks: AtomicU64,
+    /// Tokens netted per verify execution (accepted prefix + bonus; 1 =
+    /// fully-rejected draft, never worse than plain decode).
+    pub spec_accept_len: ValueHistogram,
     /// Cached-tokens-per-request distribution (0 recorded on a miss).
     pub cached_tokens: ValueHistogram,
     /// Engine step latencies.
@@ -394,6 +409,18 @@ impl Metrics {
             self.span_batch_occupancy.mean(),
             self.span_batch_occupancy.quantile(0.50),
             self.span_batch_occupancy.quantile(0.95),
+        );
+        let _ = writeln!(
+            s,
+            "spec_decode: executions={} drafted={} accepted={} rollbacks={} \
+             accept_len mean={:.2} p50={} p95={}",
+            self.spec_executions.load(Ordering::Relaxed),
+            self.spec_drafted_tokens.load(Ordering::Relaxed),
+            self.spec_accepted_tokens.load(Ordering::Relaxed),
+            self.spec_rollbacks.load(Ordering::Relaxed),
+            self.spec_accept_len.mean(),
+            self.spec_accept_len.quantile(0.50),
+            self.spec_accept_len.quantile(0.95),
         );
         for (name, h) in [
             ("decode_step", &self.decode_step),
@@ -486,6 +513,16 @@ impl Metrics {
                 "span_batched_executions",
                 self.span_batched_executions.load(Ordering::Relaxed),
             ),
+            ("spec_executions", self.spec_executions.load(Ordering::Relaxed)),
+            (
+                "spec_drafted_tokens",
+                self.spec_drafted_tokens.load(Ordering::Relaxed),
+            ),
+            (
+                "spec_accepted_tokens",
+                self.spec_accepted_tokens.load(Ordering::Relaxed),
+            ),
+            ("spec_rollbacks", self.spec_rollbacks.load(Ordering::Relaxed)),
             ("h2d_bytes", transfers.h2d_bytes),
             ("d2h_bytes", transfers.d2h_bytes),
             ("h2d_transfers", transfers.h2d_transfers),
@@ -520,6 +557,7 @@ impl Metrics {
         for (name, h) in [
             ("span_exec_tokens", &self.span_exec_tokens),
             ("span_batch_occupancy", &self.span_batch_occupancy),
+            ("spec_accept_len", &self.spec_accept_len),
             ("cached_tokens", &self.cached_tokens),
         ] {
             prom_summary(
@@ -676,6 +714,27 @@ mod tests {
         let r = m.report();
         assert!(r.contains("span_batch: executions=3"));
         assert!((m.span_batch_occupancy.mean() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_and_prom_contain_spec_decode_counters() {
+        let m = Metrics::new();
+        m.spec_executions.fetch_add(4, Ordering::Relaxed);
+        m.spec_drafted_tokens.fetch_add(12, Ordering::Relaxed);
+        m.spec_accepted_tokens.fetch_add(9, Ordering::Relaxed);
+        m.spec_rollbacks.fetch_add(2, Ordering::Relaxed);
+        m.spec_accept_len.record(3);
+        m.spec_accept_len.record(1);
+        let r = m.report();
+        assert!(r.contains("spec_decode: executions=4 drafted=12 accepted=9 rollbacks=2"));
+        assert!((m.spec_accept_len.mean() - 2.0).abs() < 1e-9);
+        let p = m.prometheus(&TransferStats::new().snapshot());
+        assert!(p.contains("firstlayer_spec_executions 4"));
+        assert!(p.contains("firstlayer_spec_drafted_tokens 12"));
+        assert!(p.contains("firstlayer_spec_accepted_tokens 9"));
+        assert!(p.contains("firstlayer_spec_rollbacks 2"));
+        assert!(p.contains("# TYPE firstlayer_spec_accept_len summary"));
+        assert!(p.contains("firstlayer_spec_accept_len_count 2"));
     }
 
     #[test]

@@ -192,6 +192,12 @@ pub struct PrefillOut {
 pub struct SpanOut {
     /// `[vocab]` logits after the last span token.
     pub logits: Vec<f32>,
+    /// `[n, vocab]` logits after EVERY span token, token-major — the
+    /// draft-verification surface of speculative decoding (position `i`
+    /// scores the token following span token `i`).  Populated only by
+    /// [`ModelEngine::decode_span_scored`]; plain spans leave it empty
+    /// and skip the extra readback.
+    pub pos_logits: Vec<f32>,
     /// New K rows for the span: `[n, L, kh*hd]`, token-major append order.
     pub new_k: Vec<f32>,
     /// New V rows, same layout.
@@ -455,6 +461,27 @@ impl ModelEngine {
     /// of [`ModelEngine::span_executions`]).
     pub fn span_batched_executions(&self) -> u64 {
         self.span_batched_execs.load(Ordering::Relaxed)
+    }
+
+    /// Enable/disable server-side speculative decoding
+    /// (`ServingConfig::enable_spec_decode`).  Disabling keeps every
+    /// decoder on the plain per-token path — the equivalence oracle the
+    /// spec property tests compare against.
+    pub fn set_spec_decode(&self, on: bool) {
+        self.health.set_enabled(PathId::SpecDec, on);
+    }
+
+    /// Whether speculative decoding is both enabled and healthy.
+    pub fn spec_decode_active(&self) -> bool {
+        self.health.active(PathId::SpecDec)
+    }
+
+    /// Record a speculative-decoding failure — a verify span that
+    /// exhausted its transient retries, or a demotion-window's worth of
+    /// low acceptance.  Later decoders stay on plain decode until the
+    /// cooldown re-promotes the path for a probe.
+    pub fn mark_spec_decode_unhealthy(&self) {
+        self.health.record_failure(PathId::SpecDec);
     }
 
     /// Compiled span buckets (tokens per execution) usable for `path`,
@@ -1006,6 +1033,34 @@ impl ModelEngine {
         start_pos: usize,
         caches: &mut CacheBatch,
     ) -> Result<SpanOut> {
+        self.decode_span_inner(path, tokens, start_pos, caches, false)
+    }
+
+    /// [`ModelEngine::decode_span`] with the per-position logits kept:
+    /// the verify kernel of server-side speculative decoding.  The span
+    /// artifacts already compute `[T, V]` logits for every position —
+    /// a plain span discards all but the last row; this entry reads
+    /// them all back (`SpanOut::pos_logits`) so the coordinator can
+    /// score a drafted span in the same device executions.  Execution
+    /// windows trace as `spec_verify` instead of `span_tile`.
+    pub fn decode_span_scored(
+        &self,
+        path: StepPath,
+        tokens: &[u32],
+        start_pos: usize,
+        caches: &mut CacheBatch,
+    ) -> Result<SpanOut> {
+        self.decode_span_inner(path, tokens, start_pos, caches, true)
+    }
+
+    fn decode_span_inner(
+        &self,
+        path: StepPath,
+        tokens: &[u32],
+        start_pos: usize,
+        caches: &mut CacheBatch,
+        score: bool,
+    ) -> Result<SpanOut> {
         let n = tokens.len();
         if n == 0 {
             return Err(Error::Engine("decode_span: empty span".into()));
@@ -1048,6 +1103,7 @@ impl ModelEngine {
                     caches,
                     rows.as_deref(),
                     &tiles,
+                    score,
                 ) {
                     Ok(out) => return Ok(out),
                     Err(e) => {
@@ -1066,7 +1122,8 @@ impl ModelEngine {
             // Device writes never touch `caches` until the final sync, so
             // a mid-span failure leaves the host state pristine and the
             // legacy loop below can re-run the whole span.
-            match self.decode_span_device(path, tokens, start_pos, caches, rows.as_deref()) {
+            match self.decode_span_device(path, tokens, start_pos, caches, rows.as_deref(), score)
+            {
                 Ok(out) => return Ok(out),
                 Err(e) => {
                     self.mark_device_kv_unhealthy();
@@ -1078,7 +1135,7 @@ impl ModelEngine {
                 }
             }
         }
-        self.decode_span_host(path, tokens, start_pos, caches, rows.as_deref())
+        self.decode_span_host(path, tokens, start_pos, caches, rows.as_deref(), score)
     }
 
     fn span_artifact_name(&self, path: StepPath, bucket: usize) -> String {
@@ -1142,6 +1199,7 @@ impl ModelEngine {
         caches: &mut CacheBatch,
         rows: Option<&[f32]>,
         tiles: &[(usize, usize)],
+        score: bool,
     ) -> Result<SpanOut> {
         let n = tokens.len();
         let device = self.device_kv_active();
@@ -1164,10 +1222,10 @@ impl ModelEngine {
         }
         let out = if device {
             let work: &CacheBatch = local.as_ref().unwrap_or(caches);
-            self.span_tiles_device(path, tokens, start_pos, work, rows, tiles)?
+            self.span_tiles_device(path, tokens, start_pos, work, rows, tiles, score)?
         } else {
             let work = local.as_mut().expect("host mode always copies");
-            self.span_tiles_host(path, tokens, start_pos, work, rows, tiles)?
+            self.span_tiles_host(path, tokens, start_pos, work, rows, tiles, score)?
         };
         // Refresh ONLY the span's rows in the caller's mirror — the same
         // scatter every other span path performs; padding-tile garbage
@@ -1197,6 +1255,7 @@ impl ModelEngine {
         caches: &CacheBatch,
         rows: Option<&[f32]>,
         tiles: &[(usize, usize)],
+        score: bool,
     ) -> Result<SpanOut> {
         let cfg = &self.entry.config;
         let w = self.table.row_width();
@@ -1207,14 +1266,16 @@ impl ModelEngine {
         let mut new_k = vec![0f32; n * lrow];
         let mut new_v = vec![0f32; n * lrow];
         let mut logits = Vec::new();
+        let mut pos_logits = if score { vec![0f32; n * cfg.vocab_size] } else { Vec::new() };
         let mut exec_tokens = Vec::with_capacity(tiles.len());
         let mut done = 0usize;
         let tracer = self.rt.tracer();
+        let kind = if score { SpanKind::SpecVerify } else { SpanKind::SpanTile };
         for (ti, &(bucket, take)) in tiles.iter().enumerate() {
             let last = ti + 1 == tiles.len();
             let name = self.span_artifact_name(path, bucket);
             let loaded = self.load_artifact(&name)?;
-            tracer.exec_begin(SpanKind::SpanTile, bucket, 1);
+            tracer.exec_begin(kind, bucket, 1);
             let tile_rows = rows.map(|r| &r[done * w..(done + take) * w]);
             let data = self.span_data_bufs(
                 path,
@@ -1254,10 +1315,20 @@ impl ModelEngine {
             let vr = self.read_span_rows(&loaded.exe, &vr_buf, 4, take, lrow)?;
             new_k[done * lrow..(done + take) * lrow].copy_from_slice(&kr);
             new_v[done * lrow..(done + take) * lrow].copy_from_slice(&vr);
-            if last {
+            if last || score {
                 let la = loaded.exe.read_output(&logits_buf, 0)?;
                 let la = la.as_f32()?;
-                logits = la[(take - 1) * cfg.vocab_size..take * cfg.vocab_size].to_vec();
+                if score {
+                    // Scored spans keep every position's logits — that's
+                    // the verify surface.  Padding rows never escape:
+                    // only the tile's `take` valid rows are copied.
+                    pos_logits[done * cfg.vocab_size..(done + take) * cfg.vocab_size]
+                        .copy_from_slice(&la[..take * cfg.vocab_size]);
+                }
+                if last {
+                    logits =
+                        la[(take - 1) * cfg.vocab_size..take * cfg.vocab_size].to_vec();
+                }
             }
             sess.advance(k_buf, v_buf);
             self.span_execs.fetch_add(1, Ordering::Relaxed);
@@ -1274,6 +1345,7 @@ impl ModelEngine {
         }
         Ok(SpanOut {
             logits,
+            pos_logits,
             new_k,
             new_v,
             executions: tiles.len(),
@@ -1315,6 +1387,7 @@ impl ModelEngine {
         work: &mut CacheBatch,
         rows: Option<&[f32]>,
         tiles: &[(usize, usize)],
+        score: bool,
     ) -> Result<SpanOut> {
         let cfg = &self.entry.config;
         let w = self.table.row_width();
@@ -1325,14 +1398,16 @@ impl ModelEngine {
         let mut new_k = vec![0f32; n * lrow];
         let mut new_v = vec![0f32; n * lrow];
         let mut logits = Vec::new();
+        let mut pos_logits = if score { vec![0f32; n * cfg.vocab_size] } else { Vec::new() };
         let mut exec_tokens = Vec::with_capacity(tiles.len());
         let mut done = 0usize;
         let tracer = self.rt.tracer();
+        let kind = if score { SpanKind::SpecVerify } else { SpanKind::SpanTile };
         for (ti, &(bucket, take)) in tiles.iter().enumerate() {
             let last = ti + 1 == tiles.len();
             let name = self.span_artifact_name(path, bucket);
             let loaded = self.load_artifact(&name)?;
-            tracer.exec_begin(SpanKind::SpanTile, bucket, 1);
+            tracer.exec_begin(kind, bucket, 1);
             let tile_rows = rows.map(|r| &r[done * w..(done + take) * w]);
             let mut data = self.span_data_bufs(
                 path,
@@ -1360,9 +1435,16 @@ impl ModelEngine {
                 .copy_from_slice(&kr[..take * lrow]);
             new_v[done * lrow..(done + take) * lrow]
                 .copy_from_slice(&vr[..take * lrow]);
-            if last {
+            if last || score {
                 let la = out[0].as_f32()?;
-                logits = la[(take - 1) * cfg.vocab_size..take * cfg.vocab_size].to_vec();
+                if score {
+                    pos_logits[done * cfg.vocab_size..(done + take) * cfg.vocab_size]
+                        .copy_from_slice(&la[..take * cfg.vocab_size]);
+                }
+                if last {
+                    logits =
+                        la[(take - 1) * cfg.vocab_size..take * cfg.vocab_size].to_vec();
+                }
             }
             self.span_execs.fetch_add(1, Ordering::Relaxed);
             tracer.exec_end(take);
@@ -1371,6 +1453,7 @@ impl ModelEngine {
         }
         Ok(SpanOut {
             logits,
+            pos_logits,
             new_k,
             new_v,
             executions: tiles.len(),
@@ -1388,18 +1471,31 @@ impl ModelEngine {
         start_pos: usize,
         caches: &mut CacheBatch,
         rows: Option<&[f32]>,
+        score: bool,
     ) -> Result<SpanOut> {
         let w = self.table.row_width();
         let mut sess = self.begin_cache_session(caches)?;
         let mut logits = Vec::new();
+        let mut pos_logits = Vec::new();
         for (i, &tok) in tokens.iter().enumerate() {
             let pos = (start_pos + i) as u32;
             let pre = rows.map(|r| &r[i * w..(i + 1) * w]);
             // Only the final token's logits are ever consumed: interior
-            // steps skip even the logits readback.
+            // steps skip even the logits readback.  Scored spans read
+            // every step — each position is a verify surface.
             let last = i + 1 == tokens.len();
-            logits =
-                self.decode_on_session(path, &[tok], &[pos], &mut sess, pre, last, false)?;
+            logits = self.decode_on_session(
+                path,
+                &[tok],
+                &[pos],
+                &mut sess,
+                pre,
+                last || score,
+                false,
+            )?;
+            if score {
+                pos_logits.extend_from_slice(&logits);
+            }
         }
         // One selective sync: the pair comes down once, the span's rows
         // are sliced out host-side, and the host mirror is refreshed so
@@ -1425,6 +1521,7 @@ impl ModelEngine {
         }
         Ok(SpanOut {
             logits,
+            pos_logits,
             new_k,
             new_v,
             executions: n,
@@ -1443,6 +1540,7 @@ impl ModelEngine {
         start_pos: usize,
         caches: &mut CacheBatch,
         rows: Option<&[f32]>,
+        score: bool,
     ) -> Result<SpanOut> {
         let n = tokens.len();
         let w = self.table.row_width();
@@ -1451,6 +1549,7 @@ impl ModelEngine {
         let mut new_k = vec![0f32; n * lrow];
         let mut new_v = vec![0f32; n * lrow];
         let mut logits = Vec::new();
+        let mut pos_logits = Vec::new();
         for (i, &tok) in tokens.iter().enumerate() {
             let pos = start_pos + i;
             let pre = rows.map(|r| &r[i * w..(i + 1) * w]);
@@ -1466,9 +1565,13 @@ impl ModelEngine {
             new_k[i * lrow..(i + 1) * lrow].copy_from_slice(&out.new_k);
             new_v[i * lrow..(i + 1) * lrow].copy_from_slice(&out.new_v);
             logits = out.logits;
+            if score {
+                pos_logits.extend_from_slice(&logits);
+            }
         }
         Ok(SpanOut {
             logits,
+            pos_logits,
             new_k,
             new_v,
             executions: n,

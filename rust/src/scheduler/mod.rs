@@ -97,22 +97,56 @@ pub struct PrefillChunk {
     pub last: bool,
 }
 
+/// One lane of a span step-group: either a continuation prefill chunk
+/// (by index into [`StepPlan::prefill`]) or a decoding sequence riding
+/// the group's spare capacity as a 1-token span.  A `Decode` lane's id
+/// is REMOVED from [`StepPlan::decode`] — the group execution IS its
+/// decode step this iteration, it must not be advanced twice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupLane {
+    /// Index into `StepPlan::prefill` (a `start > 0` continuation chunk).
+    Chunk(usize),
+    /// Sequence id decoding one token through a spare group lane.
+    Decode(u64),
+}
+
+/// A planned speculative-decode chunk: the coordinator MAY advance
+/// steady-state decoder `id` by draft-and-verify (one span execution
+/// scoring up to `max_draft` drafted tokens) instead of plain decode.
+/// The id STAYS in [`StepPlan::decode`] — the chunk is an option, not a
+/// commitment: an ineligible request (sampling on, no draft material,
+/// path demoted, ...) simply falls back to its plain decode slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecChunk {
+    pub id: u64,
+    /// Scheduler-side draft cap: leftover step budget, the request's
+    /// remaining token budget past the decode token it already claimed,
+    /// and context headroom.  The coordinator further caps at
+    /// span-bucket - 1 so the verify span never pads.
+    pub max_draft: usize,
+}
+
 /// What the coordinator must do this iteration.
 #[derive(Debug, Default)]
 pub struct StepPlan {
     /// Prefill chunks to execute (fresh admissions have `start == 0`;
     /// continuations of in-flight chunked prefills have `start > 0`).
     pub prefill: Vec<PrefillChunk>,
-    /// Multi-sequence span step-groups: each entry lists indices into
-    /// `prefill` whose continuation chunks one batched `[B, T]` span
-    /// execution advances together (disjoint, >= 2 lanes each; chunks in
-    /// no group run per-sequence).  Composed only when
-    /// `span_group_lanes >= 2`.
-    pub span_groups: Vec<Vec<usize>>,
+    /// Multi-sequence span step-groups: each entry lists lanes one
+    /// batched `[B, T]` span execution advances together (disjoint,
+    /// >= 2 lanes each; chunks in no group run per-sequence).
+    /// `Chunk` lanes index into `prefill`; `Decode` lanes carry ids
+    /// pulled out of `decode` to ride a group's spare capacity.
+    /// Composed only when `span_group_lanes >= 2`.
+    pub span_groups: Vec<Vec<GroupLane>>,
     /// Sequences to decode one token for, ids (fully prefilled running
     /// sequences; a sequence whose final chunk runs this iteration decodes
     /// from the next one).
     pub decode: Vec<u64>,
+    /// Speculative-decode options for ids in `decode`, planned from
+    /// whatever step budget decode and prefill left unspent (empty
+    /// unless `spec_tokens > 0`).
+    pub spec: Vec<SpecChunk>,
     /// Sequences preempted this iteration (caches must be dropped).
     pub preempt: Vec<u64>,
 }
@@ -163,6 +197,12 @@ pub struct SchedConfig {
     /// decode-first budget and priority/arrival fairness are unchanged,
     /// grouping only batches the work already planned.
     pub span_group_lanes: usize,
+    /// Max draft tokens planned per steady-state decoder per iteration
+    /// ([`StepPlan::spec`]); 0 = speculative decoding off.  Draft
+    /// tokens are charged to the step token budget AFTER decode and
+    /// prefill chunks claim theirs — speculation only ever spends
+    /// budget nobody else wanted.
+    pub spec_tokens: usize,
 }
 
 /// The scheduler.
@@ -539,8 +579,33 @@ impl Scheduler {
 
         // 5. Compose continuation chunks from different sequences into
         //    span step-groups: one batched [B, T] execution per group
-        //    tile instead of one serial span per sequence.
+        //    tile instead of one serial span per sequence.  Groups with
+        //    spare lanes absorb decoding sequences as T=1 lanes.
         self.compose_span_groups(&mut plan);
+
+        // 6. Spend whatever budget is still left on speculative drafts
+        //    for the steady-state decoders.  Plain decode stays planned
+        //    (the spec chunk is an option the coordinator may take);
+        //    caps keep a draft from proposing tokens the request could
+        //    never emit: its remaining token budget past the decode
+        //    token it already claimed, and the context headroom past
+        //    this step's +1 growth.
+        if self.cfg.spec_tokens > 0 {
+            for &id in &plan.decode {
+                if budget == 0 {
+                    break;
+                }
+                let (info, _) = &self.seqs[&id];
+                let head = info.budget_left().saturating_sub(1);
+                let room = self.cfg.max_seq.saturating_sub(info.len + 1);
+                let max_draft = self.cfg.spec_tokens.min(budget).min(head).min(room);
+                if max_draft == 0 {
+                    continue;
+                }
+                budget -= max_draft;
+                plan.spec.push(SpecChunk { id, max_draft });
+            }
+        }
         plan
     }
 
@@ -557,6 +622,16 @@ impl Scheduler {
     /// fairness steps 3–4 established; the budget was already spent, so
     /// grouping never changes WHAT runs, only how many dispatches it
     /// takes.
+    ///
+    /// Decode-as-lane overlay: a composed group whose lane count is
+    /// below `span_group_lanes` absorbs decoding sequences as 1-token
+    /// lanes — the batched execution that was dispatching anyway
+    /// advances them for free (the decode lane goes inert after the
+    /// first tile, the PR 6 ragged-lane machinery).  Pure overlay:
+    /// decode ids join only an EXISTING chunk group; decode-only groups
+    /// are never formed (plain batched decode already serves them), so
+    /// with no prefill traffic the decode path is byte-identical to
+    /// grouping off.
     fn compose_span_groups(&self, plan: &mut StepPlan) {
         let lanes = self.cfg.span_group_lanes;
         if lanes < 2 {
@@ -578,11 +653,12 @@ impl Scheduler {
                 None => by_len.push((len, vec![i])),
             }
         }
+        let mut groups: Vec<Vec<usize>> = Vec::new();
         let mut leftovers: Vec<usize> = Vec::new();
         for (_, idxs) in by_len {
             for g in idxs.chunks(lanes) {
                 if g.len() >= 2 {
-                    plan.span_groups.push(g.to_vec());
+                    groups.push(g.to_vec());
                 } else {
                     leftovers.extend_from_slice(g);
                 }
@@ -591,9 +667,22 @@ impl Scheduler {
         leftovers.sort_unstable(); // back to plan order across classes
         for g in leftovers.chunks(lanes) {
             if g.len() >= 2 {
-                plan.span_groups.push(g.to_vec());
+                groups.push(g.to_vec());
             }
         }
+        // Overlay: fill spare lanes with decoders (front of the decode
+        // batch first — oldest running, deterministic) and pull the
+        // absorbed ids out of the decode batch.
+        let mut pulled = 0usize;
+        for g in groups {
+            let mut out: Vec<GroupLane> = g.into_iter().map(GroupLane::Chunk).collect();
+            while out.len() < lanes && pulled < plan.decode.len() {
+                out.push(GroupLane::Decode(plan.decode[pulled]));
+                pulled += 1;
+            }
+            plan.span_groups.push(out);
+        }
+        plan.decode.drain(..pulled);
     }
 
     /// Report an executed prefill chunk: `n` more prompt tokens of `id`
@@ -710,6 +799,7 @@ mod tests {
             step_token_budget: 0,
             span_bucket_tokens: 0,
             span_group_lanes: 0,
+            spec_tokens: 0,
         })
     }
 
@@ -723,11 +813,16 @@ mod tests {
             step_token_budget: budget,
             span_bucket_tokens: 0,
             span_group_lanes: 0,
+            spec_tokens: 0,
         })
     }
 
     fn ids_of(p: &StepPlan) -> Vec<u64> {
         p.prefill.iter().map(|c| c.id).collect()
+    }
+
+    fn chunk_lanes(idxs: &[usize]) -> Vec<GroupLane> {
+        idxs.iter().map(|&i| GroupLane::Chunk(i)).collect()
     }
 
     #[test]
@@ -936,6 +1031,7 @@ mod tests {
             step_token_budget: 0,
             span_bucket_tokens: 0,
             span_group_lanes: 0,
+            spec_tokens: 0,
         });
         // Pool of 10 four-token blocks.  A needs blocks_for(37) = 10,
         // B needs blocks_for(29) = 8: both fit alone, never together.
@@ -1002,6 +1098,7 @@ mod tests {
                 step_token_budget: budget,
                 span_bucket_tokens: 0,
             span_group_lanes: 0,
+            spec_tokens: 0,
             });
             let mut b = Budget::new(200);
             let mut next = 0u64;
@@ -1123,6 +1220,7 @@ mod tests {
             step_token_budget: 0,
             span_bucket_tokens: 8,
             span_group_lanes: 0,
+            spec_tokens: 0,
         });
         let b = Budget::new(1000);
         s.submit(1, vec![1; 40], 4, Priority::Normal).unwrap();
@@ -1164,6 +1262,7 @@ mod tests {
             step_token_budget: 0,
             span_bucket_tokens: 8,
             span_group_lanes: 0,
+            spec_tokens: 0,
         });
         s.submit(1, vec![1; 12], 4, Priority::Normal).unwrap();
         let p = s.plan(&b);
@@ -1191,6 +1290,7 @@ mod tests {
             step_token_budget: 0,
             span_bucket_tokens: 8,
             span_group_lanes: 4,
+            spec_tokens: 0,
         };
         let mut s = Scheduler::new(cfg.clone());
         let b = Budget::new(1000);
@@ -1209,13 +1309,14 @@ mod tests {
         s.submit(4, vec![1; 24], 4, Priority::Normal).unwrap();
         let p2 = s.plan(&b);
         assert_eq!(p2.prefill.len(), 4);
-        assert_eq!(p2.span_groups, vec![vec![0, 1, 2]]);
+        assert_eq!(p2.span_groups, vec![chunk_lanes(&[0, 1, 2])]);
         let fresh = &p2.prefill[3];
         assert_eq!((fresh.id, fresh.start), (4, 0));
         // Same workload with grouping off: identical chunks, no groups —
         // composition batches the plan, it never changes it.
         let mut s2 = Scheduler::new(SchedConfig {
             span_group_lanes: 0,
+            spec_tokens: 0,
             ..cfg
         });
         for id in 1..=3 {
@@ -1247,6 +1348,7 @@ mod tests {
                 step_token_budget: 0,
                 span_bucket_tokens: 8,
                 span_group_lanes: lanes,
+                spec_tokens: 0,
             })
         };
         let b = Budget::new(1000);
@@ -1265,7 +1367,10 @@ mod tests {
         let p2 = s.plan(&b);
         let lens: Vec<usize> = p2.prefill.iter().map(|c| c.len).collect();
         assert_eq!(lens, vec![8, 5, 8, 5]);
-        assert_eq!(p2.span_groups, vec![vec![0, 2], vec![1, 3]]);
+        assert_eq!(
+            p2.span_groups,
+            vec![chunk_lanes(&[0, 2]), chunk_lanes(&[1, 3])]
+        );
 
         // Leftover singletons (one 8, one 5) still merge: a ragged group
         // (the short lane goes inert) beats two serial executions.
@@ -1277,7 +1382,180 @@ mod tests {
             s.on_chunk(c.id, c.len);
         }
         let p2 = s.plan(&b);
-        assert_eq!(p2.span_groups, vec![vec![0, 1]]);
+        assert_eq!(p2.span_groups, vec![chunk_lanes(&[0, 1])]);
+    }
+
+    /// Decode-as-lane overlay: decoding sequences ride a chunk group's
+    /// spare lanes as T=1 spans and leave the decode batch; with no
+    /// chunk group there is nothing to ride (decode-only groups never
+    /// form); and overlay changes only the dispatch shape — the chunks
+    /// and the set of advanced sequences are identical with lanes off.
+    #[test]
+    fn decode_lanes_ride_spare_group_capacity() {
+        let mk = |lanes: usize| {
+            Scheduler::new(SchedConfig {
+                max_batch: 8,
+                max_admit: 4,
+                max_prompt: 64,
+                max_seq: 128,
+                chunk_tokens: 8,
+                step_token_budget: 0,
+                span_bucket_tokens: 8,
+                span_group_lanes: lanes,
+                spec_tokens: 0,
+            })
+        };
+        let b = Budget::new(1000);
+        let drive = |s: &mut Scheduler| {
+            // Three short chats reach steady-state decode...
+            for id in 3..=5 {
+                s.submit(id, vec![1; 4], 8, Priority::Normal).unwrap();
+            }
+            let p = s.plan(&b);
+            for c in &p.prefill {
+                s.on_chunk(c.id, c.len);
+                s.on_token(c.id, false);
+            }
+            // ...then two long documents admit (fresh chunks).
+            for id in 1..=2 {
+                s.submit(id, vec![1; 24], 8, Priority::Normal).unwrap();
+            }
+            let p = s.plan(&b);
+            assert!(p.span_groups.is_empty(), "fresh chunks must not group");
+            for c in &p.prefill {
+                s.on_chunk(c.id, c.len);
+            }
+            for &id in &p.decode {
+                s.on_token(id, false);
+            }
+            s.plan(&b)
+        };
+        // Lanes on: the two continuations form a group with two spare
+        // lanes, which absorb the two oldest decoders; the third stays
+        // in the decode batch.
+        let mut s = mk(4);
+        let p = drive(&mut s);
+        assert_eq!(
+            p.span_groups,
+            vec![vec![
+                GroupLane::Chunk(0),
+                GroupLane::Chunk(1),
+                GroupLane::Decode(3),
+                GroupLane::Decode(4),
+            ]]
+        );
+        assert_eq!(p.decode, vec![5]);
+        assert!(p.spec.is_empty());
+        // Lanes off: same chunks, and the advanced-sequence set is the
+        // same — overlay moved ids 3 and 4, it never added or dropped
+        // work.
+        let mut s2 = mk(0);
+        let q = drive(&mut s2);
+        assert_eq!(q.prefill, p.prefill);
+        assert!(q.span_groups.is_empty());
+        assert_eq!(q.decode, vec![3, 4, 5]);
+        // Pure overlay: decoders alone (no continuation chunks) never
+        // group — plain batched decode already serves them.
+        let mut s3 = mk(4);
+        for id in 3..=5 {
+            s3.submit(id, vec![1; 4], 8, Priority::Normal).unwrap();
+        }
+        let p = s3.plan(&b);
+        for c in &p.prefill {
+            s3.on_chunk(c.id, c.len);
+            s3.on_token(c.id, false);
+        }
+        let p2 = s3.plan(&b);
+        assert!(p2.span_groups.is_empty(), "decode-only group formed");
+        assert_eq!(p2.decode, vec![3, 4, 5]);
+    }
+
+    /// Speculative chunks: steady-state decoders get a [`SpecChunk`]
+    /// capped by leftover step budget, the request's remaining token
+    /// budget, and context headroom; planned ids STAY in `decode`
+    /// (the chunk is an option, not a commitment); `spec_tokens == 0`
+    /// plans none.
+    #[test]
+    fn spec_chunks_cap_by_budget_and_headroom() {
+        let mk = |max_seq: usize, budget: usize| {
+            Scheduler::new(SchedConfig {
+                max_batch: 8,
+                max_admit: 4,
+                max_prompt: 32,
+                max_seq,
+                chunk_tokens: 0,
+                step_token_budget: budget,
+                span_bucket_tokens: 0,
+                span_group_lanes: 0,
+                spec_tokens: 6,
+            })
+        };
+        let b = Budget::new(1000);
+        // Near-finished requests draft little: id 2 has one token of
+        // budget left (its decode claims it), so it gets no chunk.
+        let mut s = mk(64, 10);
+        s.submit(1, vec![1; 4], 16, Priority::Normal).unwrap();
+        s.submit(2, vec![1; 4], 2, Priority::Normal).unwrap();
+        let p = s.plan(&b);
+        assert!(p.spec.is_empty(), "spec planned before steady state");
+        for c in &p.prefill {
+            s.on_chunk(c.id, c.len);
+            s.on_token(c.id, false);
+        }
+        let p2 = s.plan(&b);
+        assert_eq!(p2.decode, vec![1, 2]);
+        assert_eq!(p2.spec, vec![SpecChunk { id: 1, max_draft: 6 }]);
+        // Leftover budget is the hard pool: 9 - 2 decode tokens leaves
+        // 7, so the first decoder drafts its full 6 and the second gets
+        // the single remaining token.
+        let mut s = mk(64, 9);
+        s.submit(1, vec![1; 4], 16, Priority::Normal).unwrap();
+        s.submit(2, vec![1; 4], 16, Priority::Normal).unwrap();
+        let p = s.plan(&b);
+        for c in &p.prefill {
+            s.on_chunk(c.id, c.len);
+            s.on_token(c.id, false);
+        }
+        let p2 = s.plan(&b);
+        assert_eq!(
+            p2.spec,
+            vec![
+                SpecChunk { id: 1, max_draft: 6 },
+                SpecChunk { id: 2, max_draft: 1 },
+            ]
+        );
+        // Token-budget headroom binds: 5 allowed tokens, one generated,
+        // one claimed by this step's decode -> at most 3 drafted.
+        let mut s = mk(16, 0);
+        s.submit(1, vec![1; 3], 5, Priority::Normal).unwrap();
+        let p = s.plan(&b);
+        for c in &p.prefill {
+            s.on_chunk(c.id, c.len);
+            s.on_token(c.id, false);
+        }
+        let p2 = s.plan(&b);
+        assert_eq!(p2.spec, vec![SpecChunk { id: 1, max_draft: 3 }]);
+        // Context headroom binds the same way near max_seq.
+        let mut s = mk(8, 0);
+        s.submit(1, vec![1; 3], 5, Priority::Normal).unwrap();
+        let p = s.plan(&b);
+        for c in &p.prefill {
+            s.on_chunk(c.id, c.len);
+            s.on_token(c.id, false);
+        }
+        // len 4 after the first token: growth takes one slot, drafts
+        // may fill the remaining 8 - 5 = 3.
+        let p2 = s.plan(&b);
+        assert_eq!(p2.spec, vec![SpecChunk { id: 1, max_draft: 3 }]);
+        // spec_tokens == 0: nothing is ever planned.
+        let mut s = sched(4);
+        s.submit(1, vec![1; 4], 8, Priority::Normal).unwrap();
+        let p = s.plan(&b);
+        for c in &p.prefill {
+            s.on_chunk(c.id, c.len);
+            s.on_token(c.id, false);
+        }
+        assert!(s.plan(&b).spec.is_empty());
     }
 
     /// A lone mid-prefill sequence gets no group (nothing to batch with)
@@ -1295,6 +1573,7 @@ mod tests {
             step_token_budget: 0,
             span_bucket_tokens: 8,
             span_group_lanes: 4,
+            spec_tokens: 0,
         });
         let b = Budget::new(1000);
         s.submit(1, vec![1; 40], 4, Priority::Normal).unwrap();

@@ -30,8 +30,8 @@
 //! → {"op":"chat.close","conv":1}     ← {"event":"chat.closed","conv":1}
 //!
 //! → {"op":"metrics"}   ← {"event":"metrics","report":"…", …structured
-//!                         prefix_*/kv_*/chat_*/requests_cancelled fields
-//!                         plus ttft/e2e/queue_wait p50/p95/p99 in µs}
+//!                         prefix_*/kv_*/chat_*/spec_*/requests_cancelled
+//!                         fields plus ttft/e2e/queue_wait p50/p95/p99 in µs}
 //! → {"op":"traffic"}   ← {"event":"traffic", …counters…}
 //! → {"op":"trace.dump"}   ← {"event":"trace","enabled":true,
 //!                            "trace":{…Chrome trace-event JSON…}}
@@ -648,6 +648,29 @@ fn handle_conn(
                         "span_batch_occupancy_p50",
                         n(metrics.span_batch_occupancy.quantile(0.50) as f64),
                     ),
+                    // Speculative decoding: verify executions, drafted /
+                    // accepted token totals, rollbacks, and the emitted-
+                    // tokens-per-verify median (see docs/protocol.md).
+                    (
+                        "spec_executions",
+                        n(metrics.spec_executions.load(Relaxed) as f64),
+                    ),
+                    (
+                        "spec_drafted_tokens",
+                        n(metrics.spec_drafted_tokens.load(Relaxed) as f64),
+                    ),
+                    (
+                        "spec_accepted_tokens",
+                        n(metrics.spec_accepted_tokens.load(Relaxed) as f64),
+                    ),
+                    (
+                        "spec_rollbacks",
+                        n(metrics.spec_rollbacks.load(Relaxed) as f64),
+                    ),
+                    (
+                        "spec_accept_len_p50",
+                        n(metrics.spec_accept_len.quantile(0.50) as f64),
+                    ),
                     // v2: conversation + cancellation counters.
                     (
                         "requests_cancelled",
@@ -974,6 +997,8 @@ struct DeltaBase {
     tokens_out: u64,
     span_executions: u64,
     span_fallbacks: u64,
+    spec_executions: u64,
+    spec_accepted_tokens: u64,
     prefix_evictions: u64,
     preemptions: u64,
     transfers: crate::metrics::TransferSnapshot,
@@ -986,6 +1011,8 @@ fn delta_base(m: &crate::metrics::Metrics, t: &crate::metrics::TransferStats) ->
         tokens_out: m.tokens_out.load(Relaxed),
         span_executions: m.span_executions.load(Relaxed),
         span_fallbacks: m.span_fallbacks.load(Relaxed),
+        spec_executions: m.spec_executions.load(Relaxed),
+        spec_accepted_tokens: m.spec_accepted_tokens.load(Relaxed),
         prefix_evictions: m.prefix_evictions.load(Relaxed),
         preemptions: m.preemptions.load(Relaxed),
         transfers: t.snapshot(),
@@ -1032,6 +1059,14 @@ fn metrics_pusher(
             (
                 "d_span_fallbacks",
                 n((curr.span_fallbacks - prev.span_fallbacks) as f64),
+            ),
+            (
+                "d_spec_executions",
+                n((curr.spec_executions - prev.spec_executions) as f64),
+            ),
+            (
+                "d_spec_accepted_tokens",
+                n((curr.spec_accepted_tokens - prev.spec_accepted_tokens) as f64),
             ),
             (
                 "d_prefix_evictions",

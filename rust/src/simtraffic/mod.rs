@@ -239,6 +239,12 @@ pub fn tenant_workload(
 /// the prefix cache after the first variant prefills, so siblings admit
 /// mid-prompt and execute as span-artifact suffix fills.  Arrivals are a
 /// deterministic seed-keyed shuffle so groups interleave.
+///
+/// Naming note: this is CLIENT-side speculation — N complete requests
+/// racing, the server unaware.  SERVER-side speculative decoding (one
+/// request, drafted tokens verified in one scored span execution) lives
+/// in [`crate::specdec`] and is exercised by [`spec_workload`] /
+/// `scripts/spec_gate.sh` instead.
 pub fn speculative_workload(
     n_groups: usize,
     fanout: usize,
@@ -264,6 +270,49 @@ pub fn speculative_workload(
                     .with_tag(format!("s{g}.{v}")),
             );
         }
+    }
+    // Fisher-Yates with the same deterministic stream.
+    for i in (1..out.len()).rev() {
+        let j = rng.range(0, i + 1);
+        out.swap(i, j);
+    }
+    out
+}
+
+/// Server-side speculative-decoding workload (S12f): `n` tagged greedy
+/// requests (`p{i}`) whose prompts are a short random phrase repeated
+/// until `prompt_tokens` — the repetitive, template-heavy shape
+/// (boilerplate headers, format scaffolding, multi-turn echoes) where
+/// the [`crate::specdec::NGramDrafter`]'s prompt lookup lands.  Greedy
+/// sampling is load-bearing twice over: it is the spec-decode
+/// eligibility gate (acceptance compares drafts against the argmax) and
+/// it drives a tiny model into periodic token cycles, which the n-gram
+/// drafter then predicts from the request's own transcript — so
+/// `scripts/spec_gate.sh` can assert a real accepted-tokens-per-
+/// execution floor, not just "it ran".  Arrivals are the usual
+/// deterministic seed-keyed shuffle.
+pub fn spec_workload(
+    n: usize,
+    phrase_tokens: usize,
+    prompt_tokens: usize,
+    max_new: usize,
+    vocab: u32,
+    seed: u64,
+) -> Vec<crate::coordinator::Request> {
+    use crate::coordinator::Request;
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let tok = |rng: &mut Rng| rng.below(vocab.max(1) as u64) as u32;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let phrase: Vec<u32> = (0..phrase_tokens.max(1)).map(|_| tok(&mut rng)).collect();
+        let prompt: Vec<u32> = phrase
+            .iter()
+            .cycle()
+            .take(prompt_tokens.max(1))
+            .copied()
+            .collect();
+        out.push(Request::from_tokens(prompt, max_new).with_tag(format!("p{i}")));
     }
     // Fisher-Yates with the same deterministic stream.
     for i in (1..out.len()).rev() {
@@ -416,6 +465,33 @@ mod tests {
         let w2 = speculative_workload(3, 4, 20, 16, 512, 11);
         assert!(w.iter().zip(&w2).all(|(a, b)| a.prompt == b.prompt
             && a.tag == b.tag));
+    }
+
+    #[test]
+    fn spec_workload_is_repetitive_greedy_and_deterministic() {
+        let w = spec_workload(6, 4, 20, 32, 512, 0x5bec);
+        assert_eq!(w.len(), 6);
+        let tags: std::collections::HashSet<_> =
+            w.iter().map(|r| r.tag.clone().unwrap()).collect();
+        assert_eq!(tags.len(), 6);
+        for r in &w {
+            // Spec-decode eligibility: greedy, no stop sequences.
+            assert_eq!(r.params.temperature, 0.0);
+            assert!(r.params.stop.is_empty());
+            assert_eq!(r.prompt.len(), 20);
+            // The prompt is its own 4-periodic repetition — the shape
+            // the n-gram drafter's prompt lookup exists for.
+            for (i, &t) in r.prompt.iter().enumerate() {
+                assert_eq!(t, r.prompt[i % 4], "prompt must cycle its phrase");
+            }
+            assert!(r.prompt.iter().all(|&t| t < 512));
+        }
+        // Deterministic per seed.
+        let w2 = spec_workload(6, 4, 20, 32, 512, 0x5bec);
+        assert!(w
+            .iter()
+            .zip(&w2)
+            .all(|(a, b)| a.prompt == b.prompt && a.tag == b.tag));
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Server-side speculative decoding: drafting (this module) + the
+//! verify-accept-rollback loop in the coordinator.
+//!
+//! The span artifacts built for chunked prefill (PR 5/6) are already a
+//! draft-verification kernel: `decode_span` scores T proposed tokens
+//! against the cache in ONE device execution, and its `[T, V]` logits
+//! output ranks every drafted position.  What was missing is a source
+//! of drafts.  This module supplies it: a pluggable [`Drafter`] trait
+//! and the v1 [`NGramDrafter`], which drafts from the request's OWN
+//! token history (prompt + generated) by prompt lookup — find the
+//! longest recent n-gram suffix that occurred earlier in the history
+//! and propose the tokens that followed it.  Repetitive traffic
+//! (multi-turn chat, shared templates, the token cycles tiny greedy
+//! models fall into) makes such drafts land often enough that accepted
+//! tokens cost one execution instead of one each.
+//!
+//! # Contract with the coordinator
+//!
+//! The drafter only *proposes*; the verify loop in
+//! `rust/src/coordinator/` owns correctness:
+//!
+//! * the span executes `[last_generated, d_1..d_k]`, so position `i` of
+//!   the scored logits predicts the token after `d_i`;
+//! * the accepted prefix is computed by [`accepted_prefix`] against the
+//!   temp-0 argmax at each position — greedy-only, byte-identical to
+//!   plain decode by construction;
+//! * rejected suffix rows never reach the paged host store, and one
+//!   bonus token is emitted from the first divergent position so a
+//!   fully-rejected draft still nets one token.
+//!
+//! Sustained low acceptance is a health signal, not just waste: the
+//! coordinator feeds per-verify emitted-token counts into an
+//! [`AcceptanceWindow`] and demotes `PathId::SpecDec` (cooldown ladder,
+//! PR 8) when a full window averages below [`DEMOTE_MEAN_X100`]/100
+//! tokens per execution.
+
+/// Verify executions per low-acceptance evaluation window.
+pub const DEMOTE_WINDOW: u64 = 32;
+
+/// Demotion floor for the windowed mean of emitted tokens per verify
+/// execution, times 100.  A verify always nets >= 1 token (the bonus),
+/// so a mean at 1.00 means drafts never land; 1.05 gives the drafter a
+/// little slack before the path is demoted to plain decode.
+pub const DEMOTE_MEAN_X100: u64 = 105;
+
+/// A draft source: proposes likely next tokens for one request given
+/// its full token history (prompt + generated so far, newest last).
+pub trait Drafter {
+    /// Propose up to `max` tokens expected to follow `history`.  An
+    /// empty draft means "no idea" — the request stays on plain decode
+    /// this step (a capability gap, never a health event).
+    fn draft(&self, history: &[u32], max: usize) -> Vec<u32>;
+
+    /// Short name for logs and traces.
+    fn label(&self) -> &'static str;
+}
+
+/// v1 drafter: n-gram prompt lookup over the request's own transcript.
+///
+/// Tries suffix n-grams from `max_n` down to 1 and scans the history
+/// right-to-left for the most recent earlier occurrence; the tokens
+/// that followed that occurrence become the draft.  Deterministic and
+/// allocation-light — the draft is copied straight out of the history.
+#[derive(Debug, Clone)]
+pub struct NGramDrafter {
+    /// Longest suffix n-gram to look up (longer matches are tried
+    /// first; a longer match is stronger evidence of repetition).
+    pub max_n: usize,
+}
+
+impl Default for NGramDrafter {
+    fn default() -> Self {
+        NGramDrafter { max_n: 3 }
+    }
+}
+
+impl NGramDrafter {
+    pub fn new(max_n: usize) -> NGramDrafter {
+        NGramDrafter { max_n: max_n.max(1) }
+    }
+}
+
+impl Drafter for NGramDrafter {
+    fn draft(&self, history: &[u32], max: usize) -> Vec<u32> {
+        let len = history.len();
+        if max == 0 || len < 2 {
+            return Vec::new();
+        }
+        for n in (1..=self.max_n.min(len.saturating_sub(1))).rev() {
+            let suffix = &history[len - n..];
+            // Most recent earlier occurrence wins: recency tracks the
+            // current phase of a repeating transcript best.
+            for j in (0..len - n).rev() {
+                if &history[j..j + n] == suffix {
+                    let start = j + n;
+                    let take = max.min(len - start);
+                    if take > 0 {
+                        return history[start..start + take].to_vec();
+                    }
+                }
+            }
+        }
+        Vec::new()
+    }
+
+    fn label(&self) -> &'static str {
+        "ngram"
+    }
+}
+
+/// Longest prefix of `draft` confirmed by the verify pass: `sampled[i]`
+/// is the temp-0 argmax at drafted position `i`.
+pub fn accepted_prefix(draft: &[u32], sampled: &[u32]) -> usize {
+    draft
+        .iter()
+        .zip(sampled.iter())
+        .take_while(|(d, s)| d == s)
+        .count()
+}
+
+/// Per-request drafting statistics (the match bookkeeping the drafter
+/// trait itself stays free of).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpecStats {
+    /// Draft attempts, and attempts that produced no draft.
+    pub proposals: u64,
+    pub misses: u64,
+    /// Tokens drafted / drafted tokens the verify accepted.
+    pub drafted: u64,
+    pub accepted: u64,
+    /// Verifies that rejected at least one drafted token.
+    pub rollbacks: u64,
+}
+
+impl SpecStats {
+    /// Record one draft attempt of `k` tokens (0 = miss).
+    pub fn on_draft(&mut self, k: usize) {
+        self.proposals += 1;
+        if k == 0 {
+            self.misses += 1;
+        } else {
+            self.drafted += k as u64;
+        }
+    }
+
+    /// Record one verify outcome: `accepted` of `drafted` tokens stood.
+    pub fn on_verify(&mut self, drafted: usize, accepted: usize) {
+        self.accepted += accepted as u64;
+        if accepted < drafted {
+            self.rollbacks += 1;
+        }
+    }
+
+    /// Fraction of drafted tokens the verify accepted (0 when nothing
+    /// was drafted yet).
+    pub fn accept_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            return 0.0;
+        }
+        self.accepted as f64 / self.drafted as f64
+    }
+}
+
+/// Sliding demotion window over verify outcomes: every
+/// [`DEMOTE_WINDOW`] executions, checks whether the mean emitted
+/// tokens per execution stayed above the floor; if not, the caller
+/// should demote `PathId::SpecDec`.
+#[derive(Debug, Default)]
+pub struct AcceptanceWindow {
+    execs: u64,
+    tokens: u64,
+}
+
+impl AcceptanceWindow {
+    pub fn new() -> AcceptanceWindow {
+        AcceptanceWindow::default()
+    }
+
+    /// Record one verify that emitted `emitted` tokens.  Returns `true`
+    /// when a full window just closed below the floor (demote now);
+    /// the window resets either way once full.
+    pub fn record(&mut self, emitted: u64) -> bool {
+        self.execs += 1;
+        self.tokens += emitted;
+        if self.execs < DEMOTE_WINDOW {
+            return false;
+        }
+        let low = self.tokens * 100 < DEMOTE_MEAN_X100 * self.execs;
+        self.execs = 0;
+        self.tokens = 0;
+        low
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ngram_drafts_repeating_cycle() {
+        // ... a b c a b c a b -> suffix [a b] recurs; draft continues
+        // the cycle: c a b c ...
+        let h = [5u32, 1, 2, 3, 1, 2, 3, 1, 2];
+        let d = NGramDrafter::new(3);
+        assert_eq!(d.draft(&h, 4), vec![3, 1, 2, 3]);
+        // A shorter cap clips the draft, never pads it.
+        assert_eq!(d.draft(&h, 2), vec![3, 1]);
+    }
+
+    #[test]
+    fn ngram_prefers_longest_suffix_match() {
+        // Suffix [7 8] matched at one place, lone [8] at another; the
+        // bigram match must win over the more recent unigram one.
+        let h = [7u32, 8, 9, 4, 8, 5, 7, 8];
+        let d = NGramDrafter::new(3);
+        assert_eq!(d.draft(&h, 1), vec![9]);
+    }
+
+    #[test]
+    fn ngram_prefers_most_recent_occurrence() {
+        // [1 2] occurs twice with different continuations; the later
+        // occurrence's continuation (9) must be drafted, not 3.
+        let h = [1u32, 2, 3, 1, 2, 9, 1, 2];
+        let d = NGramDrafter::new(2);
+        assert_eq!(d.draft(&h, 1), vec![9]);
+    }
+
+    #[test]
+    fn ngram_no_match_is_empty() {
+        let d = NGramDrafter::new(3);
+        assert!(d.draft(&[1, 2, 3, 4, 5], 4).is_empty());
+        assert!(d.draft(&[], 4).is_empty());
+        assert!(d.draft(&[1], 4).is_empty());
+        assert!(d.draft(&[1, 1, 2], 0).is_empty());
+    }
+
+    #[test]
+    fn ngram_deterministic() {
+        let h: Vec<u32> = (0..40).map(|i| i % 7).collect();
+        let d = NGramDrafter::default();
+        assert_eq!(d.draft(&h, 8), d.draft(&h, 8));
+    }
+
+    #[test]
+    fn accepted_prefix_cases() {
+        assert_eq!(accepted_prefix(&[1, 2, 3], &[1, 2, 3]), 3);
+        assert_eq!(accepted_prefix(&[1, 2, 3], &[1, 9, 3]), 1);
+        assert_eq!(accepted_prefix(&[1, 2, 3], &[9, 2, 3]), 0);
+        assert_eq!(accepted_prefix(&[], &[1]), 0);
+        // Sampled may be longer (it includes the bonus position).
+        assert_eq!(accepted_prefix(&[1, 2], &[1, 2, 7]), 2);
+    }
+
+    #[test]
+    fn stats_track_rates() {
+        let mut s = SpecStats::default();
+        s.on_draft(4);
+        s.on_verify(4, 3);
+        s.on_draft(0);
+        s.on_draft(2);
+        s.on_verify(2, 2);
+        assert_eq!(s.proposals, 3);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.drafted, 6);
+        assert_eq!(s.accepted, 5);
+        assert_eq!(s.rollbacks, 1);
+        assert!((s.accept_rate() - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn acceptance_window_demotes_on_bonus_only_traffic() {
+        // Every verify netting exactly the bonus token (mean 1.0) must
+        // trip the floor when the window closes, and only then.
+        let mut w = AcceptanceWindow::new();
+        for i in 1..DEMOTE_WINDOW {
+            assert!(!w.record(1), "fired early at {i}");
+        }
+        assert!(w.record(1), "full window at mean 1.0 must demote");
+        // Healthy acceptance never trips it.
+        for _ in 0..DEMOTE_WINDOW * 3 {
+            assert!(!w.record(2));
+        }
+    }
+}

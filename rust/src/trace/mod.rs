@@ -57,6 +57,9 @@ pub enum SpanKind {
     DecodeStep,
     /// A session KV readback/recompute window (pair sync).
     Sync,
+    /// One speculative-decode verify execution (a scored span tile; the
+    /// accept length lands as a `spec_accept` mark on the request).
+    SpecVerify,
 }
 
 impl SpanKind {
@@ -67,6 +70,7 @@ impl SpanKind {
             SpanKind::GroupTile => "group_tile",
             SpanKind::DecodeStep => "decode_step",
             SpanKind::Sync => "sync",
+            SpanKind::SpecVerify => "spec_verify",
         }
     }
 }

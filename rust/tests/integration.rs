@@ -978,6 +978,179 @@ fn speculative_fanout_first_done_wins() {
     c.check_kv_invariants().unwrap();
 }
 
+/// Rollback-correctness property test (server-side speculative
+/// decoding, `rust/src/specdec/`): temperature-0 token streams must be
+/// BYTE-IDENTICAL with `enable_spec_decode` on vs off across the
+/// serving shapes that stress the accept/rollback path — prefix-cache
+/// hits (an identical second wave admits as suffix fills), a mid-flight
+/// cancel, preemption + replay under a tiny block pool, and injected
+/// `exec` transient faults landing inside verify executions (absorbed
+/// by the in-step retries; the health ladder must end clean, with every
+/// demotion re-promoted).  Speculation changes execution granularity —
+/// several tokens can land per step — so unlike the span-group overlay
+/// it DOES change plans; what it must never change is a single output
+/// token.
+#[test]
+fn spec_decode_serving_matches_oracle_across_shapes() {
+    let dir = require_artifacts!();
+    use std::sync::atomic::Ordering::Relaxed;
+    let mut all: Vec<Vec<Vec<u32>>> = Vec::new();
+    let mut verified_seen = false;
+    for enable_spec in [false, true] {
+        let mut outputs: Vec<Vec<u32>> = Vec::new();
+
+        // Scenario 1: repetitive greedy burst, then an identical second
+        // wave (prefix-cache suffix fills over drafter-friendly
+        // prompts), plus a mid-flight cancel.  The cancelled request is
+        // NOT compared: with spec on, more tokens exist by the fixed
+        // cancel step — by design.  Everything else must match.
+        {
+            let mut cfg = serving(&dir, "tiny-serial", true);
+            cfg.enable_spec_decode = enable_spec;
+            cfg.prefill_chunk_tokens = 8;
+            cfg.step_token_budget = 48;
+            cfg.kv_block_tokens = 8;
+            let mut c = Coordinator::from_config(&cfg).unwrap();
+            let vocab = c.engine().config().vocab_size as u32;
+            let wave = firstlayer::simtraffic::spec_workload(4, 3, 18, 24, vocab, 0x51);
+            let first: Vec<u64> = wave
+                .iter()
+                .cloned()
+                .map(|r| c.submit(r).unwrap())
+                .collect();
+            for _ in 0..3 {
+                c.step().unwrap();
+            }
+            let second: Vec<u64> = wave
+                .iter()
+                .cloned()
+                .map(|r| c.submit(r).unwrap())
+                .collect();
+            c.step().unwrap();
+            c.cancel(first[2]).unwrap();
+            c.run_to_completion(50_000).unwrap();
+            assert_eq!(c.finished(first[2]), Some(FinishReason::Cancelled));
+            for id in first.iter().chain(&second) {
+                if *id != first[2] {
+                    outputs.push(c.generated(*id).unwrap().to_vec());
+                }
+            }
+            if enable_spec {
+                verified_seen |= c.metrics.spec_executions.load(Relaxed) > 0;
+            } else {
+                assert_eq!(
+                    c.metrics.spec_executions.load(Relaxed),
+                    0,
+                    "verifies executed with the knob off"
+                );
+            }
+            c.check_kv_invariants().unwrap();
+        }
+
+        // Scenario 2: tiny pool -> preemption mid-generation + replay.
+        // Spec shifts WHERE the pressure lands (tokens arrive in
+        // accepted bursts), but replay recomputes identical KV, so the
+        // streams cannot move.
+        {
+            let mut cfg = serving(&dir, "tiny-serial", true);
+            cfg.enable_spec_decode = enable_spec;
+            cfg.prefill_chunk_tokens = 8;
+            cfg.step_token_budget = 32;
+            cfg.kv_blocks = 8;
+            cfg.kv_block_tokens = 16;
+            cfg.max_batch = 4;
+            let mut c = Coordinator::from_config(&cfg).unwrap();
+            let vocab = c.engine().config().vocab_size as u32;
+            let reqs = firstlayer::simtraffic::spec_workload(4, 3, 16, 20, vocab, 0x52);
+            let ids: Vec<u64> = reqs
+                .into_iter()
+                .map(|r| c.submit(r).unwrap())
+                .collect();
+            c.run_to_completion(50_000).unwrap();
+            assert!(
+                c.metrics.preemptions.load(Relaxed) > 0,
+                "scenario must exercise preemption (spec={enable_spec})"
+            );
+            for id in &ids {
+                outputs.push(c.generated(*id).unwrap().to_vec());
+            }
+            c.check_kv_invariants().unwrap();
+        }
+
+        // Scenario 3: transient `exec` faults land inside the busy
+        // phase — including verify executions when spec is on.  The
+        // counts are retry-absorbable, so no request may error and no
+        // stream may move; a follow-up clean wave then gives any
+        // demotion its cooldown steps, after which the ladder must be
+        // fully re-promoted.
+        {
+            let mut cfg = serving(&dir, "tiny-serial", true);
+            cfg.enable_spec_decode = enable_spec;
+            cfg.prefill_chunk_tokens = 8;
+            cfg.step_token_budget = 48;
+            cfg.fault_spec = "exec:transient:after=10:every=9:count=3".into();
+            cfg.retry_max = 2;
+            cfg.health_cooldown_steps = 8;
+            let mut c = Coordinator::from_config(&cfg).unwrap();
+            let vocab = c.engine().config().vocab_size as u32;
+            let reqs = firstlayer::simtraffic::spec_workload(4, 3, 16, 24, vocab, 0x53);
+            let ids: Vec<u64> = reqs
+                .into_iter()
+                .map(|r| c.submit(r).unwrap())
+                .collect();
+            c.run_to_completion(50_000).unwrap();
+            assert!(
+                c.metrics.fault_injected.load(Relaxed) > 0,
+                "fault plan never fired (spec={enable_spec})"
+            );
+            for id in &ids {
+                let reason = c.finished(*id).expect("terminal under faults");
+                assert_ne!(
+                    reason,
+                    FinishReason::Error,
+                    "retry-absorbable faults must not kill requests \
+                     (spec={enable_spec})"
+                );
+                outputs.push(c.generated(*id).unwrap().to_vec());
+            }
+            let follow = firstlayer::simtraffic::spec_workload(2, 3, 16, 24, vocab, 0x54);
+            let fids: Vec<u64> = follow
+                .into_iter()
+                .map(|r| c.submit(r).unwrap())
+                .collect();
+            c.run_to_completion(50_000).unwrap();
+            for id in &fids {
+                outputs.push(c.generated(*id).unwrap().to_vec());
+            }
+            let health = c.engine().health();
+            for p in firstlayer::faults::PathId::ALL {
+                assert!(
+                    health.demotions(p) <= health.promotions(p),
+                    "path {} left demoted after the cooldown (spec={enable_spec})",
+                    p.label()
+                );
+            }
+            c.check_kv_invariants().unwrap();
+        }
+
+        all.push(outputs);
+    }
+    assert_eq!(
+        all[0], all[1],
+        "speculative serving diverged from the plain-decode oracle at \
+         temperature 0"
+    );
+    // When the bundle compiles >= 2-token span tiles, the workload must
+    // have actually verified drafts (otherwise the equality is vacuous).
+    let (_rt, eng) = engine(&dir, "tiny-serial");
+    if eng.max_span_bucket(StepPath::Precompute) >= 2 {
+        assert!(
+            verified_seen,
+            "spec-capable bundle but no verify was ever executed"
+        );
+    }
+}
+
 /// Device-resident vs legacy host KV must be temperature-0
 /// TOKEN-IDENTICAL end to end across the three serving shapes that
 /// exercise every sync point: chunked prefill (span sessions), KV

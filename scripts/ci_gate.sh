@@ -16,7 +16,11 @@
 #      request terminal, survivors oracle-identical, no KV leak — then
 #      a mass-cancel storm with the ladder re-promoting every demoted
 #      path)
-#   7. bench gate                        (scripts/bench_gate.sh →
+#   7. spec gate                         (scripts/spec_gate.sh — the
+#      speculative-decoding audit: a spec-off oracle burst, the same
+#      burst with `--spec` on — streams byte-identical, and the mean
+#      emitted tokens per verify execution must clear 1.5)
+#   8. bench gate                        (scripts/bench_gate.sh →
 #      BENCH_engine.json at the repo root) — and, when a previous
 #      BENCH_engine.json exists, a per-bench numeric diff
 #      (scripts/bench_diff.py --gate) that FAILS the run on a
@@ -28,31 +32,37 @@
 # Every PASSING run also appends its BENCH_engine.json to
 # bench_history/ (timestamped, pruned to the newest 50) so the perf
 # trajectory across CI runs survives re-baselining and can be plotted
-# or bisected after the fact.
+# or bisected after the fact.  Set BENCH_ARTIFACT_DIR to additionally
+# copy the trajectory (bench_history/ plus the latest
+# BENCH_engine.json) there — the hook CI uses to publish perf artifacts
+# outside the workspace.
 #
 # Usage: scripts/ci_gate.sh   (from anywhere inside the repo)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "[ci-gate] 1/7 cargo build --release"
+echo "[ci-gate] 1/8 cargo build --release"
 (cd rust && cargo build --release)
 
-echo "[ci-gate] 2/7 tier-1 tests (cargo test -q)"
+echo "[ci-gate] 2/8 tier-1 tests (cargo test -q)"
 (cd rust && cargo test -q)
 
-echo "[ci-gate] 3/7 docs gate"
+echo "[ci-gate] 3/8 docs gate"
 scripts/docs_gate.sh
 
-echo "[ci-gate] 4/7 lint gate"
+echo "[ci-gate] 4/8 lint gate"
 scripts/lint_gate.sh
 
-echo "[ci-gate] 5/7 trace gate"
+echo "[ci-gate] 5/8 trace gate"
 scripts/trace_gate.sh
 
-echo "[ci-gate] 6/7 chaos gate"
+echo "[ci-gate] 6/8 chaos gate"
 scripts/chaos_gate.sh
 
-echo "[ci-gate] 7/7 bench gate"
+echo "[ci-gate] 7/8 spec gate"
+scripts/spec_gate.sh
+
+echo "[ci-gate] 8/8 bench gate"
 prev=""
 if [ -f BENCH_engine.json ]; then
   prev="$(mktemp)"
@@ -88,6 +98,21 @@ if [ -f BENCH_engine.json ]; then
   cp BENCH_engine.json "bench_history/BENCH_engine.$(date -u +%Y%m%dT%H%M%SZ).json"
   ls -1t bench_history/BENCH_engine.*.json 2>/dev/null | tail -n +51 | xargs -r rm -f
   echo "[ci-gate] bench trajectory: $(ls -1 bench_history/BENCH_engine.*.json | wc -l | tr -d ' ') run(s) in bench_history/"
+fi
+
+# Artifact publication: when CI points BENCH_ARTIFACT_DIR at an upload
+# staging directory, mirror the perf trajectory there — the latest
+# gated BENCH_engine.json plus the pruned bench_history/ series.
+if [ -n "${BENCH_ARTIFACT_DIR:-}" ]; then
+  mkdir -p "$BENCH_ARTIFACT_DIR"
+  if [ -f BENCH_engine.json ]; then
+    cp BENCH_engine.json "$BENCH_ARTIFACT_DIR/BENCH_engine.json"
+  fi
+  if [ -d bench_history ]; then
+    mkdir -p "$BENCH_ARTIFACT_DIR/bench_history"
+    cp bench_history/BENCH_engine.*.json "$BENCH_ARTIFACT_DIR/bench_history/" 2>/dev/null || true
+  fi
+  echo "[ci-gate] bench artifacts copied to $BENCH_ARTIFACT_DIR"
 fi
 
 echo "[ci-gate] OK"

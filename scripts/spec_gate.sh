@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Speculative-decoding gate (CI-runnable): drive the two-phase
+# correctness + payoff audit (`firstlayer spec-smoke`) through the real
+# engine:
+#
+#   1. oracle — a repetitive greedy spec_workload burst with speculation
+#      OFF records every stream's expected tokens;
+#   2. spec   — the same burst with `--spec` on: every stream must be
+#      byte-identical to the oracle (accept/rollback is invisible in
+#      output space), verifies must actually have executed, and the
+#      mean emitted tokens per verify execution must clear the floor
+#      (default 1.5) — one scored span execution has to replace more
+#      than 1.5 plain decode steps on drafter-friendly traffic, or the
+#      machinery is pure overhead.
+#
+# The binary exits non-zero on any violation, so this gate is just
+# build + invoke.  Needs the AOT artifact bundle
+# (`rust/artifacts/manifest.json`); skips cleanly when it is missing so
+# the gate works on a fresh checkout, same as the trace and chaos gates.
+#
+# Usage: scripts/spec_gate.sh   (from anywhere inside the repo)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ ! -f rust/artifacts/manifest.json ]; then
+  echo "[spec-gate] skipping: run \`make artifacts\` first"
+  exit 0
+fi
+
+bin=rust/target/release/firstlayer
+if [ ! -x "$bin" ]; then
+  echo "[spec-gate] building release binary"
+  (cd rust && cargo build --release --quiet)
+fi
+
+echo "[spec-gate] speculative decoding: oracle equivalence + acceptance floor"
+"$bin" spec-smoke --artifacts rust/artifacts --min-accept 1.5
+
+echo "[spec-gate] OK"
