@@ -486,4 +486,72 @@ fn main() {
             }
         }
     }
+
+    // Overload resilience: the noisy-neighbor storm (one hog tenant
+    // flooding Batch work over small interactive tenants) with per-tenant
+    // fair share on.  `interactive_goodput_under_overload` — tokens the
+    // interactive bystanders actually received — is the gated
+    // higher-is-better metric: greedy sampling on a seeded workload makes
+    // it a deterministic count, so a drop means the fair-share/admission
+    // path started starving interactive work, not host noise.
+    println!("\n-- serving: interactive goodput under a hog tenant --");
+    {
+        use firstlayer::config::ServingConfig;
+        use firstlayer::coordinator::Coordinator;
+        use firstlayer::scheduler::Priority;
+        use firstlayer::simtraffic::hog_workload;
+        let scfg = ServingConfig {
+            artifacts_dir: dir.to_string_lossy().into_owned(),
+            model: model.to_string(),
+            enable_fair_share: true,
+            prefill_chunk_tokens: 16,
+            step_token_budget: 32,
+            ..Default::default()
+        };
+        match Coordinator::from_config(&scfg) {
+            Err(e) => println!("  (coordinator unavailable: {e})"),
+            Ok(mut c) => {
+                let t0 = std::time::Instant::now();
+                let reqs = hog_workload(12, 3, 4, 48, 8, 8, cfg.vocab_size as u32, 0x0AD5);
+                let mut interactive_ids = Vec::new();
+                let mut hog_ids = Vec::new();
+                for r in reqs {
+                    let interactive = r.priority == Priority::Interactive;
+                    if let Ok(id) = c.submit(r) {
+                        if interactive {
+                            interactive_ids.push(id);
+                        } else {
+                            hog_ids.push(id);
+                        }
+                    }
+                }
+                c.run_to_completion(10_000).unwrap();
+                let run_us = t0.elapsed().as_micros() as f64;
+                let toks = |ids: &[u64], c: &Coordinator| -> u64 {
+                    ids.iter()
+                        .map(|id| c.generated(*id).map_or(0, |g| g.len() as u64))
+                        .sum()
+                };
+                let interactive_tokens = toks(&interactive_ids, &c);
+                let hog_tokens = toks(&hog_ids, &c);
+                let ttft_p99_us = c.metrics.ttft.quantile(0.99).as_micros() as f64;
+                println!(
+                    "  interactive {} reqs -> {interactive_tokens} tokens; \
+                     hog {} reqs -> {hog_tokens} tokens; ttft_p99 {ttft_p99_us:.0} us",
+                    interactive_ids.len(),
+                    hog_ids.len(),
+                );
+                emit_json(
+                    "e2e_overload",
+                    &[
+                        ("interactive_requests", interactive_ids.len() as f64),
+                        ("interactive_goodput_under_overload", interactive_tokens as f64),
+                        ("hog_tokens", hog_tokens as f64),
+                        ("ttft_p99_us", ttft_p99_us),
+                        ("run_us", run_us),
+                    ],
+                );
+            }
+        }
+    }
 }

@@ -252,6 +252,32 @@ pub struct ServingConfig {
     /// resumed when the reader drains below half.  Only that stream
     /// stalls — peers and the engine never block.  0 = unbounded.
     pub stream_queue_events: usize,
+    /// Per-tenant fair-share scheduling (`scheduler::FairShareConfig`):
+    /// admission runs as deficit round-robin across tenants and a
+    /// tenant's KV-block footprint is bounded by the pool divided by
+    /// live tenants.  Off by default — a pure overlay: with it off,
+    /// tenant-tagged workloads plan byte-identically to untagged ones.
+    pub enable_fair_share: bool,
+    /// DRR quantum in prompt tokens; 0 = auto (max(chunk_tokens, 32)).
+    pub fair_quantum_tokens: usize,
+    /// DRR accrual cap in quanta (how much credit an idle tenant banks).
+    pub fair_burst_quanta: usize,
+    /// Overload ladder (`rust/src/overload/`): staged admission-time
+    /// load shedding driven by queue-wait p95, free-block shortfall and
+    /// step-budget saturation, with hysteresis and rung-by-rung
+    /// recovery.  Off by default; in-flight work is never shed.
+    pub enable_overload_ladder: bool,
+    /// Queue-wait p95 above this many milliseconds is a hot signal.
+    pub overload_queue_p95_ms: u64,
+    /// Free KV blocks at or below this is a hot signal; 0 = auto
+    /// (kv_blocks / 16).
+    pub overload_free_block_floor: usize,
+    /// Consecutive hot steps before the ladder descends one rung.
+    pub overload_trip_steps: u64,
+    /// Consecutive calm steps before the ladder re-promotes one rung.
+    pub overload_clear_steps: u64,
+    /// Retry hint attached to `reason:"shed"` responses, milliseconds.
+    pub shed_retry_after_ms: u64,
     /// Sampling defaults.
     pub temperature: f64,
     pub top_k: usize,
@@ -289,6 +315,15 @@ impl Default for ServingConfig {
             health_cooldown_steps: 256,
             conversation_ttl_ms: 0,
             stream_queue_events: 1024,
+            enable_fair_share: false,
+            fair_quantum_tokens: 0,
+            fair_burst_quanta: 4,
+            enable_overload_ladder: false,
+            overload_queue_p95_ms: 50,
+            overload_free_block_floor: 0,
+            overload_trip_steps: 3,
+            overload_clear_steps: 16,
+            shed_retry_after_ms: 500,
             temperature: 0.0,
             top_k: 0,
             seed: 0xF17A,

@@ -157,6 +157,9 @@ pub struct Request {
     /// Client-chosen correlation tag; the coordinator ignores it, the
     /// protocol layer echoes it on every event of this request.
     pub tag: Option<String>,
+    /// Tenant id (0 = default/anonymous).  Scopes conversation handles
+    /// and, with fair-share scheduling on, the request's resource share.
+    pub tenant: u64,
 }
 
 impl Request {
@@ -170,6 +173,7 @@ impl Request {
             priority: Priority::Normal,
             params: SamplingParams::default(),
             tag: None,
+            tenant: 0,
         }
     }
 
@@ -183,6 +187,7 @@ impl Request {
             priority: Priority::Normal,
             params: SamplingParams::default(),
             tag: None,
+            tenant: 0,
         }
     }
 
@@ -206,6 +211,11 @@ impl Request {
 
     pub fn with_tag(mut self, tag: impl Into<String>) -> Request {
         self.tag = Some(tag.into());
+        self
+    }
+
+    pub fn with_tenant(mut self, tenant: u64) -> Request {
+        self.tenant = tenant;
         self
     }
 }
@@ -235,6 +245,10 @@ struct ReqState {
 #[derive(Debug, Default)]
 struct ConvState {
     transcript: Vec<u32>,
+    /// Tenant that opened the conversation.  Every `chat.*` op on this
+    /// handle must present the same tenant id — possession of the
+    /// handle alone no longer crosses the namespace boundary.
+    owner: u64,
     /// In-flight request id for the current turn (at most one).
     active: Option<u64>,
     /// The prompt the active turn submitted (transcript + user delta);
@@ -291,6 +305,9 @@ struct KvView<'a> {
 impl KvBudget for KvView<'_> {
     fn free_blocks(&self) -> usize {
         (self.kv.free_blocks() + self.evictable).saturating_sub(self.reserved)
+    }
+    fn total_blocks(&self) -> usize {
+        self.kv.total_blocks()
     }
     fn blocks_for(&self, tokens: usize) -> usize {
         self.kv.blocks_for(tokens)
@@ -378,6 +395,22 @@ pub struct Coordinator {
     /// Sliding window over verify outcomes; a full window below the
     /// floor demotes `PathId::SpecDec` until the cooldown re-probe.
     accept_win: AcceptanceWindow,
+    /// Overload ladder (None = off): ticked once per step from the
+    /// pressure signals, gates NEW admissions in [`Coordinator::submit`]
+    /// and narrows the scheduler's intake via `set_pressure_level`.
+    ladder: Option<crate::overload::OverloadLadder>,
+    /// Step token budget (0 = unbounded) — kept for the ladder's
+    /// budget-saturation pressure signal.
+    step_budget: usize,
+    /// Whether the previous step's plan spent its whole token budget.
+    last_step_saturated: bool,
+    /// Sliding window of recent queue waits (µs), newest at the back —
+    /// the ladder's p95 signal.  The cumulative `queue_wait` histogram
+    /// never forgets a storm, so recovery needs a window that does:
+    /// one stale sample also drains per tick, so pressure fades during
+    /// calm even with no new arrivals.  Maintained only when the
+    /// ladder is on.
+    recent_waits: std::collections::VecDeque<u64>,
 }
 
 impl Coordinator {
@@ -450,7 +483,7 @@ impl Coordinator {
             0
         };
         engine.set_spec_decode(spec_tokens > 0);
-        let sched = Scheduler::new(SchedConfig {
+        let mut sched = Scheduler::new(SchedConfig {
             max_batch,
             max_admit: cfg.max_admit_per_step,
             max_prompt: max_prefill_t,
@@ -460,6 +493,30 @@ impl Coordinator {
             span_bucket_tokens: span_bucket,
             span_group_lanes: span_lanes,
             spec_tokens,
+        });
+        // Per-tenant fair share: a pure overlay on the planner — installed
+        // only when enabled so the off state is byte-identical planning.
+        if cfg.enable_fair_share {
+            sched.set_fair_share(crate::scheduler::FairShareConfig {
+                enabled: true,
+                quantum_tokens: cfg.fair_quantum_tokens,
+                burst_quanta: cfg.fair_burst_quanta,
+            });
+        }
+        // Overload ladder: staged admission-time shedding.  The free-block
+        // floor's auto default scales with the pool (one sixteenth).
+        let ladder = cfg.enable_overload_ladder.then(|| {
+            crate::overload::OverloadLadder::new(crate::overload::OverloadConfig {
+                queue_p95_us: cfg.overload_queue_p95_ms.saturating_mul(1000),
+                free_block_floor: if cfg.overload_free_block_floor == 0 {
+                    (cfg.kv_blocks / 16).max(1)
+                } else {
+                    cfg.overload_free_block_floor
+                },
+                trip_steps: cfg.overload_trip_steps.max(1),
+                clear_steps: cfg.overload_clear_steps.max(1),
+                retry_after_ms: cfg.shed_retry_after_ms,
+            })
         });
         let kv = PagedKvCache::new(
             cfg.kv_blocks,
@@ -528,6 +585,10 @@ impl Coordinator {
             drafter: NGramDrafter::default(),
             spec_stats: HashMap::new(),
             accept_win: AcceptanceWindow::new(),
+            ladder,
+            step_budget: cfg.step_token_budget,
+            last_step_saturated: false,
+            recent_waits: std::collections::VecDeque::new(),
         })
     }
 
@@ -593,7 +654,28 @@ impl Coordinator {
             priority,
             params,
             tag: _,
+            tenant,
         } = req;
+        // Overload ladder: shed NEW work before any state is touched.
+        // Strictly an intake decision — in-flight requests (including a
+        // conversation's active turn) are never shed — and counted in
+        // `requests_shed`, not `requests_rejected`: the response is
+        // retriable by design, not a client error.
+        if let Some(l) = &self.ladder {
+            if !l.admits(priority) {
+                self.metrics
+                    .requests_shed
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                return Err(Error::Shed {
+                    msg: format!(
+                        "overload level {} ({})",
+                        l.level().index(),
+                        l.level().label()
+                    ),
+                    retry_after_ms: l.config().retry_after_ms,
+                });
+            }
+        }
         // Resolve the input to a token prompt (turn delta > text > ids).
         let reject = |m: &Metrics, e: Error| {
             m.requests_rejected
@@ -608,6 +690,17 @@ impl Coordinator {
                         Error::Chat(format!("unknown conversation {cv}")),
                     ));
                 };
+                // Conversation namespaces: the handle is scoped to the
+                // tenant that opened it — a guessed or leaked handle is
+                // useless across the boundary.
+                if cs.owner != tenant {
+                    return Err(reject(
+                        &self.metrics,
+                        Error::CrossTenant(format!(
+                            "conversation {cv} is not owned by tenant {tenant}"
+                        )),
+                    ));
+                }
                 if let Some(active) = cs.active {
                     return Err(reject(
                         &self.metrics,
@@ -659,7 +752,10 @@ impl Coordinator {
             .filter(|m| m.tokens > 0);
         let pending = conv.map(|_| prompt.clone());
         let prompt_len = prompt.len();
-        match self.sched.submit(id, prompt, max_new_tokens, priority) {
+        match self
+            .sched
+            .submit_tenant(id, prompt, max_new_tokens, priority, tenant)
+        {
             Ok(()) => {
                 self.next_id += 1;
                 self.metrics
@@ -840,6 +936,13 @@ impl Coordinator {
     /// would be a trivial memory-exhaustion vector (transcripts are
     /// server-held and live until [`Coordinator::chat_close`]).
     pub fn chat_open(&mut self) -> Result<u64> {
+        self.chat_open_for(0)
+    }
+
+    /// [`Coordinator::chat_open`] scoped to a tenant: every later
+    /// `chat.*` op on the handle must present the same tenant id (the
+    /// per-client namespace on top of the unguessable handle).
+    pub fn chat_open_for(&mut self, tenant: u64) -> Result<u64> {
         if self.max_convs > 0 && self.convs.len() >= self.max_convs {
             return Err(Error::Backpressure(format!(
                 "conversation limit reached ({})",
@@ -859,6 +962,7 @@ impl Coordinator {
         self.convs.insert(
             cv,
             ConvState {
+                owner: tenant,
                 last_activity: Some(Instant::now()),
                 ..ConvState::default()
             },
@@ -909,6 +1013,8 @@ impl Coordinator {
     }
 
     /// Close a conversation, cancelling its in-flight turn if any.
+    /// Tenant-blind (internal callers: the TTL sweeper); the protocol
+    /// layer goes through [`Coordinator::chat_close_for`].
     pub fn chat_close(&mut self, conv: u64) -> Result<()> {
         let active = self
             .convs
@@ -920,6 +1026,22 @@ impl Coordinator {
         }
         self.convs.remove(&conv);
         Ok(())
+    }
+
+    /// [`Coordinator::chat_close`] with the namespace check: only the
+    /// opening tenant may close the handle.
+    pub fn chat_close_for(&mut self, conv: u64, tenant: u64) -> Result<()> {
+        let owner = self
+            .convs
+            .get(&conv)
+            .ok_or_else(|| Error::Chat(format!("unknown conversation {conv}")))?
+            .owner;
+        if owner != tenant {
+            return Err(Error::CrossTenant(format!(
+                "conversation {conv} is not owned by tenant {tenant}"
+            )));
+        }
+        self.chat_close(conv)
     }
 
     /// The conversation's token transcript so far (None if unknown).
@@ -982,7 +1104,14 @@ impl Coordinator {
                 let now = Instant::now();
                 st.first_sched_t = Some(now);
                 if let Some(t) = st.submit_t {
-                    self.metrics.queue_wait.record(now.duration_since(t));
+                    let wait = now.duration_since(t);
+                    self.metrics.queue_wait.record(wait);
+                    if self.ladder.is_some() {
+                        if self.recent_waits.len() >= 256 {
+                            self.recent_waits.pop_front();
+                        }
+                        self.recent_waits.push_back(wait.as_micros() as u64);
+                    }
                 }
                 self.tracer.req_first_sched(id);
             }
@@ -1048,6 +1177,59 @@ impl Coordinator {
             .store(self.engine.faults().fired_total(), Relaxed);
     }
 
+    /// Current overload-ladder rung (0 when the ladder is off).
+    pub fn shed_level(&self) -> u8 {
+        self.ladder.as_ref().map_or(0, |l| l.level().index())
+    }
+
+    /// Lifetime ladder transitions `(descents, ascents)` — the overload
+    /// audit asserts a storm fully re-promotes (`descents == ascents`).
+    pub fn shed_transitions(&self) -> (u64, u64) {
+        self.ladder
+            .as_ref()
+            .map_or((0, 0), |l| (l.demotions(), l.promotions()))
+    }
+
+    /// Feed the overload ladder one pressure sample and propagate rung
+    /// changes to the scheduler's intake, the `shed_ladder_level`
+    /// gauge, and the trace.  The queue-wait signal is the p95 of the
+    /// sliding window (the cumulative histogram never forgets a storm);
+    /// one stale sample drains per tick so calm actually clears it.
+    fn tick_overload(&mut self) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let Some(l) = self.ladder.as_mut() else {
+            return;
+        };
+        let p95 = if self.recent_waits.is_empty() {
+            0
+        } else {
+            let mut w: Vec<u64> = self.recent_waits.iter().copied().collect();
+            w.sort_unstable();
+            w[(w.len() - 1).min(w.len() * 95 / 100)]
+        };
+        self.recent_waits.pop_front();
+        let p = crate::overload::Pressure {
+            queue_wait_p95_us: p95,
+            free_blocks: self.kv.free_blocks(),
+            budget_saturated: self.last_step_saturated,
+        };
+        if let Some((from, to)) = l.tick(&p) {
+            eprintln!(
+                "[firstlayer] overload ladder: {} -> {} (queue_p95={}us \
+                 free_blocks={} budget_saturated={})",
+                from.label(),
+                to.label(),
+                p.queue_wait_p95_us,
+                p.free_blocks,
+                p.budget_saturated,
+            );
+            self.tracer.global_mark("shed_ladder", to.index() as u64);
+        }
+        let lvl = l.level().index();
+        self.metrics.shed_ladder_level.store(lvl as u64, Relaxed);
+        self.sched.set_pressure_level(lvl);
+    }
+
     /// Run one engine iteration. Returns the number of sequences touched.
     ///
     /// Failure containment: every engine-facing sub-operation is retried
@@ -1060,6 +1242,7 @@ impl Coordinator {
     /// corruption), not request failures.
     pub fn step(&mut self) -> Result<usize> {
         self.tick_health();
+        self.tick_overload();
         self.sweep_conversations()?;
         // The planner sees reclaimable prefix-cache blocks (lease-only
         // refcounts) as free; the shortfall is evicted below, after the
@@ -1078,6 +1261,15 @@ impl Coordinator {
             reserved,
             sess: self.dsess.as_ref(),
         });
+        // Budget saturation feeds the NEXT tick's overload sample: a plan
+        // that fills the whole step-token budget means demand exceeds
+        // device throughput right now.
+        self.last_step_saturated = {
+            let planned = plan.decode.len()
+                + plan.prefill.iter().map(|c| c.len).sum::<usize>()
+                + plan.spec.iter().map(|s| s.max_draft).sum::<usize>();
+            self.step_budget > 0 && planned >= self.step_budget
+        };
         let mut touched = 0;
 
         // -- speculative-decode resolution -----------------------------------

@@ -183,6 +183,16 @@ pub fn span_group_weight_reads(
     span_weight_reads(cfg, precompute, len, bucket)
 }
 
+/// Per-tenant fair share of a resource pool of `total` units split
+/// across `tenants` active tenants — the bound the DRR scheduler holds
+/// KV-block ownership to, and the goodput floor `firstlayer
+/// overload-smoke` asserts per bystander tenant.  Floor division, never
+/// zero: every live tenant is entitled to at least one unit (matching
+/// `Scheduler::kv_fair_share`).
+pub fn fair_share(total: u64, tenants: u64) -> u64 {
+    (total / tenants.max(1)).max(1)
+}
+
 /// Upper bound on whole-model savings from optimizing one layer of `n`:
 /// the paper's "4 layers ⇒ ≤25%, 32 layers ⇒ ≤3%" remark (E7).
 pub fn max_savings_fraction(n_layers: usize) -> f64 {
@@ -466,6 +476,19 @@ mod tests {
             span_group_weight_reads(&m, true, 64, 32),
             span_weight_reads(&m, true, 64, 32)
         );
+    }
+
+    #[test]
+    fn fair_share_floors_and_divides() {
+        assert_eq!(fair_share(64, 4), 16);
+        assert_eq!(fair_share(10, 3), 3); // floor division
+        assert_eq!(fair_share(2, 8), 1); // never zero
+        assert_eq!(fair_share(64, 0), 64); // no tenants = whole pool
+        // Matches the scheduler's KV bound: shares over live tenants
+        // always sum to at most the pool.
+        for tenants in 1..8u64 {
+            assert!(fair_share(64, tenants) * tenants <= 64.max(tenants));
+        }
     }
 
     #[test]

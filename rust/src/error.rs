@@ -46,6 +46,16 @@ pub enum Error {
     #[error("chat error: {0}")]
     Chat(String),
 
+    /// Admission refused by the overload ladder.  Retriable by design:
+    /// the server surfaces `reason:"shed"` plus the retry hint so a
+    /// well-behaved client backs off instead of treating it as failure.
+    #[error("shed: {msg} (retry after {retry_after_ms}ms)")]
+    Shed { msg: String, retry_after_ms: u64 },
+
+    /// A `chat.*` op addressed a conversation owned by another tenant.
+    #[error("cross-tenant: {0}")]
+    CrossTenant(String),
+
     #[error("cancel error: {0}")]
     Cancel(String),
 

@@ -30,6 +30,7 @@ pub mod faults;
 pub mod kvcache;
 pub mod manifest;
 pub mod metrics;
+pub mod overload;
 pub mod precompute;
 pub mod prefixcache;
 pub mod runtime;

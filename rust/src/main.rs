@@ -54,6 +54,19 @@ COMMANDS:
                   --conversation-ttl MS (expire idle chats; 0 = never)
                   --stream-queue-events N (per-stream writer bound before
                     a slow reader's sequence is paused)
+                  --fair-share (per-tenant DRR fair share over the step
+                    budget, plus a per-tenant KV-block share bound)
+                  --fair-quantum N (DRR token credit per tenant per step;
+                    0 = auto from the chunk size)
+                  --fair-burst N (quanta of unused credit a tenant banks)
+                  --overload-ladder (staged load shedding: throttle ->
+                    shed batch -> shed interactive, hysteresis both ways)
+                  --overload-queue-p95-ms N (queue-wait trip threshold)
+                  --overload-free-floor N (free KV-block trip floor;
+                    0 = pool/16)
+                  --overload-trip N --overload-clear N (consecutive
+                    hot/calm steps before moving one rung down/up)
+                  --retry-after-ms N (back-off hint on shed rejections)
   generate      one-shot generation from the CLI
                   --prompt \"text\" --max-new 32 --model tiny-serial
                   --path precompute|baseline --temperature 0 --top-k 0
@@ -84,6 +97,13 @@ COMMANDS:
                 itself, not just not break anything)
                   [--model tiny-serial] [--requests N] [--seed N]
                   [--min-accept X (floor, default 1.5)] [--spec-draft N]
+  overload-smoke  overload gate: a noisy-neighbor burst with fair share
+                on (every bystander tenant keeps a goodput floor and a
+                bounded interactive TTFT), then arrival storms against
+                the armed shed ladder (admission sheds by class, nothing
+                already in flight is dropped), then a calm stretch that
+                must walk the ladder back to rung 0
+                  [--model tiny-serial] [--seed N] [--max-ttft-ms N]
 ";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -224,6 +244,33 @@ fn serving_config(flags: &HashMap<String, String>) -> ServingConfig {
     if let Some(q) = flags.get("stream-queue-events") {
         cfg.stream_queue_events = q.parse().unwrap_or(cfg.stream_queue_events);
     }
+    if flags.contains_key("fair-share") {
+        cfg.enable_fair_share = true;
+    }
+    if let Some(q) = flags.get("fair-quantum") {
+        cfg.fair_quantum_tokens = q.parse().unwrap_or(cfg.fair_quantum_tokens);
+    }
+    if let Some(b) = flags.get("fair-burst") {
+        cfg.fair_burst_quanta = b.parse().unwrap_or(cfg.fair_burst_quanta);
+    }
+    if flags.contains_key("overload-ladder") {
+        cfg.enable_overload_ladder = true;
+    }
+    if let Some(p) = flags.get("overload-queue-p95-ms") {
+        cfg.overload_queue_p95_ms = p.parse().unwrap_or(cfg.overload_queue_p95_ms);
+    }
+    if let Some(f) = flags.get("overload-free-floor") {
+        cfg.overload_free_block_floor = f.parse().unwrap_or(cfg.overload_free_block_floor);
+    }
+    if let Some(t) = flags.get("overload-trip") {
+        cfg.overload_trip_steps = t.parse().unwrap_or(cfg.overload_trip_steps);
+    }
+    if let Some(c) = flags.get("overload-clear") {
+        cfg.overload_clear_steps = c.parse().unwrap_or(cfg.overload_clear_steps);
+    }
+    if let Some(r) = flags.get("retry-after-ms") {
+        cfg.shed_retry_after_ms = r.parse().unwrap_or(cfg.shed_retry_after_ms);
+    }
     cfg
 }
 
@@ -241,6 +288,7 @@ fn main() {
         "trace-smoke" => cmd_trace_smoke(&flags),
         "chaos" => cmd_chaos(&flags),
         "spec-smoke" => cmd_spec_smoke(&flags),
+        "overload-smoke" => cmd_overload_smoke(&flags),
         _ => {
             eprint!("{USAGE}");
             std::process::exit(2);
@@ -763,6 +811,242 @@ fn cmd_spec_smoke(flags: &HashMap<String, String>) -> Result<()> {
         )));
     }
     println!("[spec-smoke] OK ({per_exec:.2} > {min_accept:.2})");
+    Ok(())
+}
+
+/// The overload gate (`scripts/overload_gate.sh`): prove the front door
+/// degrades gracefully instead of collapsing, against a live engine.
+///
+/// Phase 1 runs the noisy-neighbor shape (`simtraffic::hog_workload`)
+/// with fair-share scheduling ON and asserts the bystander contract:
+/// every bystander request reaches a clean terminal event, no bystander
+/// tenant falls below the peer-group goodput floor
+/// (`costmodel::fair_share` with slack), and interactive TTFT p99 stays
+/// under `--max-ttft-ms` — the hog's queue depth must not buy it the
+/// device.  Phase 2 drives arrival storms (`overload_wave_workload`)
+/// into a ladder-armed coordinator with a tight step budget and asserts
+/// staged shedding: the ladder actually trips, a `Batch` probe sheds at
+/// rung 2 with a `retry_after_ms` hint while in-flight work is
+/// untouched, and EVERY admitted request still reaches a clean terminal
+/// event (shedding is an admission decision, never an eviction).
+/// Phase 3 steps the drained engine through calm and requires the
+/// ladder to retrace to rung 0 with demotions == promotions.  Any
+/// violation is an `Err`, so the script fails on exit code alone.
+fn cmd_overload_smoke(flags: &HashMap<String, String>) -> Result<()> {
+    use firstlayer::coordinator::FinishReason;
+    use firstlayer::scheduler::Priority;
+    use std::sync::atomic::Ordering::Relaxed;
+    let mut cfg = serving_config(flags);
+    if cfg.prefill_chunk_tokens == 0 {
+        cfg.prefill_chunk_tokens = 16;
+    }
+    let seed: u64 = flags
+        .get("seed")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x0AD5);
+    let max_ttft_ms: u64 = flags
+        .get("max-ttft-ms")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2_000);
+
+    // Phase 1: noisy neighbor vs fair share.
+    let mut fair_cfg = cfg.clone();
+    fair_cfg.enable_fair_share = true;
+    if fair_cfg.step_token_budget == 0 {
+        fair_cfg.step_token_budget = 32;
+    }
+    let mut c = Coordinator::from_config(&fair_cfg)?;
+    let vocab = c.engine().config().vocab_size as u32;
+    let (n_hog, n_small, per_tenant, max_new) = (12usize, 3usize, 4usize, 8usize);
+    let burst = firstlayer::simtraffic::hog_workload(
+        n_hog, n_small, per_tenant, 48, 8, max_new, vocab, seed,
+    );
+    let mut ids = Vec::new();
+    for r in burst {
+        let (tenant, tag) = (r.tenant, r.tag.clone().unwrap_or_default());
+        ids.push((tenant, tag, c.submit(r)?));
+    }
+    c.run_to_completion(20_000)?;
+    let mut emitted: HashMap<u64, u64> = HashMap::new();
+    for (tenant, tag, id) in &ids {
+        match c.finished(*id) {
+            Some(FinishReason::Error) | None => {
+                return Err(firstlayer::Error::Engine(format!(
+                    "[overload-smoke] `{tag}` (tenant {tenant}) did not \
+                     finish clean under the hog"
+                )))
+            }
+            Some(_) => {
+                *emitted.entry(*tenant).or_default() +=
+                    c.generated(*id).map_or(0, |g| g.len() as u64);
+            }
+        }
+    }
+    // Goodput floor among the bystander peer group: nobody may fall
+    // below a quarter of the peers' fair share (slack absorbs early-EOS
+    // length variance; outright starvation is zero and always fails).
+    let bystander_total: u64 = (0..n_small).map(|t| emitted[&(2 + t as u64)]).sum();
+    let floor = costmodel::fair_share(bystander_total, n_small as u64) / 4;
+    for t in 0..n_small {
+        let tenant = 2 + t as u64;
+        if emitted[&tenant] < floor.max(1) {
+            return Err(firstlayer::Error::Engine(format!(
+                "[overload-smoke] tenant {tenant} emitted {} tokens, \
+                 below the goodput floor {floor} — the hog starved it",
+                emitted[&tenant]
+            )));
+        }
+    }
+    let ttft_p99_ms = c.metrics.ttft.quantile(0.99).as_millis() as u64;
+    if ttft_p99_ms > max_ttft_ms {
+        return Err(firstlayer::Error::Engine(format!(
+            "[overload-smoke] TTFT p99 {ttft_p99_ms}ms exceeds the \
+             {max_ttft_ms}ms bound under the hog"
+        )));
+    }
+    println!(
+        "[overload-smoke] fair share: hog emitted {}, bystanders {:?} \
+         (floor {floor}), ttft_p99 {ttft_p99_ms}ms",
+        emitted.get(&1).copied().unwrap_or(0),
+        (0..n_small)
+            .map(|t| emitted[&(2 + t as u64)])
+            .collect::<Vec<_>>(),
+    );
+
+    // Phase 2: 2x arrival storms vs the armed ladder.  A tight step
+    // budget makes every storm step saturate, which is the hot signal
+    // the trip window counts.
+    let mut storm_cfg = cfg.clone();
+    storm_cfg.enable_overload_ladder = true;
+    storm_cfg.overload_trip_steps = 2;
+    storm_cfg.overload_clear_steps = 3;
+    if !flags.contains_key("token-budget") {
+        storm_cfg.step_token_budget = 16;
+    }
+    let mut c = Coordinator::from_config(&storm_cfg)?;
+    let waves =
+        firstlayer::simtraffic::overload_wave_workload(2, 12, 4, 8, 4, vocab, seed ^ 0x11);
+    let (w1, w2) = waves.split_at(waves.len() / 2);
+    let mut admitted = Vec::new();
+    let mut shed_seen = 0u64;
+    let submit = |c: &mut Coordinator,
+                      r: Request,
+                      admitted: &mut Vec<u64>,
+                      shed_seen: &mut u64|
+     -> Result<()> {
+        match c.submit(r) {
+            Ok(id) => admitted.push(id),
+            Err(firstlayer::Error::Shed { .. }) => *shed_seen += 1,
+            Err(e) => return Err(e),
+        }
+        Ok(())
+    };
+    for r in w1.to_vec() {
+        submit(&mut c, r, &mut admitted, &mut shed_seen)?;
+    }
+    // Step until the ladder reaches the batch-shedding rung (the storm
+    // saturates the budget every step, so this is deterministic).
+    for _ in 0..200 {
+        if c.shed_level() >= 2 || !c.busy() {
+            break;
+        }
+        c.step()?;
+    }
+    if c.shed_level() < 2 {
+        return Err(firstlayer::Error::Engine(
+            "[overload-smoke] the storm never tripped the ladder to the \
+             batch-shedding rung — the gate proved nothing; is the step \
+             budget tight enough?"
+                .into(),
+        ));
+    }
+    // Class-aware probe: Batch must shed at rung >= 2, with the
+    // retry hint attached.
+    match c.submit(
+        Request::from_tokens(vec![1, 2, 3], 4).with_priority(Priority::Batch),
+    ) {
+        Err(firstlayer::Error::Shed { retry_after_ms, .. }) => {
+            if retry_after_ms == 0 {
+                return Err(firstlayer::Error::Engine(
+                    "[overload-smoke] shed rejection carried no retry hint".into(),
+                ));
+            }
+            shed_seen += 1;
+        }
+        Ok(_) => {
+            return Err(firstlayer::Error::Engine(
+                "[overload-smoke] a Batch request was admitted at the \
+                 batch-shedding rung"
+                    .into(),
+            ))
+        }
+        Err(e) => return Err(e),
+    }
+    // Second wave lands on the degraded ladder: its Batch-class calm
+    // tail may shed, interactive still admits below rung 3.
+    for r in w2.to_vec() {
+        submit(&mut c, r, &mut admitted, &mut shed_seen)?;
+    }
+    let peak_level = c.shed_level();
+    c.run_to_completion(20_000)?;
+    // No in-flight shed: every ADMITTED request reaches a clean
+    // terminal event even though the ladder was shedding around it.
+    for id in &admitted {
+        match c.finished(*id) {
+            Some(FinishReason::Error) | None => {
+                return Err(firstlayer::Error::Engine(format!(
+                    "[overload-smoke] admitted request {id} was lost \
+                     while the ladder shed — shedding must never touch \
+                     in-flight work"
+                )))
+            }
+            Some(_) => {}
+        }
+    }
+    let shed_counted = c.metrics.requests_shed.load(Relaxed);
+    if shed_counted != shed_seen {
+        return Err(firstlayer::Error::Engine(format!(
+            "[overload-smoke] requests_shed={shed_counted} but the \
+             driver observed {shed_seen} shed rejections"
+        )));
+    }
+    println!(
+        "[overload-smoke] storm: {} admitted all terminal, {shed_seen} \
+         shed at the door (peak rung {peak_level})",
+        admitted.len()
+    );
+
+    // Phase 3: calm recovery — idle steps drain the pressure window and
+    // must walk the ladder back down to rung 0, one rung per clear
+    // window (sliding-window decay bounds this at well under the cap).
+    let mut calm_steps = 0u64;
+    for _ in 0..600 {
+        if c.shed_level() == 0 {
+            break;
+        }
+        c.step()?;
+        calm_steps += 1;
+    }
+    if c.shed_level() != 0 {
+        return Err(firstlayer::Error::Engine(format!(
+            "[overload-smoke] ladder stuck at rung {} after {calm_steps} \
+             calm steps — recovery hysteresis never cleared",
+            c.shed_level()
+        )));
+    }
+    let (demotions, promotions) = c.shed_transitions();
+    if demotions != promotions {
+        return Err(firstlayer::Error::Engine(format!(
+            "[overload-smoke] ladder transitions unbalanced after calm: \
+             {demotions} down vs {promotions} up"
+        )));
+    }
+    println!(
+        "[overload-smoke] recovery: rung 0 after {calm_steps} calm steps \
+         ({demotions} demotions, {promotions} promotions)"
+    );
+    println!("--- metrics ---\n{}", c.metrics.report());
+    println!("[overload-smoke] OK");
     Ok(())
 }
 

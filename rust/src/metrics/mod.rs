@@ -243,6 +243,13 @@ pub struct Metrics {
     pub requests_in: AtomicU64,
     pub requests_done: AtomicU64,
     pub requests_rejected: AtomicU64,
+    /// Requests refused at admission by the overload ladder
+    /// (`reason:"shed"`, retriable) — deliberately separate from
+    /// `requests_rejected` (malformed / duplicate-tag / backpressure,
+    /// client error) so dashboards can tell shedding from bad input.
+    pub requests_shed: AtomicU64,
+    /// Current overload-ladder rung (gauge, 0 = normal service).
+    pub shed_ladder_level: AtomicU64,
     pub requests_cancelled: AtomicU64,
     /// Requests that exhausted transient retries (or hit a fatal engine
     /// error) and finished with `reason:"error"` — terminal, all KV and
@@ -347,10 +354,11 @@ impl Metrics {
         use std::fmt::Write;
         let _ = writeln!(
             s,
-            "requests: in={} done={} rejected={} cancelled={} errored={}  tokens_out={}  preemptions={}  prefill_chunks={}",
+            "requests: in={} done={} rejected={} shed={} cancelled={} errored={}  tokens_out={}  preemptions={}  prefill_chunks={}",
             self.requests_in.load(Ordering::Relaxed),
             self.requests_done.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
+            self.requests_shed.load(Ordering::Relaxed),
             self.requests_cancelled.load(Ordering::Relaxed),
             self.requests_errored.load(Ordering::Relaxed),
             self.tokens_out.load(Ordering::Relaxed),
@@ -360,13 +368,14 @@ impl Metrics {
         let _ = writeln!(
             s,
             "faults: injected={} retries={}  health: demotions={} promotions={}  \
-             stream_stalls={} conversations_expired={}",
+             stream_stalls={} conversations_expired={}  shed_ladder_level={}",
             self.fault_injected.load(Ordering::Relaxed),
             self.fault_retries.load(Ordering::Relaxed),
             self.health_demotions.load(Ordering::Relaxed),
             self.health_promotions.load(Ordering::Relaxed),
             self.stream_stalls.load(Ordering::Relaxed),
             self.conversations_expired.load(Ordering::Relaxed),
+            self.shed_ladder_level.load(Ordering::Relaxed),
         );
         let _ = writeln!(
             s,
@@ -457,6 +466,7 @@ impl Metrics {
                 "requests_rejected",
                 self.requests_rejected.load(Ordering::Relaxed),
             ),
+            ("requests_shed", self.requests_shed.load(Ordering::Relaxed)),
             (
                 "requests_cancelled",
                 self.requests_cancelled.load(Ordering::Relaxed),
@@ -534,6 +544,11 @@ impl Metrics {
         ] {
             prom_counter(&mut s, name, v);
         }
+        prom_gauge(
+            &mut s,
+            "shed_ladder_level",
+            self.shed_ladder_level.load(Ordering::Relaxed),
+        );
         for (name, h) in [
             ("decode_step_us", &self.decode_step),
             ("prefill_step_us", &self.prefill_step),
@@ -579,6 +594,12 @@ impl Metrics {
 fn prom_counter(out: &mut String, name: &str, v: u64) {
     use std::fmt::Write;
     let _ = writeln!(out, "# TYPE firstlayer_{name} counter");
+    let _ = writeln!(out, "firstlayer_{name} {v}");
+}
+
+fn prom_gauge(out: &mut String, name: &str, v: u64) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# TYPE firstlayer_{name} gauge");
     let _ = writeln!(out, "firstlayer_{name} {v}");
 }
 
@@ -680,6 +701,22 @@ mod tests {
         assert_eq!(d.cache_uploads, 1);
         assert_eq!(d.cache_h2d_bytes, 512);
         assert_eq!(d.h2d_bytes, 0);
+    }
+
+    #[test]
+    fn report_and_prom_split_shed_from_rejected() {
+        let m = Metrics::new();
+        m.requests_rejected.fetch_add(2, Ordering::Relaxed);
+        m.requests_shed.fetch_add(5, Ordering::Relaxed);
+        m.shed_ladder_level.store(2, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("rejected=2 shed=5"));
+        assert!(r.contains("shed_ladder_level=2"));
+        let p = m.prometheus(&TransferSnapshot::default());
+        assert!(p.contains("firstlayer_requests_rejected 2"));
+        assert!(p.contains("firstlayer_requests_shed 5"));
+        assert!(p.contains("# TYPE firstlayer_shed_ladder_level gauge"));
+        assert!(p.contains("firstlayer_shed_ladder_level 2"));
     }
 
     #[test]

@@ -1,0 +1,329 @@
+//! Overload ladder (S10): staged, reversible load shedding for the
+//! serving front door.
+//!
+//! Modeled on the `HealthRegistry` cooldown ladder in `faults/`: a small
+//! state machine the coordinator ticks once per engine step, fed by
+//! *pressure signals* the stack already measures — queue-wait p95, the
+//! KV pool's free-block shortfall, and step-token-budget saturation.
+//! Sustained pressure walks the ladder DOWN one rung at a time; sustained
+//! calm walks it back UP.  Both directions are hysteresis-gated
+//! (`trip_steps` consecutive hot ticks to descend, `clear_steps` calm
+//! ticks to ascend) so a single spiky step can't flap the front door.
+//!
+//! The rungs, in order of increasing pain — each sheds strictly cheaper
+//! work than the one below it, and **in-flight requests are never
+//! touched** at any level:
+//!
+//! | level | name            | effect                                          |
+//! |-------|-----------------|-------------------------------------------------|
+//! | 0     | `Normal`        | baseline planning, byte-identical to ladder off |
+//! | 1     | `Throttle`      | spec drafts stop, per-tick admissions halve     |
+//! | 2     | `ShedBatch`     | + new batch-class work is shed (retriable)      |
+//! | 3     | `ShedInteractive` | + ALL new work is shed (retriable)            |
+//!
+//! Shedding is an admission-time decision: the coordinator answers a shed
+//! submission with a retriable `reason:"shed"` + `retry_after_ms` instead
+//! of queueing it.  Decode, continuations, and already-queued work always
+//! run to completion — the ladder narrows the intake, never the pipeline.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::scheduler::Priority;
+
+/// One rung of the shed ladder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ShedLevel {
+    Normal = 0,
+    Throttle = 1,
+    ShedBatch = 2,
+    ShedInteractive = 3,
+}
+
+impl ShedLevel {
+    pub const ALL: [ShedLevel; 4] = [
+        ShedLevel::Normal,
+        ShedLevel::Throttle,
+        ShedLevel::ShedBatch,
+        ShedLevel::ShedInteractive,
+    ];
+
+    pub fn from_index(i: u8) -> ShedLevel {
+        Self::ALL[(i as usize).min(3)]
+    }
+
+    pub fn index(self) -> u8 {
+        self as u8
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ShedLevel::Normal => "normal",
+            ShedLevel::Throttle => "throttle",
+            ShedLevel::ShedBatch => "shed-batch",
+            ShedLevel::ShedInteractive => "shed-interactive",
+        }
+    }
+}
+
+/// Instantaneous pressure sample the coordinator assembles each step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Pressure {
+    /// Queue-wait p95 over the metrics histogram, microseconds.
+    pub queue_wait_p95_us: u64,
+    /// Free blocks in the KV pool right now.
+    pub free_blocks: usize,
+    /// Whether the last planned step spent its whole token budget.
+    pub budget_saturated: bool,
+}
+
+/// Thresholds + hysteresis for the ladder.
+#[derive(Debug, Clone)]
+pub struct OverloadConfig {
+    /// Queue-wait p95 above this is a hot signal, microseconds.
+    pub queue_p95_us: u64,
+    /// Free blocks at or below this is a hot signal.
+    pub free_block_floor: usize,
+    /// Consecutive hot ticks required to descend one rung.
+    pub trip_steps: u64,
+    /// Consecutive calm ticks required to ascend one rung.
+    pub clear_steps: u64,
+    /// Retry hint attached to shed responses, milliseconds.
+    pub retry_after_ms: u64,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        OverloadConfig {
+            queue_p95_us: 50_000,
+            free_block_floor: 16,
+            trip_steps: 3,
+            clear_steps: 16,
+            retry_after_ms: 500,
+        }
+    }
+}
+
+/// The ladder itself.  Plain counters (ticked from the single-threaded
+/// coordinator step loop); only the level is an atomic so metrics
+/// snapshots can read it without coordination.
+pub struct OverloadLadder {
+    cfg: OverloadConfig,
+    level: AtomicU64,
+    hot_streak: u64,
+    calm_streak: u64,
+    /// Lifetime rung transitions (descents, ascents) — audit counters.
+    demotions: u64,
+    promotions: u64,
+}
+
+impl OverloadLadder {
+    pub fn new(cfg: OverloadConfig) -> OverloadLadder {
+        OverloadLadder {
+            cfg,
+            level: AtomicU64::new(0),
+            hot_streak: 0,
+            calm_streak: 0,
+            demotions: 0,
+            promotions: 0,
+        }
+    }
+
+    pub fn config(&self) -> &OverloadConfig {
+        &self.cfg
+    }
+
+    pub fn level(&self) -> ShedLevel {
+        ShedLevel::from_index(self.level.load(Ordering::Relaxed) as u8)
+    }
+
+    pub fn demotions(&self) -> u64 {
+        self.demotions
+    }
+
+    pub fn promotions(&self) -> u64 {
+        self.promotions
+    }
+
+    /// Whether a NEW submission of class `p` is admitted at the current
+    /// level.  In-flight work is never consulted here — only intake.
+    pub fn admits(&self, p: Priority) -> bool {
+        match self.level() {
+            ShedLevel::Normal | ShedLevel::Throttle => true,
+            ShedLevel::ShedBatch => p < Priority::Batch,
+            ShedLevel::ShedInteractive => false,
+        }
+    }
+
+    fn is_hot(&self, p: &Pressure) -> bool {
+        p.queue_wait_p95_us > self.cfg.queue_p95_us
+            || p.free_blocks <= self.cfg.free_block_floor
+            || p.budget_saturated
+    }
+
+    /// Feed one step's pressure sample; returns `Some((from, to))` when
+    /// the ladder moved a rung this tick.  One rung per transition in
+    /// either direction — recovery retraces the descent so every shed
+    /// path re-promotes through `Throttle` before full service resumes.
+    pub fn tick(&mut self, p: &Pressure) -> Option<(ShedLevel, ShedLevel)> {
+        let cur = self.level();
+        if self.is_hot(p) {
+            self.calm_streak = 0;
+            self.hot_streak += 1;
+            if self.hot_streak >= self.cfg.trip_steps && cur < ShedLevel::ShedInteractive {
+                self.hot_streak = 0;
+                let next = ShedLevel::from_index(cur.index() + 1);
+                self.level.store(next.index() as u64, Ordering::Relaxed);
+                self.demotions += 1;
+                return Some((cur, next));
+            }
+        } else {
+            self.hot_streak = 0;
+            self.calm_streak += 1;
+            if self.calm_streak >= self.cfg.clear_steps && cur > ShedLevel::Normal {
+                self.calm_streak = 0;
+                let next = ShedLevel::from_index(cur.index() - 1);
+                self.level.store(next.index() as u64, Ordering::Relaxed);
+                self.promotions += 1;
+                return Some((cur, next));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(trip: u64, clear: u64) -> OverloadConfig {
+        OverloadConfig {
+            queue_p95_us: 1_000,
+            free_block_floor: 2,
+            trip_steps: trip,
+            clear_steps: clear,
+            retry_after_ms: 250,
+        }
+    }
+
+    fn hot() -> Pressure {
+        Pressure {
+            queue_wait_p95_us: 5_000,
+            free_blocks: 100,
+            budget_saturated: false,
+        }
+    }
+
+    fn calm() -> Pressure {
+        Pressure {
+            queue_wait_p95_us: 10,
+            free_blocks: 100,
+            budget_saturated: false,
+        }
+    }
+
+    #[test]
+    fn descends_one_rung_per_trip_window() {
+        let mut l = OverloadLadder::new(cfg(3, 4));
+        assert_eq!(l.level(), ShedLevel::Normal);
+        assert!(l.tick(&hot()).is_none());
+        assert!(l.tick(&hot()).is_none());
+        assert_eq!(
+            l.tick(&hot()),
+            Some((ShedLevel::Normal, ShedLevel::Throttle))
+        );
+        // Streak resets: two more hot ticks are not enough.
+        assert!(l.tick(&hot()).is_none());
+        assert!(l.tick(&hot()).is_none());
+        assert_eq!(
+            l.tick(&hot()),
+            Some((ShedLevel::Throttle, ShedLevel::ShedBatch))
+        );
+        assert_eq!(l.demotions(), 2);
+    }
+
+    #[test]
+    fn saturates_at_shed_interactive() {
+        let mut l = OverloadLadder::new(cfg(1, 4));
+        for _ in 0..10 {
+            l.tick(&hot());
+        }
+        assert_eq!(l.level(), ShedLevel::ShedInteractive);
+        assert_eq!(l.demotions(), 3);
+    }
+
+    #[test]
+    fn recovery_retraces_rung_by_rung_with_hysteresis() {
+        let mut l = OverloadLadder::new(cfg(1, 3));
+        l.tick(&hot());
+        l.tick(&hot());
+        assert_eq!(l.level(), ShedLevel::ShedBatch);
+        // Two calm ticks: not enough to clear.
+        assert!(l.tick(&calm()).is_none());
+        assert!(l.tick(&calm()).is_none());
+        // A hot blip resets the calm streak.
+        l.tick(&hot());
+        assert_eq!(l.level(), ShedLevel::ShedInteractive); // trip=1 descends
+        for _ in 0..2 {
+            assert!(l.tick(&calm()).is_none());
+        }
+        assert_eq!(
+            l.tick(&calm()),
+            Some((ShedLevel::ShedInteractive, ShedLevel::ShedBatch))
+        );
+        for _ in 0..2 {
+            assert!(l.tick(&calm()).is_none());
+        }
+        assert_eq!(
+            l.tick(&calm()),
+            Some((ShedLevel::ShedBatch, ShedLevel::Throttle))
+        );
+        for _ in 0..2 {
+            assert!(l.tick(&calm()).is_none());
+        }
+        assert_eq!(
+            l.tick(&calm()),
+            Some((ShedLevel::Throttle, ShedLevel::Normal))
+        );
+        assert_eq!(l.level(), ShedLevel::Normal);
+        assert_eq!(l.promotions(), 3);
+    }
+
+    #[test]
+    fn admits_by_class_per_rung() {
+        let mut l = OverloadLadder::new(cfg(1, 100));
+        assert!(l.admits(Priority::Batch));
+        l.tick(&hot()); // Throttle: still admits everything
+        assert!(l.admits(Priority::Batch));
+        assert!(l.admits(Priority::Interactive));
+        l.tick(&hot()); // ShedBatch
+        assert!(!l.admits(Priority::Batch));
+        assert!(l.admits(Priority::Normal));
+        assert!(l.admits(Priority::Interactive));
+        l.tick(&hot()); // ShedInteractive
+        assert!(!l.admits(Priority::Interactive));
+    }
+
+    #[test]
+    fn any_hot_signal_trips() {
+        for p in [
+            Pressure {
+                queue_wait_p95_us: 5_000,
+                free_blocks: 100,
+                budget_saturated: false,
+            },
+            Pressure {
+                queue_wait_p95_us: 0,
+                free_blocks: 1,
+                budget_saturated: false,
+            },
+            Pressure {
+                queue_wait_p95_us: 0,
+                free_blocks: 100,
+                budget_saturated: true,
+            },
+        ] {
+            let mut l = OverloadLadder::new(cfg(1, 4));
+            assert!(l.tick(&p).is_some(), "signal {p:?} must trip");
+        }
+    }
+}

@@ -16,8 +16,12 @@
 //!    "temperature":0.0,"top_k":0,"top_p":1.0,"stop":["\n"]}
 //! ← {"event":"token","tag":"a","id":3,"token":287,"text":" brown"}
 //! ← {"event":"done","tag":"a","id":3,"reason":"max_tokens","text":"…"}
-//!   (admission failure / invalid request → terminal instead of stream:)
-//! ← {"event":"rejected","tag":"a","id":0,"msg":"backpressure: …"}
+//!   (admission failure / invalid request → terminal instead of stream;
+//!    `reason` is "rejected", or "shed" + retry_after_ms when the
+//!    overload ladder refused the priority class:)
+//! ← {"event":"rejected","tag":"a","id":0,"reason":"rejected","msg":"backpressure: …"}
+//! ← {"event":"rejected","tag":"a","id":0,"reason":"shed",
+//!    "msg":"overload level 2 (shed-batch)","retry_after_ms":500}
 //!
 //! → {"op":"cancel","tag":"a"}        ← {"event":"ok","op":"cancel","tag":"a"}
 //!                                      (stream then ends with
@@ -28,6 +32,9 @@
 //! ← token*/done as for generate (the turn's prompt is the transcript
 //!   plus the new text; prior turns are served from cached KV)
 //! → {"op":"chat.close","conv":1}     ← {"event":"chat.closed","conv":1}
+//!   (generate/chat.* all take a numeric `tenant`, default 0 — the
+//!    fair-share accounting key; conversation handles are scoped to the
+//!    tenant that opened them, cross-tenant use is a typed error)
 //!
 //! → {"op":"metrics"}   ← {"event":"metrics","report":"…", …structured
 //!                         prefix_*/kv_*/chat_*/spec_*/requests_cancelled
@@ -100,18 +107,54 @@ struct StreamItem {
     depth: Arc<AtomicU64>,
 }
 
+/// Why a request never entered the engine, as reported on the wire's
+/// terminal `rejected` event.  `reason` separates hard admission
+/// failures (`"rejected"`: backpressure, bad conversation, duplicate
+/// tag) from deliberate overload shedding (`"shed"`), which carries the
+/// ladder's retry hint so clients back off instead of hammering.
+struct Reject {
+    msg: String,
+    reason: &'static str,
+    retry_after_ms: Option<u64>,
+}
+
+impl Reject {
+    fn rejected(msg: impl Into<String>) -> Reject {
+        Reject {
+            msg: msg.into(),
+            reason: "rejected",
+            retry_after_ms: None,
+        }
+    }
+
+    /// Classify an admission error: the overload ladder's `Shed`
+    /// variant becomes `reason:"shed"` + retry hint, everything else
+    /// stays a plain rejection.
+    fn from_error(e: &Error) -> Reject {
+        match e {
+            Error::Shed { msg, retry_after_ms } => Reject {
+                msg: msg.clone(),
+                reason: "shed",
+                retry_after_ms: Some(*retry_after_ms),
+            },
+            other => Reject::rejected(other.to_string()),
+        }
+    }
+}
+
 /// Commands from connection threads to the engine loop.
 enum Cmd {
     /// Submit a typed request.  `admit` gets the admission outcome
-    /// (`Err` = rejected, with the reason); on success `reply` receives
-    /// every event of the request (tag attached by the engine loop).
-    /// Keeping rejection OFF the event channel matters: the shared
-    /// writer keys per-stream state by tag, and a rejection must never
-    /// be able to touch a live stream's accumulation (duplicate tags).
+    /// (`Err` = rejected or shed, with the classified reason); on
+    /// success `reply` receives every event of the request (tag
+    /// attached by the engine loop).  Keeping rejection OFF the event
+    /// channel matters: the shared writer keys per-stream state by tag,
+    /// and a rejection must never be able to touch a live stream's
+    /// accumulation (duplicate tags).
     Generate {
         conn: u64,
         req: Request,
-        admit: Sender<std::result::Result<u64, String>>,
+        admit: Sender<std::result::Result<u64, Reject>>,
         reply: Sender<StreamItem>,
     },
     /// Cancel the in-flight request `tag` on connection `conn`.
@@ -121,14 +164,17 @@ enum Cmd {
         tag: String,
         reply: Sender<Option<String>>,
     },
-    /// Open a conversation; `reply` gets the handle, or the refusal
-    /// reason (conversation cap).
+    /// Open a conversation owned by `tenant`; `reply` gets the handle,
+    /// or the refusal reason (conversation cap).
     ChatOpen {
+        tenant: u64,
         reply: Sender<std::result::Result<u64, String>>,
     },
     /// Close a conversation (cancelling its in-flight turn, if any).
+    /// `tenant` must match the conversation's owner.
     ChatClose {
         conv: u64,
+        tenant: u64,
         reply: Sender<Option<String>>,
     },
     SetPath(StepPath),
@@ -350,9 +396,9 @@ fn apply(
                     c.metrics
                         .requests_rejected
                         .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    let _ = admit.send(Err(format!(
+                    let _ = admit.send(Err(Reject::rejected(format!(
                         "tag `{t}` already in flight on this connection"
-                    )));
+                    ))));
                     return;
                 }
             }
@@ -375,12 +421,14 @@ fn apply(
                 }
                 Err(e) => {
                     // Surface admission failure (backpressure, context
-                    // overflow, bad conversation, ...) back to the
-                    // reader, which writes the `rejected` event — never
-                    // through the shared event writer, so a rejection
-                    // cannot perturb a live stream.
+                    // overflow, bad conversation, overload shed, ...)
+                    // back to the reader, which writes the `rejected`
+                    // event — never through the shared event writer, so
+                    // a rejection cannot perturb a live stream.  The
+                    // coordinator already counted it (requests_rejected
+                    // or requests_shed); here we only classify.
                     eprintln!("[firstlayer] rejected: {e}");
-                    let _ = admit.send(Err(e.to_string()));
+                    let _ = admit.send(Err(Reject::from_error(&e)));
                 }
             }
         }
@@ -391,11 +439,15 @@ fn apply(
             };
             let _ = reply.send(outcome);
         }
-        Cmd::ChatOpen { reply } => {
-            let _ = reply.send(c.chat_open().map_err(|e| e.to_string()));
+        Cmd::ChatOpen { tenant, reply } => {
+            let _ = reply.send(c.chat_open_for(tenant).map_err(|e| e.to_string()));
         }
-        Cmd::ChatClose { conv, reply } => {
-            let _ = reply.send(c.chat_close(conv).err().map(|e| e.to_string()));
+        Cmd::ChatClose { conv, tenant, reply } => {
+            let _ = reply.send(
+                c.chat_close_for(conv, tenant)
+                    .err()
+                    .map(|e| e.to_string()),
+            );
         }
         Cmd::SetPath(p) => {
             if let Err(e) = c.set_path(p) {
@@ -497,10 +549,17 @@ fn conn_writer(
     }
 }
 
+/// Numeric `tenant` field (0 = default/anonymous tenant).  Declared
+/// per-op: the protocol has no connection-level identity, so each
+/// `generate`/`chat.*` line names the tenant it acts as.
+fn parse_tenant(req: &Value) -> u64 {
+    req.get_opt("tenant").and_then(|v| v.as_u64()).unwrap_or(0)
+}
+
 /// Parse the generation-shaped fields shared by `generate` and
 /// `chat.send`: budget, sampling (including `top_p` and `stop`),
-/// priority, tag.
-fn parse_gen_fields(req: &Value) -> (usize, SamplingParams, Priority, Option<String>) {
+/// priority, tag, tenant.
+fn parse_gen_fields(req: &Value) -> (usize, SamplingParams, Priority, Option<String>, u64) {
     let max_new = req
         .get_opt("max_new_tokens")
         .and_then(|v| v.as_usize())
@@ -538,7 +597,7 @@ fn parse_gen_fields(req: &Value) -> (usize, SamplingParams, Priority, Option<Str
         .get_opt("tag")
         .and_then(|v| v.as_str())
         .map(|t| t.to_string());
-    (max_new, params, priority, tag)
+    (max_new, params, priority, tag, parse_tenant(req))
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -711,6 +770,16 @@ fn handle_conn(
                         "conversations_expired",
                         n(metrics.conversations_expired.load(Relaxed) as f64),
                     ),
+                    // Overload front door: deliberate sheds (split from
+                    // hard rejections) and the ladder's current rung.
+                    (
+                        "requests_shed",
+                        n(metrics.requests_shed.load(Relaxed) as f64),
+                    ),
+                    (
+                        "shed_ladder_level",
+                        n(metrics.shed_ladder_level.load(Relaxed) as f64),
+                    ),
                     // Request-level latency quantiles in µs — p99
                     // included so dashboards gate the tail, not just
                     // the middle of the distribution.
@@ -878,17 +947,21 @@ fn handle_conn(
                     .and_then(|v| v.as_str())
                     .unwrap_or("")
                     .to_string();
-                let (max_new, params, priority, tag) = parse_gen_fields(&req);
+                let (max_new, params, priority, tag, tenant) = parse_gen_fields(&req);
                 let mut r = Request::from_text(text, max_new)
                     .with_params(params)
-                    .with_priority(priority);
+                    .with_priority(priority)
+                    .with_tenant(tenant);
                 r.tag = tag;
                 submit_request(&out, &tx, &atx, &tokenizer, conn, r)?;
             }
             Some("chat.open") => {
                 let (rtx, rrx) = channel();
-                tx.send(Cmd::ChatOpen { reply: rtx })
-                    .map_err(|_| Error::Server("engine gone".into()))?;
+                tx.send(Cmd::ChatOpen {
+                    tenant: parse_tenant(&req),
+                    reply: rtx,
+                })
+                .map_err(|_| Error::Server("engine gone".into()))?;
                 match rrx.recv() {
                     Ok(Ok(conv)) => {
                         let mut fields =
@@ -915,10 +988,11 @@ fn handle_conn(
                     .and_then(|v| v.as_str())
                     .unwrap_or("")
                     .to_string();
-                let (max_new, params, priority, tag) = parse_gen_fields(&req);
+                let (max_new, params, priority, tag, tenant) = parse_gen_fields(&req);
                 let mut r = Request::turn(conv, text, max_new)
                     .with_params(params)
-                    .with_priority(priority);
+                    .with_priority(priority)
+                    .with_tenant(tenant);
                 r.tag = tag;
                 submit_request(&out, &tx, &atx, &tokenizer, conn, r)?;
             }
@@ -931,8 +1005,12 @@ fn handle_conn(
                     continue;
                 };
                 let (rtx, rrx) = channel();
-                tx.send(Cmd::ChatClose { conv, reply: rtx })
-                    .map_err(|_| Error::Server("engine gone".into()))?;
+                tx.send(Cmd::ChatClose {
+                    conv,
+                    tenant: parse_tenant(&req),
+                    reply: rtx,
+                })
+                .map_err(|_| Error::Server("engine gone".into()))?;
                 match rrx.recv() {
                     Ok(None) => {
                         let mut fields =
@@ -994,6 +1072,7 @@ fn handle_conn(
 /// Cumulative counter base for `metrics.stream` deltas.
 struct DeltaBase {
     requests_done: u64,
+    requests_shed: u64,
     tokens_out: u64,
     span_executions: u64,
     span_fallbacks: u64,
@@ -1008,6 +1087,7 @@ fn delta_base(m: &crate::metrics::Metrics, t: &crate::metrics::TransferStats) ->
     use std::sync::atomic::Ordering::Relaxed;
     DeltaBase {
         requests_done: m.requests_done.load(Relaxed),
+        requests_shed: m.requests_shed.load(Relaxed),
         tokens_out: m.tokens_out.load(Relaxed),
         span_executions: m.span_executions.load(Relaxed),
         span_fallbacks: m.span_fallbacks.load(Relaxed),
@@ -1050,6 +1130,15 @@ fn metrics_pusher(
             (
                 "d_requests_done",
                 n((curr.requests_done - prev.requests_done) as f64),
+            ),
+            (
+                "d_requests_shed",
+                n((curr.requests_shed - prev.requests_shed) as f64),
+            ),
+            // Gauge, not a delta: the ladder's rung right now.
+            (
+                "shed_ladder_level",
+                n(metrics.shed_ladder_level.load(Ordering::Relaxed) as f64),
             ),
             ("d_tokens_out", n((curr.tokens_out - prev.tokens_out) as f64)),
             (
@@ -1110,6 +1199,26 @@ fn metrics_pusher(
     );
 }
 
+/// The terminal `rejected` event for an unadmitted request.  Written by
+/// the READER thread on the raw socket — deliberately not routed through
+/// the shared tagged writer, whose per-tag accumulation must never be
+/// touched by a request that was never admitted (see `Cmd::Generate`).
+/// `reason` is `"rejected"` or `"shed"`; shed lines carry the ladder's
+/// `retry_after_ms` back-off hint.
+fn rejected_line(tag: &Option<String>, r: &Reject) -> Value {
+    let mut fields = vec![
+        ("event", s("rejected")),
+        ("id", n(0.0)),
+        ("reason", s(r.reason)),
+        ("msg", s(r.msg.clone())),
+    ];
+    if let Some(ms) = r.retry_after_ms {
+        fields.push(("retry_after_ms", n(ms as f64)));
+    }
+    push_tag(&mut fields, tag);
+    obj(fields)
+}
+
 /// Route a typed request.  Admission is resolved synchronously (the
 /// engine answers on `admit` between steps): a rejection is written
 /// here as the terminal `rejected` event — it never enters the shared
@@ -1140,14 +1249,8 @@ fn submit_request(
     .map_err(|_| Error::Server("engine gone".into()))?;
     match admit_rx.recv() {
         Ok(Ok(_id)) => {}
-        Ok(Err(msg)) => {
-            let mut fields = vec![
-                ("event", s("rejected")),
-                ("id", n(0.0)),
-                ("msg", s(msg)),
-            ];
-            push_tag(&mut fields, &tag);
-            send(out, &obj(fields))?;
+        Ok(Err(reject)) => {
+            send(out, &rejected_line(&tag, &reject))?;
             return Ok(());
         }
         Err(_) => return Err(Error::Server("engine gone".into())),
@@ -1202,10 +1305,10 @@ mod tests {
         let req = json::parse(
             r#"{"op":"generate","tag":"a","prompt":"x","max_new_tokens":7,
                 "temperature":0.5,"top_k":3,"top_p":0.9,
-                "stop":["\n","END"],"priority":"interactive"}"#,
+                "stop":["\n","END"],"priority":"interactive","tenant":42}"#,
         )
         .unwrap();
-        let (max_new, params, priority, tag) = parse_gen_fields(&req);
+        let (max_new, params, priority, tag, tenant) = parse_gen_fields(&req);
         assert_eq!(max_new, 7);
         assert_eq!(params.top_k, 3);
         assert!((params.top_p - 0.9).abs() < 1e-12);
@@ -1213,18 +1316,62 @@ mod tests {
         assert_eq!(params.stop, vec!["\n".to_string(), "END".to_string()]);
         assert_eq!(priority, Priority::Interactive);
         assert_eq!(tag.as_deref(), Some("a"));
+        assert_eq!(tenant, 42);
     }
 
     #[test]
     fn parse_gen_fields_defaults_and_scalar_stop() {
         let req = json::parse(r#"{"op":"generate","stop":"\n\n"}"#).unwrap();
-        let (max_new, params, priority, tag) = parse_gen_fields(&req);
+        let (max_new, params, priority, tag, tenant) = parse_gen_fields(&req);
         assert_eq!(max_new, 32);
         assert_eq!(params.top_k, 0);
         assert!((params.top_p - 1.0).abs() < 1e-12);
         assert_eq!(params.stop, vec!["\n\n".to_string()]);
         assert_eq!(priority, Priority::Normal);
         assert!(tag.is_none());
+        assert_eq!(tenant, 0);
+    }
+
+    #[test]
+    fn rejected_line_distinguishes_shed_from_rejected() {
+        // Hard rejection: reason "rejected", no retry hint.
+        let v = rejected_line(
+            &Some("a".into()),
+            &Reject::rejected("backpressure: queue full"),
+        );
+        let back = json::parse(&json::to_string(&v)).unwrap();
+        assert_eq!(
+            back.get_opt("event").and_then(|e| e.as_str()),
+            Some("rejected")
+        );
+        assert_eq!(
+            back.get_opt("reason").and_then(|r| r.as_str()),
+            Some("rejected")
+        );
+        assert_eq!(back.get_opt("tag").and_then(|t| t.as_str()), Some("a"));
+        assert!(back.get_opt("retry_after_ms").is_none());
+        // Shed: classified off the typed error, carries retry_after_ms.
+        let v = rejected_line(
+            &None,
+            &Reject::from_error(&Error::Shed {
+                msg: "overload level 2 (shed-batch)".into(),
+                retry_after_ms: 500,
+            }),
+        );
+        let back = json::parse(&json::to_string(&v)).unwrap();
+        assert_eq!(
+            back.get_opt("reason").and_then(|r| r.as_str()),
+            Some("shed")
+        );
+        assert_eq!(
+            back.get_opt("retry_after_ms").and_then(|r| r.as_u64()),
+            Some(500)
+        );
+        assert!(back.get_opt("tag").is_none());
+        // Non-shed errors classify as plain rejections.
+        let r = Reject::from_error(&Error::Backpressure("queue full".into()));
+        assert_eq!(r.reason, "rejected");
+        assert!(r.retry_after_ms.is_none());
     }
 
     #[test]

@@ -369,6 +369,114 @@ pub fn fault_burst_workload(
     out
 }
 
+/// Noisy-neighbor adversary workload (S12g): one **hog** tenant (tenant
+/// id 1) floods the queue with `n_hog` long `Batch` requests, while
+/// `n_small` bystander tenants (ids 2..) each submit
+/// `small_per_tenant` short `Interactive` requests.  This is the
+/// traffic shape the fair-share scheduler (DRR over the step-token
+/// budget) and the overload ladder's class-aware shedding exist for:
+/// without them the hog's queue depth buys it the whole device and the
+/// bystanders starve.  `firstlayer overload-smoke` drives this shape
+/// and asserts per-tenant goodput floors; tags are `h{i}` for the hog
+/// and `t{tenant}.{i}` for bystanders so a driver can attribute every
+/// stream.  Arrivals are the usual deterministic seed-keyed shuffle —
+/// the hog must not win merely by arriving first.
+#[allow(clippy::too_many_arguments)]
+pub fn hog_workload(
+    n_hog: usize,
+    n_small: usize,
+    small_per_tenant: usize,
+    hog_prompt: usize,
+    small_prompt: usize,
+    max_new: usize,
+    vocab: u32,
+    seed: u64,
+) -> Vec<crate::coordinator::Request> {
+    use crate::coordinator::Request;
+    use crate::scheduler::Priority;
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let tok = |rng: &mut Rng| rng.below(vocab.max(1) as u64) as u32;
+    let mut out = Vec::with_capacity(n_hog + n_small * small_per_tenant);
+    for i in 0..n_hog {
+        let prompt: Vec<u32> = (0..hog_prompt.max(1)).map(|_| tok(&mut rng)).collect();
+        out.push(
+            Request::from_tokens(prompt, max_new)
+                .with_priority(Priority::Batch)
+                .with_tenant(1)
+                .with_tag(format!("h{i}")),
+        );
+    }
+    for t in 0..n_small {
+        let tenant = 2 + t as u64;
+        for i in 0..small_per_tenant {
+            let plen = rng.range(1, small_prompt.max(2));
+            let prompt: Vec<u32> = (0..plen).map(|_| tok(&mut rng)).collect();
+            out.push(
+                Request::from_tokens(prompt, max_new)
+                    .with_priority(Priority::Interactive)
+                    .with_tenant(tenant)
+                    .with_tag(format!("t{tenant}.{i}")),
+            );
+        }
+    }
+    // Fisher-Yates with the same deterministic stream.
+    for i in (1..out.len()).rev() {
+        let j = rng.range(0, i + 1);
+        out.swap(i, j);
+    }
+    out
+}
+
+/// Overload-wave adversary workload (S12h): `waves` bursts of `peak`
+/// `Interactive` requests each, separated by calm segments of `base`
+/// `Normal` requests — the 2× arrival storm the overload ladder's trip
+/// thresholds are tuned against.  Unlike every other generator this one
+/// is deliberately NOT shuffled: the burst/calm clumping IS the
+/// adversarial shape (a shuffle would smear the waves into a steady
+/// trickle the ladder never sees).  The driver replays segments in
+/// order, pausing admission between them to let the ladder's clear
+/// window run.  Tags are `w{wave}.{i}` inside bursts and `c{seg}.{i}`
+/// in calm segments.
+#[allow(clippy::too_many_arguments)]
+pub fn overload_wave_workload(
+    waves: usize,
+    peak: usize,
+    base: usize,
+    prompt_tokens: usize,
+    max_new: usize,
+    vocab: u32,
+    seed: u64,
+) -> Vec<crate::coordinator::Request> {
+    use crate::coordinator::Request;
+    use crate::scheduler::Priority;
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let tok = |rng: &mut Rng| rng.below(vocab.max(1) as u64) as u32;
+    let mut out = Vec::with_capacity(waves * (peak + base));
+    for w in 0..waves {
+        for i in 0..peak {
+            let plen = rng.range(1, prompt_tokens.max(2));
+            let prompt: Vec<u32> = (0..plen).map(|_| tok(&mut rng)).collect();
+            out.push(
+                Request::from_tokens(prompt, max_new)
+                    .with_priority(Priority::Interactive)
+                    .with_tag(format!("w{w}.{i}")),
+            );
+        }
+        for i in 0..base {
+            let plen = rng.range(1, prompt_tokens.max(2));
+            let prompt: Vec<u32> = (0..plen).map(|_| tok(&mut rng)).collect();
+            out.push(
+                Request::from_tokens(prompt, max_new)
+                    .with_priority(Priority::Normal)
+                    .with_tag(format!("c{w}.{i}")),
+            );
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -526,6 +634,71 @@ mod tests {
             .iter()
             .zip(&w2)
             .all(|(a, b)| a.prompt == b.prompt && a.tag == b.tag));
+    }
+
+    #[test]
+    fn hog_workload_pins_tenants_classes_and_tags() {
+        use crate::scheduler::Priority;
+        let w = hog_workload(8, 2, 3, 32, 6, 16, 512, 0x406);
+        assert_eq!(w.len(), 8 + 2 * 3);
+        let hogs: Vec<_> = w.iter().filter(|r| r.tenant == 1).collect();
+        assert_eq!(hogs.len(), 8);
+        for r in &hogs {
+            assert_eq!(r.priority, Priority::Batch);
+            assert_eq!(r.prompt.len(), 32);
+            assert!(r.tag.as_deref().unwrap().starts_with('h'));
+        }
+        for tenant in [2u64, 3] {
+            let small: Vec<_> = w.iter().filter(|r| r.tenant == tenant).collect();
+            assert_eq!(small.len(), 3, "tenant {tenant} request count");
+            for r in &small {
+                assert_eq!(r.priority, Priority::Interactive);
+                assert!(!r.prompt.is_empty() && r.prompt.len() < 6);
+                assert!(r
+                    .tag
+                    .as_deref()
+                    .unwrap()
+                    .starts_with(&format!("t{tenant}.")));
+            }
+        }
+        // Tags are distinct (drivers key per-stream state by tag).
+        let tags: std::collections::HashSet<_> =
+            w.iter().map(|r| r.tag.clone().unwrap()).collect();
+        assert_eq!(tags.len(), w.len());
+        // Deterministic per seed.
+        let w2 = hog_workload(8, 2, 3, 32, 6, 16, 512, 0x406);
+        assert!(w
+            .iter()
+            .zip(&w2)
+            .all(|(a, b)| a.prompt == b.prompt && a.tag == b.tag && a.tenant == b.tenant));
+    }
+
+    #[test]
+    fn overload_wave_workload_keeps_burst_ordering() {
+        use crate::scheduler::Priority;
+        let w = overload_wave_workload(2, 5, 3, 8, 4, 512, 0x0A5);
+        assert_eq!(w.len(), 2 * (5 + 3));
+        // NOT shuffled: each wave is a dense run of interactive
+        // requests followed by its calm segment — the clumping is the
+        // point.
+        for (wave, chunk) in w.chunks(8).enumerate() {
+            for (i, r) in chunk[..5].iter().enumerate() {
+                assert_eq!(r.priority, Priority::Interactive);
+                assert_eq!(r.tag.as_deref(), Some(format!("w{wave}.{i}").as_str()));
+            }
+            for (i, r) in chunk[5..].iter().enumerate() {
+                assert_eq!(r.priority, Priority::Normal);
+                assert_eq!(r.tag.as_deref(), Some(format!("c{wave}.{i}").as_str()));
+            }
+        }
+        for r in &w {
+            assert!(!r.prompt.is_empty() && r.prompt.len() < 8);
+            assert!(r.prompt.iter().all(|&t| t < 512));
+            assert_eq!(r.max_new_tokens, 4);
+        }
+        // Deterministic per seed.
+        let w2 = overload_wave_workload(2, 5, 3, 8, 4, 512, 0x0A5);
+        assert!(w.iter().zip(&w2).all(|(a, b)| a.prompt == b.prompt));
     }
 
     #[test]

@@ -107,3 +107,36 @@ fn protocol_doc_covers_server_events() {
         );
     }
 }
+
+/// The overload front door's wire vocabulary — the tenant field, the
+/// shed classification on `rejected`, and the split counters — must be
+/// documented in the protocol doc AND actually present in the server
+/// source, so neither side can drift.
+#[test]
+fn protocol_doc_covers_overload_vocabulary() {
+    let root = repo_root();
+    let proto = std::fs::read_to_string(root.join("docs/protocol.md")).unwrap();
+    let server = std::fs::read_to_string(root.join("rust/src/server/mod.rs")).unwrap();
+    for word in [
+        "tenant",
+        "retry_after_ms",
+        "requests_shed",
+        "shed_ladder_level",
+    ] {
+        assert!(
+            proto.contains(&format!("`{word}`")),
+            "docs/protocol.md does not document `{word}`"
+        );
+        assert!(
+            server.contains(word),
+            "server/mod.rs no longer references `{word}` — update docs/protocol.md"
+        );
+    }
+    // The two rejection classes are spelled out as reason values.
+    for reason in ["\"rejected\"", "\"shed\""] {
+        assert!(
+            proto.contains(reason),
+            "docs/protocol.md does not spell out reason {reason}"
+        );
+    }
+}

@@ -2153,3 +2153,103 @@ fn conversation_ttl_expires_idle_chats() {
         "expiry leaked KV blocks"
     );
 }
+
+/// The front-door overlay is pure: tenant-tagged submissions with the
+/// fair-share and overload knobs OFF, and a tenant-tagged run with the
+/// ladder armed but calm (pressure never trips it), both produce
+/// greedy streams byte-identical to the untagged baseline.  Degrading
+/// gracefully must cost nothing when there is nothing to degrade.
+#[test]
+fn overload_overlay_off_is_pure() {
+    let dir = require_artifacts!();
+    let prompts = [
+        "the quick brown fox",
+        "attention is",
+        "memory bandwidth limits",
+        "a",
+    ];
+    let mut outputs: Vec<Vec<Vec<u32>>> = Vec::new();
+    // Arm 0: untagged baseline.  Arm 1: tenants tagged, knobs off.
+    // Arm 2: tenants tagged, ladder armed (calm) + fair share on with a
+    // single tenant (no peers to share against).
+    for arm in 0..3u8 {
+        let mut cfg = serving(&dir, "tiny-serial", true);
+        if arm == 2 {
+            cfg.enable_overload_ladder = true;
+            cfg.enable_fair_share = true;
+        }
+        let mut c = Coordinator::from_config(&cfg).unwrap();
+        let ids: Vec<u64> = prompts
+            .iter()
+            .map(|p| {
+                let mut r = Request::from_text(*p, 12);
+                if arm > 0 {
+                    r = r.with_tenant(7);
+                }
+                c.submit(r).unwrap()
+            })
+            .collect();
+        c.run_to_completion(10_000).unwrap();
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(c.metrics.requests_shed.load(Relaxed), 0, "arm {arm} shed");
+        assert_eq!(c.shed_level(), 0, "arm {arm}: calm ladder must stay at 0");
+        outputs.push(
+            ids.iter()
+                .map(|id| c.generated(*id).unwrap().to_vec())
+                .collect(),
+        );
+    }
+    assert_eq!(outputs[0], outputs[1], "tenant tags alone changed streams");
+    assert_eq!(outputs[0], outputs[2], "calm overlay changed streams");
+}
+
+/// Conversation handles are tenant-scoped capabilities: a send or close
+/// presenting the wrong tenant fails with the typed cross-tenant error
+/// and perturbs nothing, while the owner keeps full use of the handle.
+#[test]
+fn cross_tenant_conversation_rejected() {
+    let dir = require_artifacts!();
+    let cfg = serving(&dir, "tiny-serial", true);
+    let mut c = Coordinator::from_config(&cfg).unwrap();
+    let conv = c.chat_open_for(7).unwrap();
+    // Wrong tenant: typed error, counted as a rejection, nothing queued.
+    let err = c
+        .submit(Request::turn(conv, "hello", 4).with_tenant(8))
+        .unwrap_err();
+    assert!(
+        matches!(err, firstlayer::Error::CrossTenant(_)),
+        "expected CrossTenant, got: {err}"
+    );
+    assert!(matches!(
+        c.chat_close_for(conv, 8).unwrap_err(),
+        firstlayer::Error::CrossTenant(_)
+    ));
+    // The anonymous default tenant is a tenant like any other.
+    let err = c.submit(Request::turn(conv, "hello", 4)).unwrap_err();
+    assert!(matches!(err, firstlayer::Error::CrossTenant(_)));
+    // The owner is unaffected by the failed probes.
+    let id = c
+        .submit(Request::turn(conv, "hello", 4).with_tenant(7))
+        .unwrap();
+    c.run_to_completion(10_000).unwrap();
+    assert!(
+        matches!(
+            c.finished(id),
+            Some(FinishReason::MaxTokens | FinishReason::Eos)
+        ),
+        "owner's turn must finish clean: {:?}",
+        c.finished(id)
+    );
+    assert!(c.chat_transcript(conv).is_some());
+    c.chat_close_for(conv, 7).unwrap();
+    assert_eq!(c.chat_count(), 0);
+    use std::sync::atomic::Ordering::Relaxed;
+    // The two failed SUBMITS count as rejections (the failed close is
+    // an op error, not a request).
+    assert_eq!(
+        c.metrics.requests_rejected.load(Relaxed),
+        2,
+        "cross-tenant submit probes count as rejections"
+    );
+    assert_eq!(c.metrics.requests_shed.load(Relaxed), 0);
+}

@@ -51,10 +51,14 @@ THRESHOLDS = [
 # timing noise allowance.  The speculative accept rate is a ratio of
 # deterministic counters on a deterministic greedy workload, so it gets
 # a tight bound: a meaningful drop means the drafter or the
-# verify/rollback loop regressed, not the host clock.
+# verify/rollback loop regressed, not the host clock.  Interactive
+# goodput under overload is deterministic token accounting on a seeded
+# storm — a drop means the fair-share/shed path started starving
+# interactive work, so it gates tightly too.
 GAIN_THRESHOLDS = [
     ("*_speedup", 0.50),
     ("spec_accept_rate", 0.05),
+    ("interactive_goodput_under_overload", 0.05),
 ]
 
 

@@ -20,7 +20,12 @@
 #      speculative-decoding audit: a spec-off oracle burst, the same
 #      burst with `--spec` on — streams byte-identical, and the mean
 #      emitted tokens per verify execution must clear 1.5)
-#   8. bench gate                        (scripts/bench_gate.sh →
+#   8. overload gate                     (scripts/overload_gate.sh — the
+#      graceful-degradation audit: a noisy-neighbor burst under
+#      per-tenant fair share, 2x arrival storms against the armed shed
+#      ladder — Batch sheds at rung 2 with a retry hint, nothing
+#      in-flight is dropped — then a calm recovery back to rung 0)
+#   9. bench gate                        (scripts/bench_gate.sh →
 #      BENCH_engine.json at the repo root) — and, when a previous
 #      BENCH_engine.json exists, a per-bench numeric diff
 #      (scripts/bench_diff.py --gate) that FAILS the run on a
@@ -41,28 +46,31 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "[ci-gate] 1/8 cargo build --release"
+echo "[ci-gate] 1/9 cargo build --release"
 (cd rust && cargo build --release)
 
-echo "[ci-gate] 2/8 tier-1 tests (cargo test -q)"
+echo "[ci-gate] 2/9 tier-1 tests (cargo test -q)"
 (cd rust && cargo test -q)
 
-echo "[ci-gate] 3/8 docs gate"
+echo "[ci-gate] 3/9 docs gate"
 scripts/docs_gate.sh
 
-echo "[ci-gate] 4/8 lint gate"
+echo "[ci-gate] 4/9 lint gate"
 scripts/lint_gate.sh
 
-echo "[ci-gate] 5/8 trace gate"
+echo "[ci-gate] 5/9 trace gate"
 scripts/trace_gate.sh
 
-echo "[ci-gate] 6/8 chaos gate"
+echo "[ci-gate] 6/9 chaos gate"
 scripts/chaos_gate.sh
 
-echo "[ci-gate] 7/8 spec gate"
+echo "[ci-gate] 7/9 spec gate"
 scripts/spec_gate.sh
 
-echo "[ci-gate] 8/8 bench gate"
+echo "[ci-gate] 8/9 overload gate"
+scripts/overload_gate.sh
+
+echo "[ci-gate] 9/9 bench gate"
 prev=""
 if [ -f BENCH_engine.json ]; then
   prev="$(mktemp)"

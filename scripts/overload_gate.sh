@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Overload gate (CI-runnable): drive the three-phase graceful-degradation
+# audit (`firstlayer overload-smoke`) through the real engine:
+#
+#   1. fair share — a noisy-neighbor burst (one hog tenant flooding Batch
+#      work over small interactive tenants) with per-tenant DRR on: every
+#      bystander request must finish clean, no bystander tenant may fall
+#      below the peer-group goodput floor, and interactive TTFT p99 must
+#      stay bounded;
+#   2. shed ladder — 2x arrival storms against the armed overload ladder
+#      with a tight step budget: the ladder must actually trip, Batch
+#      admission must shed at rung 2 with a `retry_after_ms` hint, and
+#      every ADMITTED request must still reach a clean terminal event
+#      (shedding is an admission decision, never an eviction);
+#   3. recovery — a calm stretch after the storm must walk the ladder
+#      back to rung 0 with demotions == promotions.
+#
+# The binary exits non-zero on any violation, so this gate is just
+# build + invoke.  Needs the AOT artifact bundle
+# (`rust/artifacts/manifest.json`); skips cleanly when it is missing so
+# the gate works on a fresh checkout, same as the trace/chaos/spec gates.
+#
+# Usage: scripts/overload_gate.sh   (from anywhere inside the repo)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ ! -f rust/artifacts/manifest.json ]; then
+  echo "[overload-gate] skipping: run \`make artifacts\` first"
+  exit 0
+fi
+
+bin=rust/target/release/firstlayer
+if [ ! -x "$bin" ]; then
+  echo "[overload-gate] building release binary"
+  (cd rust && cargo build --release --quiet)
+fi
+
+echo "[overload-gate] fair share + shed ladder + recovery audit"
+"$bin" overload-smoke --artifacts rust/artifacts
+
+echo "[overload-gate] OK"
